@@ -1,0 +1,100 @@
+//! End-to-end validation driver (EXPERIMENTS.md §Headline).
+//!
+//! Runs the complete system on a real small workload: the MNIST(-like)
+//! dataset through every pipeline stage, comparing the paper's field-based
+//! minimiser (device `gpgpu` + CPU mirror) against exact t-SNE and
+//! Barnes-Hut on *identical* P and initialisation, and reporting the
+//! paper's headline quantities: per-engine optimisation time, exact final
+//! KL divergence, and NNP precision/recall.
+//!
+//!     cargo run --release --example end_to_end -- --n 5000 --iters 1000
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::{self, OptParams};
+use gpgpu_sne::hd::perplexity;
+use gpgpu_sne::metrics::{kl, nnp};
+use gpgpu_sne::runtime::{self, Runtime};
+use gpgpu_sne::util::bench::Report;
+use gpgpu_sne::util::cli::Args;
+use gpgpu_sne::util::timer::{fmt_secs, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get("n", 5000usize, "points");
+    let iters = args.get("iters", 1000usize, "iterations");
+    let include_exact = n <= 3000 || args.flag("exact", "include the O(N²) engine at any n");
+    args.finish_help("End-to-end driver: full pipeline, all engines, paper metrics");
+
+    println!("== GPGPU-SNE end-to-end driver ==");
+    let ds = gpgpu_sne::data::by_name("mnist", n, 42)?;
+    println!("dataset {} (n={}, d={})", ds.name, ds.n, ds.d);
+
+    let t = Timer::start();
+    let knn = compute_knn(&ds, KnnMethod::KdForest, 90, 42);
+    let knn_s = t.elapsed_s();
+    let t = Timer::start();
+    let p = perplexity::joint_p(&knn, 30.0);
+    let perp_s = t.elapsed_s();
+    println!("similarities: knn {} | perplexity {}\n", fmt_secs(knn_s), fmt_secs(perp_s));
+
+    let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
+    if rt.is_none() {
+        eprintln!("note: no artifacts — gpgpu engine skipped (run `make artifacts`)");
+    }
+
+    let mut engines: Vec<&str> = Vec::new();
+    if include_exact {
+        engines.push("exact");
+    }
+    engines.extend(["bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu"]);
+    if rt.is_some() {
+        engines.push("gpgpu");
+    }
+
+    let params = OptParams { iters, ..Default::default() };
+    let mut report = Report::new(
+        &format!("End-to-end on {} n={n}, {iters} iters", ds.name),
+        &["time", "iters/s", "KL(exact)", "NNP mean-p", "NNP r@30"],
+    );
+    let mut baseline_bh_time = None;
+    for name in engines {
+        let mut engine = embed::by_name(name, rt.clone())?;
+        let t = Timer::start();
+        let y = engine.run(&p, &params, None)?;
+        let secs = t.elapsed_s();
+        if name == "bh-0.5" {
+            baseline_bh_time = Some(secs);
+        }
+        let kl_v = kl::kl_divergence_exact(&p, &y);
+        let curve = nnp::nnp_curve(&ds, &y, 1000, 0);
+        println!(
+            "{name:<14} {:>9}  KL={kl_v:.4}  NNP p̄={:.3}",
+            fmt_secs(secs),
+            curve.mean_precision()
+        );
+        report.row(
+            name,
+            vec![
+                fmt_secs(secs),
+                format!("{:.1}", iters as f64 / secs),
+                format!("{kl_v:.4}"),
+                format!("{:.3}", curve.mean_precision()),
+                format!("{:.3}", curve.recall[29]),
+            ],
+        );
+    }
+    report.print();
+    report.write_csv("end_to_end.csv")?;
+    if let Some(bh) = baseline_bh_time {
+        println!(
+            "modelled t-SNE-CUDA time (BH θ=0.5 CPU / {}x GPU envelope): {}",
+            gpgpu_sne::embed::tsnecuda::GPU_SPEEDUP_MODEL,
+            fmt_secs(gpgpu_sne::embed::tsnecuda::TsneCudaSim::modelled_time(bh))
+        );
+    }
+    println!("\nPaper headline check: field-based KL ≤ BH KL, NNP ≥ BH NNP; see EXPERIMENTS.md.");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Figures 2 and 3 — the fields and the kernels.
+//!
+//! Converges an MNIST-like embedding, evaluates the scalar field S and the
+//! vector field V over the embedding domain (Fig. 2 b-d) and writes them
+//! as PGMs, plus the kernel functions S(d), V(d) of Fig. 3 as CSV.
+//!
+//!     cargo run --release --example fields_viz -- --n 5000 --grid 256
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::fieldcpu::{compute_fields, grid_placement};
+use gpgpu_sne::embed::{self, OptParams};
+use gpgpu_sne::hd::perplexity;
+use gpgpu_sne::util::cli::Args;
+use gpgpu_sne::util::image;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get("n", 5000usize, "points");
+    let grid = args.get("grid", 256usize, "field texture resolution");
+    let iters = args.get("iters", 400usize, "iterations");
+    let out_dir = args.str("out-dir", "fig2_out", "output directory");
+    let kernels_only = args.flag("kernels", "emit only the Fig. 3 kernel functions");
+    args.finish_help("Figures 2-3: field textures and kernel functions");
+    std::fs::create_dir_all(&out_dir)?;
+
+    // Figure 3: the kernel functions S(d) = (1+d²)^-1 and V(d) = (1+d²)^-2 d.
+    let rs: Vec<f64> = (0..601).map(|i| -3.0 + i as f64 * 0.01).collect();
+    let s: Vec<f64> = rs.iter().map(|d| 1.0 / (1.0 + d * d)).collect();
+    let v: Vec<f64> = rs.iter().map(|d| d / (1.0 + d * d).powi(2)).collect();
+    image::write_csv(format!("{out_dir}/fig3_kernels.csv"), &["d", "S", "V"], &[rs, s, v])?;
+    println!("wrote {out_dir}/fig3_kernels.csv");
+    if kernels_only {
+        return Ok(());
+    }
+
+    // Converge an embedding (Fig. 2a).
+    let ds = gpgpu_sne::data::by_name("mnist", n, 7)?;
+    let knn = compute_knn(&ds, KnnMethod::KdForest, 90, 7);
+    let p = perplexity::joint_p(&knn, 30.0);
+    let y = embed::by_name("fieldcpu", None)?.run(&p, &OptParams { iters, ..Default::default() }, None)?;
+    image::write_embedding_pgm(format!("{out_dir}/fig2a_embedding.pgm"), &y, &ds.labels, 512)?;
+
+    // Evaluate the fields over the converged embedding (Fig. 2 b-d).
+    let mut bbox = [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
+    for i in 0..n {
+        bbox[0] = bbox[0].min(y[2 * i]);
+        bbox[1] = bbox[1].min(y[2 * i + 1]);
+        bbox[2] = bbox[2].max(y[2 * i]);
+        bbox[3] = bbox[3].max(y[2 * i + 1]);
+    }
+    let (origin, pixel) = grid_placement(bbox, grid);
+    let t = std::time::Instant::now();
+    let tex = compute_fields(&y, origin, pixel, grid);
+    let plane = grid * grid;
+    println!(
+        "fields: {grid}x{grid} over bbox [{:.1},{:.1}]x[{:.1},{:.1}] in {:.1}ms",
+        bbox[0],
+        bbox[1],
+        bbox[2],
+        bbox[3],
+        t.elapsed().as_secs_f64() * 1e3
+    );
+    image::write_pgm(format!("{out_dir}/fig2b_S.pgm"), &tex[..plane], grid, grid)?;
+    image::write_pgm_signed(format!("{out_dir}/fig2c_Vx.pgm"), &tex[plane..2 * plane], grid, grid)?;
+    image::write_pgm_signed(format!("{out_dir}/fig2d_Vy.pgm"), &tex[2 * plane..], grid, grid)?;
+    println!("wrote {out_dir}/fig2[a-d]_*.pgm");
+
+    // Sanity numbers mirroring the paper's description.
+    let s_max = tex[..plane].iter().cloned().fold(0.0f32, f32::max);
+    let zhat: f64 = (0..n)
+        .map(|i| {
+            let svv = gpgpu_sne::embed::fieldcpu::bilinear(&tex, grid, origin, pixel, y[2 * i], y[2 * i + 1]);
+            (svv[0] - 1.0) as f64
+        })
+        .sum();
+    println!("S peak density: {s_max:.2}; Zhat = {zhat:.1}");
+    Ok(())
+}

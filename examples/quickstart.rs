@@ -1,0 +1,66 @@
+//! Quickstart: embed a small dataset with the paper's field-based engine
+//! and print quality metrics — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart -- --n 2000 --engine gpgpu
+//!
+//! (Falls back from `gpgpu` to `fieldcpu` automatically when `make
+//! artifacts` has not been run.)
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::{self, OptParams};
+use gpgpu_sne::hd::perplexity;
+use gpgpu_sne::metrics::{kl, nnp};
+use gpgpu_sne::runtime::{self, Runtime};
+use gpgpu_sne::util::cli::Args;
+use gpgpu_sne::util::timer::{fmt_secs, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get("n", 2000usize, "points");
+    let iters = args.get("iters", 500usize, "iterations");
+    let mut engine_name = args.str("engine", "gpgpu", "engine");
+    args.finish_help("Quickstart: one embedding, start to finish");
+
+    // 1. Data: an MNIST-like manifold mixture (or real MNIST if present).
+    let ds = gpgpu_sne::data::by_name("mnist", n, 1)?;
+    println!("dataset: {} (n={}, d={})", ds.name, ds.n, ds.d);
+
+    // 2. Similarities: approximate kNN + perplexity calibration -> sparse P.
+    let t = Timer::start();
+    let knn = compute_knn(&ds, KnnMethod::KdForest, 90, 1);
+    let p = perplexity::joint_p(&knn, 30.0);
+    println!("similarities: k=90, perplexity=30 in {}", fmt_secs(t.elapsed_s()));
+
+    // 3. Optimise with the paper's field-based minimiser.
+    let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
+    if engine_name == "gpgpu" && rt.is_none() {
+        eprintln!("note: no artifacts found, using the CPU field engine (run `make artifacts`)");
+        engine_name = "fieldcpu".into();
+    }
+    let mut engine = embed::by_name(&engine_name, rt)?;
+    let params = OptParams { iters, ..Default::default() };
+    let t = Timer::start();
+    let y = engine.run(&p, &params, None)?;
+    let opt_s = t.elapsed_s();
+
+    // 4. Quality: the paper's two metrics.
+    let kl_final = kl::kl_divergence_exact(&p, &y);
+    let curve = nnp::nnp_curve(&ds, &y, 1000, 0);
+    println!(
+        "\n{engine_name}: {iters} iterations in {} ({:.1} iters/s)",
+        fmt_secs(opt_s),
+        iters as f64 / opt_s
+    );
+    println!("KL divergence: {kl_final:.4}");
+    println!(
+        "NNP: mean precision {:.3}, recall@30 {:.3}",
+        curve.mean_precision(),
+        curve.recall[29]
+    );
+    gpgpu_sne::util::image::write_embedding_pgm("quickstart_embedding.pgm", &y, &ds.labels, 512)?;
+    println!("wrote quickstart_embedding.pgm");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Serving demo: start the embedding service on an ephemeral TCP port,
+//! drive it as a client — submit several jobs (batched requests), stream
+//! progressive snapshots, exercise early termination — and report
+//! request latency / service throughput, the serving-paper readout.
+//!
+//!     cargo run --release --example serve -- --jobs 3 --n 1500
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::{protocol, EmbeddingService};
+use gpgpu_sne::runtime::{self, Runtime};
+use gpgpu_sne::util::cli::Args;
+use gpgpu_sne::util::json::{self, Json};
+use gpgpu_sne::util::timer::{fmt_secs, Timer};
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
+        let s = TcpStream::connect(addr)?;
+        Ok(Self { reader: BufReader::new(s.try_clone()?), writer: s })
+    }
+
+    fn call(&mut self, req: &str) -> anyhow::Result<Json> {
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(json::parse(line.trim())?)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let jobs = args.get("jobs", 3usize, "number of concurrent jobs");
+    let n = args.get("n", 1500usize, "points per job");
+    let iters = args.get("iters", 400usize, "iterations per job");
+    args.finish_help("Serving demo: batched embedding requests over TCP");
+
+    let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
+    let engine = if rt.is_some() { "gpgpu" } else { "fieldcpu" };
+    let svc = Arc::new(EmbeddingService::new(rt, 2));
+    let (tx, rx) = std::sync::mpsc::channel();
+    {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            let _ = protocol::serve(svc, "127.0.0.1:0", move |a| {
+                let _ = tx.send(a);
+            });
+        });
+    }
+    let addr = rx.recv()?;
+    println!("service listening on {addr} (engine: {engine})");
+
+    // Submit a batch of jobs over separate client connections.
+    let datasets = ["mnist", "wikiword", "imagenet-head0"];
+    let wall = Timer::start();
+    let mut submitted = Vec::new();
+    for j in 0..jobs {
+        let mut c = Client::connect(addr)?;
+        let t = Timer::start();
+        let resp = c.call(&format!(
+            r#"{{"cmd":"submit","dataset":"{}","n":{n},"engine":"{engine}","iters":{iters},"snapshot_every":50,"seed":{j}}}"#,
+            datasets[j % datasets.len()]
+        ))?;
+        let id = resp.num_field("job").expect("job id") as u64;
+        println!("job {id} ({}) submitted in {}", datasets[j % datasets.len()], fmt_secs(t.elapsed_s()));
+        submitted.push((id, c));
+    }
+
+    // Stream progress by polling status; stop the last job early to show
+    // user-driven termination.
+    let mut total_iters = 0usize;
+    for (i, (id, c)) in submitted.iter_mut().enumerate() {
+        if i + 1 == jobs && jobs > 1 {
+            // Let it get going, then stop it (A-tSNE early termination).
+            // The job may already have finished while earlier waits ran —
+            // stop is then a harmless no-op.
+            loop {
+                let s = c.call(&format!(r#"{{"cmd":"status","job":{id}}}"#))?;
+                let phase = s.str_field("phase").unwrap_or("").to_string();
+                if phase.starts_with("optimizing") || s.get("terminal") == Some(&Json::Bool(true)) {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            c.call(&format!(r#"{{"cmd":"stop","job":{id}}}"#))?;
+            println!("job {id}: early termination requested");
+        }
+        let t = Timer::start();
+        let done = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#))?;
+        let iters_run = done.num_field("iters").unwrap_or(0.0) as usize;
+        total_iters += iters_run;
+        println!(
+            "job {id}: {} iters, KL≈{:.4}, optimize {}, wait-latency {}{}",
+            iters_run,
+            done.num_field("kl").unwrap_or(f64::NAN),
+            fmt_secs(done.num_field("optimize_s").unwrap_or(0.0)),
+            fmt_secs(t.elapsed_s()),
+            if done.get("stopped_early") == Some(&Json::Bool(true)) { "  [stopped early]" } else { "" },
+        );
+    }
+    let wall_s = wall.elapsed_s();
+    println!(
+        "\nservice throughput: {jobs} jobs / {} = {:.2} jobs/min; {:.0} optimiser iters/s aggregate",
+        fmt_secs(wall_s),
+        jobs as f64 / wall_s * 60.0,
+        total_iters as f64 / wall_s
+    );
+    Ok(())
+}

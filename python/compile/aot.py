@@ -1,0 +1,166 @@
+# AOT compile path: lower the L2 t-SNE step to HLO *text* artifacts.
+#
+# HLO text (NOT lowered.compile()/.serialize()) is the interchange format:
+# jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+# Rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+# HLO text parser reassigns ids, so text round-trips cleanly. See
+# /opt/xla-example/gen_hlo.py.
+#
+# Usage (normally via `make artifacts`):
+#   python -m compile.aot --out-dir ../artifacts [--full-matrix]
+#
+# Emits one artifact per (N, K, G[, S]) variant plus manifest.json
+# describing shapes / argument order for the Rust runtime, plus
+# selfcheck.json with expected outputs of a deterministic micro problem so
+# Rust integration tests can verify numerics end to end.
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Default build matrix (DESIGN.md SS5). K = 96: perplexity 30 -> 3*mu = 90
+# neighbours, padded to a lane-friendly 96.
+# Power-of-two buckets; 2048 halves the padding waste for the common
+# 1k-2k interactive jobs (§Perf: a padded phantom point costs exactly as
+# much as a real one in the fields kernel).
+DEFAULT_NS = [1024, 2048, 4096]
+FULL_NS = [1024, 2048, 4096, 16384]
+DEFAULT_GRIDS = [32, 64, 128, 256]
+DEFAULT_K = 96
+SCAN_STEPS = 10  # fused-steps variant (ablation: host-boundary amortisation)
+
+ARG_NAMES = ["y", "vel", "gains", "mask", "nbr_idx", "nbr_p", "eta", "momentum", "exaggeration"]
+OUT_NAMES = ["y", "vel", "gains", "zhat", "kl", "bbox"]
+
+
+def example_args(n, k):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, 2), f32),   # y
+        jax.ShapeDtypeStruct((n, 2), f32),   # vel
+        jax.ShapeDtypeStruct((n, 2), f32),   # gains
+        jax.ShapeDtypeStruct((n,), f32),     # mask
+        jax.ShapeDtypeStruct((n, k), jnp.int32),  # nbr_idx
+        jax.ShapeDtypeStruct((n, k), f32),   # nbr_p
+        jax.ShapeDtypeStruct((), f32),       # eta
+        jax.ShapeDtypeStruct((), f32),       # momentum
+        jax.ShapeDtypeStruct((), f32),       # exaggeration
+    )
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, n, k):
+    return jax.jit(fn).lower(*example_args(n, k))
+
+
+def selfcheck_case(n, k, grid):
+    """Deterministic micro problem + expected step outputs (for Rust tests)."""
+    rng = np.random.RandomState(7)
+    n_real = min(n, 48)
+    y = np.zeros((n, 2), np.float32)
+    y[:n_real] = rng.randn(n_real, 2).astype(np.float32) * 0.9
+    mask = np.zeros((n,), np.float32)
+    mask[:n_real] = 1.0
+    vel = np.zeros((n, 2), np.float32)
+    gains = np.ones((n, 2), np.float32) * mask[:, None]
+    nbr_idx = np.zeros((n, k), np.int32)
+    nbr_p = np.zeros((n, k), np.float32)
+    kk = min(k, 4)
+    for i in range(n_real):
+        for j in range(kk):
+            nbr_idx[i, j] = (i + j + 1) % n_real
+            nbr_p[i, j] = 1.0 / (n_real * kk)
+    out = model.tsne_step(
+        jnp.asarray(y), jnp.asarray(vel), jnp.asarray(gains), jnp.asarray(mask),
+        jnp.asarray(nbr_idx), jnp.asarray(nbr_p),
+        jnp.float32(200.0), jnp.float32(0.5), jnp.float32(12.0), grid=grid,
+    )
+    y2, vel2, gains2, zhat, kl, bbox = (np.asarray(o) for o in out)
+    return {
+        "n": n, "k": k, "grid": grid, "n_real": n_real, "kk": kk, "seed": 7,
+        "eta": 200.0, "momentum": 0.5, "exaggeration": 12.0,
+        # Inputs (so the Rust round-trip test can reconstruct them exactly).
+        "y_init": [float(v) for v in y[:n_real].reshape(-1)],
+        # Expected outputs.
+        "zhat": float(zhat), "kl": float(kl), "bbox": [float(b) for b in bbox],
+        "y_out": [float(v) for v in y2[:n_real].reshape(-1)],
+        "vel_out": [float(v) for v in vel2[:n_real].reshape(-1)],
+        "gains_out": [float(v) for v in gains2[:n_real].reshape(-1)],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower t-SNE step artifacts")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--ns", type=int, nargs="*", default=None, help="N buckets")
+    ap.add_argument("--grids", type=int, nargs="*", default=None)
+    ap.add_argument("--k", type=int, default=DEFAULT_K)
+    ap.add_argument("--full-matrix", action="store_true", help="include N=16384")
+    ap.add_argument("--scan-steps", type=int, default=SCAN_STEPS)
+    ap.add_argument("--no-scan", action="store_true", help="skip fused-steps variants")
+    args = ap.parse_args()
+
+    ns = args.ns if args.ns else (FULL_NS if args.full_matrix else DEFAULT_NS)
+    grids = args.grids if args.grids else DEFAULT_GRIDS
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = []
+    for n in ns:
+        for g in grids:
+            name = f"step_n{n}_k{args.k}_g{g}"
+            path = os.path.join(args.out_dir, name + ".hlo.txt")
+            text = to_hlo_text(lower_variant(model.step_fn(g), n, args.k))
+            with open(path, "w") as f:
+                f.write(text)
+            artifacts.append({
+                "name": name, "file": name + ".hlo.txt", "kind": "step",
+                "n": n, "k": args.k, "grid": g, "steps": 1,
+            })
+            print(f"wrote {path} ({len(text)} chars)")
+        if not args.no_scan:
+            # One fused variant per N at a mid grid (ablation artifact).
+            g = 128 if 128 in grids else grids[-1]
+            name = f"steps_n{n}_k{args.k}_g{g}_s{args.scan_steps}"
+            path = os.path.join(args.out_dir, name + ".hlo.txt")
+            text = to_hlo_text(lower_variant(model.steps_fn(g, args.scan_steps), n, args.k))
+            with open(path, "w") as f:
+                f.write(text)
+            artifacts.append({
+                "name": name, "file": name + ".hlo.txt", "kind": "steps",
+                "n": n, "k": args.k, "grid": g, "steps": args.scan_steps,
+            })
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "arg_names": ARG_NAMES,
+        "out_names": OUT_NAMES,
+        "artifacts": artifacts,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(artifacts)} artifacts)")
+
+    check = selfcheck_case(ns[0], args.k, grids[0])
+    cpath = os.path.join(args.out_dir, "selfcheck.json")
+    with open(cpath, "w") as f:
+        json.dump(check, f, indent=1)
+    print(f"wrote {cpath}")
+
+
+if __name__ == "__main__":
+    main()

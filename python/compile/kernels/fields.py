@@ -1,0 +1,117 @@
+# L1 — Pallas kernel: field evaluation (the paper's hot spot).
+#
+# Computes the scalar field S (Eq. 10) and vector field V (Eq. 11) of
+# Pezzotti et al. 2018 on a G x G pixel grid. The paper splats per-point
+# kernel textures with additive blending (a rasteriser scatter-add); the
+# TPU-idiomatic mapping follows the paper's own compute-shader formulation
+# (SS5.2): for every output pixel, *gather* every point's contribution.
+#
+# Tiling (DESIGN.md SSHardware-Adaptation):
+#   grid = (pixel row tiles, point blocks)
+#   each invocation computes a dense (TILE_ROWS x G) x BLOCK_PTS
+#   interaction entirely in VMEM-resident blocks and accumulates over the
+#   point-block grid dimension (the additive-blend replacement).
+#
+# This is the "unbounded function support" variant, exact w.r.t. Eq. 10/11
+# at pixel centres — the paper notes it is *more accurate* than bounded
+# splats. interpret=True everywhere: CPU PJRT cannot run Mosaic
+# custom-calls; real-TPU VMEM/MXU estimates live in DESIGN.md SS9.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shapes. VMEM estimate per invocation (f32):
+#   points block  BLOCK_PTS * 3            (y block + mask)
+#   out tile      3 * TILE_ROWS * G
+#   live temps    TILE_ROWS * G * BLOCK_PTS * ~3 (dx, dy, t)
+# With TILE_ROWS=16, G=256, BLOCK_PTS=512: ~25 MiB of f32 temps in the
+# worst case — above a single-core VMEM budget, so the real-TPU mapping
+# would halve TILE_ROWS at G=256 (DESIGN.md §9); on the CPU interpret
+# path larger tiles amortise the per-grid-step overhead (§Perf log in
+# EXPERIMENTS.md). Overridable for perf experiments via env.
+import os as _os
+
+# Perf-pass result (EXPERIMENTS.md §Perf): on the compiled XLA-CPU path
+# small pixel tiles win — (4, 256) beat (8, 256) by ~10% and (16, 1024)
+# by ~31%; three further refinements changed <5%, so this is the
+# practical roofline for tile shape on this backend.
+TILE_ROWS = int(_os.environ.get("GPGPU_SNE_TILE_ROWS", "4"))
+BLOCK_PTS = int(_os.environ.get("GPGPU_SNE_BLOCK_PTS", "256"))
+
+
+def _fields_kernel(y_ref, mask_ref, origin_ref, pixel_ref, out_ref, *, grid, tile_rows):
+    """One (pixel-row-tile, point-block) cell of the interaction."""
+    i = pl.program_id(0)  # pixel row tile
+    b = pl.program_id(1)  # point block
+    y = y_ref[...]        # (B, 2)
+    m = mask_ref[...]     # (B,)
+    ox = origin_ref[0]
+    oy = origin_ref[1]
+    h = pixel_ref[0]
+
+    # Pixel-centre coordinates of this tile: rows are y, columns are x.
+    col = jnp.arange(grid, dtype=jnp.float32) + 0.5            # (G,)
+    row = jnp.arange(tile_rows, dtype=jnp.float32) + 0.5       # (TR,)
+    row = row + (i * tile_rows).astype(jnp.float32)
+    px = ox + col * h                                          # (G,)
+    py = oy + row * h                                          # (TR,)
+
+    # d = y_i - p, evaluated for every (row, col, point) triple.
+    dx = y[:, 0][None, None, :] - px[None, :, None]            # (TR, G, B) via bcast
+    dy = y[:, 1][None, None, :] - py[:, None, None]
+    t = (1.0 / (1.0 + dx * dx + dy * dy)) * m[None, None, :]
+    s = jnp.sum(t, axis=-1)                                    # (TR, G)
+    t2 = t * t
+    vx = jnp.sum(t2 * dx, axis=-1)
+    vy = jnp.sum(t2 * dy, axis=-1)
+    acc = jnp.stack([s, vx, vy], axis=0)                       # (3, TR, G)
+
+    # Additive blending: accumulate over the point-block grid dimension.
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(b > 0)
+    def _accum():
+        out_ref[...] = out_ref[...] + acc
+
+
+def default_tile_rows(grid):
+    """Grid-dependent tile choice (§Perf): large grids favour small pixel
+    tiles on the XLA-CPU path; small grids amortise better at 8 rows."""
+    return TILE_ROWS if grid >= 128 else max(TILE_ROWS, 8)
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "tile_rows", "block_pts"))
+def fields(y, mask, origin, pixel, *, grid, tile_rows=None, block_pts=BLOCK_PTS):
+    """Field texture (3, grid, grid): channels S, V_x, V_y.
+
+    y:      (N, 2) f32 embedding positions; N must be a multiple of
+            block_pts (the AOT path always pads).
+    mask:   (N,)   f32 1.0/0.0 point validity.
+    origin: (2,)   f32 lower-left corner of the field domain.
+    pixel:  (1,)   f32 pixel side length h.
+    """
+    n = y.shape[0]
+    if tile_rows is None:
+        tile_rows = default_tile_rows(grid)
+    block_pts = min(block_pts, n)
+    tile_rows = min(tile_rows, grid)
+    assert n % block_pts == 0, f"N={n} not a multiple of block_pts={block_pts}"
+    assert grid % tile_rows == 0, f"grid={grid} not a multiple of tile_rows={tile_rows}"
+    kernel = functools.partial(_fields_kernel, grid=grid, tile_rows=tile_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid // tile_rows, n // block_pts),
+        in_specs=[
+            pl.BlockSpec((block_pts, 2), lambda i, b: (b, 0)),
+            pl.BlockSpec((block_pts,), lambda i, b: (b,)),
+            pl.BlockSpec((2,), lambda i, b: (0,)),
+            pl.BlockSpec((1,), lambda i, b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3, tile_rows, grid), lambda i, b: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((3, grid, grid), jnp.float32),
+        interpret=True,
+    )(y, mask, origin, pixel)

@@ -1,0 +1,89 @@
+# Pure-jnp correctness oracles for the Pallas kernels (L1).
+#
+# These implement Eq. 10/11 (scalar field S, vector field V) and Eq. 12
+# (restricted-neighbourhood attractive force) of Pezzotti et al. 2018
+# directly, with no tiling, no accumulation tricks and no Pallas — they are
+# the ground truth that python/tests/ checks the kernels against, and the
+# reference the Rust `embed::fieldcpu` engine mirrors.
+import jax.numpy as jnp
+
+
+def pixel_centers(origin, pixel, grid):
+    """Pixel-centre coordinates of a grid x grid field texture.
+
+    origin: (2,) lower-left corner of the field domain (x, y).
+    pixel:  scalar pixel side length h.
+    Returns (xs, ys): each (grid,), xs[j] = origin_x + (j + 1/2) h.
+    """
+    idx = jnp.arange(grid, dtype=jnp.float32) + 0.5
+    return origin[0] + idx * pixel, origin[1] + idx * pixel
+
+
+def fields_ref(y, mask, origin, pixel, grid):
+    """Exact S and V fields at pixel centres (Eq. 10, 11).
+
+    y:      (N, 2) embedding positions.
+    mask:   (N,)   1.0 for real points, 0.0 for padding.
+    Returns (3, grid, grid): channel 0 = S, 1 = V_x, 2 = V_y.
+    Row i of the texture corresponds to the y-coordinate, column j to x
+    (image convention used by the Rust side as well).
+    """
+    xs, ys = pixel_centers(origin, pixel, grid)
+    px = xs[None, :, None]  # (1, G, 1)
+    py = ys[:, None, None]  # (G, 1, 1)
+    dx = y[:, 0][None, None, :] - px  # (G, G, N): y_i - p
+    dy = y[:, 1][None, None, :] - py
+    t = 1.0 / (1.0 + dx * dx + dy * dy) * mask[None, None, :]
+    s = jnp.sum(t, axis=-1)
+    vx = jnp.sum(t * t * dx, axis=-1)
+    vy = jnp.sum(t * t * dy, axis=-1)
+    return jnp.stack([s, vx, vy], axis=0)
+
+
+def attractive_ref(y, nbr_idx, nbr_p):
+    """Restricted-neighbourhood attractive force and KL pair terms (Eq. 12).
+
+    y:       (N, 2) positions.
+    nbr_idx: (N, K) int32 neighbour indices (padded slots may point
+             anywhere; their p must be 0).
+    nbr_p:   (N, K) joint probabilities p_ij (UNexaggerated; padded = 0).
+    Returns:
+      attr: (N, 2)  sum_l p_il * t_il * (y_i - y_l)   with t = 1/(1+d^2)
+            (this equals Zhat * q_il * p_il * (y_i - y_l) of Eq. 12).
+      kl:   (N,)    sum_l p_il * (ln p_il - ln t_il); adding ln(Zhat) *
+            sum(p) to the total gives the neighbour-restricted KL estimate.
+    """
+    yj = y[nbr_idx]  # (N, K, 2)
+    d = y[:, None, :] - yj
+    d2 = jnp.sum(d * d, axis=-1)
+    t = 1.0 / (1.0 + d2)
+    w = nbr_p * t
+    attr = jnp.sum(w[..., None] * d, axis=1)
+    safe_p = jnp.where(nbr_p > 0, nbr_p, 1.0)
+    kl = jnp.sum(jnp.where(nbr_p > 0, nbr_p * (jnp.log(safe_p) - jnp.log(t)), 0.0), axis=1)
+    return attr, kl
+
+
+def bilinear_ref(fields, y, origin, pixel):
+    """Bilinear interpolation of the (3, G, G) field texture at points y.
+
+    Matches OpenGL-style texture sampling at pixel centres: a point that
+    sits exactly on pixel centre (i, j) returns fields[:, i, j].
+    Returns (N, 3): columns S, V_x, V_y.
+    """
+    grid = fields.shape[-1]
+    u = (y[:, 0] - origin[0]) / pixel - 0.5  # continuous column coord
+    v = (y[:, 1] - origin[1]) / pixel - 0.5  # continuous row coord
+    u = jnp.clip(u, 0.0, grid - 1.000001)
+    v = jnp.clip(v, 0.0, grid - 1.000001)
+    j0 = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, grid - 2)
+    i0 = jnp.clip(jnp.floor(v).astype(jnp.int32), 0, grid - 2)
+    fu = u - j0.astype(jnp.float32)
+    fv = v - i0.astype(jnp.float32)
+    f00 = fields[:, i0, j0]      # (3, N)
+    f01 = fields[:, i0, j0 + 1]
+    f10 = fields[:, i0 + 1, j0]
+    f11 = fields[:, i0 + 1, j0 + 1]
+    top = f00 * (1.0 - fu) + f01 * fu
+    bot = f10 * (1.0 - fu) + f11 * fu
+    return (top * (1.0 - fv) + bot * fv).T

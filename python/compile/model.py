@@ -1,0 +1,156 @@
+# L2 — the t-SNE gradient-descent iteration as a JAX computation.
+#
+# One `tsne_step` is the paper's full per-iteration pipeline (Fig. 4):
+#
+#   bbox -> field grid placement -> Pallas field evaluation (L1)
+#        -> bilinear field query -> Zhat (Eq. 13) -> F_rep (Eq. 14)
+#        -> Pallas attractive forces (L1, Eq. 12)
+#        -> gradient (Eq. 9) -> gains/momentum update -> recentre
+#
+# The adaptive-resolution policy (the paper's rho, SS4.2) lives in the Rust
+# coordinator: it reads the returned bbox and picks the next iteration's
+# *grid size* G among the AOT-compiled variants; the grid *placement*
+# (origin, pixel size) is derived here, inside the step, from the current
+# bounding box — so a single artifact stays correct as the embedding
+# expands, and G only controls accuracy.
+#
+# Everything is shape-static: N, K and G are baked per artifact (see
+# aot.py); real jobs are padded with mask=0 phantom points that contribute
+# nothing anywhere and never move.
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attractive as attractive_k
+from compile.kernels import fields as fields_k
+from compile.kernels import ref
+
+# Gradient-descent constants (van der Maaten 2008 / HDI defaults, used by
+# the paper's evaluation).
+GAIN_ADD = 0.2
+GAIN_MUL = 0.8
+GAIN_MIN = 0.01
+# Extra margin (in pixels) around the bounding box so border points keep a
+# full bilinear neighbourhood.
+GRID_MARGIN_PX = 1.5
+
+
+def bbox_of(y, mask):
+    """(min_x, min_y, max_x, max_y) over real (mask=1) points."""
+    big = jnp.float32(3.4e38)
+    mx = jnp.where(mask > 0, y[:, 0], big)
+    my = jnp.where(mask > 0, y[:, 1], big)
+    min_x = jnp.min(mx)
+    min_y = jnp.min(my)
+    mx = jnp.where(mask > 0, y[:, 0], -big)
+    my = jnp.where(mask > 0, y[:, 1], -big)
+    return jnp.stack([min_x, min_y, jnp.max(mx), jnp.max(my)])
+
+
+def grid_placement(bbox, grid):
+    """Square field-domain (origin, pixel) covering bbox with margin.
+
+    The domain is the bbox inflated by GRID_MARGIN_PX pixels on each side,
+    made square (the paper's textures are square), with a small floor on
+    the extent so a degenerate all-points-coincident embedding still
+    yields a valid grid.
+    """
+    g = jnp.float32(grid)
+    span_x = bbox[2] - bbox[0]
+    span_y = bbox[3] - bbox[1]
+    span = jnp.maximum(jnp.maximum(span_x, span_y), 1e-3)
+    pixel = span / (g - 2.0 * GRID_MARGIN_PX)
+    cx = 0.5 * (bbox[0] + bbox[2])
+    cy = 0.5 * (bbox[1] + bbox[3])
+    half = 0.5 * g * pixel
+    origin = jnp.stack([cx - half, cy - half])
+    return origin, pixel.reshape(1)
+
+
+def repulsive(y, mask, origin, pixel, *, grid):
+    """F_rep (Eq. 14) and Zhat (Eq. 13) via the L1 field kernel."""
+    tex = fields_k.fields(y, mask, origin, pixel, grid=grid)
+    svv = ref.bilinear_ref(tex, y, origin, pixel)  # (N, 3) — jnp gather, fused by XLA
+    s = svv[:, 0]
+    v = svv[:, 1:3]
+    # Eq. 13: each real point's own kernel contributes exactly 1 to S(y_i).
+    zhat = jnp.maximum(jnp.sum((s - 1.0) * mask), jnp.float32(1e-12))
+    rep = v / zhat
+    return rep, zhat
+
+
+def tsne_step(y, vel, gains, mask, nbr_idx, nbr_p, eta, momentum, exaggeration, *, grid):
+    """One t-SNE gradient-descent iteration (the paper's Fig. 4).
+
+    All arrays f32 unless noted. Scalars are rank-0 f32.
+      y, vel, gains: (N, 2)  state
+      mask:          (N,)    1 real / 0 padding
+      nbr_idx:       (N, K)  i32
+      nbr_p:         (N, K)  joint P, unexaggerated, 0 on padding
+      eta, momentum, exaggeration: learning rate, momentum alpha,
+                     early-exaggeration multiplier for this iteration
+    Returns (y', vel', gains', zhat, kl, bbox[4]).
+    kl is the neighbour-restricted KL estimate (uses UNexaggerated P).
+    """
+    bbox = bbox_of(y, mask)
+    origin, pixel = grid_placement(bbox, grid)
+
+    rep, zhat = repulsive(y, mask, origin, pixel, grid=grid)
+    attr, kl_pairs = attractive_k.attractive(y, nbr_idx, nbr_p)
+
+    # Eq. 9: the early-exaggeration multiplier scales P, hence F_attr,
+    # linearly — apply it outside the kernel so KL sees the true P.
+    #
+    # Sign note: Eq. 8's repulsive numerator is sum_j t^2 (y_i - y_j),
+    # while the field of Eq. 11 is V(y_i) = sum_j t^2 (y_j - y_i) — the
+    # *negative*. Taking Eq. 9 + Eq. 14 literally flips the repulsion
+    # (a known erratum; the reference tfjs-tsne code negates it), so the
+    # repulsion enters the gradient with a + sign here.
+    grad = 4.0 * (exaggeration * attr + rep) * mask[:, None]
+
+    # van der Maaten gains + momentum update.
+    same_sign = (grad * vel) > 0.0
+    gains = jnp.where(same_sign, gains * GAIN_MUL, gains + GAIN_ADD)
+    gains = jnp.maximum(gains, GAIN_MIN) * mask[:, None]
+    vel = momentum * vel - eta * gains * grad
+    y = y + vel
+
+    # Recentre over real points (keeps the field domain from drifting).
+    n_real = jnp.maximum(jnp.sum(mask), 1.0)
+    centre = jnp.sum(y * mask[:, None], axis=0) / n_real
+    y = (y - centre[None, :]) * mask[:, None]
+
+    kl = jnp.sum(kl_pairs) + jnp.log(zhat) * jnp.sum(nbr_p)
+    return y, vel, gains, zhat, kl, bbox_of(y, mask)
+
+
+def tsne_steps(y, vel, gains, mask, nbr_idx, nbr_p, eta, momentum, exaggeration, *, grid, steps):
+    """`steps` fused iterations under lax.scan (fixed G within the call).
+
+    Amortises the per-execute host boundary; the grid *placement* still
+    re-adapts every inner iteration. Returns the same tuple as tsne_step
+    with zhat/kl from the final iteration.
+    """
+
+    def body(carry, _):
+        y, vel, gains = carry
+        y, vel, gains, zhat, kl, bbox = tsne_step(
+            y, vel, gains, mask, nbr_idx, nbr_p, eta, momentum, exaggeration, grid=grid
+        )
+        return (y, vel, gains), (zhat, kl, bbox)
+
+    (y, vel, gains), (zhats, kls, bboxes) = jax.lax.scan(
+        body, (y, vel, gains), None, length=steps
+    )
+    return y, vel, gains, zhats[-1], kls[-1], bboxes[-1]
+
+
+def step_fn(grid):
+    """The single-step function with G baked, ready for jax.jit().lower()."""
+    return functools.partial(tsne_step, grid=grid)
+
+
+def steps_fn(grid, steps):
+    """The fused multi-step function with G and step count baked."""
+    return functools.partial(tsne_steps, grid=grid, steps=steps)

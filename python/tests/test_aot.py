@@ -1,0 +1,75 @@
+# AOT path sanity: HLO text emission, manifest structure, selfcheck
+# stability. (The Rust integration test runtime_roundtrip.rs verifies the
+# same artifacts execute correctly through PJRT.)
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    def test_hlo_text_parses_as_module(self):
+        text = aot.to_hlo_text(aot.lower_variant(model.step_fn(16), 128, 8))
+        assert text.startswith("HloModule"), text[:64]
+        # All six outputs present in the root tuple.
+        assert "tuple(" in text
+
+    def test_hlo_is_deterministic(self):
+        a = aot.to_hlo_text(aot.lower_variant(model.step_fn(16), 128, 8))
+        b = aot.to_hlo_text(aot.lower_variant(model.step_fn(16), 128, 8))
+        assert a == b
+
+    def test_scan_variant_lowers(self):
+        text = aot.to_hlo_text(aot.lower_variant(model.steps_fn(16, 3), 128, 8))
+        assert text.startswith("HloModule")
+
+    def test_arg_order_matches_manifest_names(self):
+        # The Rust runtime feeds buffers positionally in ARG_NAMES order;
+        # lock the contract.
+        assert aot.ARG_NAMES == [
+            "y", "vel", "gains", "mask", "nbr_idx", "nbr_p",
+            "eta", "momentum", "exaggeration",
+        ]
+        assert aot.OUT_NAMES == ["y", "vel", "gains", "zhat", "kl", "bbox"]
+        spec = aot.example_args(128, 8)
+        assert len(spec) == len(aot.ARG_NAMES)
+        assert spec[4].dtype == np.int32
+
+
+class TestSelfcheck:
+    def test_selfcheck_deterministic_and_finite(self):
+        a = aot.selfcheck_case(256, 16, 32)
+        b = aot.selfcheck_case(256, 16, 32)
+        assert a == b
+        assert np.isfinite(a["zhat"]) and a["zhat"] > 0
+        assert np.isfinite(a["kl"])
+        assert len(a["y_init"]) == 2 * a["n_real"]
+        assert len(a["y_out"]) == 2 * a["n_real"]
+
+    def test_selfcheck_json_serialisable(self):
+        c = aot.selfcheck_case(256, 16, 32)
+        text = json.dumps(c)
+        assert json.loads(text) == c
+
+
+class TestEndToEndArtifacts:
+    def test_emit_to_tmpdir(self, tmp_path):
+        import subprocess, sys
+        env = dict(os.environ)
+        r = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+             "--ns", "128", "--grids", "16", "--no-scan", "--k", "8"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, env=env,
+        )
+        assert r.returncode == 0, r.stderr
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert len(manifest["artifacts"]) == 1
+        art = manifest["artifacts"][0]
+        assert (tmp_path / art["file"]).exists()
+        assert art["n"] == 128 and art["grid"] == 16 and art["k"] == 8
+        assert (tmp_path / "selfcheck.json").exists()

@@ -1,0 +1,175 @@
+# L1 kernel correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+#
+# hypothesis sweeps shapes, masks, tiling parameters and degenerate point
+# configurations; assert_allclose against ref.py is the core correctness
+# signal of the whole build (the Rust side loads exactly these kernels).
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attractive as attractive_k
+from compile.kernels import fields as fields_k
+from compile.kernels import ref
+
+SETTLE = dict(max_examples=25, deadline=None)
+
+
+def mk_points(seed, n, extent=5.0, mask_prob=0.85):
+    rng = np.random.RandomState(seed)
+    y = (rng.randn(n, 2) * extent / 3).astype(np.float32)
+    mask = (rng.rand(n) < mask_prob).astype(np.float32)
+    y *= mask[:, None]  # padded points parked at the origin, like Rust does
+    return jnp.asarray(y), jnp.asarray(mask)
+
+
+class TestFieldsKernel:
+    @settings(**SETTLE)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_blocks=st.integers(1, 3),
+        grid_pow=st.integers(2, 5),  # G in {32..256} via 8*2^p? keep small: 4..32 rows
+    )
+    def test_matches_ref_random(self, seed, n_blocks, grid_pow):
+        block = 64
+        grid = 8 * (2 ** (grid_pow - 2))  # 8,16,32,64
+        y, mask = mk_points(seed, block * n_blocks)
+        origin = jnp.array([-6.0, -6.0], jnp.float32)
+        pixel = jnp.array([12.0 / grid], jnp.float32)
+        out = fields_k.fields(y, mask, origin, pixel, grid=grid, tile_rows=4, block_pts=block)
+        expect = ref.fields_ref(y, mask, origin, pixel, grid)
+        assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-4, atol=2e-4)
+
+    def test_tiling_invariance(self):
+        # The same field must come out for every legal tiling choice.
+        y, mask = mk_points(3, 512)
+        origin = jnp.array([-5.0, -5.0], jnp.float32)
+        pixel = jnp.array([10.0 / 32], jnp.float32)
+        base = None
+        for tile_rows, block_pts in [(4, 512), (8, 256), (16, 128), (32, 64)]:
+            out = np.asarray(
+                fields_k.fields(y, mask, origin, pixel, grid=32, tile_rows=tile_rows, block_pts=block_pts)
+            )
+            if base is None:
+                base = out
+            else:
+                assert_allclose(out, base, rtol=1e-5, atol=1e-5)
+
+    def test_all_masked_gives_zero_field(self):
+        y = jnp.zeros((128, 2), jnp.float32)
+        mask = jnp.zeros((128,), jnp.float32)
+        out = fields_k.fields(
+            y, mask, jnp.array([-1.0, -1.0], jnp.float32), jnp.array([0.1], jnp.float32), grid=16,
+            tile_rows=4, block_pts=64,
+        )
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_single_point_field_shape(self):
+        # One point at the origin: S peaks at the nearest pixel centre and
+        # V points away from the point (V(p) = t^2 (y - p)).
+        y = jnp.zeros((64, 2), jnp.float32)
+        mask = jnp.zeros((64,), jnp.float32).at[0].set(1.0)
+        g = 16
+        origin = jnp.array([-2.0, -2.0], jnp.float32)
+        pixel = jnp.array([4.0 / g], jnp.float32)
+        out = np.asarray(fields_k.fields(y, mask, origin, pixel, grid=g, tile_rows=4, block_pts=64))
+        s = out[0]
+        centre = np.unravel_index(np.argmax(s), s.shape)
+        assert abs(centre[0] - g / 2) <= 1 and abs(centre[1] - g / 2) <= 1
+        # V_x is positive left of the point (pushes... points right of p feel +x).
+        assert out[1][g // 2, 2] > 0 > out[1][g // 2, g - 3]
+        # Symmetry: S is (approximately) symmetric about the centre.
+        assert_allclose(s, s[::-1, ::-1], rtol=1e-3, atol=1e-5)
+
+    def test_coincident_points_superpose(self):
+        # m copies of the same point produce exactly m * single-point field.
+        n, g = 64, 16
+        y = jnp.zeros((n, 2), jnp.float32).at[:, 0].set(0.3).at[:, 1].set(-0.2)
+        origin = jnp.array([-2.0, -2.0], jnp.float32)
+        pixel = jnp.array([4.0 / g], jnp.float32)
+        m1 = jnp.zeros((n,), jnp.float32).at[0].set(1.0)
+        m5 = jnp.zeros((n,), jnp.float32).at[:5].set(1.0)
+        f1 = np.asarray(fields_k.fields(y, m1, origin, pixel, grid=g, tile_rows=4, block_pts=64))
+        f5 = np.asarray(fields_k.fields(y, m5, origin, pixel, grid=g, tile_rows=4, block_pts=64))
+        assert_allclose(f5, 5.0 * f1, rtol=1e-5, atol=1e-6)
+
+
+class TestAttractiveKernel:
+    @settings(**SETTLE)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 16), blocks=st.integers(1, 3))
+    def test_matches_ref_random(self, seed, k, blocks):
+        n = 64 * blocks
+        rng = np.random.RandomState(seed)
+        y = jnp.asarray(rng.randn(n, 2).astype(np.float32))
+        idx = jnp.asarray(rng.randint(0, n, (n, k)).astype(np.int32))
+        p = rng.rand(n, k).astype(np.float32)
+        p *= rng.rand(n, k) > 0.3  # sprinkle exact zeros (padding)
+        p = jnp.asarray(p / max(p.sum(), 1e-9))
+        a1, kl1 = attractive_k.attractive(y, idx, p, block_rows=64)
+        a2, kl2 = ref.attractive_ref(y, idx, p)
+        assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-4, atol=1e-6)
+        assert_allclose(np.asarray(kl1), np.asarray(kl2), rtol=1e-4, atol=1e-6)
+
+    def test_zero_p_gives_zero_force(self):
+        n, k = 128, 8
+        y = jnp.asarray(np.random.RandomState(0).randn(n, 2).astype(np.float32))
+        idx = jnp.zeros((n, k), jnp.int32)
+        p = jnp.zeros((n, k), jnp.float32)
+        attr, kl = attractive_k.attractive(y, idx, p, block_rows=64)
+        assert float(jnp.abs(attr).max()) == 0.0
+        assert float(jnp.abs(kl).max()) == 0.0
+
+    def test_two_point_analytic(self):
+        # Two points at distance d: F_attr on 0 = p * t * (y0 - y1).
+        n, k = 64, 4
+        y = jnp.zeros((n, 2), jnp.float32).at[1, 0].set(2.0)
+        idx = jnp.zeros((n, k), jnp.int32).at[0, 0].set(1)
+        p = jnp.zeros((n, k), jnp.float32).at[0, 0].set(0.5)
+        attr, _ = attractive_k.attractive(y, idx, p, block_rows=64)
+        t = 1.0 / (1.0 + 4.0)
+        assert_allclose(np.asarray(attr)[0], [0.5 * t * (-2.0), 0.0], rtol=1e-6)
+
+    def test_symmetric_pair_forces_cancel(self):
+        # Symmetric p and mutual neighbours: total attractive force is zero.
+        n, k = 64, 4
+        rng = np.random.RandomState(5)
+        y = jnp.asarray(rng.randn(n, 2).astype(np.float32))
+        idx = np.zeros((n, k), np.int32)
+        p = np.zeros((n, k), np.float32)
+        for i in range(n):
+            j = (i + 1) % n
+            idx[i, 0] = j
+            p[i, 0] = 1.0 / n
+            idx[i, 1] = (i - 1) % n
+            p[i, 1] = 1.0 / n
+        attr, _ = attractive_k.attractive(y, jnp.asarray(idx), jnp.asarray(p), block_rows=64)
+        total = np.asarray(attr).sum(axis=0)
+        assert_allclose(total, [0.0, 0.0], atol=1e-4)
+
+
+class TestBilinear:
+    def test_exact_at_pixel_centres(self):
+        g = 8
+        rng = np.random.RandomState(1)
+        tex = jnp.asarray(rng.rand(3, g, g).astype(np.float32))
+        origin = jnp.array([0.0, 0.0], jnp.float32)
+        pixel = 0.5
+        # Query every pixel centre.
+        ii, jj = np.meshgrid(range(g), range(g), indexing="ij")
+        pts = np.stack(
+            [(jj.ravel() + 0.5) * pixel, (ii.ravel() + 0.5) * pixel], axis=1
+        ).astype(np.float32)
+        out = ref.bilinear_ref(tex, jnp.asarray(pts), origin, jnp.float32(pixel))
+        expect = np.asarray(tex)[:, ii.ravel(), jj.ravel()].T
+        assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-6)
+
+    def test_interpolates_linearly_between_centres(self):
+        g = 4
+        tex = jnp.zeros((3, g, g), jnp.float32).at[0, 1, 1].set(1.0).at[0, 1, 2].set(3.0)
+        origin = jnp.array([0.0, 0.0], jnp.float32)
+        pixel = 1.0
+        # Midway between pixel centres (1,1) and (1,2) in x.
+        pt = jnp.asarray([[2.0, 1.5]], jnp.float32)
+        out = ref.bilinear_ref(tex, pt, origin, jnp.float32(pixel))
+        assert_allclose(float(out[0, 0]), 2.0, rtol=1e-6)

@@ -1,0 +1,203 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. ρ / grid resolution: accuracy (KL, force error) vs field cost —
+//!    the paper's "ρ = 0.5 is a good compromise" claim (§4.2).
+//! 2. Splat (bounded support, §5.1.2) vs gather (unbounded, §5.2):
+//!    accuracy loss and cost of the rasterisation-style variant.
+//! 3. Adaptive-grid hysteresis: executable switches with and without.
+//! 4. Fused multi-step artifact (lax.scan) vs single-step: host-boundary
+//!    amortisation on the device path.
+//! 5. KD-forest parameters: trees/checks/refine vs recall and build+query
+//!    time (the A-tSNE approximation dial).
+//!
+//!     cargo bench --bench ablation [-- --quick]
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::common::Repulsion;
+use gpgpu_sne::embed::exact::ExactRepulsion;
+use gpgpu_sne::embed::fieldcpu::{compute_fields, compute_fields_splat, grid_placement, FieldCpu, FieldRepulsion};
+use gpgpu_sne::embed::gpgpu::GridPolicy;
+use gpgpu_sne::embed::{Engine, OptParams};
+use gpgpu_sne::hd::{bruteforce, kdforest, perplexity};
+use gpgpu_sne::metrics::kl;
+use gpgpu_sne::runtime::{self, Runtime};
+use gpgpu_sne::util::bench::{measure, quick_mode, Report};
+use gpgpu_sne::util::rng::Rng;
+
+fn random_points(n: usize, seed: u64, spread: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..2 * n).map(|_| rng.gauss_f32(0.0, spread)).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 5) };
+
+    // --- 1. Grid resolution (ρ) ablation.
+    let n = if quick { 1000 } else { 4000 };
+    let ds = gpgpu_sne::data::by_name("mnist", n, 2)?;
+    let knn = compute_knn(&ds, KnnMethod::KdForest, 90.min(n / 2), 2);
+    let p = perplexity::joint_p(&knn, 30.0);
+    let opt = OptParams { iters: if quick { 150 } else { 400 }, ..Default::default() };
+    let mut rep = Report::new(
+        &format!("ρ ablation (fixed grid, n={n}) — accuracy vs cost"),
+        &["KL(exact)", "optimize time", "force max-err"],
+    );
+    // Reference forces at a converged random layout for the error column.
+    let y_probe = random_points(n, 7, 15.0);
+    let mut exact_num = vec![0.0f32; 2 * n];
+    ExactRepulsion.compute(&y_probe, &mut exact_num);
+    let scale = exact_num.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    for grid in [16usize, 32, 64, 128, 256] {
+        let mut engine = FieldCpu {
+            rep: FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() },
+        };
+        let t = std::time::Instant::now();
+        let y = engine.run(&p, &opt, None)?;
+        let secs = t.elapsed().as_secs_f64();
+        let kl_v = kl::kl_divergence_exact(&p, &y);
+        let mut num = vec![0.0f32; 2 * n];
+        let mut fr = FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() };
+        fr.compute(&y_probe, &mut num);
+        let err = num
+            .iter()
+            .zip(&exact_num)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+            / scale;
+        rep.row(
+            &format!("G={grid}"),
+            vec![format!("{kl_v:.4}"), format!("{secs:.2}s"), format!("{:.1}%", err * 100.0)],
+        );
+    }
+    rep.print();
+    rep.write_csv("ablation_grid.csv")?;
+
+    // --- 2. Splat vs gather.
+    let yn = if quick { 2000 } else { 8000 };
+    let y = random_points(yn, 3, 20.0);
+    let grid = 128;
+    let (origin, pixel) = grid_placement([-60.0, -60.0, 60.0, 60.0], grid);
+    let full = compute_fields(&y, origin, pixel, grid);
+    let mut rep = Report::new(
+        &format!("splat (bounded support) vs gather — n={yn}, G={grid}"),
+        &["median", "S mass error"],
+    );
+    let gather_t = measure(warmup, iters, || {
+        let _ = compute_fields(&y, origin, pixel, grid);
+    })
+    .median();
+    rep.row("gather (unbounded)", vec![format!("{:.1}ms", gather_t * 1e3), "0.0%".into()]);
+    let s_full: f64 = full[..grid * grid].iter().map(|&v| v as f64).sum();
+    for support in [2.0f32, 5.0, 15.0] {
+        let t = measure(warmup, iters, || {
+            let _ = compute_fields_splat(&y, origin, pixel, grid, support);
+        })
+        .median();
+        let cut = compute_fields_splat(&y, origin, pixel, grid, support);
+        let s_cut: f64 = cut[..grid * grid].iter().map(|&v| v as f64).sum();
+        rep.row(
+            &format!("splat support={support}"),
+            vec![
+                format!("{:.1}ms", t * 1e3),
+                format!("{:.1}%", (1.0 - s_cut / s_full) * 100.0),
+            ],
+        );
+    }
+    rep.print();
+    rep.write_csv("ablation_splat.csv")?;
+
+    // --- 3. Hysteresis ablation: grid switches over a noisy diameter walk.
+    let mut rep = Report::new("adaptive-grid hysteresis (simulated diameter walk)", &["switches"]);
+    for (label, hyst) in [("off (0%)", 0.0f32), ("paper (10%)", 0.10), ("wide (25%)", 0.25)] {
+        let mut policy = GridPolicy::new(0.5, vec![32, 64, 128, 256]);
+        policy.hysteresis = hyst;
+        let mut rng = Rng::new(11);
+        let mut d = 12.0f32;
+        let mut last = 0usize;
+        let mut switches = 0usize;
+        for step in 0..1000 {
+            // Growth + multiplicative noise, like a real optimisation.
+            d = (d * (1.0 + 0.002)) * (1.0 + 0.08 * (rng.f32() - 0.5));
+            let g = policy.choose(d);
+            if last != 0 && g != last {
+                switches += 1;
+            }
+            last = g;
+            let _ = step;
+        }
+        rep.row(label, vec![format!("{switches}")]);
+    }
+    rep.print();
+    rep.write_csv("ablation_hysteresis.csv")?;
+
+    // --- 4. Fused multi-step artifact vs single-step (device path).
+    if let Some(dir) = runtime::locate_artifacts() {
+        let rt = Arc::new(Runtime::new(&dir)?);
+        if let Some(fused_spec) = rt.manifest.find_fused(1024).cloned() {
+            let single = rt.step_executable(1024, fused_spec.grid)?;
+            let fused = rt.executable(&fused_spec.name)?;
+            let k = fused_spec.k;
+            let npad = 1024;
+            let n_real = 700;
+            let mut mask = vec![0.0f32; npad];
+            mask[..n_real].fill(1.0);
+            let idx = vec![0i32; npad * k];
+            let mut pv = vec![0.0f32; npad * k];
+            for i in 0..n_real {
+                pv[i * k] = 1.0 / n_real as f32;
+            }
+            let statics = rt.upload_static(&mask, &idx, &pv, k)?;
+            let mut rep = Report::new(
+                &format!("fused scan ablation (n=1024, G={}, S={})", fused_spec.grid, fused_spec.steps),
+                &["median / iter"],
+            );
+            let mut state = gpgpu_sne::runtime::StepState::new(random_points(npad, 5, 5.0), &mask);
+            let t_single = measure(warmup, iters, || {
+                let _ = rt.run_step(&single, &mut state, &statics, 200.0, 0.5, 1.0).unwrap();
+            })
+            .median();
+            rep.row("single-step x1", vec![format!("{:.2}ms", t_single * 1e3)]);
+            let mut state = gpgpu_sne::runtime::StepState::new(random_points(npad, 5, 5.0), &mask);
+            let t_fused = measure(warmup, iters, || {
+                let _ = rt.run_step(&fused, &mut state, &statics, 200.0, 0.5, 1.0).unwrap();
+            })
+            .median()
+                / fused_spec.steps as f64;
+            rep.row(
+                &format!("fused x{}", fused_spec.steps),
+                vec![format!("{:.2}ms", t_fused * 1e3)],
+            );
+            rep.print();
+            rep.write_csv("ablation_fused.csv")?;
+        } else {
+            eprintln!("note: no fused artifact built (rerun aot without --no-scan)");
+        }
+    } else {
+        eprintln!("note: no artifacts — fused-scan ablation skipped");
+    }
+
+    // --- 5. KD-forest parameter sweep.
+    let kn = if quick { 2000 } else { 6000 };
+    let ds = gpgpu_sne::data::by_name("wikiword", kn, 8)?;
+    let exact = bruteforce::knn(&ds, 30);
+    let mut rep = Report::new(&format!("kd-forest dial (n={kn}, d=300, k=30)"), &["time", "recall"]);
+    for (trees, checks, refine) in
+        [(1usize, 16usize, false), (4, 64, false), (4, 64, true), (8, 128, true)]
+    {
+        let params = kdforest::ForestParams { trees, checks, refine, ..Default::default() };
+        let t = std::time::Instant::now();
+        let g = kdforest::KdForest::build(&ds, params, 1).knn(30);
+        let secs = t.elapsed().as_secs_f64();
+        rep.row(
+            &format!("trees={trees} checks={checks} refine={refine}"),
+            vec![format!("{secs:.2}s"), format!("{:.3}", g.recall_against(&exact))],
+        );
+    }
+    rep.print();
+    rep.write_csv("ablation_kdforest.csv")?;
+    Ok(())
+}

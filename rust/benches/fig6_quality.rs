@@ -1,0 +1,91 @@
+//! Figure 6, rows 2–3 — embedding quality vs dataset size: final
+//! KL-divergence (row 2) and Nearest-Neighbour-Preservation
+//! precision/recall curves (row 3) on MNIST, WikiWord and Word2Vec,
+//! engines as in row 1.
+//!
+//! Expected shape: field-based KL ≤ BH KL with the gap widening as N
+//! grows (the paper's density argument); NNP curves of GPGPU-SNE dominate
+//! the BH-based ones.
+//!
+//!     cargo bench --bench fig6_quality [-- --quick]
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::{self, OptParams};
+use gpgpu_sne::hd::perplexity;
+use gpgpu_sne::metrics::{kl, nnp};
+use gpgpu_sne::runtime::{self, Runtime};
+use gpgpu_sne::util::bench::{quick_mode, Report};
+use gpgpu_sne::util::image;
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let ns: Vec<usize> = if quick { vec![500, 1500] } else { vec![1000, 2500] };
+    let iters = if quick { 250 } else { 500 };
+    let nnp_sample = 1000;
+
+    let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
+    let mut engines = vec!["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu"];
+    if rt.is_some() {
+        engines.push("gpgpu");
+    }
+    std::fs::create_dir_all("bench_out")?;
+
+    for dataset in ["mnist", "wikiword", "word2vec"] {
+        let mut kl_report = Report::new(
+            &format!("Fig6 row 2 — final KL, {dataset} ({iters} iters)"),
+            &engines.iter().map(|s| *s).collect::<Vec<_>>(),
+        );
+        let mut nnp_report = Report::new(
+            &format!("Fig6 row 3 — NNP mean precision, {dataset}"),
+            &engines.iter().map(|s| *s).collect::<Vec<_>>(),
+        );
+        for &n in &ns {
+            let ds = gpgpu_sne::data::by_name(dataset, n, 5)?;
+            let knn = compute_knn(&ds, KnnMethod::KdForest, 90.min(n / 2), 5);
+            let p = perplexity::joint_p(&knn, 30.0);
+            let params = OptParams { iters, ..Default::default() };
+            let exact_cap = if quick { 800 } else { 2500 };
+
+            let mut kl_cells = Vec::new();
+            let mut nnp_cells = Vec::new();
+            for name in &engines {
+                let over_capacity = *name == "gpgpu"
+                    && rt.as_ref().map(|r| n > r.manifest.max_bucket()).unwrap_or(true);
+                if (*name == "exact" && n > exact_cap) || over_capacity {
+                    kl_cells.push("—".into());
+                    nnp_cells.push("—".into());
+                    continue;
+                }
+                let runtime = if *name == "gpgpu" { rt.clone() } else { None };
+                let mut e = embed::by_name(name, runtime)?;
+                let y = e.run(&p, &params, None)?;
+                let kl_v = kl::kl_divergence_exact(&p, &y);
+                let curve = nnp::nnp_curve(&ds, &y, nnp_sample, 0);
+                kl_cells.push(format!("{kl_v:.4}"));
+                nnp_cells.push(format!("{:.3}", curve.mean_precision()));
+                // Full PR curve to CSV (the actual row-3 figure series).
+                let pr = format!("bench_out/fig6_nnp_{dataset}_n{n}_{name}.csv");
+                image::write_csv(
+                    &pr,
+                    &["k", "precision", "recall"],
+                    &[
+                        (1..=30).map(|k| k as f64).collect(),
+                        curve.precision.clone(),
+                        curve.recall.clone(),
+                    ],
+                )?;
+            }
+            kl_report.row(&format!("N={n}"), kl_cells);
+            nnp_report.row(&format!("N={n}"), nnp_cells);
+        }
+        kl_report.print();
+        kl_report.write_csv(&format!("fig6_kl_{dataset}.csv"))?;
+        nnp_report.print();
+        nnp_report.write_csv(&format!("fig6_nnp_{dataset}.csv"))?;
+    }
+    println!("PR curves per (dataset, N, engine) written to bench_out/fig6_nnp_*.csv");
+    Ok(())
+}

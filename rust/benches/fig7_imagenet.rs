@@ -1,0 +1,95 @@
+//! Figure 7 — the ImageNet activation datasets (Mixed3a 256-d, Head0
+//! 128-d): execution time, final KL and NNP for BH-SNE θ=0.5,
+//! t-SNE-CUDA θ=0.0/0.5 (simulated) and the field-based engines — the
+//! paper's exact engine lineup for this figure.
+//!
+//! Expected shape: field-based beats BH by ~two orders of magnitude in
+//! time at the full 100k (here: the growing-factor trend over the sweep),
+//! with lower KL and better precision/recall than both BH and t-SNE-CUDA.
+//!
+//!     cargo bench --bench fig7_imagenet [-- --quick]
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::{self, tsnecuda, OptParams};
+use gpgpu_sne::hd::perplexity;
+use gpgpu_sne::metrics::{kl, nnp};
+use gpgpu_sne::runtime::{self, Runtime};
+use gpgpu_sne::util::bench::{measure_once, quick_mode, Report};
+use gpgpu_sne::util::timer::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let ns: Vec<usize> = if quick { vec![500, 1500] } else { vec![1000, 2500] };
+    let iters = if quick { 150 } else { 300 };
+    let scale = 1000.0 / iters as f64;
+
+    let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
+    // The paper's Fig. 7 engine set.
+    let mut engines = vec!["bh-0.5", "tsne-cuda-0.0", "tsne-cuda-0.5", "fieldcpu"];
+    if rt.is_some() {
+        engines.push("gpgpu");
+    }
+
+    for dataset in ["imagenet-mixed3a", "imagenet-head0"] {
+        let mut time_report = Report::new(
+            &format!("Fig7 — time, {dataset} (1000-iter equivalent; * = GPU model)"),
+            &engines.iter().map(|s| *s).collect::<Vec<_>>(),
+        );
+        let mut kl_report = Report::new(
+            &format!("Fig7 — final KL, {dataset}"),
+            &engines.iter().map(|s| *s).collect::<Vec<_>>(),
+        );
+        let mut nnp_report = Report::new(
+            &format!("Fig7 — NNP mean precision, {dataset}"),
+            &engines.iter().map(|s| *s).collect::<Vec<_>>(),
+        );
+        for &n in &ns {
+            let ds = gpgpu_sne::data::by_name(dataset, n, 9)?;
+            let knn = compute_knn(&ds, KnnMethod::KdForest, 90.min(n / 2), 9);
+            let p = perplexity::joint_p(&knn, 30.0);
+            let params = OptParams { iters, ..Default::default() };
+
+            let mut t_cells = Vec::new();
+            let mut k_cells = Vec::new();
+            let mut n_cells = Vec::new();
+            for name in &engines {
+                if *name == "gpgpu"
+                    && rt.as_ref().map(|r| n > r.manifest.max_bucket()).unwrap_or(true)
+                {
+                    t_cells.push("—".into());
+                    k_cells.push("—".into());
+                    n_cells.push("—".into());
+                    continue;
+                }
+                let runtime = if *name == "gpgpu" { rt.clone() } else { None };
+                let mut e = embed::by_name(name, runtime)?;
+                let mut y = Vec::new();
+                let secs = measure_once(|| {
+                    y = e.run(&p, &params, None).unwrap();
+                }) * scale;
+                // t-SNE-CUDA rows report the modelled GPU time.
+                if name.starts_with("tsne-cuda") {
+                    t_cells.push(format!("{}*", fmt_secs(tsnecuda::TsneCudaSim::modelled_time(secs))));
+                } else {
+                    t_cells.push(fmt_secs(secs));
+                }
+                k_cells.push(format!("{:.4}", kl::kl_divergence_exact(&p, &y)));
+                let curve = nnp::nnp_curve(&ds, &y, 1000, 0);
+                n_cells.push(format!("{:.3}", curve.mean_precision()));
+            }
+            time_report.row(&format!("N={n}"), t_cells);
+            kl_report.row(&format!("N={n}"), k_cells);
+            nnp_report.row(&format!("N={n}"), n_cells);
+        }
+        time_report.print();
+        time_report.write_csv(&format!("fig7_time_{dataset}.csv"))?;
+        kl_report.print();
+        kl_report.write_csv(&format!("fig7_kl_{dataset}.csv"))?;
+        nnp_report.print();
+        nnp_report.write_csv(&format!("fig7_nnp_{dataset}.csv"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Micro-benchmarks of the hot paths (EXPERIMENTS.md §Perf): field
+//! evaluation (the L1 kernel's CPU mirror, by grid and N), the device
+//! step (by grid, measuring the full PJRT execute round-trip and its
+//! host-boundary overhead), the repulsion baselines, attractive pass,
+//! and the kNN structures.
+//!
+//!     cargo bench --bench micro_hotpath [-- --quick]
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::common::Repulsion;
+use gpgpu_sne::embed::exact::ExactRepulsion;
+use gpgpu_sne::embed::bh::BhRepulsion;
+use gpgpu_sne::embed::fieldcpu::{compute_fields, grid_placement, FieldRepulsion};
+use gpgpu_sne::hd::{kdforest, perplexity, vptree};
+use gpgpu_sne::runtime::{self, Runtime, StepState};
+use gpgpu_sne::util::bench::{measure, quick_mode, Report};
+use gpgpu_sne::util::rng::Rng;
+
+fn random_points(n: usize, seed: u64, spread: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..2 * n).map(|_| rng.gauss_f32(0.0, spread)).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+
+    // --- Field evaluation: grid × N scaling (the paper's O(N·ρ²) claim:
+    // cost linear in N at fixed grid; quadratic in grid at fixed N).
+    let mut rep = Report::new("fields eval (CPU mirror of the L1 kernel)", &["median", "per-point"]);
+    for &(n, grid) in &[(1000usize, 64usize), (1000, 128), (1000, 256), (4000, 128), (16_000, 128)] {
+        let y = random_points(n, 1, 10.0);
+        let (origin, pixel) = grid_placement([-30.0, -30.0, 30.0, 30.0], grid);
+        let st = measure(warmup, iters, || {
+            let _ = compute_fields(&y, origin, pixel, grid);
+        });
+        rep.row(
+            &format!("n={n} G={grid}"),
+            vec![
+                format!("{:.2}ms", st.median() * 1e3),
+                format!("{:.2}µs", st.median() * 1e6 / n as f64),
+            ],
+        );
+    }
+    rep.print();
+    rep.write_csv("micro_fields.csv")?;
+
+    // --- Repulsion approaches at fixed n.
+    let n = if quick { 2000 } else { 8000 };
+    let y = random_points(n, 2, 20.0);
+    let mut num = vec![0.0f32; 2 * n];
+    let mut rep = Report::new(&format!("repulsion variants (n={n})"), &["median", "vs exact"]);
+    let exact_t = measure(warmup, iters, || {
+        ExactRepulsion.compute(&y, &mut num);
+    })
+    .median();
+    rep.row("exact O(N²)", vec![format!("{:.1}ms", exact_t * 1e3), "1.0x".into()]);
+    for theta in [0.1f32, 0.5] {
+        let t = measure(warmup, iters, || {
+            BhRepulsion { theta }.compute(&y, &mut num);
+        })
+        .median();
+        rep.row(
+            &format!("BH θ={theta}"),
+            vec![format!("{:.1}ms", t * 1e3), format!("{:.1}x", exact_t / t)],
+        );
+    }
+    for grid in [128usize, 256] {
+        let mut fr = FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() };
+        let t = measure(warmup, iters, || {
+            fr.compute(&y, &mut num);
+        })
+        .median();
+        rep.row(
+            &format!("field G={grid}"),
+            vec![format!("{:.1}ms", t * 1e3), format!("{:.1}x", exact_t / t)],
+        );
+    }
+    rep.print();
+    rep.write_csv("micro_repulsion.csv")?;
+
+    // --- Device step: per-grid execute cost + host-boundary overhead.
+    if let Some(dir) = runtime::locate_artifacts() {
+        let rt = Arc::new(Runtime::new(&dir)?);
+        let mut rep = Report::new("device step (PJRT execute round-trip)", &["median", "per-point"]);
+        let buckets: Vec<usize> = {
+            let mut b: Vec<usize> = rt.manifest.steps().map(|a| a.n).collect();
+            b.sort_unstable();
+            b.dedup();
+            b
+        };
+        for &npad in &buckets {
+            for grid in rt.manifest.grids_for(npad) {
+                let exe = rt.step_executable(npad, grid)?;
+                let k = exe.spec.k;
+                let mut mask = vec![0.0f32; npad];
+                let n_real = npad * 3 / 4;
+                mask[..n_real].fill(1.0);
+                let idx = vec![0i32; npad * k];
+                let mut pv = vec![0.0f32; npad * k];
+                for i in 0..n_real {
+                    pv[i * k] = 1.0 / n_real as f32;
+                }
+                let statics = rt.upload_static(&mask, &idx, &pv, k)?;
+                let y0 = random_points(npad, 3, 5.0);
+                let mut state = StepState::new(y0, &mask);
+                let st = measure(warmup, iters, || {
+                    let _ = rt.run_step(&exe, &mut state, &statics, 200.0, 0.5, 1.0).unwrap();
+                });
+                rep.row(
+                    &format!("n={npad} G={grid}"),
+                    vec![
+                        format!("{:.2}ms", st.median() * 1e3),
+                        format!("{:.2}µs", st.median() * 1e6 / n_real as f64),
+                    ],
+                );
+            }
+        }
+        rep.print();
+        rep.write_csv("micro_device_step.csv")?;
+    } else {
+        eprintln!("note: no artifacts — device-step section skipped");
+    }
+
+    // --- kNN structures.
+    let kn = if quick { 2000 } else { 10_000 };
+    let ds = gpgpu_sne::data::by_name("mnist", kn, 4)?;
+    let mut rep = Report::new(&format!("kNN (n={kn}, d=784, k=90)"), &["median", "recall"]);
+    let brute_t = measure(0, 1, || {
+        let _ = compute_knn(&ds, KnnMethod::Brute, 90, 4);
+    })
+    .median();
+    let exact = compute_knn(&ds, KnnMethod::Brute, 90, 4);
+    rep.row("brute", vec![format!("{:.2}s", brute_t), "1.000".into()]);
+    let vp_t = measure(0, 1, || {
+        let _ = vptree::VpTree::build(&ds, 4).knn(90);
+    })
+    .median();
+    let vp = vptree::VpTree::build(&ds, 4).knn(90);
+    rep.row("vptree", vec![format!("{:.2}s", vp_t), format!("{:.3}", vp.recall_against(&exact))]);
+    let kd_t = measure(0, 1, || {
+        let _ = kdforest::KdForest::build(&ds, kdforest::ForestParams::default(), 4).knn(90);
+    })
+    .median();
+    let kd = kdforest::KdForest::build(&ds, kdforest::ForestParams::default(), 4).knn(90);
+    rep.row("kdforest", vec![format!("{:.2}s", kd_t), format!("{:.3}", kd.recall_against(&exact))]);
+    rep.print();
+    rep.write_csv("micro_knn.csv")?;
+
+    // --- Perplexity + attractive pass.
+    let p = perplexity::joint_p(&exact, 30.0);
+    let y = random_points(kn, 6, 10.0);
+    let mut attr = vec![0.0f32; 2 * kn];
+    let at = measure(warmup, iters, || {
+        let _ = gpgpu_sne::embed::attractive_forces(&p, &y, &mut attr);
+    });
+    let mut rep = Report::new("sparse passes", &["median"]);
+    rep.row("attractive (n·k)", vec![format!("{:.2}ms", at.median() * 1e3)]);
+    let pt = measure(0, 1, || {
+        let _ = perplexity::joint_p(&exact, 30.0);
+    });
+    rep.row("perplexity+P build", vec![format!("{:.2}ms", pt.median() * 1e3)]);
+    rep.print();
+    rep.write_csv("micro_sparse.csv")?;
+    Ok(())
+}

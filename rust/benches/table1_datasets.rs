@@ -1,0 +1,50 @@
+//! Table 1 — the evaluation datasets. Regenerates the paper's inventory
+//! (name, N, dims) and adds the measured statistics of our substitutes
+//! (DESIGN.md §7): class counts, sparsity, norms, generation speed —
+//! making the substitution auditable.
+//!
+//!     cargo bench --bench table1_datasets [-- --quick]
+
+use gpgpu_sne::data;
+use gpgpu_sne::util::bench::{measure_once, quick_mode, Report};
+use gpgpu_sne::util::timer::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let sample_n = if quick_mode() { 1000 } else { 5000 };
+    let mut report = Report::new(
+        &format!("Table 1 — datasets (paper scale; stats from n={sample_n} sample)"),
+        &["paper N", "dims", "classes", "sparsity", "mean ‖x‖", "gen time"],
+    );
+    for (name, paper_n, dims) in data::TABLE1 {
+        let mut ds = None;
+        let secs = measure_once(|| {
+            ds = Some(data::by_name(name, sample_n, 1).unwrap());
+        });
+        let ds = ds.unwrap();
+        assert_eq!(ds.d, *dims);
+        let mut classes = std::collections::HashSet::new();
+        for &l in &ds.labels {
+            classes.insert(l);
+        }
+        let zeros = ds.x.iter().filter(|&&v| v == 0.0).count() as f64 / ds.x.len() as f64;
+        let mean_norm: f64 = (0..ds.n)
+            .map(|i| ds.row(i).iter().map(|&v| (v * v) as f64).sum::<f64>().sqrt())
+            .sum::<f64>()
+            / ds.n as f64;
+        report.row(
+            name,
+            vec![
+                format!("{paper_n}"),
+                format!("{dims}"),
+                format!("{}", classes.len()),
+                format!("{:.0}%", zeros * 100.0),
+                format!("{mean_norm:.2}"),
+                fmt_secs(secs),
+            ],
+        );
+    }
+    report.print();
+    report.write_csv("table1_datasets.csv")?;
+    println!("Substitution rationale per dataset: DESIGN.md §7.");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Job specification and lifecycle types.
+
+use crate::embed::OptParams;
+
+/// How the high-dimensional kNN graph is computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnnMethod {
+    /// Exact O(N²D) brute force.
+    Brute,
+    /// Exact VP-tree (BH-SNE's structure).
+    VpTree,
+    /// Approximate randomised KD-forest (A-tSNE / FAISS stand-in).
+    KdForest,
+}
+
+impl std::str::FromStr for KnnMethod {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "brute" | "exact" => Self::Brute,
+            "vptree" => Self::VpTree,
+            "kdforest" | "approx" => Self::KdForest,
+            other => anyhow::bail!("unknown knn method '{other}'"),
+        })
+    }
+}
+
+/// Automatic early termination: stop when the KL estimate improved less
+/// than `rel_eps` (relatively) over the last `window` iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoStop {
+    pub window: usize,
+    pub rel_eps: f64,
+}
+
+/// Everything needed to run one embedding job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Dataset name (see `data::by_name`).
+    pub dataset: String,
+    /// Number of points to generate/subsample.
+    pub n: usize,
+    /// Engine name (see `embed::by_name`).
+    pub engine: String,
+    pub perplexity: f32,
+    pub knn: KnnMethod,
+    pub params: OptParams,
+    /// Emit a snapshot every this many iterations (0 = only the final).
+    pub snapshot_every: usize,
+    pub auto_stop: Option<AutoStop>,
+    /// Dataset/seed salt.
+    pub seed: u64,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            dataset: "mnist".into(),
+            n: 2000,
+            engine: "fieldcpu".into(),
+            perplexity: 30.0,
+            knn: KnnMethod::KdForest,
+            params: OptParams::default(),
+            snapshot_every: 50,
+            auto_stop: None,
+            seed: 42,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Neighbour count for the P computation: the BH-SNE 3µ restriction.
+    pub fn knn_k(&self) -> usize {
+        ((3.0 * self.perplexity).floor() as usize).max(3)
+    }
+}
+
+/// Where a job currently is.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobPhase {
+    Queued,
+    Knn,
+    Perplexity,
+    Optimizing { iter: usize, total: usize },
+    Done,
+    Stopped,
+    Failed(String),
+}
+
+impl JobPhase {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobPhase::Done | JobPhase::Stopped | JobPhase::Failed(_))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            JobPhase::Queued => "queued".into(),
+            JobPhase::Knn => "knn".into(),
+            JobPhase::Perplexity => "perplexity".into(),
+            JobPhase::Optimizing { iter, total } => format!("optimizing {iter}/{total}"),
+            JobPhase::Done => "done".into(),
+            JobPhase::Stopped => "stopped".into(),
+            JobPhase::Failed(e) => format!("failed: {e}"),
+        }
+    }
+}
+
+/// A progressive embedding snapshot.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub iter: usize,
+    pub kl_est: f64,
+    pub elapsed_s: f64,
+    /// `(n, 2)` row-major positions (shared, cheap to clone).
+    pub positions: std::sync::Arc<Vec<f32>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_k_is_3mu() {
+        let spec = JobSpec { perplexity: 30.0, ..Default::default() };
+        assert_eq!(spec.knn_k(), 90);
+        let tiny = JobSpec { perplexity: 0.5, ..Default::default() };
+        assert_eq!(tiny.knn_k(), 3);
+    }
+
+    #[test]
+    fn knn_method_parses() {
+        assert_eq!("brute".parse::<KnnMethod>().unwrap(), KnnMethod::Brute);
+        assert_eq!("vptree".parse::<KnnMethod>().unwrap(), KnnMethod::VpTree);
+        assert_eq!("approx".parse::<KnnMethod>().unwrap(), KnnMethod::KdForest);
+        assert!("x".parse::<KnnMethod>().is_err());
+    }
+
+    #[test]
+    fn phase_terminality() {
+        assert!(JobPhase::Done.is_terminal());
+        assert!(JobPhase::Failed("x".into()).is_terminal());
+        assert!(!JobPhase::Optimizing { iter: 1, total: 2 }.is_terminal());
+        assert_eq!(JobPhase::Optimizing { iter: 1, total: 2 }.label(), "optimizing 1/2");
+    }
+}

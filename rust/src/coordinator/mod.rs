@@ -1,0 +1,21 @@
+//! The L3 coordinator (DESIGN.md S20): a *progressive embedding service*
+//! in the Progressive Visual Analytics mould the paper positions itself
+//! in (Fig. 1, the A-tSNE lineage, the in-browser demo).
+//!
+//! A job flows through **kNN → perplexity/P → optimise**; the optimise
+//! stage streams progressive snapshots (iteration, KL estimate, point
+//! positions) to subscribers, honours user-driven early termination, and
+//! — for the `gpgpu` engine — applies the adaptive field-resolution
+//! policy over the AOT artifact set. `serve.rs` exposes the whole thing
+//! over a line-oriented TCP protocol; `service.rs` multiplexes concurrent
+//! jobs over one shared PJRT runtime.
+
+pub mod job;
+pub mod pipeline;
+pub mod progress;
+pub mod protocol;
+pub mod service;
+
+pub use job::{JobPhase, JobSpec, KnnMethod, Snapshot};
+pub use pipeline::{run_pipeline, JobResult, StageTimings};
+pub use service::{EmbeddingService, JobId};

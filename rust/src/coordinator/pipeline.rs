@@ -1,0 +1,223 @@
+//! The per-job pipeline: dataset → kNN → perplexity/P → optimise, with
+//! stage timings, progressive snapshots, auto-stop and user stop.
+
+use std::sync::Arc;
+
+use crate::data;
+use crate::embed::{self, Control};
+use crate::hd::{bruteforce, kdforest, perplexity, vptree, Dataset, KnnGraph, SparseP};
+use crate::runtime::Runtime;
+
+use super::job::{JobPhase, JobSpec, KnnMethod, Snapshot};
+use super::progress::JobState;
+
+/// Wall time per pipeline stage (seconds) — the breakdown the paper's
+/// timing rows decompose into (similarities vs minimisation).
+#[derive(Debug, Clone, Default)]
+pub struct StageTimings {
+    pub dataset_s: f64,
+    pub knn_s: f64,
+    pub perplexity_s: f64,
+    pub optimize_s: f64,
+}
+
+impl StageTimings {
+    pub fn total(&self) -> f64 {
+        self.dataset_s + self.knn_s + self.perplexity_s + self.optimize_s
+    }
+}
+
+/// Final product of a job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub spec: JobSpec,
+    /// `(n, 2)` row-major final embedding.
+    pub embedding: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub timings: StageTimings,
+    /// Last per-iteration KL estimate observed.
+    pub kl_est: f64,
+    pub iters_run: usize,
+    pub stopped_early: bool,
+}
+
+/// Compute the kNN graph by the requested method.
+pub fn compute_knn(data: &Dataset, method: KnnMethod, k: usize, seed: u64) -> KnnGraph {
+    match method {
+        KnnMethod::Brute => bruteforce::knn(data, k),
+        KnnMethod::VpTree => vptree::VpTree::build(data, seed).knn(k),
+        KnnMethod::KdForest => {
+            kdforest::KdForest::build(data, kdforest::ForestParams::default(), seed).knn(k)
+        }
+    }
+}
+
+/// Run a full job synchronously. `state` carries phase/stop/snapshots;
+/// pass a fresh `JobState` when running outside the service.
+pub fn run_pipeline(
+    spec: &JobSpec,
+    runtime: Option<Arc<Runtime>>,
+    state: &JobState,
+) -> anyhow::Result<JobResult> {
+    let mut timings = StageTimings::default();
+
+    let t = std::time::Instant::now();
+    let dataset = data::by_name(&spec.dataset, spec.n, spec.seed)?;
+    timings.dataset_s = t.elapsed().as_secs_f64();
+
+    state.set_phase(JobPhase::Knn);
+    let t = std::time::Instant::now();
+    let k = spec.knn_k().min(dataset.n.saturating_sub(1)).max(1);
+    let knn = compute_knn(&dataset, spec.knn, k, spec.seed);
+    timings.knn_s = t.elapsed().as_secs_f64();
+
+    state.set_phase(JobPhase::Perplexity);
+    let t = std::time::Instant::now();
+    let perp = spec.perplexity.min(k as f32);
+    let p = perplexity::joint_p(&knn, perp);
+    timings.perplexity_s = t.elapsed().as_secs_f64();
+
+    let (embedding, kl_est, iters_run, stopped) =
+        optimize(spec, &p, runtime, state, &mut timings)?;
+
+    state.set_phase(if stopped { JobPhase::Stopped } else { JobPhase::Done });
+    Ok(JobResult {
+        spec: spec.clone(),
+        embedding,
+        labels: dataset.labels,
+        timings,
+        kl_est,
+        iters_run,
+        stopped_early: stopped,
+    })
+}
+
+/// The optimise stage (shared with `run_pipeline`; public for benches
+/// that precompute P once and sweep engines).
+pub fn optimize(
+    spec: &JobSpec,
+    p: &SparseP,
+    runtime: Option<Arc<Runtime>>,
+    state: &JobState,
+    timings: &mut StageTimings,
+) -> anyhow::Result<(Vec<f32>, f64, usize, bool)> {
+    let mut engine = embed::by_name(&spec.engine, runtime)?;
+    let total = spec.params.iters;
+    let mut last_kl = f64::NAN;
+    let mut iters_run = 0usize;
+    let mut stopped = false;
+    let mut kl_window: Vec<f64> = Vec::new();
+    let t = std::time::Instant::now();
+    let mut observer = |stats: &embed::IterStats, y: &[f32]| -> Control {
+        iters_run = stats.iter + 1;
+        last_kl = stats.kl_est;
+        state.set_phase(JobPhase::Optimizing { iter: stats.iter + 1, total });
+        let emit = spec.snapshot_every > 0 && (stats.iter % spec.snapshot_every == 0);
+        if emit || stats.iter + 1 == total {
+            state.publish(Snapshot {
+                iter: stats.iter,
+                kl_est: stats.kl_est,
+                elapsed_s: stats.elapsed_s,
+                positions: Arc::new(y.to_vec()),
+            });
+        }
+        if state.stop_requested() {
+            stopped = true;
+            return Control::Stop;
+        }
+        if let Some(auto) = spec.auto_stop {
+            // Only meaningful after exaggeration is lifted.
+            if stats.iter >= spec.params.exaggeration_iters {
+                kl_window.push(stats.kl_est);
+                if kl_window.len() > auto.window {
+                    let old = kl_window[kl_window.len() - 1 - auto.window];
+                    let rel = (old - stats.kl_est) / old.abs().max(1e-12);
+                    if rel < auto.rel_eps {
+                        stopped = true;
+                        return Control::Stop;
+                    }
+                }
+            }
+        }
+        Control::Continue
+    };
+    let embedding = engine.run(p, &spec.params, Some(&mut observer))?;
+    timings.optimize_s = t.elapsed().as_secs_f64();
+    Ok((embedding, last_kl, iters_run, stopped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::AutoStop;
+    use crate::embed::OptParams;
+
+    fn quick_spec(engine: &str, iters: usize) -> JobSpec {
+        JobSpec {
+            dataset: "gaussians".into(),
+            n: 150,
+            engine: engine.into(),
+            perplexity: 10.0,
+            knn: KnnMethod::Brute,
+            params: OptParams { iters, exaggeration_iters: 20, ..Default::default() },
+            snapshot_every: 10,
+            auto_stop: None,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn pipeline_runs_end_to_end_cpu() {
+        let state = JobState::default();
+        let rx = state.snapshots.subscribe();
+        let res = run_pipeline(&quick_spec("bh-0.5", 60), None, &state).unwrap();
+        assert_eq!(res.embedding.len(), 2 * 150);
+        assert!(res.embedding.iter().all(|v| v.is_finite()));
+        assert_eq!(res.iters_run, 60);
+        assert!(!res.stopped_early);
+        assert_eq!(state.phase(), JobPhase::Done);
+        assert!(res.timings.total() > 0.0);
+        // Snapshots flowed (iters 0,10,...,50 and the final).
+        let got: Vec<_> = rx.try_iter().collect();
+        assert!(got.len() >= 6, "got {} snapshots", got.len());
+        assert_eq!(got.last().unwrap().iter, 59);
+    }
+
+    #[test]
+    fn stop_request_halts_early() {
+        let state = JobState::default();
+        let rx = state.snapshots.subscribe();
+        let spec = quick_spec("bh-0.5", 500);
+        // Stop after the first snapshot arrives (from another thread).
+        let state2 = state.clone();
+        let h = std::thread::spawn(move || {
+            let _ = rx.recv();
+            state2.request_stop();
+        });
+        let res = run_pipeline(&spec, None, &state).unwrap();
+        h.join().unwrap();
+        assert!(res.stopped_early);
+        assert!(res.iters_run < 500);
+        assert_eq!(state.phase(), JobPhase::Stopped);
+    }
+
+    #[test]
+    fn auto_stop_triggers_on_plateau() {
+        let state = JobState::default();
+        let mut spec = quick_spec("exact", 400);
+        spec.auto_stop = Some(AutoStop { window: 20, rel_eps: 1e-4 });
+        let res = run_pipeline(&spec, None, &state).unwrap();
+        assert!(res.stopped_early, "a 150-point problem must plateau well before 400 iters");
+        assert!(res.iters_run < 400);
+    }
+
+    #[test]
+    fn knn_methods_agree_on_easy_data() {
+        let data = crate::data::by_name("gaussians", 200, 1).unwrap();
+        let e = compute_knn(&data, KnnMethod::Brute, 10, 0);
+        let v = compute_knn(&data, KnnMethod::VpTree, 10, 0);
+        let f = compute_knn(&data, KnnMethod::KdForest, 10, 0);
+        assert!(v.recall_against(&e) > 0.999, "vptree exactness");
+        assert!(f.recall_against(&e) > 0.85, "kdforest recall");
+    }
+}

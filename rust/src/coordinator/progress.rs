@@ -1,0 +1,131 @@
+//! Progress broadcast substrate (no tokio): a multi-subscriber channel
+//! over `std::sync::mpsc`, plus the shared job status cell.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use super::job::{JobPhase, Snapshot};
+
+/// Clone-fanout broadcast channel: every subscriber gets every message
+/// sent after it subscribed. Dead subscribers are pruned on send.
+pub struct Broadcast<T: Clone> {
+    subs: Mutex<Vec<Sender<T>>>,
+}
+
+impl<T: Clone> Default for Broadcast<T> {
+    fn default() -> Self {
+        Self { subs: Mutex::new(Vec::new()) }
+    }
+}
+
+impl<T: Clone> Broadcast<T> {
+    pub fn subscribe(&self) -> Receiver<T> {
+        let (tx, rx) = channel();
+        self.subs.lock().unwrap().push(tx);
+        rx
+    }
+
+    pub fn send(&self, msg: T) {
+        let mut subs = self.subs.lock().unwrap();
+        subs.retain(|s| s.send(msg.clone()).is_ok());
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.subs.lock().unwrap().len()
+    }
+}
+
+/// Shared mutable view of a running job.
+#[derive(Clone)]
+pub struct JobState {
+    phase: Arc<Mutex<JobPhase>>,
+    latest: Arc<Mutex<Option<Snapshot>>>,
+    stop: Arc<AtomicBool>,
+    pub snapshots: Arc<Broadcast<Snapshot>>,
+}
+
+impl Default for JobState {
+    fn default() -> Self {
+        Self {
+            phase: Arc::new(Mutex::new(JobPhase::Queued)),
+            latest: Arc::new(Mutex::new(None)),
+            stop: Arc::new(AtomicBool::new(false)),
+            snapshots: Arc::new(Broadcast::default()),
+        }
+    }
+}
+
+impl JobState {
+    pub fn phase(&self) -> JobPhase {
+        self.phase.lock().unwrap().clone()
+    }
+
+    pub fn set_phase(&self, p: JobPhase) {
+        *self.phase.lock().unwrap() = p;
+    }
+
+    pub fn latest_snapshot(&self) -> Option<Snapshot> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    pub fn publish(&self, s: Snapshot) {
+        *self.latest.lock().unwrap() = Some(s.clone());
+        self.snapshots.send(s);
+    }
+
+    /// User-driven early termination (the A-tSNE interaction).
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_reaches_all_subscribers() {
+        let b: Broadcast<u32> = Broadcast::default();
+        let r1 = b.subscribe();
+        let r2 = b.subscribe();
+        b.send(7);
+        assert_eq!(r1.recv().unwrap(), 7);
+        assert_eq!(r2.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn dead_subscribers_are_pruned() {
+        let b: Broadcast<u32> = Broadcast::default();
+        {
+            let _r = b.subscribe();
+        } // dropped
+        let r2 = b.subscribe();
+        b.send(1);
+        assert_eq!(b.subscriber_count(), 1);
+        assert_eq!(r2.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn job_state_roundtrip() {
+        let js = JobState::default();
+        assert_eq!(js.phase(), JobPhase::Queued);
+        js.set_phase(JobPhase::Knn);
+        assert_eq!(js.phase(), JobPhase::Knn);
+        assert!(!js.stop_requested());
+        js.request_stop();
+        assert!(js.stop_requested());
+        assert!(js.latest_snapshot().is_none());
+        js.publish(Snapshot {
+            iter: 3,
+            kl_est: 1.0,
+            elapsed_s: 0.1,
+            positions: Arc::new(vec![0.0, 0.0]),
+        });
+        assert_eq!(js.latest_snapshot().unwrap().iter, 3);
+    }
+}

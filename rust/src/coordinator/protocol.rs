@@ -1,0 +1,283 @@
+//! Line-oriented TCP protocol for the serve mode (DESIGN.md S20).
+//!
+//! One JSON object per line, both directions:
+//!
+//! ```text
+//! -> {"cmd":"submit","dataset":"mnist","n":2000,"engine":"fieldcpu","iters":500}
+//! <- {"ok":true,"job":1}
+//! -> {"cmd":"status","job":1}
+//! <- {"ok":true,"job":1,"phase":"optimizing 120/500","kl":2.31,"iter":119}
+//! -> {"cmd":"snapshot","job":1}
+//! <- {"ok":true,"job":1,"iter":119,"kl":2.31,"positions":[x0,y0,x1,y1,...]}
+//! -> {"cmd":"stop","job":1}      // user-driven early termination
+//! -> {"cmd":"wait","job":1}      // blocks until terminal
+//! -> {"cmd":"list"}
+//! -> {"cmd":"quit"}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::embed::OptParams;
+use crate::util::json::{self, Json};
+
+use super::job::JobSpec;
+use super::service::EmbeddingService;
+
+/// Parse a submit command into a JobSpec (missing fields -> defaults).
+pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
+    let mut spec = JobSpec::default();
+    if let Some(d) = v.str_field("dataset") {
+        spec.dataset = d.to_string();
+    }
+    if let Some(n) = v.num_field("n") {
+        spec.n = n as usize;
+    }
+    if let Some(e) = v.str_field("engine") {
+        spec.engine = e.to_string();
+    }
+    if let Some(p) = v.num_field("perplexity") {
+        spec.perplexity = p as f32;
+    }
+    if let Some(k) = v.str_field("knn") {
+        spec.knn = k.parse()?;
+    }
+    let mut params = OptParams::default();
+    if let Some(i) = v.num_field("iters") {
+        params.iters = i as usize;
+    }
+    if let Some(e) = v.num_field("eta") {
+        params.eta = e as f32;
+    }
+    if let Some(x) = v.num_field("exaggeration_iters") {
+        params.exaggeration_iters = x as usize;
+    }
+    if let Some(s) = v.num_field("seed") {
+        params.seed = s as u64;
+        spec.seed = s as u64;
+    }
+    spec.params = params;
+    if let Some(s) = v.num_field("snapshot_every") {
+        spec.snapshot_every = s as usize;
+    }
+    Ok(spec)
+}
+
+fn ok_fields(fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.extend(fields);
+    Json::obj(all).to_string()
+}
+
+fn err_msg(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]).to_string()
+}
+
+/// Handle one request line; returns (response line, keep_going).
+pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
+    let v = match json::parse(line.trim()) {
+        Ok(v) => v,
+        Err(e) => return (err_msg(&format!("bad json: {e}")), true),
+    };
+    let cmd = v.str_field("cmd").unwrap_or("");
+    match cmd {
+        "submit" => match spec_from_json(&v) {
+            Ok(spec) => {
+                let id = svc.submit(spec);
+                (ok_fields(vec![("job", Json::Num(id as f64))]), true)
+            }
+            Err(e) => (err_msg(&format!("{e:#}")), true),
+        },
+        "status" => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            match svc.phase(id) {
+                None => (err_msg("unknown job"), true),
+                Some(phase) => {
+                    let mut fields = vec![
+                        ("job", Json::Num(id as f64)),
+                        ("phase", Json::Str(phase.label())),
+                        ("terminal", Json::Bool(phase.is_terminal())),
+                    ];
+                    if let Some(s) = svc.latest_snapshot(id) {
+                        fields.push(("iter", Json::Num(s.iter as f64)));
+                        fields.push(("kl", Json::Num(s.kl_est)));
+                        fields.push(("elapsed_s", Json::Num(s.elapsed_s)));
+                    }
+                    (ok_fields(fields), true)
+                }
+            }
+        }
+        "snapshot" => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            match svc.latest_snapshot(id) {
+                None => (err_msg("no snapshot yet"), true),
+                Some(s) => {
+                    let pos = Json::Arr(s.positions.iter().map(|&p| Json::Num(p as f64)).collect());
+                    (
+                        ok_fields(vec![
+                            ("job", Json::Num(id as f64)),
+                            ("iter", Json::Num(s.iter as f64)),
+                            ("kl", Json::Num(s.kl_est)),
+                            ("positions", pos),
+                        ]),
+                        true,
+                    )
+                }
+            }
+        }
+        "stop" => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            if svc.stop(id) {
+                (ok_fields(vec![("job", Json::Num(id as f64))]), true)
+            } else {
+                (err_msg("unknown job"), true)
+            }
+        }
+        "wait" => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            match svc.wait(id) {
+                Ok(res) => (
+                    ok_fields(vec![
+                        ("job", Json::Num(id as f64)),
+                        ("iters", Json::Num(res.iters_run as f64)),
+                        ("kl", Json::Num(res.kl_est)),
+                        ("stopped_early", Json::Bool(res.stopped_early)),
+                        ("optimize_s", Json::Num(res.timings.optimize_s)),
+                        ("total_s", Json::Num(res.timings.total())),
+                    ]),
+                    true,
+                ),
+                Err(e) => (err_msg(&format!("{e:#}")), true),
+            }
+        }
+        "list" => {
+            let jobs = Json::Arr(
+                svc.list()
+                    .into_iter()
+                    .map(|(id, ph)| {
+                        Json::obj(vec![
+                            ("job", Json::Num(id as f64)),
+                            ("phase", Json::Str(ph.label())),
+                        ])
+                    })
+                    .collect(),
+            );
+            (ok_fields(vec![("jobs", jobs)]), true)
+        }
+        "quit" => (ok_fields(vec![("bye", Json::Bool(true))]), false),
+        other => (err_msg(&format!("unknown cmd '{other}'")), true),
+    }
+}
+
+fn handle_client(svc: Arc<EmbeddingService>, stream: TcpStream) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, keep) = handle_line(&svc, &line);
+        if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+        if !keep {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Serve forever on `addr` (e.g. `127.0.0.1:7878`). Returns the bound
+/// address via callback (so callers/tests can bind port 0).
+pub fn serve(
+    svc: Arc<EmbeddingService>,
+    addr: &str,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_bound(listener.local_addr()?);
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let svc = svc.clone();
+        std::thread::spawn(move || handle_client(svc, stream));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> EmbeddingService {
+        EmbeddingService::new(None, 2)
+    }
+
+    #[test]
+    fn submit_status_wait_roundtrip() {
+        let s = svc();
+        let (resp, _) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":80,"engine":"bh-0.5","iters":20,"perplexity":8,"knn":"brute"}"#,
+        );
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let id = v.num_field("job").unwrap() as u64;
+
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"wait","job":{id}}}"#));
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(v.num_field("iters").unwrap() as usize, 20);
+
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"status","job":{id}}}"#));
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.str_field("phase"), Some("done"));
+        assert_eq!(v.get("terminal"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn snapshot_has_positions() {
+        let s = svc();
+        let (resp, _) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":60,"engine":"bh-0.5","iters":15,"perplexity":6,"knn":"brute","snapshot_every":1}"#,
+        );
+        let id = json::parse(&resp).unwrap().num_field("job").unwrap() as u64;
+        handle_line(&s, &format!(r#"{{"cmd":"wait","job":{id}}}"#));
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"snapshot","job":{id}}}"#));
+        let v = json::parse(&resp).unwrap();
+        let pos = v.get("positions").unwrap().as_arr().unwrap();
+        assert_eq!(pos.len(), 120);
+    }
+
+    #[test]
+    fn bad_requests_get_errors_not_panics() {
+        let s = svc();
+        for line in [
+            "not json",
+            r#"{"cmd":"status","job":42}"#,
+            r#"{"cmd":"frobnicate"}"#,
+            r#"{"cmd":"submit","dataset":"bogus"}"#,
+        ] {
+            let (resp, keep) = handle_line(&s, line);
+            let v = json::parse(&resp).unwrap();
+            // submit of bogus dataset succeeds at submit time and fails in
+            // the worker; everything else errors immediately.
+            assert!(v.get("ok").is_some());
+            assert!(keep);
+        }
+    }
+
+    #[test]
+    fn quit_closes() {
+        let s = svc();
+        let (resp, keep) = handle_line(&s, r#"{"cmd":"quit"}"#);
+        assert!(!keep);
+        assert!(resp.contains("bye"));
+    }
+}

@@ -1,0 +1,207 @@
+//! The embedding service: submits jobs onto worker threads, multiplexes
+//! them over one shared PJRT runtime, exposes status / snapshots / stop /
+//! wait. This is the process-lifetime object behind both the CLI and the
+//! TCP server.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::Runtime;
+
+use super::job::{JobPhase, JobSpec, Snapshot};
+use super::pipeline::{run_pipeline, JobResult};
+use super::progress::JobState;
+
+pub type JobId = u64;
+
+struct JobEntry {
+    state: JobState,
+    handle: Option<std::thread::JoinHandle<()>>,
+    result: Arc<Mutex<Option<anyhow::Result<JobResult>>>>,
+    spec: JobSpec,
+}
+
+/// Multiplexes embedding jobs over a shared (optional) PJRT runtime.
+pub struct EmbeddingService {
+    runtime: Option<Arc<Runtime>>,
+    jobs: Mutex<HashMap<JobId, JobEntry>>,
+    next_id: std::sync::atomic::AtomicU64,
+    /// Cap on concurrently *running* optimisations (simple admission
+    /// control; kNN stages are already parallel internally).
+    semaphore: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    max_concurrent: usize,
+}
+
+impl EmbeddingService {
+    pub fn new(runtime: Option<Arc<Runtime>>, max_concurrent: usize) -> Self {
+        Self {
+            runtime,
+            jobs: Mutex::new(HashMap::new()),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            semaphore: Arc::new((Mutex::new(0), std::sync::Condvar::new())),
+            max_concurrent: max_concurrent.max(1),
+        }
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Submit a job; returns immediately with its id.
+    pub fn submit(&self, spec: JobSpec) -> JobId {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let state = JobState::default();
+        let result: Arc<Mutex<Option<anyhow::Result<JobResult>>>> = Arc::new(Mutex::new(None));
+        let rt = self.runtime.clone();
+        let st = state.clone();
+        let res = result.clone();
+        let sem = self.semaphore.clone();
+        let max = self.max_concurrent;
+        let spec2 = spec.clone();
+        let handle = std::thread::spawn(move || {
+            // Admission control.
+            {
+                let (lock, cv) = &*sem;
+                let mut running = lock.lock().unwrap();
+                while *running >= max {
+                    running = cv.wait(running).unwrap();
+                }
+                *running += 1;
+            }
+            let out = run_pipeline(&spec2, rt, &st);
+            if let Err(e) = &out {
+                st.set_phase(JobPhase::Failed(format!("{e:#}")));
+            }
+            *res.lock().unwrap() = Some(out);
+            let (lock, cv) = &*sem;
+            *lock.lock().unwrap() -= 1;
+            cv.notify_one();
+        });
+        self.jobs
+            .lock()
+            .unwrap()
+            .insert(id, JobEntry { state, handle: Some(handle), result, spec });
+        id
+    }
+
+    pub fn phase(&self, id: JobId) -> Option<JobPhase> {
+        self.jobs.lock().unwrap().get(&id).map(|j| j.state.phase())
+    }
+
+    pub fn spec(&self, id: JobId) -> Option<JobSpec> {
+        self.jobs.lock().unwrap().get(&id).map(|j| j.spec.clone())
+    }
+
+    pub fn latest_snapshot(&self, id: JobId) -> Option<Snapshot> {
+        self.jobs.lock().unwrap().get(&id).and_then(|j| j.state.latest_snapshot())
+    }
+
+    /// Subscribe to a job's snapshot stream.
+    pub fn subscribe(&self, id: JobId) -> Option<std::sync::mpsc::Receiver<Snapshot>> {
+        self.jobs.lock().unwrap().get(&id).map(|j| j.state.snapshots.subscribe())
+    }
+
+    /// Request user-driven early termination.
+    pub fn stop(&self, id: JobId) -> bool {
+        if let Some(j) = self.jobs.lock().unwrap().get(&id) {
+            j.state.request_stop();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Block until the job finishes; returns its result.
+    pub fn wait(&self, id: JobId) -> anyhow::Result<JobResult> {
+        let handle = {
+            let mut jobs = self.jobs.lock().unwrap();
+            let j = jobs.get_mut(&id).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
+            j.handle.take()
+        };
+        if let Some(h) = handle {
+            h.join().map_err(|_| anyhow::anyhow!("job thread panicked"))?;
+        }
+        let jobs = self.jobs.lock().unwrap();
+        let j = jobs.get(&id).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
+        let mut slot = j.result.lock().unwrap();
+        slot.take().ok_or_else(|| anyhow::anyhow!("job {id} result already taken"))?
+    }
+
+    /// All known job ids with their phases.
+    pub fn list(&self) -> Vec<(JobId, JobPhase)> {
+        let mut v: Vec<_> =
+            self.jobs.lock().unwrap().iter().map(|(id, j)| (*id, j.state.phase())).collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::KnnMethod;
+    use crate::embed::OptParams;
+
+    fn tiny_spec(iters: usize) -> JobSpec {
+        JobSpec {
+            dataset: "gaussians".into(),
+            n: 100,
+            engine: "bh-0.5".into(),
+            perplexity: 8.0,
+            knn: KnnMethod::Brute,
+            params: OptParams { iters, exaggeration_iters: 10, ..Default::default() },
+            snapshot_every: 5,
+            auto_stop: None,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn submit_wait_roundtrip() {
+        let svc = EmbeddingService::new(None, 2);
+        let id = svc.submit(tiny_spec(30));
+        let res = svc.wait(id).unwrap();
+        assert_eq!(res.embedding.len(), 200);
+        assert_eq!(svc.phase(id), Some(JobPhase::Done));
+    }
+
+    #[test]
+    fn concurrent_jobs_complete() {
+        let svc = Arc::new(EmbeddingService::new(None, 2));
+        let ids: Vec<_> = (0..4).map(|_| svc.submit(tiny_spec(20))).collect();
+        for id in ids {
+            let res = svc.wait(id).unwrap();
+            assert!(res.embedding.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(svc.list().len(), 4);
+    }
+
+    #[test]
+    fn stop_mid_flight() {
+        let svc = EmbeddingService::new(None, 1);
+        let id = svc.submit(tiny_spec(5000));
+        let rx = svc.subscribe(id).unwrap();
+        let _ = rx.recv(); // first snapshot = job is running
+        assert!(svc.stop(id));
+        let res = svc.wait(id).unwrap();
+        assert!(res.stopped_early);
+        assert_eq!(svc.phase(id), Some(JobPhase::Stopped));
+    }
+
+    #[test]
+    fn failed_job_reports_phase() {
+        let svc = EmbeddingService::new(None, 1);
+        let mut spec = tiny_spec(5);
+        spec.dataset = "no-such-dataset".into();
+        let id = svc.submit(spec);
+        assert!(svc.wait(id).is_err());
+        assert!(matches!(svc.phase(id), Some(JobPhase::Failed(_))));
+    }
+
+    #[test]
+    fn unknown_job_is_none() {
+        let svc = EmbeddingService::new(None, 1);
+        assert!(svc.phase(999).is_none());
+        assert!(!svc.stop(999));
+    }
+}

@@ -1,0 +1,271 @@
+//! Synthetic dataset generators mirroring the paper's evaluation data
+//! (DESIGN.md §7 documents each substitution and why it preserves the
+//! behaviour the experiments probe).
+
+use crate::hd::Dataset;
+use crate::util::rng::Rng;
+
+/// Plain Gaussian mixture: `c` isotropic clusters in `d` dims.
+pub fn gaussian_mixture(name: &str, n: usize, d: usize, c: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut centers = vec![0.0f32; c * d];
+    for v in centers.iter_mut() {
+        *v = rng.gauss_f32(0.0, 4.0);
+    }
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let cl = rng.below(c);
+        labels[i] = cl as u8;
+        for j in 0..d {
+            x[i * d + j] = centers[cl * d + j] + rng.gauss_f32(0.0, 1.0);
+        }
+    }
+    Dataset::new(name, n, d, x, labels)
+}
+
+/// MNIST-like: 10 nonlinearly-warped low-rank manifolds in 784-d pixel
+/// space, with gray values in [0,1], MNIST's class imbalance profile and
+/// per-class intrinsic dimension ~8 (what makes t-SNE's MNIST plots the
+/// canonical 10-blob figure).
+pub fn mnist_like(n: usize, seed: u64) -> Dataset {
+    let d = 784;
+    let intrinsic = 8;
+    let classes = 10;
+    let mut rng = Rng::new(seed ^ 0x6d6e6973745f6c6b);
+    // Per-class random linear map intrinsic -> 784 plus a class prototype
+    // ("average digit"): points are prototype + A z + bump nonlinearity.
+    let mut protos = vec![0.0f32; classes * d];
+    let mut maps = vec![0.0f32; classes * intrinsic * d];
+    for cl in 0..classes {
+        // Prototype: a smooth blobby image (sum of a few 2-D Gaussians on
+        // the 28x28 grid) — gives pixel-space correlations like digits.
+        for blob in 0..3 {
+            let cx = rng.range_f64(6.0, 22.0);
+            let cy = rng.range_f64(6.0, 22.0);
+            let s2 = rng.range_f64(4.0, 18.0);
+            let amp = rng.range_f64(0.4, 0.9);
+            let _ = blob;
+            for py in 0..28 {
+                for px in 0..28 {
+                    let dx = px as f64 - cx;
+                    let dy = py as f64 - cy;
+                    protos[cl * d + py * 28 + px] +=
+                        (amp * (-(dx * dx + dy * dy) / (2.0 * s2)).exp()) as f32;
+                }
+            }
+        }
+        for v in maps[cl * intrinsic * d..(cl + 1) * intrinsic * d].iter_mut() {
+            *v = rng.gauss_f32(0.0, 0.12);
+        }
+    }
+    // MNIST class frequencies are near-uniform with mild imbalance.
+    let weights: [f64; 10] = [0.099, 0.113, 0.099, 0.102, 0.097, 0.090, 0.099, 0.104, 0.098, 0.099];
+    let cum: Vec<f64> = weights
+        .iter()
+        .scan(0.0, |acc, w| {
+            *acc += w;
+            Some(*acc)
+        })
+        .collect();
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u8; n];
+    let mut z = vec![0.0f32; intrinsic];
+    for i in 0..n {
+        let u = rng.f64() * cum[9];
+        let cl = cum.iter().position(|&c| u <= c).unwrap_or(9);
+        labels[i] = cl as u8;
+        for zj in z.iter_mut() {
+            *zj = rng.gauss_f32(0.0, 1.0);
+        }
+        // Nonlinear warp: mix latent coords through tanh so the manifold
+        // curves (pure linear maps would be PCA-recoverable, unlike MNIST).
+        let w0 = (z[0] * 0.9).tanh();
+        let w1 = (z[1] * 0.9).tanh();
+        let row = &mut x[i * d..(i + 1) * d];
+        let map = &maps[cl * intrinsic * d..(cl + 1) * intrinsic * d];
+        for j in 0..d {
+            let mut v = protos[cl * d + j];
+            for (l, &zl) in z.iter().enumerate() {
+                v += map[l * d + j] * zl;
+            }
+            // Latent-dependent brightness/slant warps.
+            v *= 1.0 + 0.12 * w0;
+            v += 0.05 * w1 * ((j % 28) as f32 / 28.0 - 0.5);
+            row[j] = v.clamp(0.0, 1.0);
+        }
+    }
+    Dataset::new("mnist-like", n, d, x, labels)
+}
+
+/// Word-embedding-like: clusters on the unit sphere with Zipfian
+/// (power-law) sizes and heavy-tailed outliers — the density skew that
+/// stresses Barnes-Hut cells and that the paper's Fig. 6 row 2 analysis
+/// attributes its quality advantage to.
+pub fn wordvec_like(name: &str, n: usize, d: usize, n_clusters: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x776f7264766563);
+    // Zipf weights w_c = 1/(c+2)^1.07 (word frequencies' classic exponent).
+    let weights: Vec<f64> = (0..n_clusters).map(|c| 1.0 / (c as f64 + 2.0).powf(1.07)).collect();
+    let total: f64 = weights.iter().sum();
+    let cum: Vec<f64> = weights
+        .iter()
+        .scan(0.0, |acc, w| {
+            *acc += w / total;
+            Some(*acc)
+        })
+        .collect();
+    let mut centers = vec![0.0f32; n_clusters * d];
+    for c in 0..n_clusters {
+        let mut norm = 0.0f32;
+        for j in 0..d {
+            let v = rng.gauss_f32(0.0, 1.0);
+            centers[c * d + j] = v;
+            norm += v * v;
+        }
+        let inv = 1.0 / norm.sqrt().max(1e-9);
+        for j in 0..d {
+            centers[c * d + j] *= inv;
+        }
+    }
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let u = rng.f64();
+        let cl = match cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(p) | Err(p) => p.min(n_clusters - 1),
+        };
+        labels[i] = (cl % 256) as u8;
+        // Spread grows for rarer clusters; 2% heavy-tail outliers.
+        let spread = 0.12 + 0.1 * (cl as f32 / n_clusters as f32);
+        let outlier = rng.f64() < 0.02;
+        let s = if outlier { 0.8 } else { spread };
+        let mut norm = 0.0f32;
+        let row = &mut x[i * d..(i + 1) * d];
+        for j in 0..d {
+            let v = centers[cl * d + j] + rng.gauss_f32(0.0, s);
+            row[j] = v;
+            norm += v * v;
+        }
+        // Word vectors are commonly length-normalised for similarity use.
+        let inv = 1.0 / norm.sqrt().max(1e-9);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    Dataset::new(name, n, d, x, labels)
+}
+
+/// DNN-activation-like: nonnegative, ~60% sparse (ReLU), log-normal
+/// magnitudes, hierarchical class structure (superclasses containing
+/// subclasses) — the statistics of the paper's ImageNet Mixed3a/Head0
+/// layer activations.
+pub fn imagenet_like(name: &str, n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x696d6167656e6574);
+    let supers = 8;
+    let subs_per = 6;
+    // Superclass direction + subclass offsets.
+    let mut sup_dir = vec![0.0f32; supers * d];
+    for v in sup_dir.iter_mut() {
+        *v = rng.gauss_f32(0.0, 1.0).max(0.0); // nonnegative prototype
+    }
+    let mut sub_dir = vec![0.0f32; supers * subs_per * d];
+    for v in sub_dir.iter_mut() {
+        *v = rng.gauss_f32(0.0, 0.5);
+    }
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let sp = rng.below(supers);
+        let sb = rng.below(subs_per);
+        labels[i] = (sp * subs_per + sb) as u8;
+        let row = &mut x[i * d..(i + 1) * d];
+        // Log-normal per-point gain (activation magnitude variation).
+        let gain = (rng.gauss() * 0.5).exp() as f32;
+        for j in 0..d {
+            let mean = sup_dir[sp * d + j] + sub_dir[(sp * subs_per + sb) * d + j];
+            let v = (mean + rng.gauss_f32(0.0, 0.35)) * gain;
+            // ReLU: negatives clip to exact zero -> ~50-65% sparsity.
+            row[j] = v.max(0.0);
+        }
+    }
+    Dataset::new(name, n, d, x, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_like_statistics() {
+        let ds = mnist_like(2000, 3);
+        assert_eq!(ds.d, 784);
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)), "gray values in [0,1]");
+        // All ten classes present with rough balance.
+        let mut counts = [0usize; 10];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        for (c, &cnt) in counts.iter().enumerate() {
+            assert!(cnt > 100, "class {c} undersampled: {cnt}");
+        }
+    }
+
+    #[test]
+    fn mnist_like_classes_are_separated() {
+        // Mean within-class distance should be well below between-class.
+        let ds = mnist_like(600, 5);
+        let mut within = (0.0f64, 0usize);
+        let mut between = (0.0f64, 0usize);
+        for i in (0..ds.n).step_by(7) {
+            for j in (i + 1..ds.n).step_by(11) {
+                let d = crate::hd::dist2(ds.row(i), ds.row(j)) as f64;
+                if ds.labels[i] == ds.labels[j] {
+                    within.0 += d;
+                    within.1 += 1;
+                } else {
+                    between.0 += d;
+                    between.1 += 1;
+                }
+            }
+        }
+        // Real MNIST pixel-space ratio is ~1.2-1.4; require that regime.
+        let w = within.0 / within.1 as f64;
+        let b = between.0 / between.1 as f64;
+        assert!(b > 1.25 * w, "classes not separated: within={w:.3} between={b:.3}");
+    }
+
+    #[test]
+    fn wordvec_like_is_unit_norm_and_zipfian() {
+        let ds = wordvec_like("w", 3000, 64, 50, 7);
+        for i in (0..ds.n).step_by(97) {
+            let norm: f32 = ds.row(i).iter().map(|v| v * v).sum();
+            assert!((norm - 1.0).abs() < 1e-3, "row {i} not unit norm: {norm}");
+        }
+        // Cluster sizes skew: the biggest label should dominate smallest.
+        let mut counts = std::collections::HashMap::new();
+        for &l in &ds.labels {
+            *counts.entry(l).or_insert(0usize) += 1;
+        }
+        let max = *counts.values().max().unwrap();
+        let min = *counts.values().min().unwrap();
+        assert!(max > 5 * min, "no Zipf skew: max={max} min={min}");
+    }
+
+    #[test]
+    fn imagenet_like_is_sparse_nonnegative() {
+        let ds = imagenet_like("i", 1000, 128, 2);
+        assert!(ds.x.iter().all(|&v| v >= 0.0));
+        let zeros = ds.x.iter().filter(|&&v| v == 0.0).count() as f64 / ds.x.len() as f64;
+        assert!((0.3..0.8).contains(&zeros), "ReLU sparsity off: {zeros}");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = wordvec_like("w", 100, 32, 10, 42);
+        let b = wordvec_like("w", 100, 32, 10, 42);
+        assert_eq!(a.x, b.x);
+        let c = mnist_like(50, 42);
+        let d = mnist_like(50, 42);
+        assert_eq!(c.x, d.x);
+    }
+}

@@ -1,0 +1,60 @@
+//! Dataset substrates (DESIGN.md S19, substitutions in DESIGN.md §7).
+//!
+//! The paper evaluates on MNIST, WikiWord, GoogleNews word2vec and two
+//! ImageNet activation datasets — none shippable here. Each is replaced
+//! by a generator that reproduces the *statistics the algorithms react
+//! to* (manifold structure, cluster-size skew, sparsity/nonnegativity),
+//! plus a real-MNIST IDX loader that kicks in when files are present.
+
+pub mod generators;
+pub mod mnist;
+
+pub use generators::{gaussian_mixture, imagenet_like, mnist_like, wordvec_like};
+
+use crate::hd::Dataset;
+
+/// Construct one of the paper's five evaluation datasets by name
+/// (`mnist`, `wikiword`, `word2vec`, `imagenet-mixed3a`, `imagenet-head0`),
+/// subsampled/generated at `n` points. Names match Table 1.
+pub fn by_name(name: &str, n: usize, seed: u64) -> anyhow::Result<Dataset> {
+    Ok(match name {
+        "mnist" => mnist::load_or_synthesize(n, seed),
+        "wikiword" => wordvec_like("wikiword", n, 300, 400, seed),
+        "word2vec" | "googlenews" => wordvec_like("word2vec", n, 300, 1200, seed),
+        "imagenet-mixed3a" => imagenet_like("imagenet-mixed3a", n, 256, seed),
+        "imagenet-head0" => imagenet_like("imagenet-head0", n, 128, seed),
+        "gaussians" => gaussian_mixture("gaussians", n, 32, 10, seed),
+        other => anyhow::bail!(
+            "unknown dataset '{other}' (expected mnist|wikiword|word2vec|imagenet-mixed3a|imagenet-head0|gaussians)"
+        ),
+    })
+}
+
+/// The five paper datasets of Table 1, with their full-scale sizes.
+pub const TABLE1: &[(&str, usize, usize)] = &[
+    ("mnist", 60_000, 784),
+    ("wikiword", 350_000, 300),
+    ("word2vec", 3_000_000, 300),
+    ("imagenet-mixed3a", 100_000, 256),
+    ("imagenet-head0", 100_000, 128),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_builds_each_table1_dataset() {
+        for (name, _, d) in TABLE1 {
+            let ds = by_name(name, 200, 1).unwrap();
+            assert_eq!(ds.n, 200);
+            assert_eq!(ds.d, *d, "{name} dimensionality");
+            assert!(ds.x.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(by_name("nope", 10, 0).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Barnes-Hut-SNE (van der Maaten [41]) — the paper's principal baseline
+//! (DESIGN.md S12). Repulsion via the quadtree at opening angle θ
+//! (θ = 0.5 default speed/accuracy trade-off, θ = 0.1 high quality).
+
+use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams, Repulsion};
+use super::quadtree::QuadTree;
+use crate::hd::SparseP;
+use crate::util::parallel;
+
+/// Quadtree-approximated repulsion (rebuilds the tree every iteration, as
+/// BH-SNE must — point positions change each step).
+pub struct BhRepulsion {
+    pub theta: f32,
+}
+
+impl Repulsion for BhRepulsion {
+    fn compute(&mut self, y: &[f32], num: &mut [f32]) -> f64 {
+        let n = y.len() / 2;
+        let tree = QuadTree::build(y);
+        let z_total = std::sync::Mutex::new(0.0f64);
+        {
+            let slots = parallel::SyncSlice::new(num);
+            parallel::par_chunks(n, 64, |range| {
+                let mut local_z = 0.0f64;
+                for i in range {
+                    let (fx, fy, z) = tree.accumulate(y[2 * i], y[2 * i + 1], self.theta);
+                    // z includes the query's own t(0)=1 (Eq. 13's S−1).
+                    local_z += z - 1.0;
+                    unsafe {
+                        *slots.get_mut(2 * i) = fx as f32;
+                        *slots.get_mut(2 * i + 1) = fy as f32;
+                    }
+                }
+                *z_total.lock().unwrap() += local_z;
+            });
+        }
+        z_total.into_inner().unwrap()
+    }
+}
+
+/// The BH-SNE engine.
+pub struct BarnesHut {
+    theta: f32,
+    name: &'static str,
+}
+
+impl BarnesHut {
+    pub fn new(theta: f32) -> Self {
+        // Static names so Engine::name can return &'static str.
+        let name = if theta <= 0.05 {
+            "bh-0.0"
+        } else if theta <= 0.3 {
+            "bh-0.1"
+        } else {
+            "bh-0.5"
+        };
+        Self { theta, name }
+    }
+
+    pub fn theta(&self) -> f32 {
+        self.theta
+    }
+}
+
+impl Engine for BarnesHut {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run(
+        &mut self,
+        p: &SparseP,
+        params: &OptParams,
+        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+    ) -> anyhow::Result<Vec<f32>> {
+        run_gd_loop(self.name, &mut BhRepulsion { theta: self.theta }, p, params, observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::exact::ExactRepulsion;
+    use crate::hd::sparse::Csr;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bh_theta0_matches_exact_repulsion() {
+        let mut rng = Rng::new(6);
+        let n = 150;
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+        let mut a = vec![0.0f32; 2 * n];
+        let mut b = vec![0.0f32; 2 * n];
+        let za = BhRepulsion { theta: 0.0 }.compute(&y, &mut a);
+        let zb = ExactRepulsion.compute(&y, &mut b);
+        assert!((za - zb).abs() / zb < 1e-5, "Z: {za} vs {zb}");
+        for i in 0..2 * n {
+            assert!((a[i] - b[i]).abs() < 1e-4 * b[i].abs().max(1e-2), "num[{i}]");
+        }
+    }
+
+    #[test]
+    fn bh_theta05_close_to_exact() {
+        let mut rng = Rng::new(9);
+        let n = 300;
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 3.0)).collect();
+        let mut a = vec![0.0f32; 2 * n];
+        let mut b = vec![0.0f32; 2 * n];
+        let za = BhRepulsion { theta: 0.5 }.compute(&y, &mut a);
+        let zb = ExactRepulsion.compute(&y, &mut b);
+        assert!((za - zb).abs() / zb < 0.02, "Z rel err: {}", (za - zb).abs() / zb);
+    }
+
+    #[test]
+    fn bh_engine_reduces_kl() {
+        let n = 80;
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            for j in 1..=3usize {
+                col.push(((i + j) % n) as u32);
+                val.push(1.0 / (n * 3) as f32);
+            }
+        }
+        let p = SparseP { csr: Csr::from_rows(n, n, 3, col, val), perplexity: 3.0 };
+        let params = OptParams { iters: 120, exaggeration_iters: 30, ..Default::default() };
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        let mut obs = |s: &IterStats, _: &[f32]| {
+            if s.iter == 0 {
+                first = s.kl_est;
+            }
+            last = s.kl_est;
+            Control::Continue
+        };
+        BarnesHut::new(0.5).run(&p, &params, Some(&mut obs)).unwrap();
+        assert!(last < first, "KL {first} -> {last}");
+    }
+
+    #[test]
+    fn names_follow_theta() {
+        assert_eq!(BarnesHut::new(0.5).name(), "bh-0.5");
+        assert_eq!(BarnesHut::new(0.1).name(), "bh-0.1");
+        assert_eq!(BarnesHut::new(0.0).name(), "bh-0.0");
+    }
+}

@@ -1,0 +1,267 @@
+//! Shared gradient-descent machinery (DESIGN.md S16): the van der Maaten
+//! update rule (gains, momentum), the early-exaggeration and momentum
+//! schedules the paper's evaluation uses, the engine trait, and the
+//! generic optimisation loop every CPU engine runs through.
+
+use crate::hd::SparseP;
+use crate::util::rng::Rng;
+
+/// Optimisation hyperparameters (HDI defaults, §6 of the paper).
+#[derive(Debug, Clone)]
+pub struct OptParams {
+    pub iters: usize,
+    pub eta: f32,
+    pub momentum0: f32,
+    pub momentum1: f32,
+    /// Iteration at which momentum switches 0.5 → 0.8.
+    pub momentum_switch: usize,
+    /// Early-exaggeration multiplier on P.
+    pub exaggeration: f32,
+    /// Iterations during which exaggeration applies.
+    pub exaggeration_iters: usize,
+    pub seed: u64,
+    /// Initial embedding std-dev.
+    pub init_std: f32,
+}
+
+impl Default for OptParams {
+    fn default() -> Self {
+        Self {
+            iters: 1000,
+            eta: 200.0,
+            momentum0: 0.5,
+            momentum1: 0.8,
+            momentum_switch: 250,
+            exaggeration: 12.0,
+            exaggeration_iters: 250,
+            seed: 42,
+            init_std: 0.1,
+        }
+    }
+}
+
+impl OptParams {
+    pub fn momentum_at(&self, iter: usize) -> f32 {
+        if iter < self.momentum_switch {
+            self.momentum0
+        } else {
+            self.momentum1
+        }
+    }
+
+    pub fn exaggeration_at(&self, iter: usize) -> f32 {
+        if iter < self.exaggeration_iters {
+            self.exaggeration
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Per-iteration statistics delivered to observers.
+#[derive(Debug, Clone, Copy)]
+pub struct IterStats {
+    pub iter: usize,
+    /// Neighbour-restricted KL estimate (comparable across engines).
+    pub kl_est: f64,
+    /// Normalisation term (exact or field-estimated Z).
+    pub z: f64,
+    /// Embedding diameter (bbox max side).
+    pub diameter: f32,
+    pub elapsed_s: f64,
+}
+
+/// Observer verdict: keep optimising or stop early (the A-tSNE
+/// user-driven early termination the coordinator exposes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    Continue,
+    Stop,
+}
+
+/// An embedding optimiser.
+pub trait Engine: Send {
+    fn name(&self) -> &'static str;
+
+    /// Minimise KL(P||Q); returns the final `(n, 2)` embedding.
+    /// The observer (if any) sees every iteration and can stop the run.
+    fn run(
+        &mut self,
+        p: &SparseP,
+        params: &OptParams,
+        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+    ) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Gradient-descent state for the CPU engines.
+#[derive(Debug, Clone)]
+pub struct GdState {
+    pub n: usize,
+    pub y: Vec<f32>,
+    pub vel: Vec<f32>,
+    pub gains: Vec<f32>,
+}
+
+pub const GAIN_ADD: f32 = 0.2;
+pub const GAIN_MUL: f32 = 0.8;
+pub const GAIN_MIN: f32 = 0.01;
+
+impl GdState {
+    /// Random Gaussian initialisation (deterministic in seed).
+    pub fn init(n: usize, seed: u64, std: f32) -> Self {
+        let mut rng = Rng::new(seed);
+        let y = (0..2 * n).map(|_| rng.gauss_f32(0.0, std)).collect();
+        Self { n, y, vel: vec![0.0; 2 * n], gains: vec![1.0; 2 * n] }
+    }
+
+    /// One van der Maaten update from a gradient; recentres afterwards.
+    pub fn apply_gradient(&mut self, grad: &[f32], eta: f32, momentum: f32) {
+        debug_assert_eq!(grad.len(), 2 * self.n);
+        for i in 0..2 * self.n {
+            let g = grad[i];
+            let same = g * self.vel[i] > 0.0;
+            let gain = if same { self.gains[i] * GAIN_MUL } else { self.gains[i] + GAIN_ADD };
+            let gain = gain.max(GAIN_MIN);
+            self.gains[i] = gain;
+            self.vel[i] = momentum * self.vel[i] - eta * gain * g;
+            self.y[i] += self.vel[i];
+        }
+        self.recenter();
+    }
+
+    /// Subtract the mean.
+    pub fn recenter(&mut self) {
+        let (mut cx, mut cy) = (0.0f64, 0.0f64);
+        for i in 0..self.n {
+            cx += self.y[2 * i] as f64;
+            cy += self.y[2 * i + 1] as f64;
+        }
+        cx /= self.n as f64;
+        cy /= self.n as f64;
+        for i in 0..self.n {
+            self.y[2 * i] -= cx as f32;
+            self.y[2 * i + 1] -= cy as f32;
+        }
+    }
+
+    /// Bounding box `[min_x, min_y, max_x, max_y]`.
+    pub fn bbox(&self) -> [f32; 4] {
+        let mut b = [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
+        for i in 0..self.n {
+            b[0] = b[0].min(self.y[2 * i]);
+            b[1] = b[1].min(self.y[2 * i + 1]);
+            b[2] = b[2].max(self.y[2 * i]);
+            b[3] = b[3].max(self.y[2 * i + 1]);
+        }
+        b
+    }
+}
+
+/// A repulsion approximation: fills `num` with the *numerator*
+/// Σ_j t²_ij (y_i − y_j) and returns the normalisation Z = Σ_{k≠l} t_kl
+/// estimate. `F_rep = num / Z` (Eq. 8 right term / Eq. 14).
+pub trait Repulsion {
+    fn compute(&mut self, y: &[f32], num: &mut [f32]) -> f64;
+}
+
+/// The generic CPU optimisation loop shared by exact/BH/field engines.
+pub fn run_gd_loop(
+    engine_name: &'static str,
+    repulsion: &mut dyn Repulsion,
+    p: &SparseP,
+    params: &OptParams,
+    mut observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+) -> anyhow::Result<Vec<f32>> {
+    let n = p.n();
+    let mut state = GdState::init(n, params.seed, params.init_std);
+    let mut attr = vec![0.0f32; 2 * n];
+    let mut rep = vec![0.0f32; 2 * n];
+    let mut grad = vec![0.0f32; 2 * n];
+    let t0 = std::time::Instant::now();
+    for iter in 0..params.iters {
+        let ex = params.exaggeration_at(iter);
+        let (kl_pairs, p_sum) = super::attractive_forces(p, &state.y, &mut attr);
+        let z = repulsion.compute(&state.y, &mut rep).max(1e-12);
+        let inv_z = (1.0 / z) as f32;
+        for i in 0..2 * n {
+            grad[i] = 4.0 * (ex * attr[i] - rep[i] * inv_z);
+        }
+        state.apply_gradient(&grad, params.eta, params.momentum_at(iter));
+        if let Some(obs) = observer.as_deref_mut() {
+            let b = state.bbox();
+            let stats = IterStats {
+                iter,
+                kl_est: kl_pairs + p_sum * z.ln(),
+                z,
+                diameter: (b[2] - b[0]).max(b[3] - b[1]),
+                elapsed_s: t0.elapsed().as_secs_f64(),
+            };
+            if obs(&stats, &state.y) == Control::Stop {
+                break;
+            }
+        }
+    }
+    let _ = engine_name;
+    Ok(state.y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules() {
+        let p = OptParams::default();
+        assert_eq!(p.momentum_at(0), 0.5);
+        assert_eq!(p.momentum_at(250), 0.8);
+        assert_eq!(p.exaggeration_at(0), 12.0);
+        assert_eq!(p.exaggeration_at(249), 12.0);
+        assert_eq!(p.exaggeration_at(250), 1.0);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = GdState::init(50, 1, 0.1);
+        let b = GdState::init(50, 1, 0.1);
+        assert_eq!(a.y, b.y);
+        assert_ne!(a.y, GdState::init(50, 2, 0.1).y);
+    }
+
+    #[test]
+    fn gains_stay_above_floor_and_update_rule() {
+        let mut s = GdState::init(1, 0, 0.0);
+        s.vel = vec![1.0, -1.0];
+        s.gains = vec![1.0, 1.0];
+        // grad same sign as vel halves-ish the gain; opposite sign adds.
+        let y0 = s.y.clone();
+        s.apply_gradient(&[0.5, 0.5], 1.0, 0.0);
+        assert!((s.gains[0] - 0.8).abs() < 1e-6);
+        assert!((s.gains[1] - 1.2).abs() < 1e-6);
+        let _ = y0;
+        for _ in 0..100 {
+            s.apply_gradient(&[1.0, 1.0], 1.0, 0.0);
+        }
+        assert!(s.gains.iter().all(|&g| g >= GAIN_MIN));
+    }
+
+    #[test]
+    fn recentre_zeroes_mean() {
+        let mut s = GdState::init(10, 3, 1.0);
+        for v in s.y.iter_mut() {
+            *v += 5.0;
+        }
+        s.recenter();
+        let mean: f32 = s.y.iter().sum::<f32>() / s.y.len() as f32;
+        assert!(mean.abs() < 1e-4);
+    }
+
+    #[test]
+    fn bbox_contains_all() {
+        let s = GdState::init(30, 4, 1.0);
+        let b = s.bbox();
+        for i in 0..30 {
+            assert!(s.y[2 * i] >= b[0] && s.y[2 * i] <= b[2]);
+            assert!(s.y[2 * i + 1] >= b[1] && s.y[2 * i + 1] <= b[3]);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Exact t-SNE (van der Maaten & Hinton 2008) — the O(N²) baseline the
+//! paper labels "t-SNE" (DESIGN.md S11). Repulsion is the full pairwise
+//! sum; attractive forces share the sparse pass with every other engine.
+
+use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams, Repulsion};
+use crate::hd::SparseP;
+use crate::util::parallel;
+
+/// Exact O(N²) repulsion: `num_i = Σ_{j≠i} t²_ij (y_i − y_j)`,
+/// `Z = Σ_{k≠l} t_kl` (threaded over rows).
+pub struct ExactRepulsion;
+
+impl Repulsion for ExactRepulsion {
+    fn compute(&mut self, y: &[f32], num: &mut [f32]) -> f64 {
+        let n = y.len() / 2;
+        let z_total = std::sync::Mutex::new(0.0f64);
+        {
+            let slots = parallel::SyncSlice::new(num);
+            parallel::par_chunks(n, 32, |range| {
+                let mut local_z = 0.0f64;
+                for i in range {
+                    let (xi, yi) = (y[2 * i], y[2 * i + 1]);
+                    let (mut fx, mut fy) = (0.0f32, 0.0f32);
+                    for j in 0..n {
+                        if j == i {
+                            continue;
+                        }
+                        let dx = xi - y[2 * j];
+                        let dy = yi - y[2 * j + 1];
+                        let t = 1.0 / (1.0 + dx * dx + dy * dy);
+                        local_z += t as f64;
+                        let t2 = t * t;
+                        fx += t2 * dx;
+                        fy += t2 * dy;
+                    }
+                    unsafe {
+                        *slots.get_mut(2 * i) = fx;
+                        *slots.get_mut(2 * i + 1) = fy;
+                    }
+                }
+                *z_total.lock().unwrap() += local_z;
+            });
+        }
+        z_total.into_inner().unwrap()
+    }
+}
+
+/// The exact-t-SNE engine.
+pub struct ExactTsne;
+
+impl Engine for ExactTsne {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn run(
+        &mut self,
+        p: &SparseP,
+        params: &OptParams,
+        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+    ) -> anyhow::Result<Vec<f32>> {
+        run_gd_loop("exact", &mut ExactRepulsion, p, params, observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::sparse::Csr;
+    use crate::metrics::kl;
+
+    fn ring_p(n: usize, k: usize) -> SparseP {
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            for j in 1..=k {
+                col.push(((i + j) % n) as u32);
+                val.push(1.0 / (n * k) as f32);
+            }
+        }
+        SparseP { csr: Csr::from_rows(n, n, k, col, val), perplexity: k as f32 }
+    }
+
+    #[test]
+    fn repulsion_z_matches_metric_exact_z() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let n = 80;
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+        let mut num = vec![0.0f32; 2 * n];
+        let z = ExactRepulsion.compute(&y, &mut num);
+        assert!((z - kl::exact_z(&y)).abs() / z < 1e-9);
+    }
+
+    #[test]
+    fn two_point_repulsion_analytic() {
+        let y = vec![0.0f32, 0.0, 1.0, 0.0];
+        let mut num = vec![0.0f32; 4];
+        let z = ExactRepulsion.compute(&y, &mut num);
+        // t = 1/2; numerator for point0 = t^2 * (0-1, 0-0) = (-0.25, 0).
+        assert!((num[0] + 0.25).abs() < 1e-6);
+        assert!((z - 1.0).abs() < 1e-9); // two ordered pairs * 1/2
+    }
+
+    #[test]
+    fn optimisation_reduces_kl() {
+        let n = 60;
+        let p = ring_p(n, 3);
+        let params = OptParams { iters: 150, exaggeration_iters: 40, seed: 7, ..Default::default() };
+        let mut kl_first = f64::NAN;
+        let mut kl_last = f64::NAN;
+        let mut obs = |s: &IterStats, _y: &[f32]| {
+            if s.iter == 0 {
+                kl_first = s.kl_est;
+            }
+            kl_last = s.kl_est;
+            Control::Continue
+        };
+        let y = ExactTsne.run(&p, &params, Some(&mut obs)).unwrap();
+        assert!(kl_last < kl_first, "KL must drop: {kl_first} -> {kl_last}");
+        assert!(y.iter().all(|v| v.is_finite()));
+        // Exact final KL should be decent for a ring.
+        let final_kl = kl::kl_divergence_exact(&p, &y);
+        assert!(final_kl < kl_first, "exact final KL {final_kl} vs initial est {kl_first}");
+    }
+
+    #[test]
+    fn observer_can_stop_early() {
+        let p = ring_p(40, 2);
+        let params = OptParams { iters: 500, ..Default::default() };
+        let mut count = 0usize;
+        let mut obs = |s: &IterStats, _y: &[f32]| {
+            count += 1;
+            if s.iter >= 9 {
+                Control::Stop
+            } else {
+                Control::Continue
+            }
+        };
+        ExactTsne.run(&p, &params, Some(&mut obs)).unwrap();
+        assert_eq!(count, 10);
+    }
+}

@@ -1,0 +1,225 @@
+//! GPGPU-SNE — the paper's system (DESIGN.md S14): the full optimisation
+//! step runs as the AOT-compiled XLA executable (L1 Pallas fields + L2
+//! step graph); this engine owns the host-side policy around it:
+//!
+//! * pad the job into the smallest artifact N-bucket,
+//! * upload the static tensors once (device-resident),
+//! * per iteration, pick the grid variant by the paper's ρ policy from
+//!   the bounding box the previous step returned (10% hysteresis), and
+//! * run the step, feeding the evolving state back.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use super::common::{Control, Engine, GdState, IterStats, OptParams};
+use crate::hd::SparseP;
+use crate::runtime::{Runtime, StaticArgs, StepState};
+
+/// The discrete adaptive-resolution policy over the artifact grid set.
+#[derive(Debug, Clone)]
+pub struct GridPolicy {
+    /// Embedding-units per pixel (paper: ρ = 0.5).
+    pub rho: f32,
+    /// Hysteresis band: only switch grids when the ideal size drifts this
+    /// far (relative) from the current grid — avoids thrashing the
+    /// executable cache between adjacent variants.
+    pub hysteresis: f32,
+    /// Available grid sizes, ascending.
+    pub grids: Vec<usize>,
+    current: Option<usize>,
+}
+
+impl GridPolicy {
+    pub fn new(rho: f32, grids: Vec<usize>) -> Self {
+        assert!(!grids.is_empty());
+        let mut grids = grids;
+        grids.sort_unstable();
+        Self { rho, hysteresis: 0.10, grids, current: None }
+    }
+
+    /// Smallest available grid ≥ the ideal diameter/ρ (largest otherwise).
+    fn ideal(&self, diameter: f32) -> usize {
+        let want = (diameter / self.rho).ceil() as usize;
+        *self.grids.iter().find(|&&g| g >= want).unwrap_or(self.grids.last().unwrap())
+    }
+
+    /// Grid for this iteration given the current embedding diameter.
+    pub fn choose(&mut self, diameter: f32) -> usize {
+        let ideal = self.ideal(diameter);
+        match self.current {
+            None => {
+                self.current = Some(ideal);
+                ideal
+            }
+            Some(cur) if ideal == cur => cur,
+            Some(cur) => {
+                // Only move when outside the hysteresis band.
+                let want = diameter / self.rho;
+                let boundary = cur as f32;
+                let drift = if ideal > cur {
+                    (want - boundary) / boundary
+                } else {
+                    (boundary - want) / boundary
+                };
+                if drift > self.hysteresis {
+                    self.current = Some(ideal);
+                    ideal
+                } else {
+                    cur
+                }
+            }
+        }
+    }
+
+    pub fn current(&self) -> Option<usize> {
+        self.current
+    }
+}
+
+/// The device-backed engine.
+pub struct GpgpuSne {
+    rt: Arc<Runtime>,
+    /// Per-run grid switch count (observability for tests/benches).
+    pub grid_switches: usize,
+    /// ρ override (None = 0.5).
+    pub rho: f32,
+}
+
+impl GpgpuSne {
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        Self { rt, grid_switches: 0, rho: 0.5 }
+    }
+
+    /// Pad a job into bucket form: (n_pad, mask, state, statics).
+    fn prepare(
+        &self,
+        p: &SparseP,
+        params: &OptParams,
+    ) -> anyhow::Result<(usize, usize, StepState, StaticArgs)> {
+        let n = p.n();
+        let n_pad = self
+            .rt
+            .manifest
+            .bucket_for(n)
+            .with_context(|| format!("no artifact bucket fits n={n}"))?;
+        anyhow::ensure!(
+            n <= n_pad,
+            "dataset n={n} exceeds the largest artifact bucket {n_pad}; rebuild artifacts with --full-matrix"
+        );
+        let k = self
+            .rt
+            .manifest
+            .steps()
+            .find(|a| a.n == n_pad)
+            .map(|a| a.k)
+            .context("no step artifact in bucket")?;
+        let (idx, val) = p.to_padded(n_pad, k);
+        let mut mask = vec![0.0f32; n_pad];
+        mask[..n].fill(1.0);
+        let statics = self.rt.upload_static(&mask, &idx, &val, k)?;
+        // Initial embedding: same distribution as the CPU engines.
+        let init = GdState::init(n, params.seed, params.init_std);
+        let mut y = vec![0.0f32; 2 * n_pad];
+        y[..2 * n].copy_from_slice(&init.y);
+        let state = StepState::new(y, &mask);
+        Ok((n_pad, k, state, statics))
+    }
+}
+
+impl Engine for GpgpuSne {
+    fn name(&self) -> &'static str {
+        "gpgpu"
+    }
+
+    fn run(
+        &mut self,
+        p: &SparseP,
+        params: &OptParams,
+        mut observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+    ) -> anyhow::Result<Vec<f32>> {
+        let n = p.n();
+        let (n_pad, _k, mut state, statics) = self.prepare(p, params)?;
+        let grids = self.rt.manifest.grids_for(n_pad);
+        anyhow::ensure!(!grids.is_empty(), "no grid variants for bucket {n_pad}");
+        let mut policy = GridPolicy::new(self.rho, grids);
+        self.grid_switches = 0;
+
+        // Initial diameter from the random init.
+        let mut diameter = {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for i in 0..n {
+                lo = lo.min(state.y[2 * i].min(state.y[2 * i + 1]));
+                hi = hi.max(state.y[2 * i].max(state.y[2 * i + 1]));
+            }
+            (hi - lo).max(1e-3)
+        };
+        let t0 = std::time::Instant::now();
+        let mut last_grid = 0usize;
+        for iter in 0..params.iters {
+            let grid = policy.choose(diameter);
+            if grid != last_grid && last_grid != 0 {
+                self.grid_switches += 1;
+            }
+            last_grid = grid;
+            let exe = self.rt.step_executable(n_pad, grid)?;
+            let out = self.rt.run_step(
+                &exe,
+                &mut state,
+                &statics,
+                params.eta,
+                params.momentum_at(iter),
+                params.exaggeration_at(iter),
+            )?;
+            diameter = out.diameter().max(1e-3);
+            if let Some(obs) = observer.as_deref_mut() {
+                let stats = IterStats {
+                    iter,
+                    kl_est: out.kl as f64,
+                    z: out.zhat as f64,
+                    diameter,
+                    elapsed_s: t0.elapsed().as_secs_f64(),
+                };
+                if obs(&stats, &state.y[..2 * n]) == Control::Stop {
+                    break;
+                }
+            }
+        }
+        Ok(state.y[..2 * n].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_picks_smallest_covering_grid() {
+        let mut p = GridPolicy::new(0.5, vec![32, 64, 128, 256]);
+        assert_eq!(p.choose(10.0), 32); // 10/0.5 = 20 -> 32
+        assert_eq!(p.choose(25.0), 64); // 50 -> 64 (drift large)
+        assert_eq!(p.choose(200.0), 256); // 400 -> clamped to 256
+    }
+
+    #[test]
+    fn policy_hysteresis_prevents_thrash() {
+        let mut p = GridPolicy::new(0.5, vec![32, 64, 128]);
+        assert_eq!(p.choose(30.0), 64); // 60 -> 64
+        // Ideal drops to 32 (diameter 15.9 -> want 31.8) but drift from 64
+        // is (64-31.8)/64 = 0.50 > hysteresis: switches.
+        assert_eq!(p.choose(15.9), 32);
+        // Wobble just above the 32 boundary must NOT bounce back to 64:
+        assert_eq!(p.choose(16.2), 32); // want 32.4, drift (32.4-32)/32 ≈ 1% < 10%
+        assert_eq!(p.choose(17.5), 32); // want 35, drift ~9.4% < 10%
+        assert_eq!(p.choose(18.0), 64); // want 36, drift 12.5% -> switch
+    }
+
+    #[test]
+    fn policy_is_stable_at_fixed_diameter() {
+        let mut p = GridPolicy::new(0.5, vec![32, 64]);
+        let g0 = p.choose(20.0);
+        for _ in 0..100 {
+            assert_eq!(p.choose(20.0), g0);
+        }
+    }
+}

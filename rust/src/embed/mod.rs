@@ -1,0 +1,126 @@
+//! Embedding optimisers: the paper's field-based GPGPU-SNE (device via
+//! `runtime/`, CPU mirror in `fieldcpu`) and every baseline its evaluation
+//! compares against — exact t-SNE [42], Barnes-Hut-SNE [41] and a
+//! simulated t-SNE-CUDA [7] (DESIGN.md S11–S16).
+//!
+//! All engines share the van der Maaten gradient-descent update
+//! (gains + momentum + early exaggeration, `common.rs`) and the sparse
+//! attractive-force pass; they differ only in how the repulsive forces
+//! are approximated — which is exactly the paper's axis of comparison.
+
+pub mod bh;
+pub mod common;
+pub mod exact;
+pub mod fieldcpu;
+pub mod gpgpu;
+pub mod quadtree;
+pub mod tsnecuda;
+
+pub use common::{Control, Engine, IterStats, OptParams};
+
+use crate::hd::SparseP;
+
+/// Construct an engine by its bench/CLI name.
+///
+/// `gpgpu` requires compiled artifacts (see `runtime::locate_artifacts`);
+/// every other engine is self-contained CPU code.
+pub fn by_name(
+    name: &str,
+    runtime: Option<std::sync::Arc<crate::runtime::Runtime>>,
+) -> anyhow::Result<Box<dyn Engine>> {
+    Ok(match name {
+        "exact" => Box::new(exact::ExactTsne),
+        "bh-0.5" => Box::new(bh::BarnesHut::new(0.5)),
+        "bh-0.1" => Box::new(bh::BarnesHut::new(0.1)),
+        "tsne-cuda-0.5" => Box::new(tsnecuda::TsneCudaSim::new(0.5)),
+        "tsne-cuda-0.0" => Box::new(tsnecuda::TsneCudaSim::new(0.0)),
+        "fieldcpu" => Box::new(fieldcpu::FieldCpu::default()),
+        "gpgpu" => {
+            let rt = runtime
+                .ok_or_else(|| anyhow::anyhow!("gpgpu engine needs artifacts (run `make artifacts`)"))?;
+            Box::new(gpgpu::GpgpuSne::new(rt))
+        }
+        other => anyhow::bail!("unknown engine '{other}'"),
+    })
+}
+
+/// All engine names in the order the paper's figures list them.
+pub const ENGINES: &[&str] =
+    &["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.0", "tsne-cuda-0.5", "fieldcpu", "gpgpu"];
+
+/// Shared CPU attractive-force pass over the sparse P (Eq. 12).
+///
+/// Fills `attr` with Σ_j p_ij t_ij (y_i − y_j) and returns
+/// (Σ_ij p_ij (ln p_ij − ln t_ij), Σ_ij p_ij) — the pieces of the
+/// neighbour-restricted KL estimate (add `p_sum * ln Z`).
+pub fn attractive_forces(p: &SparseP, y: &[f32], attr: &mut [f32]) -> (f64, f64) {
+    let n = p.n();
+    assert!(attr.len() >= 2 * n && y.len() >= 2 * n);
+    let kl_parts = std::sync::Mutex::new((0.0f64, 0.0f64));
+    {
+        let slots = crate::util::parallel::SyncSlice::new(attr);
+        crate::util::parallel::par_chunks(n, 64, |range| {
+            let mut local_kl = 0.0f64;
+            let mut local_ps = 0.0f64;
+            for i in range {
+                let (cols, vals) = p.csr.row(i);
+                let (xi, yi) = (y[2 * i], y[2 * i + 1]);
+                let (mut fx, mut fy) = (0.0f32, 0.0f32);
+                for (c, &pij) in cols.iter().zip(vals) {
+                    if pij <= 0.0 {
+                        continue;
+                    }
+                    let j = *c as usize;
+                    let dx = xi - y[2 * j];
+                    let dy = yi - y[2 * j + 1];
+                    let t = 1.0 / (1.0 + dx * dx + dy * dy);
+                    let w = pij * t;
+                    fx += w * dx;
+                    fy += w * dy;
+                    local_kl += pij as f64 * ((pij as f64).ln() - (t as f64).ln());
+                    local_ps += pij as f64;
+                }
+                unsafe {
+                    *slots.get_mut(2 * i) = fx;
+                    *slots.get_mut(2 * i + 1) = fy;
+                }
+            }
+            let mut g = kl_parts.lock().unwrap();
+            g.0 += local_kl;
+            g.1 += local_ps;
+        });
+    }
+    let g = kl_parts.into_inner().unwrap();
+    (g.0, g.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::sparse::Csr;
+
+    #[test]
+    fn attractive_matches_two_point_analytic() {
+        // Same case as the python kernel test.
+        let p = SparseP {
+            csr: Csr::from_rows(2, 2, 1, vec![1, 0], vec![0.5, 0.5]),
+            perplexity: 1.0,
+        };
+        let y = vec![0.0, 0.0, 2.0, 0.0];
+        let mut attr = vec![0.0f32; 4];
+        let (_klp, psum) = attractive_forces(&p, &y, &mut attr);
+        let t = 1.0 / 5.0;
+        assert!((attr[0] - 0.5 * t * (-2.0)).abs() < 1e-6);
+        assert!((attr[2] - 0.5 * t * 2.0).abs() < 1e-6);
+        assert!((psum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_knows_all_cpu_engines() {
+        for name in ["exact", "bh-0.5", "bh-0.1", "tsne-cuda-0.0", "tsne-cuda-0.5", "fieldcpu"] {
+            assert!(by_name(name, None).is_ok(), "{name}");
+        }
+        assert!(by_name("gpgpu", None).is_err(), "gpgpu without runtime must error");
+        assert!(by_name("bogus", None).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! Barnes-Hut quadtree over the 2-D embedding (Barnes & Hut [3], as used
+//! by BH-SNE [41]; DESIGN.md S12).
+//!
+//! Nodes store centre of mass and point count; the force traversal treats
+//! a cell as a single super-point when `cell_size² / d² < θ²`, yielding
+//! the O(N log N) repulsion approximation the paper compares against.
+
+/// A flat-array quadtree (children allocated on demand).
+pub struct QuadTree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Square cell: centre + half side.
+    cx: f32,
+    cy: f32,
+    half: f32,
+    /// Centre of mass and cumulative count of the subtree.
+    mass_x: f64,
+    mass_y: f64,
+    count: u32,
+    /// If a single point resides here and no children: its position.
+    point: Option<(f32, f32)>,
+    /// Child indices (NW, NE, SW, SE) or NONE.
+    children: [u32; 4],
+}
+
+const NONE: u32 = u32::MAX;
+
+impl QuadTree {
+    /// Build from a `(n, 2)` row-major embedding.
+    pub fn build(y: &[f32]) -> Self {
+        let n = y.len() / 2;
+        let mut b = [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
+        for i in 0..n {
+            b[0] = b[0].min(y[2 * i]);
+            b[1] = b[1].min(y[2 * i + 1]);
+            b[2] = b[2].max(y[2 * i]);
+            b[3] = b[3].max(y[2 * i + 1]);
+        }
+        let half = (0.5 * (b[2] - b[0]).max(b[3] - b[1])).max(1e-6) * 1.0001;
+        let root = Node {
+            cx: 0.5 * (b[0] + b[2]),
+            cy: 0.5 * (b[1] + b[3]),
+            half,
+            mass_x: 0.0,
+            mass_y: 0.0,
+            count: 0,
+            point: None,
+            children: [NONE; 4],
+        };
+        let mut tree = Self { nodes: vec![root] };
+        for i in 0..n {
+            tree.insert(0, y[2 * i], y[2 * i + 1], 0);
+        }
+        tree
+    }
+
+    fn insert(&mut self, node: u32, x: f32, y: f32, depth: usize) {
+        let ni = node as usize;
+        self.nodes[ni].mass_x += x as f64;
+        self.nodes[ni].mass_y += y as f64;
+        self.nodes[ni].count += 1;
+
+        // Depth cap: degenerate coincident points accumulate as mass only.
+        if depth > 48 {
+            return;
+        }
+        if self.nodes[ni].count == 1 {
+            self.nodes[ni].point = Some((x, y));
+            return;
+        }
+        // Subdivide: push the resident point down first (if any).
+        if let Some((px, py)) = self.nodes[ni].point.take() {
+            let q = self.child_for(ni, px, py);
+            self.insert(q, px, py, depth + 1);
+        }
+        let q = self.child_for(ni, x, y);
+        self.insert(q, x, y, depth + 1);
+    }
+
+    /// Child quadrant node id for a position, allocating if needed.
+    fn child_for(&mut self, ni: usize, x: f32, y: f32) -> u32 {
+        let (cx, cy, half) = (self.nodes[ni].cx, self.nodes[ni].cy, self.nodes[ni].half);
+        let (east, north) = (x >= cx, y >= cy);
+        let qi = match (north, east) {
+            (true, false) => 0,
+            (true, true) => 1,
+            (false, false) => 2,
+            (false, true) => 3,
+        };
+        if self.nodes[ni].children[qi] == NONE {
+            let h = half * 0.5;
+            let child = Node {
+                cx: cx + if east { h } else { -h },
+                cy: cy + if north { h } else { -h },
+                half: h,
+                mass_x: 0.0,
+                mass_y: 0.0,
+                count: 0,
+                point: None,
+                children: [NONE; 4],
+            };
+            self.nodes.push(child);
+            self.nodes[ni].children[qi] = (self.nodes.len() - 1) as u32;
+        }
+        self.nodes[ni].children[qi]
+    }
+
+    /// Accumulate the repulsion numerator and Z estimate for a query
+    /// point: returns `(Σ t² dx, Σ t² dy, Σ t)` over all other points,
+    /// with Barnes-Hut cell approximation at opening angle θ.
+    ///
+    /// The query point itself contributes t(0)=1 to the Z sum through its
+    /// own cell; the caller subtracts 1 (exactly like Eq. 13's `S−1`).
+    pub fn accumulate(&self, x: f32, y: f32, theta: f32) -> (f64, f64, f64) {
+        let mut fx = 0.0f64;
+        let mut fy = 0.0f64;
+        let mut z = 0.0f64;
+        let theta2 = (theta * theta).max(1e-12);
+        let mut stack: Vec<u32> = vec![0];
+        while let Some(ni) = stack.pop() {
+            let node = &self.nodes[ni as usize];
+            if node.count == 0 {
+                continue;
+            }
+            let comx = node.mass_x / node.count as f64;
+            let comy = node.mass_y / node.count as f64;
+            let dx = x as f64 - comx;
+            let dy = y as f64 - comy;
+            let d2 = dx * dx + dy * dy;
+            let cell = (2.0 * node.half) as f64;
+            let is_leaf_point = node.point.is_some() && node.children.iter().all(|&c| c == NONE);
+            if is_leaf_point || (cell * cell) < theta2 as f64 * d2 {
+                // Treat as a single super-point of mass `count`.
+                let t = 1.0 / (1.0 + d2);
+                let m = node.count as f64;
+                z += m * t;
+                let t2m = t * t * m;
+                fx += t2m * dx;
+                fy += t2m * dy;
+            } else {
+                for &c in &node.children {
+                    if c != NONE {
+                        stack.push(c);
+                    }
+                }
+                // Interior nodes may also hold no direct point; resident
+                // single points were pushed to children on subdivision.
+                if let Some((px, py)) = node.point {
+                    let dx = (x - px) as f64;
+                    let dy = (y - py) as f64;
+                    let t = 1.0 / (1.0 + dx * dx + dy * dy);
+                    z += t;
+                    fx += t * t * dx;
+                    fy += t * t * dy;
+                }
+            }
+        }
+        (fx, fy, z)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total mass (point count) at the root — conservation invariant.
+    pub fn total_count(&self) -> u32 {
+        self.nodes[0].count
+    }
+
+    /// Root centre of mass.
+    pub fn root_com(&self) -> (f64, f64) {
+        let r = &self.nodes[0];
+        (r.mass_x / r.count.max(1) as f64, r.mass_y / r.count.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_points(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.gauss_f32(0.0, 3.0)).collect()
+    }
+
+    #[test]
+    fn mass_conservation() {
+        let y = random_points(500, 1);
+        let t = QuadTree::build(&y);
+        assert_eq!(t.total_count(), 500);
+        // Root COM == mean of points.
+        let (mx, my) = t.root_com();
+        let (mut ex, mut ey) = (0.0f64, 0.0f64);
+        for i in 0..500 {
+            ex += y[2 * i] as f64;
+            ey += y[2 * i + 1] as f64;
+        }
+        assert!((mx - ex / 500.0).abs() < 1e-4);
+        assert!((my - ey / 500.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn theta_zero_is_exact() {
+        // θ=0 never approximates: must equal the brute-force sums.
+        let n = 120;
+        let y = random_points(n, 2);
+        let t = QuadTree::build(&y);
+        for i in (0..n).step_by(13) {
+            let (fx, fy, z) = t.accumulate(y[2 * i], y[2 * i + 1], 0.0);
+            let (mut efx, mut efy, mut ez) = (0.0f64, 0.0f64, 0.0f64);
+            for j in 0..n {
+                let dx = y[2 * i] - y[2 * j];
+                let dy = y[2 * i + 1] - y[2 * j + 1];
+                let tt = 1.0f64 / (1.0 + (dx * dx + dy * dy) as f64);
+                ez += tt;
+                efx += tt * tt * dx as f64;
+                efy += tt * tt * dy as f64;
+            }
+            assert!((z - ez).abs() < 1e-6 * ez.abs().max(1.0), "z {z} vs {ez}");
+            assert!((fx - efx).abs() < 1e-6 * efx.abs().max(1e-3));
+            assert!((fy - efy).abs() < 1e-6 * efy.abs().max(1e-3));
+        }
+    }
+
+    #[test]
+    fn theta_half_approximates_well() {
+        let n = 400;
+        let y = random_points(n, 3);
+        let t = QuadTree::build(&y);
+        let mut rel_err = 0.0f64;
+        for i in (0..n).step_by(7) {
+            let (fx, fy, _z) = t.accumulate(y[2 * i], y[2 * i + 1], 0.5);
+            let (ex, ey, _) = t.accumulate(y[2 * i], y[2 * i + 1], 0.0);
+            let err = ((fx - ex).powi(2) + (fy - ey).powi(2)).sqrt();
+            let mag = (ex * ex + ey * ey).sqrt().max(1e-9);
+            rel_err = rel_err.max(err / mag);
+        }
+        assert!(rel_err < 0.15, "BH θ=0.5 error too large: {rel_err}");
+    }
+
+    #[test]
+    fn coincident_points_do_not_hang() {
+        let y = vec![1.0f32, 1.0, 1.0, 1.0, 1.0, 1.0, 2.0, 2.0];
+        let t = QuadTree::build(&y);
+        assert_eq!(t.total_count(), 4);
+        let (_, _, z) = t.accumulate(1.0, 1.0, 0.5);
+        assert!(z.is_finite() && z > 0.0);
+    }
+}

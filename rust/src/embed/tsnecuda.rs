@@ -1,0 +1,100 @@
+//! Simulated t-SNE-CUDA comparator (Chan et al. [7]; DESIGN.md S15, §7).
+//!
+//! t-SNE-CUDA is a CUDA re-implementation of the BH-SNE force core on top
+//! of FAISS kNN; its *embedding quality* is therefore the BH quality at
+//! the chosen θ (the paper's own framing: "an acceleration based on the
+//! approximation of BH-SNE"). We reproduce quality exactly by running our
+//! BH force core, and report its *wall time* through a calibrated GPU
+//! speed model: the paper measures t-SNE-CUDA 2–5× faster than GPGPU-SNE
+//! and ~3× on the full ImageNet datasets, so the bench harness divides
+//! the measured BH CPU time by a documented speedup envelope rather than
+//! pretending a CUDA device exists. Both numbers (measured CPU, modelled
+//! GPU) are printed; EXPERIMENTS.md reports the substitution.
+
+use super::bh::BhRepulsion;
+use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams};
+use crate::hd::SparseP;
+
+/// Speedup of t-SNE-CUDA over our *measured BH-SNE θ=0.5 CPU time*,
+/// calibrated from the paper's Fig. 6: BH θ=0.5 takes ~8 min on MNIST
+/// where t-SNE-CUDA takes a few seconds — a ~100× envelope (GTX Titan,
+/// 2688 cores vs 8 CPU threads).
+pub const GPU_SPEEDUP_MODEL: f64 = 100.0;
+
+pub struct TsneCudaSim {
+    theta: f32,
+    name: &'static str,
+}
+
+impl TsneCudaSim {
+    pub fn new(theta: f32) -> Self {
+        let name = if theta <= 0.05 { "tsne-cuda-0.0" } else { "tsne-cuda-0.5" };
+        Self { theta, name }
+    }
+
+    pub fn theta(&self) -> f32 {
+        self.theta
+    }
+
+    /// Modelled GPU wall time from a measured CPU wall time.
+    pub fn modelled_time(cpu_seconds: f64) -> f64 {
+        cpu_seconds / GPU_SPEEDUP_MODEL
+    }
+}
+
+impl Engine for TsneCudaSim {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run(
+        &mut self,
+        p: &SparseP,
+        params: &OptParams,
+        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+    ) -> anyhow::Result<Vec<f32>> {
+        // Quality path: identical to BH at this θ (by construction —
+        // that IS the simulation, per DESIGN.md §7).
+        run_gd_loop(self.name, &mut BhRepulsion { theta: self.theta }, p, params, observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::bh::BarnesHut;
+    use crate::hd::sparse::Csr;
+
+    fn ring_p(n: usize) -> SparseP {
+        let k = 2;
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            for j in 1..=k {
+                col.push(((i + j) % n) as u32);
+                val.push(1.0 / (n * k) as f32);
+            }
+        }
+        SparseP { csr: Csr::from_rows(n, n, k, col, val), perplexity: k as f32 }
+    }
+
+    #[test]
+    fn quality_identical_to_bh_same_theta_and_seed() {
+        let p = ring_p(50);
+        let params = OptParams { iters: 40, ..Default::default() };
+        let a = TsneCudaSim::new(0.5).run(&p, &params, None).unwrap();
+        let b = BarnesHut::new(0.5).run(&p, &params, None).unwrap();
+        assert_eq!(a, b, "simulated t-SNE-CUDA must be bit-identical to BH quality");
+    }
+
+    #[test]
+    fn speed_model_documented_and_applied() {
+        assert_eq!(TsneCudaSim::modelled_time(200.0), 2.0);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(TsneCudaSim::new(0.0).name(), "tsne-cuda-0.0");
+        assert_eq!(TsneCudaSim::new(0.5).name(), "tsne-cuda-0.5");
+    }
+}

@@ -1,0 +1,133 @@
+//! Exact kNN by threaded brute force — the ground truth for recall
+//! measurements and for the NNP metric (DESIGN.md S6), and the honest
+//! baseline for small N.
+
+use super::dataset::Dataset;
+use super::knn::{KBest, KnnGraph};
+use crate::util::parallel;
+
+/// Exact k-nearest neighbours of every point (self excluded), O(N² D).
+pub fn knn(data: &Dataset, k: usize) -> KnnGraph {
+    assert!(k < data.n, "k={k} must be < n={}", data.n);
+    let mut g = KnnGraph::new(data.n, k);
+    {
+        let rows = parallel::SyncSlice::new(&mut g.idx);
+        let dists = parallel::SyncSlice::new(&mut g.d2);
+        parallel::par_chunks(data.n, 16, |range| {
+            for i in range {
+                let qi = data.row(i);
+                let mut kb = KBest::new(k);
+                for j in 0..data.n {
+                    if j == i {
+                        continue;
+                    }
+                    let d = super::dist2(qi, data.row(j));
+                    if d < kb.bound() {
+                        kb.push(d, j as u32);
+                    }
+                }
+                for (slot, (d, id)) in kb.into_sorted().into_iter().enumerate() {
+                    unsafe {
+                        *rows.get_mut(i * k + slot) = id;
+                        *dists.get_mut(i * k + slot) = d;
+                    }
+                }
+            }
+        });
+    }
+    g
+}
+
+/// Exact kNN of `queries` rows against `base` rows (used by the NNP metric
+/// to search the 2-D embedding). Points are *not* assumed shared, so no
+/// self-exclusion unless `exclude_self_index` is set.
+pub fn knn_cross(
+    base: &[f32],
+    base_n: usize,
+    dim: usize,
+    queries: &[f32],
+    k: usize,
+    exclude_self_index: bool,
+) -> KnnGraph {
+    let qn = queries.len() / dim;
+    let mut g = KnnGraph::new(qn, k);
+    {
+        let rows = parallel::SyncSlice::new(&mut g.idx);
+        let dists = parallel::SyncSlice::new(&mut g.d2);
+        parallel::par_chunks(qn, 32, |range| {
+            for i in range {
+                let qi = &queries[i * dim..(i + 1) * dim];
+                let mut kb = KBest::new(k);
+                for j in 0..base_n {
+                    if exclude_self_index && j == i {
+                        continue;
+                    }
+                    let d = super::dist2(qi, &base[j * dim..(j + 1) * dim]);
+                    if d < kb.bound() {
+                        kb.push(d, j as u32);
+                    }
+                }
+                for (slot, (d, id)) in kb.into_sorted().into_iter().enumerate() {
+                    unsafe {
+                        *rows.get_mut(i * k + slot) = id;
+                        *dists.get_mut(i * k + slot) = d;
+                    }
+                }
+            }
+        });
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn grid_dataset() -> Dataset {
+        // 1-D line: nearest neighbours are trivially adjacent indices.
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        Dataset::new("line", 10, 1, x, vec![])
+    }
+
+    #[test]
+    fn line_neighbours_are_adjacent() {
+        let g = knn(&grid_dataset(), 2);
+        assert_eq!(g.row_idx(0), &[1, 2]);
+        let r5: Vec<u32> = g.row_idx(5).to_vec();
+        assert!(r5.contains(&4) && r5.contains(&6));
+        assert_eq!(g.row_d2(0), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn excludes_self() {
+        let g = knn(&grid_dataset(), 3);
+        for i in 0..10 {
+            assert!(!g.row_idx(i).contains(&(i as u32)));
+        }
+    }
+
+    #[test]
+    fn distances_sorted_ascending() {
+        let mut rng = Rng::new(1);
+        let n = 200;
+        let x: Vec<f32> = (0..n * 8).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let d = Dataset::new("r", n, 8, x, vec![]);
+        let g = knn(&d, 10);
+        for i in 0..n {
+            let row = g.row_d2(i);
+            for w in row.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_knn_on_embedding() {
+        // base == queries in 2-D with self-exclusion: same as knn().
+        let pts: Vec<f32> = vec![0., 0., 1., 0., 0., 1., 5., 5.];
+        let g = knn_cross(&pts, 4, 2, &pts, 2, true);
+        let r0: Vec<u32> = g.row_idx(0).to_vec();
+        assert!(r0.contains(&1) && r0.contains(&2));
+    }
+}

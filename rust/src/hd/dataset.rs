@@ -1,0 +1,104 @@
+//! In-memory high-dimensional dataset: row-major `(n, d)` f32 matrix plus
+//! optional integer labels (used only for colouring figures and for the
+//! class-structure sanity checks — never by the algorithms).
+
+/// A dense high-dimensional dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    /// Row-major `(n, d)`.
+    pub x: Vec<f32>,
+    /// One label per point (0 when unknown).
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, n: usize, d: usize, x: Vec<f32>, labels: Vec<u8>) -> Self {
+        assert_eq!(x.len(), n * d, "data shape mismatch");
+        let labels = if labels.is_empty() { vec![0; n] } else { labels };
+        assert_eq!(labels.len(), n);
+        Self { name: name.into(), n, d, x, labels }
+    }
+
+    /// The `i`-th row.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Random subset of `m` points (deterministic in `seed`), preserving
+    /// labels — used by the paper's growing-N sweeps (Fig. 6/7).
+    pub fn subsample(&self, m: usize, seed: u64) -> Dataset {
+        if m >= self.n {
+            return self.clone();
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let keep = rng.sample_indices(self.n, m);
+        let mut x = Vec::with_capacity(m * self.d);
+        let mut labels = Vec::with_capacity(m);
+        for &i in &keep {
+            x.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset::new(format!("{}[{m}]", self.name), m, self.d, x, labels)
+    }
+
+    /// Per-feature standardisation (zero mean, unit variance); features
+    /// with zero variance are left centred. Standard preprocessing before
+    /// the perplexity search.
+    pub fn standardize(&mut self) {
+        for j in 0..self.d {
+            let mut mean = 0.0f64;
+            for i in 0..self.n {
+                mean += self.x[i * self.d + j] as f64;
+            }
+            mean /= self.n as f64;
+            let mut var = 0.0f64;
+            for i in 0..self.n {
+                let v = self.x[i * self.d + j] as f64 - mean;
+                var += v * v;
+            }
+            var /= self.n as f64;
+            let inv = if var > 1e-12 { 1.0 / var.sqrt() } else { 0.0 };
+            for i in 0..self.n {
+                let v = &mut self.x[i * self.d + j];
+                *v = ((*v as f64 - mean) * inv) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_shape() {
+        let d = Dataset::new("t", 3, 2, vec![1., 2., 3., 4., 5., 6.], vec![0, 1, 2]);
+        assert_eq!(d.row(1), &[3., 4.]);
+    }
+
+    #[test]
+    fn subsample_is_deterministic_and_labelled() {
+        let d = Dataset::new("t", 100, 1, (0..100).map(|i| i as f32).collect(), (0..100).map(|i| i as u8).collect());
+        let a = d.subsample(10, 42);
+        let b = d.subsample(10, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.n, 10);
+        for i in 0..10 {
+            assert_eq!(a.x[i] as u8, a.labels[i], "labels must follow their rows");
+        }
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = Dataset::new("t", 4, 1, vec![1., 2., 3., 4.], vec![]);
+        d.standardize();
+        let mean: f32 = d.x.iter().sum::<f32>() / 4.0;
+        let var: f32 = d.x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+}

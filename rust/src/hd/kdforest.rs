@@ -1,0 +1,363 @@
+//! Randomised KD-tree forest — approximate kNN in high dimensions
+//! (Muja & Lowe [29]; the similarity stage of A-tSNE [34] and our stand-in
+//! for FAISS in the simulated t-SNE-CUDA comparator; DESIGN.md S8).
+//!
+//! Each tree splits on a random choice among the top-variance dimensions
+//! with a perturbed median threshold; queries descend all trees, then do a
+//! bounded best-bin-first exploration with a shared priority queue. A
+//! final neighbour-of-neighbour refinement pass (one kNN-descent sweep,
+//! Dong et al. [10]) lifts recall to the ~0.9+ regime the paper's
+//! pipelines operate at.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::dataset::Dataset;
+use super::knn::{KBest, KnnGraph};
+use crate::util::parallel;
+use crate::util::rng::Rng;
+
+const NONE: u32 = u32::MAX;
+/// Split dimension is drawn among this many top-variance dims (FLANN's 5).
+const TOP_DIMS: usize = 5;
+
+#[derive(Debug, Clone)]
+enum Node {
+    Split { dim: u32, thresh: f32, left: u32, right: u32 },
+    Leaf { start: u32, end: u32 },
+}
+
+struct Tree {
+    nodes: Vec<Node>,
+    /// Point ids, leaf ranges index into this.
+    order: Vec<u32>,
+    root: u32,
+}
+
+/// Forest parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ForestParams {
+    pub trees: usize,
+    pub leaf_size: usize,
+    /// Max extra leaves visited per query (best-bin-first budget).
+    pub checks: usize,
+    /// Run one kNN-descent refinement sweep after the tree search.
+    pub refine: bool,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        Self { trees: 4, leaf_size: 32, checks: 64, refine: true }
+    }
+}
+
+/// A forest of randomised KD-trees over a dataset.
+pub struct KdForest<'a> {
+    data: &'a Dataset,
+    trees: Vec<Tree>,
+    params: ForestParams,
+}
+
+impl<'a> KdForest<'a> {
+    pub fn build(data: &'a Dataset, params: ForestParams, seed: u64) -> Self {
+        let mut master = Rng::new(seed);
+        let seeds: Vec<u64> = (0..params.trees).map(|_| master.next_u64()).collect();
+        let mut trees: Vec<Option<Tree>> = (0..params.trees).map(|_| None).collect();
+        {
+            let slots = parallel::SyncSlice::new(&mut trees);
+            parallel::par_for(params.trees, |t| {
+                let tree = Self::build_tree(data, params.leaf_size, seeds[t]);
+                unsafe {
+                    *slots.get_mut(t) = Some(tree);
+                }
+            });
+        }
+        Self { data, trees: trees.into_iter().map(Option::unwrap).collect(), params }
+    }
+
+    fn build_tree(data: &Dataset, leaf_size: usize, seed: u64) -> Tree {
+        let mut order: Vec<u32> = (0..data.n as u32).collect();
+        let mut nodes = Vec::new();
+        let mut rng = Rng::new(seed);
+        let n = order.len();
+        let root = Self::build_rec(data, &mut order, 0, n, leaf_size, &mut nodes, &mut rng);
+        Tree { nodes, order, root }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_rec(
+        data: &Dataset,
+        order: &mut [u32],
+        start: usize,
+        end: usize,
+        leaf_size: usize,
+        nodes: &mut Vec<Node>,
+        rng: &mut Rng,
+    ) -> u32 {
+        let len = end - start;
+        if len <= leaf_size {
+            let id = nodes.len() as u32;
+            nodes.push(Node::Leaf { start: start as u32, end: end as u32 });
+            return id;
+        }
+        let slice = &order[start..end];
+        // Estimate per-dimension variance on a sample, pick among the top.
+        let sample: Vec<u32> = if slice.len() > 64 {
+            (0..64).map(|_| slice[rng.below(slice.len())]).collect()
+        } else {
+            slice.to_vec()
+        };
+        let d = data.d;
+        let mut var = vec![0.0f32; d];
+        let mut mean = vec![0.0f32; d];
+        for &i in &sample {
+            let row = data.row(i as usize);
+            for j in 0..d {
+                mean[j] += row[j];
+            }
+        }
+        let inv = 1.0 / sample.len() as f32;
+        for m in mean.iter_mut() {
+            *m *= inv;
+        }
+        for &i in &sample {
+            let row = data.row(i as usize);
+            for j in 0..d {
+                let v = row[j] - mean[j];
+                var[j] += v * v;
+            }
+        }
+        let mut dims: Vec<usize> = (0..d).collect();
+        dims.sort_by(|&a, &b| var[b].partial_cmp(&var[a]).unwrap());
+        let dim = dims[rng.below(TOP_DIMS.min(d))];
+        // Perturbed mean threshold.
+        let thresh = mean[dim] + (rng.f32() - 0.5) * 0.2 * (var[dim] * inv).sqrt();
+
+        // Partition in place.
+        let slice = &mut order[start..end];
+        let mut lo = 0usize;
+        let mut hi = slice.len();
+        while lo < hi {
+            if data.row(slice[lo] as usize)[dim] < thresh {
+                lo += 1;
+            } else {
+                hi -= 1;
+                slice.swap(lo, hi);
+            }
+        }
+        // Degenerate split (all on one side): fall back to median split.
+        if lo == 0 || lo == slice.len() {
+            let mid = slice.len() / 2;
+            slice.select_nth_unstable_by(mid, |&a, &b| {
+                data.row(a as usize)[dim].partial_cmp(&data.row(b as usize)[dim]).unwrap()
+            });
+            lo = mid;
+        }
+        let id = nodes.len() as u32;
+        nodes.push(Node::Split { dim: dim as u32, thresh, left: NONE, right: NONE });
+        let left = Self::build_rec(data, order, start, start + lo, leaf_size, nodes, rng);
+        let right = Self::build_rec(data, order, start + lo, end, leaf_size, nodes, rng);
+        if let Node::Split { left: l, right: r, .. } = &mut nodes[id as usize] {
+            *l = left;
+            *r = right;
+        }
+        id
+    }
+
+    /// Approximate kNN of `query` (best-bin-first across all trees).
+    pub fn knn_query(&self, query: &[f32], k: usize, exclude: Option<u32>) -> Vec<(f32, u32)> {
+        let mut kb = KBest::new(k);
+        let mut visited = vec![false; self.data.n];
+        // Priority queue of (margin distance, tree, node) — min-heap.
+        let mut pq: BinaryHeap<Reverse<(OrdF32, u32, u32)>> = BinaryHeap::new();
+        for (t, tree) in self.trees.iter().enumerate() {
+            self.descend(tree, tree.root, query, k, exclude, &mut kb, &mut visited, &mut pq, t as u32);
+        }
+        let mut checks = 0usize;
+        while let Some(Reverse((margin, t, node))) = pq.pop() {
+            if checks >= self.params.checks {
+                break;
+            }
+            if margin.0 * margin.0 >= kb.bound() {
+                continue;
+            }
+            checks += 1;
+            let tree = &self.trees[t as usize];
+            self.descend(tree, node, query, k, exclude, &mut kb, &mut visited, &mut pq, t);
+        }
+        kb.into_sorted()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn descend(
+        &self,
+        tree: &Tree,
+        mut node: u32,
+        query: &[f32],
+        _k: usize,
+        exclude: Option<u32>,
+        kb: &mut KBest,
+        visited: &mut [bool],
+        pq: &mut BinaryHeap<Reverse<(OrdF32, u32, u32)>>,
+        t: u32,
+    ) {
+        loop {
+            match &tree.nodes[node as usize] {
+                Node::Leaf { start, end } => {
+                    for &i in &tree.order[*start as usize..*end as usize] {
+                        if Some(i) == exclude || visited[i as usize] {
+                            continue;
+                        }
+                        visited[i as usize] = true;
+                        let d = super::dist2(query, self.data.row(i as usize));
+                        if d < kb.bound() {
+                            kb.push(d, i);
+                        }
+                    }
+                    return;
+                }
+                Node::Split { dim, thresh, left, right } => {
+                    let diff = query[*dim as usize] - thresh;
+                    let (near, far) = if diff < 0.0 { (*left, *right) } else { (*right, *left) };
+                    pq.push(Reverse((OrdF32(diff.abs()), t, far)));
+                    node = near;
+                }
+            }
+        }
+    }
+
+    /// Approximate kNN graph: tree search + optional kNN-descent sweep.
+    pub fn knn(&self, k: usize) -> KnnGraph {
+        let n = self.data.n;
+        let mut g = KnnGraph::new(n, k);
+        {
+            let idx = parallel::SyncSlice::new(&mut g.idx);
+            let d2 = parallel::SyncSlice::new(&mut g.d2);
+            parallel::par_chunks(n, 16, |range| {
+                for i in range {
+                    let res = self.knn_query(self.data.row(i), k, Some(i as u32));
+                    for (slot, (d, id)) in res.iter().enumerate() {
+                        unsafe {
+                            *idx.get_mut(i * k + slot) = *id;
+                            *d2.get_mut(i * k + slot) = *d;
+                        }
+                    }
+                    // Under-full rows (tiny datasets): pad with last found.
+                    if let Some(&(d, id)) = res.last() {
+                        for slot in res.len()..k {
+                            unsafe {
+                                *idx.get_mut(i * k + slot) = id;
+                                *d2.get_mut(i * k + slot) = d;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        if self.params.refine {
+            self.knn_descent_sweep(&mut g);
+        }
+        g
+    }
+
+    /// One kNN-descent sweep: consider neighbours-of-neighbours as
+    /// candidates (Dong et al. [10]); improves recall substantially for
+    /// one extra O(N k²) pass.
+    fn knn_descent_sweep(&self, g: &mut KnnGraph) {
+        let n = g.n;
+        let k = g.k;
+        let snapshot_idx = g.idx.clone();
+        let idx = parallel::SyncSlice::new(&mut g.idx);
+        let d2 = parallel::SyncSlice::new(&mut g.d2);
+        parallel::par_chunks(n, 16, |range| {
+            for i in range {
+                let qi = self.data.row(i);
+                let mut kb = KBest::new(k);
+                let mut seen = std::collections::HashSet::with_capacity(k * k + k);
+                for slot in 0..k {
+                    let j = snapshot_idx[i * k + slot];
+                    if seen.insert(j) && j as usize != i {
+                        kb.push(super::dist2(qi, self.data.row(j as usize)), j);
+                    }
+                    for slot2 in 0..k {
+                        let j2 = snapshot_idx[j as usize * k + slot2];
+                        if j2 as usize != i && seen.insert(j2) {
+                            let d = super::dist2(qi, self.data.row(j2 as usize));
+                            if d < kb.bound() {
+                                kb.push(d, j2);
+                            }
+                        }
+                    }
+                }
+                for (slot, (d, id)) in kb.into_sorted().into_iter().enumerate() {
+                    unsafe {
+                        *idx.get_mut(i * k + slot) = id;
+                        *d2.get_mut(i * k + slot) = d;
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Total-ordered f32 for the priority queue.
+#[derive(PartialEq, PartialOrd)]
+struct OrdF32(f32);
+impl Eq for OrdF32 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::bruteforce;
+
+    fn clustered_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * d);
+        for i in 0..n {
+            let c = (i % 5) as f32 * 4.0;
+            for _ in 0..d {
+                x.push(c + rng.gauss_f32(0.0, 1.0));
+            }
+        }
+        Dataset::new("c", n, d, x, vec![])
+    }
+
+    #[test]
+    fn recall_above_090_on_clustered_data() {
+        let data = clustered_dataset(600, 16, 4);
+        let f = KdForest::build(&data, ForestParams::default(), 9);
+        let g = f.knn(10);
+        let e = bruteforce::knn(&data, 10);
+        let recall = g.recall_against(&e);
+        assert!(recall > 0.9, "kd-forest recall too low: {recall}");
+    }
+
+    #[test]
+    fn refinement_improves_recall() {
+        let data = clustered_dataset(500, 32, 6);
+        let p_no = ForestParams { refine: false, checks: 8, trees: 2, ..Default::default() };
+        let p_yes = ForestParams { refine: true, checks: 8, trees: 2, ..Default::default() };
+        let e = bruteforce::knn(&data, 8);
+        let r_no = KdForest::build(&data, p_no, 1).knn(8).recall_against(&e);
+        let r_yes = KdForest::build(&data, p_yes, 1).knn(8).recall_against(&e);
+        assert!(r_yes >= r_no, "refine must not hurt: {r_yes} vs {r_no}");
+    }
+
+    #[test]
+    fn rows_have_no_self_and_sorted() {
+        let data = clustered_dataset(300, 8, 2);
+        let g = KdForest::build(&data, ForestParams::default(), 3).knn(6);
+        for i in 0..data.n {
+            assert!(!g.row_idx(i).contains(&(i as u32)));
+            for w in g.row_d2(i).windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! k-nearest-neighbour graph representation + shared helpers.
+
+/// A kNN graph: for each of `n` points, its `k` nearest neighbours
+/// (excluding itself), sorted by ascending distance.
+#[derive(Debug, Clone)]
+pub struct KnnGraph {
+    pub n: usize,
+    pub k: usize,
+    /// Row-major `(n, k)` neighbour indices.
+    pub idx: Vec<u32>,
+    /// Row-major `(n, k)` squared distances.
+    pub d2: Vec<f32>,
+}
+
+impl KnnGraph {
+    pub fn new(n: usize, k: usize) -> Self {
+        Self { n, k, idx: vec![0; n * k], d2: vec![f32::INFINITY; n * k] }
+    }
+
+    #[inline]
+    pub fn row_idx(&self, i: usize) -> &[u32] {
+        &self.idx[i * self.k..(i + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn row_d2(&self, i: usize) -> &[f32] {
+        &self.d2[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Fraction of (point, true-neighbour) pairs the approximate graph
+    /// recovered — the recall measure quoted for FAISS/A-tSNE settings.
+    pub fn recall_against(&self, exact: &KnnGraph) -> f64 {
+        assert_eq!(self.n, exact.n);
+        let k = self.k.min(exact.k);
+        let mut hits = 0usize;
+        for i in 0..self.n {
+            let truth: std::collections::HashSet<u32> =
+                exact.row_idx(i)[..k].iter().copied().collect();
+            hits += self.row_idx(i)[..k].iter().filter(|j| truth.contains(j)).count();
+        }
+        hits as f64 / (self.n * k) as f64
+    }
+}
+
+/// Bounded max-heap tracking the k smallest (distance, index) pairs seen.
+/// The backbone of every kNN search in this crate.
+#[derive(Debug, Clone)]
+pub struct KBest {
+    k: usize,
+    /// Binary max-heap by distance (root = current worst of the best).
+    heap: Vec<(f32, u32)>,
+}
+
+impl KBest {
+    pub fn new(k: usize) -> Self {
+        Self { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// Current worst distance among the best k (INFINITY until full).
+    #[inline]
+    pub fn bound(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, d: f32, i: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((d, i));
+            self.sift_up(self.heap.len() - 1);
+        } else if d < self.heap[0].0 {
+            self.heap[0] = (d, i);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if self.heap[i].0 > self.heap[p].0 {
+                self.heap.swap(i, p);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut m = i;
+            if l < self.heap.len() && self.heap[l].0 > self.heap[m].0 {
+                m = l;
+            }
+            if r < self.heap.len() && self.heap[r].0 > self.heap[m].0 {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            self.heap.swap(i, m);
+            i = m;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain into (distance, index) pairs sorted ascending by distance.
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap
+    }
+
+    /// Write the sorted result into graph row `i` (padding with the last
+    /// neighbour if fewer than k were found — only happens for tiny n).
+    pub fn write_row(self, g: &mut KnnGraph, i: usize) {
+        let k = g.k;
+        let sorted = self.into_sorted();
+        for j in 0..k {
+            let (d, id) = if sorted.is_empty() {
+                (f32::INFINITY, i as u32)
+            } else {
+                sorted[j.min(sorted.len() - 1)]
+            };
+            g.idx[i * k + j] = id;
+            g.d2[i * k + j] = d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kbest_keeps_smallest() {
+        let mut kb = KBest::new(3);
+        for (d, i) in [(5.0, 0), (1.0, 1), (4.0, 2), (2.0, 3), (3.0, 4)] {
+            kb.push(d, i);
+        }
+        let s = kb.into_sorted();
+        assert_eq!(s.iter().map(|x| x.1).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!(s[0].0, 1.0);
+    }
+
+    #[test]
+    fn kbest_bound_tightens() {
+        let mut kb = KBest::new(2);
+        assert_eq!(kb.bound(), f32::INFINITY);
+        kb.push(3.0, 0);
+        assert_eq!(kb.bound(), f32::INFINITY);
+        kb.push(1.0, 1);
+        assert_eq!(kb.bound(), 3.0);
+        kb.push(0.5, 2);
+        assert_eq!(kb.bound(), 1.0);
+    }
+
+    #[test]
+    fn recall_of_identical_graph_is_one() {
+        let mut g = KnnGraph::new(4, 2);
+        for i in 0..4 {
+            g.idx[i * 2] = ((i + 1) % 4) as u32;
+            g.idx[i * 2 + 1] = ((i + 2) % 4) as u32;
+        }
+        assert_eq!(g.recall_against(&g), 1.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! High-dimensional substrate: datasets, distances, kNN (exact and
+//! approximate), perplexity calibration and the sparse joint-probability
+//! matrix P — everything upstream of the embedding optimisers.
+//!
+//! The paper treats similarity computation as prior work (§5.1.1: "We use
+//! existing techniques here"); those existing techniques are nonetheless
+//! substrates this repo must provide (DESIGN.md S6–S10): exact brute-force
+//! kNN, the VP-tree used by BH-SNE [45], and the randomised KD-forest used
+//! by A-tSNE / as a FAISS stand-in [29].
+
+pub mod bruteforce;
+pub mod dataset;
+pub mod kdforest;
+pub mod knn;
+pub mod perplexity;
+pub mod sparse;
+pub mod vptree;
+
+pub use dataset::Dataset;
+pub use knn::KnnGraph;
+pub use perplexity::SparseP;
+
+/// Squared Euclidean distance between two vectors.
+///
+/// Manually unrolled 4-wide so LLVM vectorises it; this is the innermost
+/// loop of every kNN structure and of the perplexity search.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = 4 * c;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist2_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| 6.0 - i as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((dist2(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dist2_zero_on_identical() {
+        let a = vec![1.5f32; 97];
+        assert_eq!(dist2(&a, &a), 0.0);
+    }
+}

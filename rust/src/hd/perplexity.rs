@@ -1,0 +1,230 @@
+//! Perplexity calibration (Eq. 3–4) and the joint probability matrix P
+//! (Eq. 2) — the similarity stage of every t-SNE variant (DESIGN.md S9).
+//!
+//! For each point a binary search finds the Gaussian bandwidth β_i =
+//! 1/(2σ_i²) whose conditional distribution over the k nearest neighbours
+//! has the requested perplexity; the conditional matrix is then
+//! symmetrised and normalised into a joint P with Σ p_ij = 1.
+
+use super::knn::KnnGraph;
+use super::sparse::Csr;
+use crate::util::parallel;
+
+/// Binary-search tolerance on log2(perplexity).
+const LOG_PERP_TOL: f64 = 1e-5;
+const MAX_BISECT: usize = 200;
+
+/// The symmetric joint probability matrix P, normalised to Σ = 1.
+#[derive(Debug, Clone)]
+pub struct SparseP {
+    pub csr: Csr,
+    pub perplexity: f32,
+}
+
+/// Calibrate β for one row of squared distances so the conditional
+/// distribution's perplexity matches. Returns (β, conditional probs).
+pub fn calibrate_row(d2: &[f32], perplexity: f64) -> (f64, Vec<f32>) {
+    let target_entropy = perplexity.ln(); // nats
+    let mut beta = 1.0f64;
+    let (mut beta_min, mut beta_max) = (f64::NEG_INFINITY, f64::INFINITY);
+    let mut probs = vec![0.0f32; d2.len()];
+    // Shift distances for numerical stability: exp(-β (d² - d²_min)).
+    let dmin = d2.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    for _ in 0..MAX_BISECT {
+        let mut sum = 0.0f64;
+        let mut sum_dp = 0.0f64;
+        for (j, &d) in d2.iter().enumerate() {
+            let e = (-(beta) * (d as f64 - dmin)).exp();
+            probs[j] = e as f32;
+            sum += e;
+            sum_dp += e * (d as f64 - dmin);
+        }
+        // Entropy H = ln(sum) + β * E[d²].
+        let entropy = if sum > 0.0 { sum.ln() + beta * sum_dp / sum } else { 0.0 };
+        let diff = entropy - target_entropy;
+        if diff.abs() < LOG_PERP_TOL {
+            break;
+        }
+        if diff > 0.0 {
+            beta_min = beta;
+            beta = if beta_max.is_infinite() { beta * 2.0 } else { 0.5 * (beta + beta_max) };
+        } else {
+            beta_max = beta;
+            beta = if beta_min.is_infinite() { beta * 0.5 } else { 0.5 * (beta + beta_min) };
+        }
+    }
+    let sum: f64 = probs.iter().map(|&p| p as f64).sum();
+    let inv = if sum > 0.0 { (1.0 / sum) as f32 } else { 0.0 };
+    for p in probs.iter_mut() {
+        *p *= inv;
+    }
+    (beta, probs)
+}
+
+/// Conditional probabilities p_{j|i} over each point's kNN (Eq. 3–4).
+pub fn conditional_p(knn: &KnnGraph, perplexity: f32) -> Csr {
+    let (n, k) = (knn.n, knn.k);
+    assert!(
+        k as f32 >= perplexity,
+        "need k >= perplexity (k={k}, mu={perplexity}); BH-SNE uses k = 3*mu"
+    );
+    let mut val = vec![0.0f32; n * k];
+    {
+        let slots = parallel::SyncSlice::new(&mut val);
+        parallel::par_chunks(n, 32, |range| {
+            for i in range {
+                let (_beta, probs) = calibrate_row(knn.row_d2(i), perplexity as f64);
+                for (j, p) in probs.into_iter().enumerate() {
+                    unsafe {
+                        *slots.get_mut(i * k + j) = p;
+                    }
+                }
+            }
+        });
+    }
+    Csr::from_rows(n, n, k, knn.idx.iter().copied().collect(), val)
+}
+
+/// Joint P (Eq. 2): symmetrise the conditional matrix and normalise the
+/// whole matrix to Σ p_ij = 1 (the 1/N of Eq. 2 followed by the implicit
+/// global normalisation t-SNE implementations apply).
+pub fn joint_p(knn: &KnnGraph, perplexity: f32) -> SparseP {
+    let cond = conditional_p(knn, perplexity);
+    let mut sym = cond.symmetrize_mean();
+    let total = sym.sum();
+    if total > 0.0 {
+        sym.scale((1.0 / total) as f32);
+    }
+    SparseP { csr: sym, perplexity }
+}
+
+impl SparseP {
+    pub fn n(&self) -> usize {
+        self.csr.n_rows
+    }
+
+    /// Pad into the fixed-width `(n_pad, k_pad)` neighbour-list layout the
+    /// AOT artifacts consume. Rows longer than `k_pad` keep their `k_pad`
+    /// largest-probability entries (renormalised globally afterwards);
+    /// padded slots have index 0 and probability exactly 0.
+    pub fn to_padded(&self, n_pad: usize, k_pad: usize) -> (Vec<i32>, Vec<f32>) {
+        assert!(n_pad >= self.n());
+        let mut idx = vec![0i32; n_pad * k_pad];
+        let mut val = vec![0.0f32; n_pad * k_pad];
+        let mut dropped = 0.0f64;
+        for i in 0..self.n() {
+            let (cs, vs) = self.csr.row(i);
+            if cs.len() <= k_pad {
+                for (slot, (c, v)) in cs.iter().zip(vs).enumerate() {
+                    idx[i * k_pad + slot] = *c as i32;
+                    val[i * k_pad + slot] = *v;
+                }
+            } else {
+                let mut order: Vec<usize> = (0..cs.len()).collect();
+                order.sort_by(|&a, &b| vs[b].partial_cmp(&vs[a]).unwrap());
+                for (slot, &o) in order[..k_pad].iter().enumerate() {
+                    idx[i * k_pad + slot] = cs[o] as i32;
+                    val[i * k_pad + slot] = vs[o];
+                }
+                dropped += order[k_pad..].iter().map(|&o| vs[o] as f64).sum::<f64>();
+            }
+        }
+        if dropped > 0.0 {
+            // Renormalise so the kept mass still sums to 1.
+            let keep = 1.0 - dropped;
+            if keep > 0.0 {
+                let s = (1.0 / keep) as f32;
+                for v in val.iter_mut() {
+                    *v *= s;
+                }
+            }
+        }
+        (idx, val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::{bruteforce, dataset::Dataset};
+    use crate::util::rng::Rng;
+
+    fn toy_graph() -> KnnGraph {
+        let mut rng = Rng::new(4);
+        let n = 120;
+        let x: Vec<f32> = (0..n * 6).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let data = Dataset::new("t", n, 6, x, vec![]);
+        bruteforce::knn(&data, 24)
+    }
+
+    #[test]
+    fn calibration_hits_target_perplexity() {
+        let g = toy_graph();
+        for i in [0usize, 7, 63] {
+            let (_beta, probs) = calibrate_row(g.row_d2(i), 8.0);
+            let sum: f64 = probs.iter().map(|&p| p as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row must normalise, got {sum}");
+            let entropy: f64 = probs
+                .iter()
+                .filter(|&&p| p > 0.0)
+                .map(|&p| -(p as f64) * (p as f64).ln())
+                .sum();
+            let perp = entropy.exp();
+            assert!((perp - 8.0).abs() < 0.05, "perplexity {perp} != 8");
+        }
+    }
+
+    #[test]
+    fn closer_neighbours_get_larger_p() {
+        let g = toy_graph();
+        let (_b, probs) = calibrate_row(g.row_d2(3), 8.0);
+        // d2 rows are sorted ascending => probs must be non-increasing.
+        for w in probs.windows(2) {
+            assert!(w[0] >= w[1] - 1e-7);
+        }
+    }
+
+    #[test]
+    fn joint_p_is_normalised_and_symmetric() {
+        let g = toy_graph();
+        let p = joint_p(&g, 8.0);
+        assert!((p.csr.sum() - 1.0).abs() < 1e-5);
+        let get = |i: usize, j: usize| -> f32 {
+            let (cs, vs) = p.csr.row(i);
+            cs.iter().zip(vs).find(|(c, _)| **c == j as u32).map(|(_, v)| *v).unwrap_or(0.0)
+        };
+        for i in (0..p.n()).step_by(17) {
+            let (cs, _) = p.csr.row(i);
+            for &j in cs.iter().take(5) {
+                assert!(
+                    (get(i, j as usize) - get(j as usize, i)).abs() < 1e-7,
+                    "P must be symmetric at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn padded_layout_roundtrip() {
+        let g = toy_graph();
+        let p = joint_p(&g, 8.0);
+        let kmax = p.csr.max_row_len();
+        let (idx, val) = p.to_padded(256, kmax + 4);
+        assert_eq!(idx.len(), 256 * (kmax + 4));
+        let total: f64 = val.iter().map(|&v| v as f64).sum();
+        assert!((total - 1.0).abs() < 1e-4, "padded mass {total}");
+        // Rows beyond n are all-zero.
+        for i in p.n()..256 {
+            assert!(val[i * (kmax + 4)..(i + 1) * (kmax + 4)].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn padded_truncation_keeps_biggest_and_renormalises() {
+        let g = toy_graph();
+        let p = joint_p(&g, 8.0);
+        let (_, val) = p.to_padded(128, 8); // force truncation
+        let total: f64 = val.iter().map(|&v| v as f64).sum();
+        assert!((total - 1.0).abs() < 1e-3, "renormalised mass {total}");
+    }
+}

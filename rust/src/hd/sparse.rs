@@ -1,0 +1,168 @@
+//! CSR sparse matrix — storage for the conditional and joint probability
+//! matrices (DESIGN.md S10).
+
+/// Compressed sparse row matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Length n_rows + 1.
+    pub row_ptr: Vec<usize>,
+    pub col: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from uniform-width rows (`k` entries each).
+    pub fn from_rows(n_rows: usize, n_cols: usize, k: usize, col: Vec<u32>, val: Vec<f32>) -> Self {
+        assert_eq!(col.len(), n_rows * k);
+        assert_eq!(val.len(), n_rows * k);
+        let row_ptr = (0..=n_rows).map(|i| i * k).collect();
+        Self { n_rows, n_cols, row_ptr, col, val }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col[a..b], &self.val[a..b])
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.val.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, s: f32) {
+        for v in self.val.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Transpose (O(nnz)).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &c in &self.col {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut col = vec![0u32; self.nnz()];
+        let mut val = vec![0.0f32; self.nnz()];
+        let mut cursor = counts;
+        for r in 0..self.n_rows {
+            let (cs, vs) = self.row(r);
+            for (c, v) in cs.iter().zip(vs) {
+                let slot = cursor[*c as usize];
+                col[slot] = r as u32;
+                val[slot] = *v;
+                cursor[*c as usize] += 1;
+            }
+        }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, row_ptr, col, val }
+    }
+
+    /// Symmetric average: `(A + Aᵀ) / 2`, merging duplicate coordinates.
+    /// This is exactly the t-SNE symmetrisation of Eq. 2 before the global
+    /// 1/N normalisation.
+    pub fn symmetrize_mean(&self) -> Csr {
+        assert_eq!(self.n_rows, self.n_cols);
+        let t = self.transpose();
+        let mut row_ptr = vec![0usize; self.n_rows + 1];
+        let mut col = Vec::with_capacity(self.nnz() * 2);
+        let mut val = Vec::with_capacity(self.nnz() * 2);
+        for r in 0..self.n_rows {
+            // Merge the two sorted-by-col rows? Rows are not sorted; use a
+            // small map per row (rows are k-sized, k ~ 100).
+            let mut entries: Vec<(u32, f32)> = Vec::new();
+            let push = |entries: &mut Vec<(u32, f32)>, c: u32, v: f32| {
+                if let Some(e) = entries.iter_mut().find(|e| e.0 == c) {
+                    e.1 += v;
+                } else {
+                    entries.push((c, v));
+                }
+            };
+            let (cs, vs) = self.row(r);
+            for (c, v) in cs.iter().zip(vs) {
+                push(&mut entries, *c, 0.5 * *v);
+            }
+            let (cs, vs) = t.row(r);
+            for (c, v) in cs.iter().zip(vs) {
+                push(&mut entries, *c, 0.5 * *v);
+            }
+            entries.sort_unstable_by_key(|e| e.0);
+            for (c, v) in entries {
+                col.push(c);
+                val.push(v);
+            }
+            row_ptr[r + 1] = col.len();
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, row_ptr, col, val }
+    }
+
+    /// Maximum row length.
+    pub fn max_row_len(&self) -> usize {
+        (0..self.n_rows).map(|i| self.row_ptr[i + 1] - self.row_ptr[i]).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [[0, 1, 0], [2, 0, 3], [0, 0, 4]]
+        Csr {
+            n_rows: 3,
+            n_cols: 3,
+            row_ptr: vec![0, 1, 3, 4],
+            col: vec![1, 0, 2, 2],
+            val: vec![1.0, 2.0, 3.0, 4.0],
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = small();
+        let tt = a.transpose().transpose();
+        // Same matrix content (rows come out sorted by construction).
+        for r in 0..3 {
+            let (c1, v1) = a.row(r);
+            let mut z1: Vec<_> = c1.iter().zip(v1).collect();
+            z1.sort_by_key(|(c, _)| **c);
+            let (c2, v2) = tt.row(r);
+            let z2: Vec<_> = c2.iter().zip(v2).collect();
+            assert_eq!(z1, z2);
+        }
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric_and_preserves_sum() {
+        let a = small();
+        let s = a.symmetrize_mean();
+        assert!((s.sum() - a.sum()).abs() < 1e-6);
+        // Check s[i][j] == s[j][i].
+        let get = |m: &Csr, i: usize, j: usize| -> f32 {
+            let (cs, vs) = m.row(i);
+            cs.iter().zip(vs).find(|(c, _)| **c == j as u32).map(|(_, v)| *v).unwrap_or(0.0)
+        };
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((get(&s, i, j) - get(&s, j, i)).abs() < 1e-6);
+            }
+        }
+        assert!((get(&s, 0, 1) - 1.5).abs() < 1e-6); // (1 + 2)/2
+    }
+
+    #[test]
+    fn from_rows_uniform() {
+        let c = Csr::from_rows(2, 4, 2, vec![0, 1, 2, 3], vec![1., 2., 3., 4.]);
+        assert_eq!(c.row(1), (&[2u32, 3u32][..], &[3.0f32, 4.0f32][..]));
+        assert_eq!(c.max_row_len(), 2);
+    }
+}

@@ -1,0 +1,192 @@
+//! Vantage-Point tree (Yianilos 1993) — the exact metric-tree kNN used by
+//! the original BH-SNE pipeline [41, 45] (DESIGN.md S7).
+//!
+//! Exact nearest-neighbour search with triangle-inequality pruning. As the
+//! paper's own prior work observes (A-tSNE [34]), pruning degrades in high
+//! dimensions — which is precisely the motivation for the KD-forest
+//! (`kdforest.rs`); the benches quantify that crossover.
+
+use super::dataset::Dataset;
+use super::knn::{KBest, KnnGraph};
+use crate::util::parallel;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Index of the vantage point (into the dataset).
+    vp: u32,
+    /// Median distance (not squared) splitting inside/outside.
+    radius: f32,
+    /// Child node indices (usize::MAX = none).
+    inside: u32,
+    outside: u32,
+}
+
+const NONE: u32 = u32::MAX;
+
+/// An exact VP-tree over a dataset.
+pub struct VpTree<'a> {
+    data: &'a Dataset,
+    nodes: Vec<Node>,
+    root: u32,
+}
+
+impl<'a> VpTree<'a> {
+    /// Build with deterministic vantage-point selection (seeded).
+    pub fn build(data: &'a Dataset, seed: u64) -> Self {
+        let mut items: Vec<(u32, f32)> = (0..data.n as u32).map(|i| (i, 0.0)).collect();
+        let mut nodes = Vec::with_capacity(data.n);
+        let mut rng = Rng::new(seed);
+        let root = Self::build_rec(data, &mut items[..], &mut nodes, &mut rng);
+        Self { data, nodes, root }
+    }
+
+    fn build_rec(
+        data: &Dataset,
+        items: &mut [(u32, f32)],
+        nodes: &mut Vec<Node>,
+        rng: &mut Rng,
+    ) -> u32 {
+        if items.is_empty() {
+            return NONE;
+        }
+        // Pick a random vantage point, move it to the front.
+        let pick = rng.below(items.len());
+        items.swap(0, pick);
+        let vp = items[0].0;
+        let rest = &mut items[1..];
+        if rest.is_empty() {
+            let id = nodes.len() as u32;
+            nodes.push(Node { vp, radius: 0.0, inside: NONE, outside: NONE });
+            return id;
+        }
+        let vprow = data.row(vp as usize);
+        for it in rest.iter_mut() {
+            it.1 = super::dist2(vprow, data.row(it.0 as usize)).sqrt();
+        }
+        // Median split.
+        let mid = rest.len() / 2;
+        rest.select_nth_unstable_by(mid, |a, b| a.1.partial_cmp(&b.1).unwrap());
+        let radius = rest[mid].1;
+        let id = nodes.len() as u32;
+        nodes.push(Node { vp, radius, inside: NONE, outside: NONE });
+        let (ins, outs) = rest.split_at_mut(mid);
+        let inside = Self::build_rec(data, ins, nodes, rng);
+        let outside = Self::build_rec(data, outs, nodes, rng);
+        nodes[id as usize].inside = inside;
+        nodes[id as usize].outside = outside;
+        id
+    }
+
+    /// Exact k nearest neighbours of `query` (optionally excluding one id).
+    pub fn knn_query(&self, query: &[f32], k: usize, exclude: Option<u32>) -> Vec<(f32, u32)> {
+        let mut kb = KBest::new(k);
+        self.search(self.root, query, exclude, &mut kb);
+        kb.into_sorted()
+    }
+
+    fn search(&self, node: u32, query: &[f32], exclude: Option<u32>, kb: &mut KBest) {
+        if node == NONE {
+            return;
+        }
+        let n = &self.nodes[node as usize];
+        let d = super::dist2(query, self.data.row(n.vp as usize)).sqrt();
+        if Some(n.vp) != exclude {
+            let d2 = d * d;
+            if d2 < kb.bound() {
+                kb.push(d2, n.vp);
+            }
+        }
+        // Search the nearer side first; prune with the triangle inequality.
+        let tau = kb.bound().sqrt();
+        if d < n.radius {
+            self.search(n.inside, query, exclude, kb);
+            let tau = kb.bound().sqrt();
+            if d + tau >= n.radius {
+                self.search(n.outside, query, exclude, kb);
+            }
+        } else {
+            self.search(n.outside, query, exclude, kb);
+            let tau = kb.bound().sqrt();
+            if d - tau <= n.radius {
+                self.search(n.inside, query, exclude, kb);
+            }
+        }
+        let _ = tau;
+    }
+
+    /// Full kNN graph (parallel over queries).
+    pub fn knn(&self, k: usize) -> KnnGraph {
+        let mut g = KnnGraph::new(self.data.n, k);
+        {
+            let idx = parallel::SyncSlice::new(&mut g.idx);
+            let d2 = parallel::SyncSlice::new(&mut g.d2);
+            parallel::par_chunks(self.data.n, 16, |range| {
+                for i in range {
+                    let res = self.knn_query(self.data.row(i), k, Some(i as u32));
+                    for (slot, (d, id)) in res.into_iter().enumerate() {
+                        unsafe {
+                            *idx.get_mut(i * k + slot) = id;
+                            *d2.get_mut(i * k + slot) = d;
+                        }
+                    }
+                }
+            });
+        }
+        g
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::bruteforce;
+
+    fn random_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        Dataset::new("r", n, d, x, vec![])
+    }
+
+    #[test]
+    fn tree_contains_every_point_once() {
+        let data = random_dataset(257, 4, 3);
+        let t = VpTree::build(&data, 7);
+        assert_eq!(t.node_count(), 257);
+        let mut seen = vec![false; 257];
+        for n in &t.nodes {
+            assert!(!seen[n.vp as usize], "duplicate vantage point");
+            seen[n.vp as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn matches_brute_force_exactly() {
+        // Exactness invariant: same neighbour sets as brute force (modulo
+        // distance ties at f32 precision).
+        let data = random_dataset(300, 8, 11);
+        let t = VpTree::build(&data, 5);
+        let approx = t.knn(5);
+        let exact = bruteforce::knn(&data, 5);
+        let recall = approx.recall_against(&exact);
+        assert!(recall > 0.999, "vp-tree must be exact, recall={recall}");
+    }
+
+    #[test]
+    fn distances_match_brute_force() {
+        let data = random_dataset(150, 6, 2);
+        let t = VpTree::build(&data, 1);
+        let g = t.knn(3);
+        let e = bruteforce::knn(&data, 3);
+        for i in 0..data.n {
+            for j in 0..3 {
+                assert!((g.row_d2(i)[j] - e.row_d2(i)[j]).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! # gpgpu-sne
+//!
+//! Production-grade reproduction of **"GPGPU Linear Complexity t-SNE
+//! Optimization"** (Pezzotti, Thijssen, Mordvintsev, Höllt, van Lew,
+//! Lelieveldt, Eisemann, Vilanova — 2018): linear-complexity minimisation
+//! of the t-SNE objective by replacing the O(N²) repulsive-force sum with
+//! two fields over the 2-D embedding domain (a scalar density field `S`
+//! and a vector force field `V`), evaluated on a pixel grid and queried by
+//! bilinear interpolation.
+//!
+//! Architecture (see `DESIGN.md`): a three-layer stack in which
+//! * **L1** (Pallas, build-time Python) evaluates the fields and the
+//!   restricted-neighbourhood attractive forces,
+//! * **L2** (JAX, build-time Python) fuses a full gradient-descent
+//!   iteration and is AOT-lowered to HLO-text artifacts,
+//! * **L3** (this crate) is the runtime system: dataset substrates, kNN
+//!   and perplexity pipelines, the PJRT runtime that executes the AOT
+//!   artifacts, baseline optimisers (exact t-SNE, Barnes-Hut, simulated
+//!   t-SNE-CUDA), metrics, and the progressive embedding *service* with
+//!   the paper's adaptive field-resolution policy.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! binary is self-contained.
+
+pub mod coordinator;
+pub mod data;
+pub mod embed;
+pub mod hd;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is in the offline dependency closure).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,180 @@
+//! gpgpu-sne — CLI for the reproduction of "GPGPU Linear Complexity t-SNE
+//! Optimization" (Pezzotti et al., 2018).
+//!
+//! Subcommands:
+//!   embed     run one embedding job and write the result
+//!   serve     run the progressive embedding service over TCP
+//!   info      show artifact / runtime / dataset information
+//!   datasets  list the evaluation datasets (Table 1)
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::{progress::JobState, run_pipeline, JobSpec};
+use gpgpu_sne::embed::OptParams;
+use gpgpu_sne::runtime::{self, Runtime};
+use gpgpu_sne::util::cli::Args;
+use gpgpu_sne::util::image;
+use gpgpu_sne::util::timer::fmt_secs;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "embed" => cmd_embed(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        "datasets" => cmd_datasets(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "gpgpu-sne — field-based linear-complexity t-SNE (Pezzotti et al. 2018)\n\n\
+         usage: gpgpu-sne <embed|serve|info|datasets> [options]\n\n\
+         embed    --dataset mnist --n 2000 --engine gpgpu|fieldcpu|bh-0.5|bh-0.1|exact|tsne-cuda-0.5\n\
+                  --iters 1000 --perplexity 30 --knn brute|vptree|kdforest --seed 42\n\
+                  --out embedding.csv --image embedding.pgm\n\
+         serve    --addr 127.0.0.1:7878 --max-concurrent 2\n\
+         info     (artifact + platform report)\n\
+         datasets (Table 1)\n\n\
+         Run `make artifacts` first to enable the gpgpu engine."
+    );
+}
+
+fn load_runtime() -> Option<Arc<Runtime>> {
+    let dir = runtime::locate_artifacts()?;
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("warning: artifacts at {dir} unusable: {e:#}");
+            None
+        }
+    }
+}
+
+fn spec_from_args(args: &Args) -> anyhow::Result<JobSpec> {
+    let mut spec = JobSpec {
+        dataset: args.str("dataset", "mnist", "dataset name (see `datasets`)"),
+        n: args.get("n", 2000usize, "number of points"),
+        engine: args.str("engine", "fieldcpu", "optimiser engine"),
+        perplexity: args.get("perplexity", 30.0f32, "perplexity mu"),
+        knn: args.str("knn", "kdforest", "knn method").parse()?,
+        snapshot_every: args.get("snapshot-every", 100usize, "snapshot cadence"),
+        seed: args.get("seed", 42u64, "random seed"),
+        ..Default::default()
+    };
+    spec.params = OptParams {
+        iters: args.get("iters", 1000usize, "gradient-descent iterations"),
+        eta: args.get("eta", 200.0f32, "learning rate"),
+        exaggeration: args.get("exaggeration", 12.0f32, "early exaggeration"),
+        exaggeration_iters: args.get("exaggeration-iters", 250usize, "exaggeration phase"),
+        seed: spec.seed,
+        ..Default::default()
+    };
+    Ok(spec)
+}
+
+fn cmd_embed(args: &Args) -> anyhow::Result<()> {
+    let spec = spec_from_args(args)?;
+    let out = args.opt_str("out", "CSV output path");
+    let img = args.opt_str("image", "PGM scatterplot path");
+    args.finish_help("Run one embedding job");
+
+    let rt = if spec.engine == "gpgpu" { load_runtime() } else { None };
+    if spec.engine == "gpgpu" && rt.is_none() {
+        anyhow::bail!("gpgpu engine requires artifacts — run `make artifacts`");
+    }
+    println!(
+        "embedding {} n={} engine={} perplexity={} iters={}",
+        spec.dataset, spec.n, spec.engine, spec.perplexity, spec.params.iters
+    );
+    let state = JobState::default();
+    // Progress printer thread.
+    let rx = state.snapshots.subscribe();
+    let printer = std::thread::spawn(move || {
+        for s in rx {
+            eprintln!("  iter {:>5}  KL≈{:.4}  t={}", s.iter, s.kl_est, fmt_secs(s.elapsed_s));
+        }
+    });
+    let res = run_pipeline(&spec, rt, &state)?;
+    drop(state);
+    let _ = printer.join();
+
+    println!(
+        "done: {} iters, KL≈{:.4}; stages: data {} | knn {} | perplexity {} | optimize {}",
+        res.iters_run,
+        res.kl_est,
+        fmt_secs(res.timings.dataset_s),
+        fmt_secs(res.timings.knn_s),
+        fmt_secs(res.timings.perplexity_s),
+        fmt_secs(res.timings.optimize_s),
+    );
+    if let Some(path) = out {
+        let n = res.embedding.len() / 2;
+        let mut cols = vec![Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)];
+        for i in 0..n {
+            cols[0].push(res.embedding[2 * i] as f64);
+            cols[1].push(res.embedding[2 * i + 1] as f64);
+            cols[2].push(res.labels[i] as f64);
+        }
+        image::write_csv(&path, &["x", "y", "label"], &cols)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = img {
+        image::write_embedding_pgm(&path, &res.embedding, &res.labels, 640)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7878", "bind address");
+    let maxc = args.get("max-concurrent", 2usize, "concurrent optimisations");
+    args.finish_help("Serve the progressive embedding service over TCP");
+    let rt = load_runtime();
+    println!(
+        "serve: runtime={}, protocol: one JSON object per line (see coordinator/protocol.rs)",
+        rt.as_ref().map(|r| r.platform()).unwrap_or_else(|| "none (CPU engines only)".into())
+    );
+    let svc = Arc::new(gpgpu_sne::coordinator::EmbeddingService::new(rt, maxc));
+    gpgpu_sne::coordinator::protocol::serve(svc, &addr, |a| println!("listening on {a}"))
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    args.finish_help("Show artifact and runtime information");
+    match runtime::locate_artifacts() {
+        None => println!("artifacts: none found (run `make artifacts`)"),
+        Some(dir) => {
+            let rt = Runtime::new(&dir)?;
+            println!("artifacts: {dir}");
+            println!("platform:  {}", rt.platform());
+            println!("variants:");
+            for a in &rt.manifest.artifacts {
+                println!(
+                    "  {:<28} kind={:<5} n={:<6} k={:<3} grid={:<4} steps={}",
+                    a.name, a.kind, a.n, a.k, a.grid, a.steps
+                );
+            }
+        }
+    }
+    println!("threads:   {}", gpgpu_sne::util::parallel::num_threads());
+    Ok(())
+}
+
+fn cmd_datasets(args: &Args) -> anyhow::Result<()> {
+    args.finish_help("List evaluation datasets (paper Table 1)");
+    println!("{:<20} {:>10} {:>6}   substitution", "dataset", "paper N", "dims");
+    for (name, n, d) in gpgpu_sne::data::TABLE1 {
+        let ds = gpgpu_sne::data::by_name(name, 16, 0)?;
+        println!("{name:<20} {n:>10} {d:>6}   generated as '{}'", ds.name);
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Kullback–Leibler divergence of an embedding (Eq. 1).
+//!
+//! `KL(P||Q) = Σ_ij p_ij ln(p_ij / q_ij)` with
+//! `q_ij = t_ij / Z`, `t = (1+d²)^{-1}`, `Z = Σ_{k≠l} t_kl`.
+//!
+//! The sum over P is sparse (P is supported on the kNN graph), but Z is a
+//! full O(N²) pairwise sum — computed threaded and exactly here, which is
+//! feasible for every N the quality figures use. `kl_divergence_sparse_z`
+//! accepts an externally-estimated Z (e.g. the field-based Ẑ) so the
+//! estimator itself can be validated against the exact value.
+
+use crate::hd::SparseP;
+use crate::util::parallel;
+
+/// Exact Z: Σ_{k≠l} (1 + ||y_k - y_l||²)^{-1} over all ordered pairs.
+pub fn exact_z(y: &[f32]) -> f64 {
+    let n = y.len() / 2;
+    // Sum over unordered pairs, then double (t is symmetric).
+    let half = parallel::par_reduce(
+        n,
+        0.0f64,
+        |acc, i| {
+            let (xi, yi) = (y[2 * i], y[2 * i + 1]);
+            let mut s = acc;
+            for j in i + 1..n {
+                let dx = xi - y[2 * j];
+                let dy = yi - y[2 * j + 1];
+                s += 1.0 / (1.0 + (dx * dx + dy * dy) as f64);
+            }
+            s
+        },
+        |a, b| a + b,
+    );
+    2.0 * half
+}
+
+/// KL divergence given an explicit normalisation Z.
+pub fn kl_divergence_sparse_z(p: &SparseP, y: &[f32], z: f64) -> f64 {
+    let n = p.n();
+    assert!(y.len() >= 2 * n);
+    let ln_z = z.ln();
+    parallel::par_reduce(
+        n,
+        0.0f64,
+        |acc, i| {
+            let (cols, vals) = p.csr.row(i);
+            let (xi, yi) = (y[2 * i], y[2 * i + 1]);
+            let mut s = acc;
+            for (c, &pij) in cols.iter().zip(vals) {
+                if pij <= 0.0 {
+                    continue;
+                }
+                let j = *c as usize;
+                let dx = xi - y[2 * j];
+                let dy = yi - y[2 * j + 1];
+                let t = 1.0 / (1.0 + (dx * dx + dy * dy) as f64);
+                // ln q = ln t - ln Z
+                s += pij as f64 * ((pij as f64).ln() - t.ln() + ln_z);
+            }
+            s
+        },
+        |a, b| a + b,
+    )
+}
+
+/// Exact KL divergence (exact Z), the paper's quality metric #2.
+pub fn kl_divergence_exact(p: &SparseP, y: &[f32]) -> f64 {
+    kl_divergence_sparse_z(p, y, exact_z(y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::sparse::Csr;
+
+    fn uniform_p(n: usize, k: usize) -> SparseP {
+        // Ring neighbours, uniform probabilities summing to 1.
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            for j in 1..=k {
+                col.push(((i + j) % n) as u32);
+                val.push(1.0 / (n * k) as f32);
+            }
+        }
+        SparseP { csr: Csr::from_rows(n, n, k, col, val), perplexity: k as f32 }
+    }
+
+    #[test]
+    fn exact_z_small_case() {
+        // Three points: pairwise d² = 1 (0-1), 1 (1-2), 4 (0-2).
+        let y = vec![0.0, 0.0, 1.0, 0.0, 2.0, 0.0];
+        let expect = 2.0 * (0.5 + 0.5 + 0.2);
+        assert!((exact_z(&y) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_nonnegative_and_zero_when_q_matches() {
+        // If Q == P exactly, KL = 0. Construct 2 points with p = q.
+        // With n=2: q_01 = q_10 = 0.5 regardless of distance. p = 0.5 each.
+        let p = uniform_p(2, 1);
+        let y = vec![0.0, 0.0, 3.0, 0.0];
+        let kl = kl_divergence_exact(&p, &y);
+        assert!(kl.abs() < 1e-9, "kl={kl}");
+    }
+
+    #[test]
+    fn kl_decreases_when_structure_matches() {
+        // P favours ring neighbours; an embedding placing ring neighbours
+        // close must have lower KL than a random one.
+        let n = 60;
+        let p = uniform_p(n, 2);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let good: Vec<f32> = (0..n)
+            .flat_map(|i| {
+                let a = i as f32 / n as f32 * std::f32::consts::TAU;
+                [a.cos() * 5.0, a.sin() * 5.0]
+            })
+            .collect();
+        let random: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 5.0)).collect();
+        assert!(kl_divergence_exact(&p, &good) < kl_divergence_exact(&p, &random));
+    }
+
+    #[test]
+    fn sparse_z_matches_exact_when_given_exact_z() {
+        let n = 40;
+        let p = uniform_p(n, 3);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+        let z = exact_z(&y);
+        let a = kl_divergence_exact(&p, &y);
+        let b = kl_divergence_sparse_z(&p, &y, z);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Embedding quality metrics used by the paper's evaluation (§6):
+//! Kullback–Leibler divergence of the final embedding (the objective
+//! itself) and Nearest-Neighbour Preservation precision/recall
+//! (Venna et al. [44], as implemented by Ingram & Munzner [15]).
+
+pub mod kl;
+pub mod nnp;
+
+pub use kl::{kl_divergence_exact, kl_divergence_sparse_z};
+pub use nnp::{nnp_curve, NnpCurve};

@@ -1,0 +1,189 @@
+//! Nearest-Neighbour Preservation (Venna et al. [44]) — the paper's §6
+//! metric #3 and the rows 3 of Figures 6/7.
+//!
+//! For every point: take its `K_HIGH = 30` nearest neighbours in the
+//! high-dimensional space and, for each k = 1..30, its k nearest in the
+//! embedding. With T(k) = |high ∩ low_k|: precision(k) = T/k, recall(k) =
+//! T/30. Curves are averaged over all points (or a subsample for big N,
+//! as the paper does for Word2Vec).
+
+use crate::hd::{bruteforce, Dataset, KnnGraph};
+use crate::util::parallel;
+
+pub const K_HIGH: usize = 30;
+
+/// An averaged precision/recall curve, index = k-1 for k = 1..=30.
+#[derive(Debug, Clone)]
+pub struct NnpCurve {
+    pub precision: Vec<f64>,
+    pub recall: Vec<f64>,
+}
+
+impl NnpCurve {
+    /// Area-ish single-number summary (mean precision over the curve) —
+    /// handy for tables and regression tests.
+    pub fn mean_precision(&self) -> f64 {
+        self.precision.iter().sum::<f64>() / self.precision.len() as f64
+    }
+
+    pub fn mean_recall(&self) -> f64 {
+        self.recall.iter().sum::<f64>() / self.recall.len() as f64
+    }
+}
+
+/// NNP curve of `embedding` (`(n,2)` row-major) against `data`.
+///
+/// `sample`: evaluate on at most this many query points (0 = all); the
+/// paper subsamples NNP for its 3M dataset for exactly this reason.
+pub fn nnp_curve(data: &Dataset, embedding: &[f32], sample: usize, seed: u64) -> NnpCurve {
+    let n = data.n;
+    assert!(embedding.len() >= 2 * n);
+    let queries: Vec<usize> = if sample == 0 || sample >= n {
+        (0..n).collect()
+    } else {
+        crate::util::rng::Rng::new(seed).sample_indices(n, sample)
+    };
+    // High-d exact kNN for the query subset against the full dataset.
+    let high = knn_subset_high(data, &queries, K_HIGH);
+    // Low-d exact kNN in the embedding for the same queries.
+    let low = knn_subset_low(embedding, n, &queries, K_HIGH);
+
+    let m = queries.len();
+    let mut tp_sum = vec![0.0f64; K_HIGH]; // Σ_points T(k)
+    for q in 0..m {
+        let hset: std::collections::HashSet<u32> = high.row_idx(q).iter().copied().collect();
+        let mut t = 0usize;
+        for k in 0..K_HIGH {
+            if hset.contains(&low.row_idx(q)[k]) {
+                t += 1;
+            }
+            tp_sum[k] += t as f64;
+        }
+    }
+    let precision = (0..K_HIGH).map(|k| tp_sum[k] / ((k + 1) as f64 * m as f64)).collect();
+    let recall = (0..K_HIGH).map(|k| tp_sum[k] / (K_HIGH as f64 * m as f64)).collect();
+    NnpCurve { precision, recall }
+}
+
+fn knn_subset_high(data: &Dataset, queries: &[usize], k: usize) -> KnnGraph {
+    let m = queries.len();
+    let mut g = KnnGraph::new(m, k);
+    {
+        let idx = parallel::SyncSlice::new(&mut g.idx);
+        let d2s = parallel::SyncSlice::new(&mut g.d2);
+        parallel::par_chunks(m, 8, |range| {
+            for q in range {
+                let i = queries[q];
+                let qi = data.row(i);
+                let mut kb = crate::hd::knn::KBest::new(k);
+                for j in 0..data.n {
+                    if j == i {
+                        continue;
+                    }
+                    let d = crate::hd::dist2(qi, data.row(j));
+                    if d < kb.bound() {
+                        kb.push(d, j as u32);
+                    }
+                }
+                for (slot, (d, id)) in kb.into_sorted().into_iter().enumerate() {
+                    unsafe {
+                        *idx.get_mut(q * k + slot) = id;
+                        *d2s.get_mut(q * k + slot) = d;
+                    }
+                }
+            }
+        });
+    }
+    g
+}
+
+fn knn_subset_low(embedding: &[f32], n: usize, queries: &[usize], k: usize) -> KnnGraph {
+    let m = queries.len();
+    let q_pts: Vec<f32> = queries.iter().flat_map(|&i| [embedding[2 * i], embedding[2 * i + 1]]).collect();
+    // knn_cross can't self-exclude across index spaces; exclude by id.
+    let mut g = bruteforce::knn_cross(embedding, n, 2, &q_pts, k + 1, false);
+    // Drop each query's own id from its row.
+    let mut out = KnnGraph::new(m, k);
+    for q in 0..m {
+        let own = queries[q] as u32;
+        let mut slot = 0;
+        for j in 0..k + 1 {
+            let id = g.row_idx(q)[j];
+            if id == own || slot == k {
+                continue;
+            }
+            out.idx[q * k + slot] = id;
+            out.d2[q * k + slot] = g.row_d2(q)[j];
+            slot += 1;
+        }
+        // If own id was not in the k+1 (distance ties), drop the farthest.
+        while slot < k {
+            out.idx[q * k + slot] = g.row_idx(q)[slot];
+            out.d2[q * k + slot] = g.row_d2(q)[slot];
+            slot += 1;
+        }
+    }
+    g = out;
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_preservation_when_embedding_is_the_data() {
+        // 2-D data embedded as itself: precision = recall = 1 at k = 30.
+        let mut rng = Rng::new(2);
+        let n = 120;
+        let x: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let data = Dataset::new("d", n, 2, x.clone(), vec![]);
+        let c = nnp_curve(&data, &x, 0, 0);
+        assert!(c.precision[K_HIGH - 1] > 0.999, "p30={}", c.precision[K_HIGH - 1]);
+        assert!(c.recall[K_HIGH - 1] > 0.999);
+        // And precision(k) = 1 for every k (prefix property holds when
+        // orderings are identical).
+        assert!(c.precision.iter().all(|&p| p > 0.999));
+    }
+
+    #[test]
+    fn random_embedding_scores_low() {
+        let mut rng = Rng::new(3);
+        let n = 200;
+        let x: Vec<f32> = (0..n * 16).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let data = Dataset::new("d", n, 16, x, vec![]);
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let c = nnp_curve(&data, &y, 0, 0);
+        // Random chance is ~ K/N = 0.15; allow slack.
+        assert!(c.mean_precision() < 0.35, "random embedding too good: {}", c.mean_precision());
+    }
+
+    #[test]
+    fn subsampled_curve_is_close_to_full() {
+        let mut rng = Rng::new(5);
+        let n = 300;
+        let x: Vec<f32> = (0..n * 4).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let data = Dataset::new("d", n, 4, x, vec![]);
+        let y: Vec<f32> = (0..n).flat_map(|i| {
+            let r = data.row(i);
+            [r[0] + 0.1 * r[2], r[1] - 0.1 * r[3]]
+        }).collect();
+        let full = nnp_curve(&data, &y, 0, 0);
+        let sub = nnp_curve(&data, &y, 150, 7);
+        assert!((full.mean_precision() - sub.mean_precision()).abs() < 0.08);
+    }
+
+    #[test]
+    fn recall_monotone_in_k() {
+        let mut rng = Rng::new(8);
+        let n = 100;
+        let x: Vec<f32> = (0..n * 8).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let data = Dataset::new("d", n, 8, x, vec![]);
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let c = nnp_curve(&data, &y, 0, 0);
+        for w in c.recall.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "recall must be monotone");
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Executable cache + typed step execution over PJRT.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Evolving optimiser state, mirrored on the host. Row-major `(n, 2)`.
+#[derive(Debug, Clone)]
+pub struct StepState {
+    pub n: usize,
+    pub y: Vec<f32>,
+    pub vel: Vec<f32>,
+    pub gains: Vec<f32>,
+}
+
+impl StepState {
+    /// Fresh state for `n` padded points: zero velocity, unit gains on
+    /// real points (`mask` decides which), zero on padding.
+    pub fn new(y: Vec<f32>, mask: &[f32]) -> Self {
+        let n = mask.len();
+        assert_eq!(y.len(), 2 * n, "y must be (n,2) row-major");
+        let mut gains = vec![0.0f32; 2 * n];
+        for (i, &m) in mask.iter().enumerate() {
+            if m > 0.0 {
+                gains[2 * i] = 1.0;
+                gains[2 * i + 1] = 1.0;
+            }
+        }
+        Self { n, y, vel: vec![0.0; 2 * n], gains }
+    }
+}
+
+/// Per-step scalar outputs (the tensors stay in `StepState`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepOutputs {
+    /// Normalisation Ẑ (Eq. 13).
+    pub zhat: f32,
+    /// Neighbour-restricted KL estimate.
+    pub kl: f32,
+    /// Post-update bounding box `[min_x, min_y, max_x, max_y]`.
+    pub bbox: [f32; 4],
+}
+
+impl StepOutputs {
+    /// Embedding diameter (max bbox side) — drives the adaptive-ρ policy.
+    pub fn diameter(&self) -> f32 {
+        (self.bbox[2] - self.bbox[0]).max(self.bbox[3] - self.bbox[1])
+    }
+}
+
+/// Device-resident per-job tensors, uploaded once and reused each step.
+pub struct StaticArgs {
+    pub n: usize,
+    pub k: usize,
+    mask: xla::PjRtBuffer,
+    nbr_idx: xla::PjRtBuffer,
+    nbr_p: xla::PjRtBuffer,
+    /// Host copy of the mask (needed when switching buckets).
+    pub mask_host: Vec<f32>,
+}
+
+/// A compiled artifact bound to its spec.
+pub struct StepExe {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Shared PJRT runtime: one CPU client + a lazy compile cache.
+///
+/// Thread-safety: the PJRT CPU client is internally synchronised (it is
+/// the same TFRT CPU client JAX uses from many Python threads); the Rust
+/// wrapper types merely hold pointers. We therefore mark the runtime
+/// `Send + Sync` and protect the *cache map* with a mutex.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<StepExe>>>,
+    /// Device-resident rank-0 f32 scalars, keyed by bit pattern. The GD
+    /// schedules (eta, momentum, exaggeration) only take a handful of
+    /// distinct values per run, so caching removes three host→device
+    /// uploads from every iteration (§Perf).
+    scalar_cache: Mutex<HashMap<u32, Arc<xla::PjRtBuffer>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+unsafe impl Send for StepExe {}
+unsafe impl Sync for StepExe {}
+unsafe impl Send for StaticArgs {}
+unsafe impl Sync for StaticArgs {}
+
+impl Runtime {
+    /// Create a runtime over the artifact directory (must hold a manifest).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            scalar_cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Get (lazily compiling) the executable for an artifact name.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Arc<StepExe>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.manifest.path_of(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        let entry = Arc::new(StepExe { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Get the single-step executable for an exact (n, grid) pair.
+    pub fn step_executable(&self, n: usize, grid: usize) -> anyhow::Result<Arc<StepExe>> {
+        let spec = self
+            .manifest
+            .find_step(n, grid)
+            .with_context(|| format!("no step artifact for n={n} grid={grid}"))?;
+        self.executable(&spec.name.clone())
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Device-resident rank-0 f32 scalar, cached by bit pattern.
+    fn scalar_buffer(&self, v: f32) -> anyhow::Result<Arc<xla::PjRtBuffer>> {
+        let key = v.to_bits();
+        if let Some(b) = self.scalar_cache.lock().unwrap().get(&key) {
+            return Ok(b.clone());
+        }
+        let b = Arc::new(self.client.buffer_from_host_buffer(&[v], &[], None)?);
+        self.scalar_cache.lock().unwrap().insert(key, b.clone());
+        Ok(b)
+    }
+
+    /// Upload the static per-job tensors for bucket `n` (device-resident).
+    ///
+    /// `mask`: (n,) 1/0; `nbr_idx`: (n,k) row-major i32; `nbr_p`: (n,k)
+    /// row-major f32 with exact zeros on padded slots.
+    pub fn upload_static(
+        &self,
+        mask: &[f32],
+        nbr_idx: &[i32],
+        nbr_p: &[f32],
+        k: usize,
+    ) -> anyhow::Result<StaticArgs> {
+        let n = mask.len();
+        if nbr_idx.len() != n * k || nbr_p.len() != n * k {
+            bail!(
+                "static arg shape mismatch: n={n} k={k} idx={} p={}",
+                nbr_idx.len(),
+                nbr_p.len()
+            );
+        }
+        Ok(StaticArgs {
+            n,
+            k,
+            mask: self.client.buffer_from_host_buffer(mask, &[n], None)?,
+            nbr_idx: self.client.buffer_from_host_buffer(nbr_idx, &[n, k], None)?,
+            nbr_p: self.client.buffer_from_host_buffer(nbr_p, &[n, k], None)?,
+            mask_host: mask.to_vec(),
+        })
+    }
+
+    /// Execute one optimiser step (or a fused multi-step artifact).
+    ///
+    /// Argument order must match `aot.ARG_NAMES`:
+    /// `y, vel, gains, mask, nbr_idx, nbr_p, eta, momentum, exaggeration`.
+    /// State tensors are updated in place from the device outputs.
+    pub fn run_step(
+        &self,
+        exe: &StepExe,
+        state: &mut StepState,
+        statics: &StaticArgs,
+        eta: f32,
+        momentum: f32,
+        exaggeration: f32,
+    ) -> anyhow::Result<StepOutputs> {
+        let n = exe.spec.n;
+        if state.n != n || statics.n != n {
+            bail!(
+                "bucket mismatch: artifact n={n}, state n={}, statics n={}",
+                state.n,
+                statics.n
+            );
+        }
+        let up = |data: &[f32], dims: &[usize]| {
+            self.client.buffer_from_host_buffer(data, dims, None)
+        };
+        let y = up(&state.y, &[n, 2])?;
+        let vel = up(&state.vel, &[n, 2])?;
+        let gains = up(&state.gains, &[n, 2])?;
+        let eta_b = self.scalar_buffer(eta)?;
+        let mom_b = self.scalar_buffer(momentum)?;
+        let ex_b = self.scalar_buffer(exaggeration)?;
+
+        let args: Vec<&xla::PjRtBuffer> = vec![
+            &y,
+            &vel,
+            &gains,
+            &statics.mask,
+            &statics.nbr_idx,
+            &statics.nbr_p,
+            eta_b.as_ref(),
+            mom_b.as_ref(),
+            ex_b.as_ref(),
+        ];
+        let out = exe.exe.execute_b(&args).context("PJRT execute")?;
+        let result = out
+            .first()
+            .and_then(|r| r.first())
+            .context("execute returned no outputs")?
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 6 {
+            bail!("expected 6 outputs (y,vel,gains,zhat,kl,bbox), got {}", parts.len());
+        }
+        state.y = parts[0].to_vec::<f32>()?;
+        state.vel = parts[1].to_vec::<f32>()?;
+        state.gains = parts[2].to_vec::<f32>()?;
+        let zhat = parts[3].to_vec::<f32>()?[0];
+        let kl = parts[4].to_vec::<f32>()?[0];
+        let bbox_v = parts[5].to_vec::<f32>()?;
+        Ok(StepOutputs { zhat, kl, bbox: [bbox_v[0], bbox_v[1], bbox_v[2], bbox_v[3]] })
+    }
+}

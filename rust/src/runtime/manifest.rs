@@ -1,0 +1,179 @@
+//! Artifact manifest: what `python/compile/aot.py` built and where.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json;
+
+/// One AOT-lowered executable variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// Unique name, e.g. `step_n1024_k96_g64`.
+    pub name: String,
+    /// HLO-text file name inside the artifact directory.
+    pub file: String,
+    /// `"step"` (single iteration) or `"steps"` (fused scan).
+    pub kind: String,
+    /// Point-count bucket N (shapes are padded to this).
+    pub n: usize,
+    /// Neighbour list width K.
+    pub k: usize,
+    /// Field texture side length G.
+    pub grid: usize,
+    /// Iterations fused per execute call (1 for `step`).
+    pub steps: usize,
+}
+
+/// Parsed `manifest.json` plus the directory it lives in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub arg_names: Vec<String>,
+    pub out_names: Vec<String>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let str_list = |key: &str| -> anyhow::Result<Vec<String>> {
+            Ok(v.get(key)
+                .and_then(json::Json::as_arr)
+                .with_context(|| format!("manifest missing '{key}'"))?
+                .iter()
+                .filter_map(|s| s.as_str().map(str::to_string))
+                .collect())
+        };
+        let arg_names = str_list("arg_names")?;
+        let out_names = str_list("out_names")?;
+
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .and_then(json::Json::as_arr)
+            .context("manifest missing 'artifacts'")?
+        {
+            let field = |k: &str| -> anyhow::Result<usize> {
+                a.num_field(k)
+                    .map(|n| n as usize)
+                    .with_context(|| format!("artifact missing '{k}'"))
+            };
+            let spec = ArtifactSpec {
+                name: a.str_field("name").context("artifact missing 'name'")?.to_string(),
+                file: a.str_field("file").context("artifact missing 'file'")?.to_string(),
+                kind: a.str_field("kind").unwrap_or("step").to_string(),
+                n: field("n")?,
+                k: field("k")?,
+                grid: field("grid")?,
+                steps: field("steps").unwrap_or(1),
+            };
+            if !dir.join(&spec.file).exists() {
+                bail!("manifest lists {} but {} is missing", spec.name, spec.file);
+            }
+            artifacts.push(spec);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts — rerun `make artifacts`");
+        }
+        Ok(Self { dir, arg_names, out_names, artifacts })
+    }
+
+    /// All single-step variants.
+    pub fn steps(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == "step")
+    }
+
+    /// The smallest point bucket that fits `n_real` (single-step variants).
+    pub fn bucket_for(&self, n_real: usize) -> Option<usize> {
+        self.steps().map(|a| a.n).filter(|&n| n >= n_real).min().or_else(|| {
+            // Larger than every bucket: take the biggest (caller chunks or fails).
+            self.steps().map(|a| a.n).max()
+        })
+    }
+
+    /// Largest point bucket available (capacity of the gpgpu engine).
+    pub fn max_bucket(&self) -> usize {
+        self.steps().map(|a| a.n).max().unwrap_or(0)
+    }
+
+    /// Grid sizes available for point bucket `n` (ascending).
+    pub fn grids_for(&self, n: usize) -> Vec<usize> {
+        let mut g: Vec<usize> = self.steps().filter(|a| a.n == n).map(|a| a.grid).collect();
+        g.sort_unstable();
+        g.dedup();
+        g
+    }
+
+    /// Find the single-step artifact for an exact (n, grid) pair.
+    pub fn find_step(&self, n: usize, grid: usize) -> Option<&ArtifactSpec> {
+        self.steps().find(|a| a.n == n && a.grid == grid)
+    }
+
+    /// Find a fused multi-step artifact for bucket `n`, if any was built.
+    pub fn find_fused(&self, n: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.kind == "steps" && a.n == n)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_manifest(dir: &Path, names: &[(&str, usize, usize)]) {
+        let mut arts = Vec::new();
+        for (name, n, g) in names {
+            let file = format!("{name}.hlo.txt");
+            std::fs::File::create(dir.join(&file)).unwrap().write_all(b"HloModule x").unwrap();
+            arts.push(format!(
+                r#"{{"name":"{name}","file":"{file}","kind":"step","n":{n},"k":96,"grid":{g},"steps":1}}"#
+            ));
+        }
+        let text = format!(
+            r#"{{"version":1,"arg_names":["y"],"out_names":["y"],"artifacts":[{}]}}"#,
+            arts.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_queries() {
+        let dir = std::env::temp_dir().join(format!("gpgpu_sne_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(
+            &dir,
+            &[("a", 1024, 32), ("b", 1024, 64), ("c", 4096, 32), ("d", 4096, 64)],
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.bucket_for(1000), Some(1024));
+        assert_eq!(m.bucket_for(1025), Some(4096));
+        assert_eq!(m.bucket_for(999_999), Some(4096)); // clamps to biggest
+        assert_eq!(m.grids_for(1024), vec![32, 64]);
+        assert_eq!(m.find_step(4096, 64).unwrap().name, "d");
+        assert!(m.find_step(4096, 128).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join(format!("gpgpu_sne_manifest2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir, &[("a", 1024, 32)]);
+        std::fs::remove_file(dir.join("a.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,40 @@
+//! PJRT runtime (L3 ↔ L2 boundary).
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `manifest.json`), compiles them lazily on a
+//! shared PJRT CPU client, and exposes a typed `step` interface to the
+//! optimiser. Static per-job tensors (neighbour lists, joint
+//! probabilities, point mask) are uploaded once as device-resident
+//! buffers and reused by every iteration (`execute_b`); only the evolving
+//! embedding state and three scalars cross the host boundary per step.
+
+mod exec;
+mod manifest;
+
+pub use exec::{Runtime, StaticArgs, StepExe, StepOutputs, StepState};
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// True when an artifact directory (with a manifest) is present; tests and
+/// examples use this to skip gracefully before `make artifacts` has run.
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}
+
+/// Locate the artifact directory: `$GPGPU_SNE_ARTIFACTS`, then
+/// `./artifacts`, then `../artifacts` (for tests executed from target/).
+pub fn locate_artifacts() -> Option<String> {
+    if let Ok(d) = std::env::var("GPGPU_SNE_ARTIFACTS") {
+        if artifacts_available(&d) {
+            return Some(d);
+        }
+    }
+    for d in [DEFAULT_ARTIFACT_DIR, "../artifacts", "../../artifacts"] {
+        if artifacts_available(d) {
+            return Some(d.to_string());
+        }
+    }
+    None
+}

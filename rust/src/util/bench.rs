@@ -1,0 +1,178 @@
+//! Benchmark harness substrate (`criterion` is unavailable offline).
+//!
+//! `cargo bench` targets (harness = false) use this: warmup, repeated
+//! timed runs, robust statistics (median + MAD), and emitters that print
+//! paper-style rows and write CSV series next to the bench for plotting.
+
+use std::io::Write;
+use std::time::Instant;
+
+use crate::util::timer::fmt_secs;
+
+/// Statistics over repeated timing samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        let m = s.len() / 2;
+        if s.len() % 2 == 1 {
+            s[m]
+        } else {
+            0.5 * (s[m - 1] + s[m])
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let devs = Stats { samples: self.samples.iter().map(|s| (s - med).abs()).collect() };
+        devs.median()
+    }
+}
+
+/// Measure `f` with `warmup` discarded runs and `iters` timed runs.
+pub fn measure(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats { samples }
+}
+
+/// Measure a single run (for expensive end-to-end workloads where
+/// repetition is the sweep itself).
+pub fn measure_once(mut f: impl FnMut()) -> f64 {
+    let t = Instant::now();
+    f();
+    t.elapsed().as_secs_f64()
+}
+
+/// A bench report: named rows of named columns, printed as a markdown
+/// table and optionally dumped to CSV (for figure regeneration).
+pub struct Report {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, name: &str, values: Vec<String>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((name.to_string(), values));
+    }
+
+    /// Print as a markdown table (what the paper's tables look like).
+    pub fn print(&self) {
+        println!("\n## {}\n", self.title);
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let mut name_w = 4;
+        for (name, vals) in &self.rows {
+            name_w = name_w.max(name.len());
+            for (i, v) in vals.iter().enumerate() {
+                widths[i] = widths[i].max(v.len());
+            }
+        }
+        print!("| {:name_w$} |", "");
+        for (c, w) in self.columns.iter().zip(&widths) {
+            print!(" {c:>w$} |");
+        }
+        println!();
+        print!("|{}|", "-".repeat(name_w + 2));
+        for w in &widths {
+            print!("{}|", "-".repeat(w + 2));
+        }
+        println!();
+        for (name, vals) in &self.rows {
+            print!("| {name:name_w$} |");
+            for (v, w) in vals.iter().zip(&widths) {
+                print!(" {v:>w$} |");
+            }
+            println!();
+        }
+        println!();
+    }
+
+    /// Write CSV to `bench_out/<file>` (created if needed).
+    pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = std::path::Path::new("bench_out").join(file);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "name,{}", self.columns.join(","))?;
+        for (name, vals) in &self.rows {
+            writeln!(f, "{name},{}", vals.join(","))?;
+        }
+        eprintln!("  [csv] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Format a time cell.
+pub fn tcell(seconds: f64) -> String {
+    fmt_secs(seconds)
+}
+
+/// Quick "did the bench binary get a --quick flag" helper: benches scale
+/// their sweeps down under `--quick` / `GPGPU_SNE_QUICK=1` so `cargo
+/// bench` finishes in CI-scale time.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("GPGPU_SNE_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_and_mad() {
+        let s = Stats { samples: vec![1.0, 2.0, 100.0] };
+        assert_eq!(s.median(), 2.0);
+        assert_eq!(s.mad(), 1.0);
+        let e = Stats { samples: vec![1.0, 3.0] };
+        assert_eq!(e.median(), 2.0);
+    }
+
+    #[test]
+    fn measure_runs_expected_times() {
+        let mut count = 0;
+        let st = measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(st.samples.len(), 5);
+    }
+
+    #[test]
+    fn report_shape_checked() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row("x", vec!["1".into(), "2".into()]);
+        assert_eq!(r.rows.len(), 1);
+    }
+}

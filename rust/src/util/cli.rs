@@ -1,0 +1,168 @@
+//! Tiny CLI argument parser (the `clap` crate is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors, defaults, and an auto-generated
+//! usage string. Used by the main binary, every example and every bench.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub program: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// (name, help) for usage output, registered by accessors.
+    seen: std::cell::RefCell<Vec<(String, String)>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`.
+    pub fn from_env() -> Self {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_default();
+        Self::parse(program, it.collect())
+    }
+
+    /// Parse an explicit vector (used by tests).
+    pub fn parse(program: String, argv: Vec<String>) -> Self {
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    options.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(stripped.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Self { program, positional, options, flags, seen: Default::default() }
+    }
+
+    fn note(&self, name: &str, help: String) {
+        self.seen.borrow_mut().push((name.to_string(), help));
+    }
+
+    /// Boolean flag (present / absent).
+    pub fn flag(&self, name: &str, help: &str) -> bool {
+        self.note(name, format!("(flag) {help}"));
+        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// String option with default.
+    pub fn str(&self, name: &str, default: &str, help: &str) -> String {
+        self.note(name, format!("(default {default}) {help}"));
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string (no default).
+    pub fn opt_str(&self, name: &str, help: &str) -> Option<String> {
+        self.note(name, help.to_string());
+        self.options.get(name).cloned()
+    }
+
+    /// Typed option with default; exits with a message on parse failure.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T, help: &str) -> T
+    where
+        T: std::fmt::Display,
+    {
+        self.note(name, format!("(default {default}) {help}"));
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}, got '{v}'", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Comma-separated typed list.
+    pub fn list<T: std::str::FromStr>(&self, name: &str, default: &[T], help: &str) -> Vec<T>
+    where
+        T: Clone + std::fmt::Debug,
+    {
+        self.note(name, format!("(default {default:?}) {help}"));
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: --{name} has an unparsable element '{s}'");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Print usage (from every accessor called so far) and exit if
+    /// `--help` was passed. Call after all accessors.
+    pub fn finish_help(&self, about: &str) {
+        if self.flags.iter().any(|f| f == "help") {
+            println!("{about}\n\nusage: {} [options]\n", self.program);
+            for (name, help) in self.seen.borrow().iter() {
+                println!("  --{name:<24} {help}");
+            }
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse("prog".into(), v.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn parses_forms() {
+        // Note: a bare `--flag` greedily consumes a following non-`--`
+        // token as its value, so flags that precede positionals must use
+        // `--flag=true`. Positionals therefore come first by convention.
+        let a = args(&["input.bin", "--n", "100", "--grid=64", "--verbose"]);
+        assert_eq!(a.get("n", 0usize, ""), 100);
+        assert_eq!(a.get("grid", 0usize, ""), 64);
+        assert!(a.flag("verbose", ""));
+        assert!(!a.flag("quiet", ""));
+        assert_eq!(a.positional, vec!["input.bin"]);
+        let b = args(&["--verbose=true", "run.bin"]);
+        assert!(b.flag("verbose", ""));
+        assert_eq!(b.positional, vec!["run.bin"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.get("eta", 200.0f32, ""), 200.0);
+        assert_eq!(a.str("name", "mnist", ""), "mnist");
+        assert_eq!(a.opt_str("missing", ""), None);
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = args(&["--ns", "1000,5000,10000"]);
+        assert_eq!(a.list("ns", &[1usize], ""), vec![1000, 5000, 10000]);
+        assert_eq!(a.list("grids", &[32usize, 64], ""), vec![32, 64]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args(&["--lo", "-3.5"]);
+        assert_eq!(a.get("lo", 0.0f64, ""), -3.5);
+    }
+}

@@ -1,0 +1,151 @@
+//! Figure emitters: PGM images (fields, embeddings) and CSV series.
+//!
+//! The paper's Figures 2 (field textures), 3 (kernel functions) and 5
+//! (embeddings) are regenerated as portable graymaps + CSV, keeping the
+//! repo free of image-library dependencies.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a grayscale PGM (P5) from row-major f32 data, min-max normalised.
+/// Rows are flipped so increasing y in embedding space points up.
+pub fn write_pgm(path: impl AsRef<Path>, data: &[f32], w: usize, h: usize) -> std::io::Result<()> {
+    assert_eq!(data.len(), w * h);
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in data {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    let mut bytes = Vec::with_capacity(w * h);
+    for row in (0..h).rev() {
+        for col in 0..w {
+            let v = data[row * w + col];
+            bytes.push(if v.is_finite() { ((v - lo) * scale) as u8 } else { 0 });
+        }
+    }
+    f.write_all(&bytes)
+}
+
+/// Write a diverging-signed PGM: negative = dark, zero = mid, positive =
+/// bright (for the V_x / V_y field channels of Fig. 2c-d).
+pub fn write_pgm_signed(
+    path: impl AsRef<Path>,
+    data: &[f32],
+    w: usize,
+    h: usize,
+) -> std::io::Result<()> {
+    assert_eq!(data.len(), w * h);
+    let amax = data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12);
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    let mut bytes = Vec::with_capacity(w * h);
+    for row in (0..h).rev() {
+        for col in 0..w {
+            let v = data[row * w + col] / amax; // [-1, 1]
+            bytes.push((127.5 + 127.5 * v) as u8);
+        }
+    }
+    f.write_all(&bytes)
+}
+
+/// Rasterise a labelled 2-D embedding into a PGM scatterplot.
+/// Each point paints a small disc whose gray level encodes its label.
+pub fn write_embedding_pgm(
+    path: impl AsRef<Path>,
+    points: &[f32], // (n,2) row-major
+    labels: &[u8],
+    size: usize,
+) -> std::io::Result<()> {
+    let n = points.len() / 2;
+    assert!(labels.len() >= n);
+    let (mut lo_x, mut hi_x, mut lo_y, mut hi_y) =
+        (f32::INFINITY, f32::NEG_INFINITY, f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..n {
+        lo_x = lo_x.min(points[2 * i]);
+        hi_x = hi_x.max(points[2 * i]);
+        lo_y = lo_y.min(points[2 * i + 1]);
+        hi_y = hi_y.max(points[2 * i + 1]);
+    }
+    let span = (hi_x - lo_x).max(hi_y - lo_y).max(1e-9);
+    let max_label = labels[..n].iter().copied().max().unwrap_or(0).max(1) as f32;
+    let mut img = vec![255u8; size * size];
+    for i in 0..n {
+        let px = ((points[2 * i] - lo_x) / span * (size - 3) as f32) as usize + 1;
+        let py = ((points[2 * i + 1] - lo_y) / span * (size - 3) as f32) as usize + 1;
+        let shade = 20 + (200.0 * labels[i] as f32 / max_label) as u8;
+        for dy in 0..2usize {
+            for dx in 0..2usize {
+                let x = (px + dx).min(size - 1);
+                let y = (py + dy).min(size - 1);
+                img[(size - 1 - y) * size + x] = shade;
+            }
+        }
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{size} {size}\n255\n")?;
+    f.write_all(&img)
+}
+
+/// Write a CSV of named columns.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    headers: &[&str],
+    columns: &[Vec<f64>],
+) -> std::io::Result<()> {
+    assert_eq!(headers.len(), columns.len());
+    let rows = columns.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for r in 0..rows {
+        let cells: Vec<String> = columns
+            .iter()
+            .map(|c| c.get(r).map(|v| format!("{v}")).unwrap_or_default())
+            .collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let dir = std::env::temp_dir().join(format!("gpgpu_sne_img_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pgm");
+        write_pgm(&p, &[0.0, 0.5, 1.0, 0.25], 2, 2).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(bytes.len(), b"P5\n2 2\n255\n".len() + 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn signed_pgm_midpoint() {
+        let dir = std::env::temp_dir().join(format!("gpgpu_sne_img2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.pgm");
+        write_pgm_signed(&p, &[0.0], 1, 1).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(*bytes.last().unwrap(), 127);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_writes_columns() {
+        let dir = std::env::temp_dir().join(format!("gpgpu_sne_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,3\n2,4\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

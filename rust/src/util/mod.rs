@@ -1,0 +1,12 @@
+//! In-repo substrates for crates that are unavailable offline
+//! (DESIGN.md S21–S26): PRNG, thread pool, CLI parsing, JSON,
+//! property-testing, bench statistics, and figure emitters.
+
+pub mod bench;
+pub mod cli;
+pub mod image;
+pub mod json;
+pub mod parallel;
+pub mod prop;
+pub mod rng;
+pub mod timer;

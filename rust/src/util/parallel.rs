@@ -1,0 +1,174 @@
+//! Data-parallel substrate (the `rayon` crate is unavailable offline).
+//!
+//! Scoped fork-join parallelism over `std::thread::scope`: chunked
+//! parallel-for, parallel map, and a reusable worker-count policy. Used by
+//! the kNN stages, perplexity search, exact/BH force loops and metrics —
+//! the paper's CPU baselines are multi-threaded C++, so ours are
+//! multi-threaded Rust.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads: `GPGPU_SNE_THREADS` or available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("GPGPU_SNE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `body(range)` over disjoint chunks of `0..n` on `threads` workers.
+///
+/// Work is distributed dynamically (atomic chunk counter) so irregular
+/// per-item cost (e.g. perplexity bisection) balances well.
+pub fn par_chunks(n: usize, chunk: usize, body: impl Fn(std::ops::Range<usize>) + Sync) {
+    let threads = num_threads().min(n.div_ceil(chunk)).max(1);
+    if threads <= 1 || n <= chunk {
+        body(0..n);
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    let nchunks = n.div_ceil(chunk);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let c = counter.fetch_add(1, Ordering::Relaxed);
+                if c >= nchunks {
+                    break;
+                }
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(n);
+                body(lo..hi);
+            });
+        }
+    });
+}
+
+/// Parallel-for over indices with dynamic scheduling.
+pub fn par_for(n: usize, body: impl Fn(usize) + Sync) {
+    // Chunk to amortise the atomic; 64 is small enough for imbalance.
+    par_chunks(n, 64, |r| {
+        for i in r {
+            body(i);
+        }
+    });
+}
+
+/// Parallel map: `out[i] = f(i)` for `i in 0..n`.
+pub fn par_map<T: Send + Clone + Default>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncSlice::new(&mut out);
+        par_for(n, |i| unsafe {
+            *slots.get_mut(i) = f(i);
+        });
+    }
+    out
+}
+
+/// Write-disjoint shared mutable slice — the classic scoped-parallelism
+/// escape hatch. Safe as long as every index is written by at most one
+/// worker (true for all call sites: each `i` is claimed exactly once).
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// # Safety
+    /// Each index must be written from at most one thread at a time.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// Parallel reduce: fold chunks locally, combine the partials.
+pub fn par_reduce<T: Send + Clone>(
+    n: usize,
+    identity: T,
+    fold: impl Fn(T, usize) -> T + Sync,
+    combine: impl Fn(T, T) -> T,
+) -> T {
+    let threads = num_threads();
+    if threads <= 1 || n < 1024 {
+        return (0..n).fold(identity, fold);
+    }
+    let chunk = n.div_ceil(threads);
+    let mut partials = vec![identity.clone(); threads];
+    {
+        let slots = SyncSlice::new(&mut partials);
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let fold = &fold;
+                let identity = identity.clone();
+                let slots = &slots;
+                s.spawn(move || {
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(n);
+                    let acc = (lo..hi).fold(identity, fold);
+                    unsafe {
+                        *slots.get_mut(t) = acc;
+                    }
+                });
+            }
+        });
+    }
+    partials.into_iter().fold(identity, combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_all_indices_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let out = par_map(5000, |i| (i * i) as u64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn par_reduce_sums() {
+        let n = 100_000usize;
+        let s = par_reduce(n, 0u64, |acc, i| acc + i as u64, |a, b| a + b);
+        assert_eq!(s, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        par_for(0, |_| panic!("must not run"));
+        let out = par_map(1, |i| i);
+        assert_eq!(out, vec![0]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Property-based testing mini-framework (`proptest` is unavailable
+//! offline).
+//!
+//! Deterministic-by-default randomized testing with typed generators and
+//! greedy shrinking: on failure, the failing case is repeatedly simplified
+//! (halving sizes / magnitudes) while it still fails, and the minimal
+//! reproduction is reported together with its seed. Used by
+//! `rust/tests/properties.rs` for the coordinator/substrate invariants.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property: `GPGPU_SNE_PROP_CASES` (default 64).
+pub fn cases() -> usize {
+    std::env::var("GPGPU_SNE_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// A value generator with an optional shrinker.
+pub struct Gen<T> {
+    #[allow(clippy::type_complexity)]
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    #[allow(clippy::type_complexity)]
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + std::fmt::Debug + 'static> Gen<T> {
+    pub fn new(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Self { gen: Box::new(gen), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'static) -> Self {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    /// Map the generated value (shrinking is dropped across the map).
+    pub fn map<U: Clone + std::fmt::Debug + 'static>(
+        self,
+        f: impl Fn(T) -> U + 'static,
+    ) -> Gen<U> {
+        Gen::new(move |r| f((self.gen)(r)))
+    }
+}
+
+/// usize in [lo, hi], shrinking toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(move |r| lo + r.below(hi - lo + 1)).with_shrink(move |&v| {
+        let mut out = Vec::new();
+        if v > lo {
+            out.push(lo);
+            out.push(lo + (v - lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    })
+}
+
+/// f32 in [lo, hi], shrinking toward 0 (clamped into range).
+pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(move |r| lo + (hi - lo) * r.f32()).with_shrink(move |&v| {
+        let z = 0.0f32.clamp(lo, hi);
+        if (v - z).abs() < 1e-6 {
+            Vec::new()
+        } else {
+            vec![z, z + (v - z) / 2.0]
+        }
+    })
+}
+
+/// Vec of f32s with length in [min_len, max_len], values in [lo, hi];
+/// shrinks by halving the length, then zeroing elements.
+pub fn vec_f32(min_len: usize, max_len: usize, lo: f32, hi: f32) -> Gen<Vec<f32>> {
+    assert!(min_len <= max_len);
+    Gen::new(move |r| {
+        let n = min_len + r.below(max_len - min_len + 1);
+        (0..n).map(|_| lo + (hi - lo) * r.f32()).collect()
+    })
+    .with_shrink(move |v: &Vec<f32>| {
+        let mut out = Vec::new();
+        if v.len() > min_len {
+            let half = min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0 && (0.0f32) >= lo && 0.0 <= hi) {
+            let mut z = v.clone();
+            for x in z.iter_mut() {
+                *x /= 2.0;
+            }
+            out.push(z);
+        }
+        out
+    })
+}
+
+/// 2-D point set (flattened row-major), n in [min_n, max_n].
+pub fn points2d(min_n: usize, max_n: usize, extent: f32) -> Gen<Vec<f32>> {
+    Gen::new(move |r| {
+        let n = min_n + r.below(max_n - min_n + 1);
+        (0..2 * n).map(|_| (r.f32() * 2.0 - 1.0) * extent).collect()
+    })
+    .with_shrink(move |v: &Vec<f32>| {
+        let n = v.len() / 2;
+        let mut out = Vec::new();
+        if n > min_n {
+            out.push(v[..2 * (min_n.max(n / 2))].to_vec());
+            out.push(v[..2 * (n - 1)].to_vec());
+        }
+        out
+    })
+}
+
+/// The outcome of `check`: panics on failure with the minimal case.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("GPGPU_SNE_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed ^ hash_name(name));
+    for case in 0..cases() {
+        let value = gen.sample(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: keep the first simplification that still fails.
+            let mut cur = value;
+            let mut cur_msg = msg;
+            let mut rounds = 0;
+            'outer: while rounds < 200 {
+                rounds += 1;
+                for cand in (gen.shrink)(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  minimal input: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// Check over pairs of independent generators.
+pub fn check2<A: Clone + std::fmt::Debug + 'static, B: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    ga: &Gen<A>,
+    gb: &Gen<B>,
+    prop: impl Fn(&A, &B) -> Result<(), String>,
+) {
+    let seed = std::env::var("GPGPU_SNE_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed ^ hash_name(name));
+    for case in 0..cases() {
+        let a = ga.sample(&mut rng);
+        let b = gb.sample(&mut rng);
+        if let Err(msg) = prop(&a, &b) {
+            panic!("property '{name}' failed (case {case}, seed {seed}):\n  a: {a:?}\n  b: {b:?}\n  error: {msg}");
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum nonneg", &vec_f32(0, 20, 0.0, 1.0), |v| {
+            if v.iter().sum::<f32>() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_minimal_case() {
+        check("always fails", &usize_in(0, 100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_reaches_small_case() {
+        // Property fails for v.len() >= 3; the shrinker should find len 3.
+        let result = std::panic::catch_unwind(|| {
+            check("len<3", &vec_f32(0, 64, 0.0, 1.0), |v| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Minimal reproduction should have been shrunk well below 64.
+        assert!(msg.contains("len 3") || msg.contains("len 4"), "got: {msg}");
+    }
+}

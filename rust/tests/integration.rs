@@ -1,0 +1,193 @@
+//! Cross-module integration: engines against each other, the field
+//! approximation against the exact gradient, metrics against engines, and
+//! the device (gpgpu) engine against its CPU mirror when artifacts exist.
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::data;
+use gpgpu_sne::embed::{self, Control, IterStats, OptParams};
+use gpgpu_sne::hd::perplexity;
+use gpgpu_sne::metrics::{kl, nnp};
+use gpgpu_sne::runtime::{self, Runtime};
+
+fn problem(n: usize, seed: u64) -> (gpgpu_sne::hd::Dataset, gpgpu_sne::hd::SparseP) {
+    let ds = data::by_name("gaussians", n, seed).unwrap();
+    let k = 30.min(n - 1);
+    let knn = compute_knn(&ds, KnnMethod::Brute, k, seed);
+    let p = perplexity::joint_p(&knn, 10.0);
+    (ds, p)
+}
+
+fn quick_params(iters: usize) -> OptParams {
+    OptParams { iters, exaggeration_iters: iters / 4, seed: 11, ..Default::default() }
+}
+
+#[test]
+fn all_cpu_engines_reduce_kl_on_gaussians() {
+    let (_ds, p) = problem(200, 1);
+    for name in ["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu"] {
+        let mut engine = embed::by_name(name, None).unwrap();
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        let mut obs = |s: &IterStats, _: &[f32]| {
+            if s.iter == 0 {
+                first = s.kl_est;
+            }
+            last = s.kl_est;
+            Control::Continue
+        };
+        let y = engine.run(&p, &quick_params(120), Some(&mut obs)).unwrap();
+        assert!(
+            last < 0.7 * first,
+            "{name}: KL should drop substantially ({first:.3} -> {last:.3})"
+        );
+        assert!(y.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+    }
+}
+
+#[test]
+fn field_engine_matches_exact_engine_quality() {
+    // The paper's claim: the field approximation optimises the objective
+    // as well as (or better than) BH. Verify final exact-KL of fieldcpu is
+    // within 10% of the exact engine and <= BH θ=0.5 + 10%.
+    let (_ds, p) = problem(300, 2);
+    let params = quick_params(250);
+    let run = |name: &str| {
+        let y = embed::by_name(name, None).unwrap().run(&p, &params, None).unwrap();
+        kl::kl_divergence_exact(&p, &y)
+    };
+    let kl_exact = run("exact");
+    let kl_field = run("fieldcpu");
+    let kl_bh = run("bh-0.5");
+    assert!(
+        kl_field < kl_exact * 1.10,
+        "fieldcpu {kl_field:.4} should track exact {kl_exact:.4}"
+    );
+    assert!(kl_field < kl_bh * 1.10, "fieldcpu {kl_field:.4} vs bh {kl_bh:.4}");
+}
+
+#[test]
+fn embeddings_cluster_labelled_data() {
+    // 10-cluster Gaussian data must produce an embedding where same-class
+    // mean distance << cross-class mean distance.
+    let ds = data::by_name("gaussians", 300, 5).unwrap();
+    let knn = compute_knn(&ds, KnnMethod::Brute, 30, 5);
+    let p = perplexity::joint_p(&knn, 10.0);
+    let y = embed::by_name("fieldcpu", None)
+        .unwrap()
+        .run(&p, &quick_params(300), None)
+        .unwrap();
+    let (mut within, mut wn, mut between, mut bn) = (0.0f64, 0usize, 0.0f64, 0usize);
+    for i in 0..ds.n {
+        for j in (i + 1..ds.n).step_by(3) {
+            let dx = (y[2 * i] - y[2 * j]) as f64;
+            let dy = (y[2 * i + 1] - y[2 * j + 1]) as f64;
+            let d = (dx * dx + dy * dy).sqrt();
+            if ds.labels[i] == ds.labels[j] {
+                within += d;
+                wn += 1;
+            } else {
+                between += d;
+                bn += 1;
+            }
+        }
+    }
+    let (w, b) = (within / wn as f64, between / bn as f64);
+    assert!(b > 2.0 * w, "embedding failed to separate clusters: within={w:.2} between={b:.2}");
+}
+
+#[test]
+fn nnp_of_converged_embedding_beats_random() {
+    let ds = data::by_name("mnist", 250, 3).unwrap();
+    let knn = compute_knn(&ds, KnnMethod::Brute, 30, 3);
+    let p = perplexity::joint_p(&knn, 10.0);
+    let y = embed::by_name("fieldcpu", None)
+        .unwrap()
+        .run(&p, &quick_params(300), None)
+        .unwrap();
+    let curve = nnp::nnp_curve(&ds, &y, 0, 0);
+    let mut rng = gpgpu_sne::util::rng::Rng::new(9);
+    let y_rand: Vec<f32> = (0..2 * ds.n).map(|_| rng.gauss_f32(0.0, 3.0)).collect();
+    let curve_rand = nnp::nnp_curve(&ds, &y_rand, 0, 0);
+    assert!(
+        curve.mean_precision() > 2.0 * curve_rand.mean_precision(),
+        "converged NNP {:.3} vs random {:.3}",
+        curve.mean_precision(),
+        curve_rand.mean_precision()
+    );
+}
+
+#[test]
+fn gpgpu_engine_tracks_fieldcpu() {
+    let Some(dir) = runtime::locate_artifacts() else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return;
+    };
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
+    let (_ds, p) = problem(400, 7);
+    let params = quick_params(150);
+
+    let y_dev = embed::by_name("gpgpu", Some(rt)).unwrap().run(&p, &params, None).unwrap();
+    let y_cpu = embed::by_name("fieldcpu", None).unwrap().run(&p, &params, None).unwrap();
+
+    // Same init seed + same math (different grid sets and f32 ordering):
+    // final objective values must agree closely even if trajectories
+    // diverge point-wise.
+    let kl_dev = kl::kl_divergence_exact(&p, &y_dev);
+    let kl_cpu = kl::kl_divergence_exact(&p, &y_cpu);
+    assert!(
+        (kl_dev - kl_cpu).abs() < 0.15 * kl_cpu.abs().max(0.1),
+        "device {kl_dev:.4} vs cpu {kl_cpu:.4}"
+    );
+}
+
+#[test]
+fn gpgpu_engine_bucket_padding_is_inert() {
+    let Some(dir) = runtime::locate_artifacts() else {
+        eprintln!("SKIP: no artifacts/");
+        return;
+    };
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
+    // 123 points pad into a 1024 bucket; result must still be exactly 123
+    // finite rows and reduce KL.
+    let (_ds, p) = problem(123, 9);
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    let mut obs = |s: &IterStats, _: &[f32]| {
+        if s.iter == 0 {
+            first = s.kl_est;
+        }
+        last = s.kl_est;
+        Control::Continue
+    };
+    let y = embed::by_name("gpgpu", Some(rt))
+        .unwrap()
+        .run(&p, &quick_params(100), Some(&mut obs))
+        .unwrap();
+    assert_eq!(y.len(), 2 * 123);
+    assert!(y.iter().all(|v| v.is_finite()));
+    assert!(last < first, "KL {first:.3} -> {last:.3}");
+}
+
+#[test]
+fn knn_methods_feed_equivalent_p_quality() {
+    // Approximate kNN (kdforest) must yield a P whose optimised embedding
+    // is nearly as good as exact kNN's — the A-tSNE premise.
+    let ds = data::by_name("gaussians", 250, 4).unwrap();
+    let params = quick_params(200);
+    let mut kls = Vec::new();
+    for method in [KnnMethod::Brute, KnnMethod::KdForest] {
+        let knn = compute_knn(&ds, method, 30, 4);
+        let p = perplexity::joint_p(&knn, 10.0);
+        let y = embed::by_name("bh-0.5", None).unwrap().run(&p, &params, None).unwrap();
+        kls.push(kl::kl_divergence_exact(&p, &y));
+    }
+    assert!(
+        kls[1] < kls[0] * 1.25,
+        "approx-kNN embedding quality degraded: exact {:.4} vs kdforest {:.4}",
+        kls[0],
+        kls[1]
+    );
+}

@@ -1,0 +1,106 @@
+//! Pipeline/service-level integration: full jobs through the coordinator,
+//! including device-backed jobs when artifacts are present.
+
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::job::AutoStop;
+use gpgpu_sne::coordinator::progress::JobState;
+use gpgpu_sne::coordinator::{run_pipeline, EmbeddingService, JobPhase, JobSpec, KnnMethod};
+use gpgpu_sne::embed::OptParams;
+use gpgpu_sne::runtime::{self, Runtime};
+
+fn spec(dataset: &str, n: usize, engine: &str, iters: usize) -> JobSpec {
+    JobSpec {
+        dataset: dataset.into(),
+        n,
+        engine: engine.into(),
+        perplexity: 15.0,
+        knn: KnnMethod::KdForest,
+        params: OptParams { iters, exaggeration_iters: iters / 4, ..Default::default() },
+        snapshot_every: 25,
+        auto_stop: None,
+        seed: 2,
+    }
+}
+
+#[test]
+fn every_table1_dataset_flows_through_the_pipeline() {
+    for name in ["mnist", "wikiword", "word2vec", "imagenet-mixed3a", "imagenet-head0"] {
+        let state = JobState::default();
+        let res = run_pipeline(&spec(name, 160, "bh-0.5", 40), None, &state)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(res.embedding.len(), 320, "{name}");
+        assert!(res.embedding.iter().all(|v| v.is_finite()), "{name}");
+        assert!(res.kl_est.is_finite(), "{name}");
+    }
+}
+
+#[test]
+fn service_runs_gpgpu_job_when_artifacts_exist() {
+    let Some(dir) = runtime::locate_artifacts() else {
+        eprintln!("SKIP: no artifacts/");
+        return;
+    };
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
+    let svc = EmbeddingService::new(Some(rt), 2);
+    assert!(svc.has_runtime());
+    let id = svc.submit(spec("mnist", 300, "gpgpu", 60));
+    let res = svc.wait(id).unwrap();
+    assert_eq!(res.embedding.len(), 600);
+    assert_eq!(svc.phase(id), Some(JobPhase::Done));
+    // Progressive snapshots were produced.
+    assert!(svc.latest_snapshot(id).is_some());
+}
+
+#[test]
+fn service_multiplexes_cpu_and_device_jobs() {
+    let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
+    let svc = EmbeddingService::new(rt.clone(), 2);
+    let mut ids = vec![svc.submit(spec("gaussians", 120, "bh-0.5", 30))];
+    ids.push(svc.submit(spec("gaussians", 120, "fieldcpu", 30)));
+    if rt.is_some() {
+        ids.push(svc.submit(spec("gaussians", 120, "gpgpu", 30)));
+    }
+    for id in ids {
+        let res = svc.wait(id).unwrap();
+        assert!(res.embedding.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn snapshots_arrive_in_iteration_order_with_falling_kl_trend() {
+    let state = JobState::default();
+    let rx = state.snapshots.subscribe();
+    let res = run_pipeline(&spec("gaussians", 200, "fieldcpu", 120), None, &state).unwrap();
+    let snaps: Vec<_> = rx.try_iter().collect();
+    assert!(snaps.len() >= 4);
+    for w in snaps.windows(2) {
+        assert!(w[1].iter > w[0].iter, "snapshots out of order");
+    }
+    // KL at the end must be below KL at the start (trend, not monotone).
+    assert!(snaps.last().unwrap().kl_est < snaps[0].kl_est);
+    assert_eq!(res.iters_run, 120);
+}
+
+#[test]
+fn auto_stop_saves_iterations_on_small_problems() {
+    let state = JobState::default();
+    let mut s = spec("gaussians", 120, "bh-0.5", 2000);
+    s.auto_stop = Some(AutoStop { window: 25, rel_eps: 5e-5 });
+    let res = run_pipeline(&s, None, &state).unwrap();
+    assert!(res.stopped_early);
+    assert!(
+        res.iters_run < 1500,
+        "plateau detection should fire well before 2000 iters, ran {}",
+        res.iters_run
+    );
+}
+
+#[test]
+fn perplexity_larger_than_k_is_clamped_not_fatal() {
+    let state = JobState::default();
+    let mut s = spec("gaussians", 50, "bh-0.5", 20);
+    s.perplexity = 500.0; // absurd for n=50
+    let res = run_pipeline(&s, None, &state).unwrap();
+    assert!(res.embedding.iter().all(|v| v.is_finite()));
+}

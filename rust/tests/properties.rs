@@ -1,0 +1,254 @@
+//! Property-based tests over the coordinator/substrate invariants
+//! (DESIGN.md §11), driven by the in-repo prop framework (util::prop).
+
+use gpgpu_sne::embed::exact::ExactRepulsion;
+use gpgpu_sne::embed::quadtree::QuadTree;
+use gpgpu_sne::embed::common::Repulsion;
+use gpgpu_sne::embed::fieldcpu;
+use gpgpu_sne::embed::gpgpu::GridPolicy;
+use gpgpu_sne::hd::{bruteforce, dataset::Dataset, kdforest, knn::KBest, perplexity, vptree};
+use gpgpu_sne::util::prop::{self, points2d, usize_in, vec_f32};
+use gpgpu_sne::util::rng::Rng;
+
+fn dataset_from(seed: u64, n: usize, d: usize) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    Dataset::new("p", n, d, x, vec![])
+}
+
+#[test]
+fn prop_quadtree_conserves_mass_and_com() {
+    prop::check("quadtree mass/COM", &points2d(2, 300, 10.0), |pts| {
+        let n = pts.len() / 2;
+        let t = QuadTree::build(pts);
+        if t.total_count() as usize != n {
+            return Err(format!("mass {} != {}", t.total_count(), n));
+        }
+        let (mx, my) = t.root_com();
+        let (mut ex, mut ey) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            ex += pts[2 * i] as f64;
+            ey += pts[2 * i + 1] as f64;
+        }
+        ex /= n as f64;
+        ey /= n as f64;
+        if (mx - ex).abs() > 1e-3 || (my - ey).abs() > 1e-3 {
+            return Err(format!("COM ({mx},{my}) != ({ex},{ey})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bh_theta0_equals_exact() {
+    prop::check("BH θ=0 exactness", &points2d(2, 120, 5.0), |pts| {
+        let n = pts.len() / 2;
+        let tree = QuadTree::build(pts);
+        for i in (0..n).step_by(1 + n / 7) {
+            let (fx, fy, z) = tree.accumulate(pts[2 * i], pts[2 * i + 1], 0.0);
+            let (mut efx, mut efy, mut ez) = (0.0f64, 0.0f64, 0.0f64);
+            for j in 0..n {
+                let dx = (pts[2 * i] - pts[2 * j]) as f64;
+                let dy = (pts[2 * i + 1] - pts[2 * j + 1]) as f64;
+                let t = 1.0 / (1.0 + dx * dx + dy * dy);
+                ez += t;
+                efx += t * t * dx;
+                efy += t * t * dy;
+            }
+            if (z - ez).abs() > 1e-6 * ez.max(1.0) {
+                return Err(format!("z {z} != {ez}"));
+            }
+            // Summation-order differences (tree traversal vs linear scan)
+            // leave ~1e-8 absolute noise; tolerate 1e-5 relative.
+            if (fx - efx).abs() > 1e-5 * efx.abs().max(1e-2)
+                || (fy - efy).abs() > 1e-5 * efy.abs().max(1e-2)
+            {
+                return Err(format!("force ({fx},{fy}) != ({efx},{efy})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vptree_equals_bruteforce() {
+    prop::check("vptree == brute", &usize_in(10, 200), |&n| {
+        let data = dataset_from(n as u64 * 31 + 7, n, 6);
+        let k = 5.min(n - 1);
+        let a = vptree::VpTree::build(&data, 3).knn(k);
+        let e = bruteforce::knn(&data, k);
+        let recall = a.recall_against(&e);
+        if recall < 0.999 {
+            return Err(format!("recall {recall} at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kdforest_recall_bound() {
+    prop::check("kdforest recall ≥ 0.8", &usize_in(50, 400), |&n| {
+        let data = dataset_from(n as u64 * 13 + 1, n, 12);
+        let k = 8.min(n - 1);
+        let f = kdforest::KdForest::build(&data, kdforest::ForestParams::default(), 2);
+        let recall = f.knn(k).recall_against(&bruteforce::knn(&data, k));
+        if recall < 0.8 {
+            return Err(format!("recall {recall} at n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perplexity_row_invariants() {
+    // Rows normalise to 1, probabilities non-increasing in distance, and
+    // the realised perplexity hits the target.
+    prop::check("perplexity calibration", &vec_f32(8, 64, 0.01, 25.0), |d2s| {
+        let mut d2s = d2s.clone();
+        d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mu = (d2s.len() as f64 / 3.0).max(2.0);
+        let (_beta, probs) = perplexity::calibrate_row(&d2s, mu);
+        let sum: f64 = probs.iter().map(|&p| p as f64).sum();
+        if (sum - 1.0).abs() > 1e-4 {
+            return Err(format!("sum {sum}"));
+        }
+        for w in probs.windows(2) {
+            if w[0] < w[1] - 1e-6 {
+                return Err("probs not non-increasing".into());
+            }
+        }
+        let h: f64 = probs
+            .iter()
+            .filter(|&&p| p > 0.0)
+            .map(|&p| -(p as f64) * (p as f64).ln())
+            .sum();
+        let perp = h.exp();
+        if (perp - mu).abs() > 0.05 * mu {
+            return Err(format!("perplexity {perp} != {mu}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_joint_p_symmetric_normalised() {
+    prop::check("joint P invariants", &usize_in(20, 150), |&n| {
+        let data = dataset_from(n as u64 + 1000, n, 5);
+        let k = 10.min(n - 1);
+        let g = bruteforce::knn(&data, k);
+        let p = perplexity::joint_p(&g, (k as f32 / 3.0).max(2.0));
+        let total = p.csr.sum();
+        if (total - 1.0).abs() > 1e-4 {
+            return Err(format!("ΣP = {total}"));
+        }
+        // Symmetry spot checks.
+        let get = |i: usize, j: usize| -> f32 {
+            let (cs, vs) = p.csr.row(i);
+            cs.iter().zip(vs).find(|(c, _)| **c == j as u32).map(|(_, v)| *v).unwrap_or(0.0)
+        };
+        for i in (0..n).step_by(1 + n / 5) {
+            let (cs, _) = p.csr.row(i);
+            for &j in cs.iter().take(3) {
+                let a = get(i, j as usize);
+                let b = get(j as usize, i);
+                if (a - b).abs() > 1e-7 {
+                    return Err(format!("P[{i}][{j}]={a} != P[{j}][{i}]={b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_field_repulsion_tracks_exact() {
+    // At high resolution the field numerator must approximate the exact
+    // repulsion numerator to a few percent of its magnitude scale.
+    prop::check("field ≈ exact repulsion", &points2d(5, 80, 3.0), |pts| {
+        let n = pts.len() / 2;
+        let mut exact = vec![0.0f32; 2 * n];
+        let z_exact = ExactRepulsion.compute(pts, &mut exact);
+        let mut rep = fieldcpu::FieldRepulsion { min_grid: 256, max_grid: 256, ..Default::default() };
+        let mut num = vec![0.0f32; 2 * n];
+        let z = rep.compute(pts, &mut num);
+        if (z - z_exact).abs() > 0.05 * z_exact.max(1.0) {
+            return Err(format!("Z {z} vs {z_exact}"));
+        }
+        let scale = exact.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-3);
+        for i in 0..2 * n {
+            if (num[i] - exact[i]).abs() > 0.08 * scale {
+                return Err(format!("num[{i}] {} vs {} (scale {scale})", num[i], exact[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kbest_matches_sort() {
+    prop::check("KBest == full sort", &vec_f32(1, 200, 0.0, 100.0), |ds| {
+        let k = 7.min(ds.len());
+        let mut kb = KBest::new(k);
+        for (i, &d) in ds.iter().enumerate() {
+            kb.push(d, i as u32);
+        }
+        let got: Vec<f32> = kb.into_sorted().into_iter().map(|(d, _)| d).collect();
+        let mut want = ds.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.truncate(k);
+        for (g, w) in got.iter().zip(&want) {
+            if (g - w).abs() > 1e-9 {
+                return Err(format!("{got:?} != {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_policy_total_switches_bounded() {
+    // Under any diameter walk, hysteresis must keep the switch count well
+    // below the number of observations (no thrash).
+    prop::check("grid policy no-thrash", &vec_f32(50, 200, 5.0, 120.0), |diams| {
+        let mut policy = GridPolicy::new(0.5, vec![32, 64, 128, 256]);
+        let mut switches = 0;
+        let mut last = 0usize;
+        // Smooth the walk like a real optimisation (diameter drifts).
+        let mut d = diams[0];
+        for &target in diams {
+            d = 0.9 * d + 0.1 * target;
+            let g = policy.choose(d);
+            if last != 0 && g != last {
+                switches += 1;
+            }
+            last = g;
+        }
+        if switches > diams.len() / 5 {
+            return Err(format!("{switches} switches in {} steps", diams.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gd_state_padding_free_determinism() {
+    // Engine determinism: same seed -> identical embedding.
+    prop::check("engine determinism", &usize_in(30, 120), |&n| {
+        let data = dataset_from(n as u64, n, 4);
+        let k = 8.min(n - 1);
+        let g = bruteforce::knn(&data, k);
+        let p = perplexity::joint_p(&g, 4.0);
+        let params = gpgpu_sne::embed::OptParams {
+            iters: 30,
+            exaggeration_iters: 10,
+            seed: 5,
+            ..Default::default()
+        };
+        let a = gpgpu_sne::embed::by_name("bh-0.5", None).unwrap().run(&p, &params, None).unwrap();
+        let b = gpgpu_sne::embed::by_name("bh-0.5", None).unwrap().run(&p, &params, None).unwrap();
+        if a != b {
+            return Err("same-seed runs differ".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,109 @@
+//! End-to-end numeric round-trip: the Rust runtime executes the AOT
+//! artifact on the exact problem `python/compile/aot.py selfcheck_case`
+//! solved at build time, and the outputs must match the JAX results.
+//!
+//! Skips (loudly) when `make artifacts` has not been run.
+
+use gpgpu_sne::runtime::{self, Runtime, StepState};
+use gpgpu_sne::util::json;
+
+fn f32s(v: &json::Json, key: &str) -> Vec<f32> {
+    v.get(key)
+        .and_then(json::Json::as_arr)
+        .unwrap_or_else(|| panic!("selfcheck missing '{key}'"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn step_matches_jax_selfcheck() {
+    let Some(dir) = runtime::locate_artifacts() else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        return;
+    };
+    let check_path = std::path::Path::new(&dir).join("selfcheck.json");
+    let text = std::fs::read_to_string(&check_path).expect("selfcheck.json");
+    let v = json::parse(&text).unwrap();
+
+    let n = v.num_field("n").unwrap() as usize;
+    let k = v.num_field("k").unwrap() as usize;
+    let grid = v.num_field("grid").unwrap() as usize;
+    let n_real = v.num_field("n_real").unwrap() as usize;
+    let kk = v.num_field("kk").unwrap() as usize;
+    let eta = v.num_field("eta").unwrap() as f32;
+    let momentum = v.num_field("momentum").unwrap() as f32;
+    let exaggeration = v.num_field("exaggeration").unwrap() as f32;
+    let y_init = f32s(&v, "y_init");
+    assert_eq!(y_init.len(), 2 * n_real);
+
+    // Reconstruct the selfcheck inputs exactly as aot.selfcheck_case does.
+    let mut y = vec![0.0f32; 2 * n];
+    y[..2 * n_real].copy_from_slice(&y_init);
+    let mut mask = vec![0.0f32; n];
+    mask[..n_real].fill(1.0);
+    let mut nbr_idx = vec![0i32; n * k];
+    let mut nbr_p = vec![0.0f32; n * k];
+    for i in 0..n_real {
+        for j in 0..kk {
+            nbr_idx[i * k + j] = ((i + j + 1) % n_real) as i32;
+            nbr_p[i * k + j] = 1.0 / (n_real * kk) as f32;
+        }
+    }
+
+    let rt = Runtime::new(&dir).expect("runtime");
+    let exe = rt.step_executable(n, grid).expect("step executable");
+    let statics = rt.upload_static(&mask, &nbr_idx, &nbr_p, k).expect("upload");
+    let mut state = StepState::new(y, &mask);
+    let out = rt
+        .run_step(&exe, &mut state, &statics, eta, momentum, exaggeration)
+        .expect("run_step");
+
+    let zhat_exp = v.num_field("zhat").unwrap() as f32;
+    let kl_exp = v.num_field("kl").unwrap() as f32;
+    let bbox_exp = f32s(&v, "bbox");
+    let y_exp = f32s(&v, "y_out");
+    let vel_exp = f32s(&v, "vel_out");
+    let gains_exp = f32s(&v, "gains_out");
+
+    let rel = |a: f32, b: f32| (a - b).abs() / b.abs().max(1e-3);
+    assert!(rel(out.zhat, zhat_exp) < 1e-4, "zhat {} vs {}", out.zhat, zhat_exp);
+    assert!(rel(out.kl, kl_exp) < 1e-4, "kl {} vs {}", out.kl, kl_exp);
+    for i in 0..4 {
+        assert!(
+            (out.bbox[i] - bbox_exp[i]).abs() < 1e-2 * bbox_exp[i].abs().max(1.0),
+            "bbox[{i}] {} vs {}",
+            out.bbox[i],
+            bbox_exp[i]
+        );
+    }
+    let max_err = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    };
+    let scale = y_exp.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+    assert!(
+        max_err(&state.y[..2 * n_real], &y_exp) < 1e-3 * scale,
+        "y mismatch: {}",
+        max_err(&state.y[..2 * n_real], &y_exp)
+    );
+    assert!(max_err(&state.vel[..2 * n_real], &vel_exp) < 1e-3 * scale);
+    assert!(max_err(&state.gains[..2 * n_real], &gains_exp) < 1e-5);
+
+    // Padding must be inert: phantom rows stay exactly zero.
+    assert!(state.y[2 * n_real..].iter().all(|&v| v == 0.0), "padding moved");
+    assert!(state.vel[2 * n_real..].iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(dir) = runtime::locate_artifacts() else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let name = rt.manifest.artifacts[0].name.clone();
+    let a = rt.executable(&name).unwrap();
+    let b = rt.executable(&name).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+    assert_eq!(rt.compiled_count(), 1);
+}

@@ -1,0 +1,119 @@
+//! End-to-end TCP serve-mode test: bind an ephemeral port, speak the
+//! line protocol over a real socket, exercise submit/status/snapshot/
+//! stop/wait/quit.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use gpgpu_sne::coordinator::{protocol, EmbeddingService};
+use gpgpu_sne::util::json::{self, Json};
+
+fn start_server() -> std::net::SocketAddr {
+    let svc = Arc::new(EmbeddingService::new(None, 2));
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = protocol::serve(svc, "127.0.0.1:0", move |addr| {
+            let _ = tx.send(addr);
+        });
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(10)).expect("server bind")
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(60))).unwrap();
+        Self { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response '{line}': {e}"))
+    }
+}
+
+#[test]
+fn full_session_over_tcp() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+
+    let v = c.call(
+        r#"{"cmd":"submit","dataset":"gaussians","n":150,"engine":"bh-0.5","iters":60,"perplexity":10,"knn":"brute","snapshot_every":10}"#,
+    );
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    let id = v.num_field("job").unwrap() as u64;
+
+    let v = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    assert_eq!(v.num_field("iters").unwrap() as usize, 60);
+    assert!(v.num_field("kl").unwrap().is_finite());
+    assert!(v.num_field("optimize_s").unwrap() > 0.0);
+
+    let v = c.call(&format!(r#"{{"cmd":"snapshot","job":{id}}}"#));
+    assert_eq!(v.get("positions").unwrap().as_arr().unwrap().len(), 300);
+
+    let v = c.call(r#"{"cmd":"list"}"#);
+    assert_eq!(v.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+
+    let v = c.call(r#"{"cmd":"quit"}"#);
+    assert_eq!(v.get("bye"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn two_clients_share_the_service() {
+    let addr = start_server();
+    let mut a = Client::connect(addr);
+    let mut b = Client::connect(addr);
+
+    let v = a.call(
+        r#"{"cmd":"submit","dataset":"gaussians","n":100,"engine":"bh-0.5","iters":30,"perplexity":8,"knn":"brute"}"#,
+    );
+    let id = v.num_field("job").unwrap() as u64;
+    // Client B can see and wait on client A's job.
+    let v = b.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+    let v = b.call(&format!(r#"{{"cmd":"status","job":{id}}}"#));
+    assert_eq!(v.str_field("phase"), Some("done"));
+}
+
+#[test]
+fn stop_over_tcp_terminates_early() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+    let v = c.call(
+        r#"{"cmd":"submit","dataset":"gaussians","n":200,"engine":"bh-0.5","iters":100000,"perplexity":10,"knn":"brute","snapshot_every":1}"#,
+    );
+    let id = v.num_field("job").unwrap() as u64;
+    // Poll until it's optimising, then stop.
+    loop {
+        let v = c.call(&format!(r#"{{"cmd":"status","job":{id}}}"#));
+        if v.str_field("phase").unwrap_or("").starts_with("optimizing") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let v = c.call(&format!(r#"{{"cmd":"stop","job":{id}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+    let v = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+    assert_eq!(v.get("stopped_early"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn malformed_lines_keep_the_connection_alive() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+    let v = c.call("this is not json");
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    // Connection still usable.
+    let v = c.call(r#"{"cmd":"list"}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+}
