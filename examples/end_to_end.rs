@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     if include_exact {
         engines.push("exact");
     }
-    engines.extend(["bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu"]);
+    engines.extend(["bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu", "fieldfft"]);
     if rt.is_some() {
         engines.push("gpgpu");
     }

@@ -19,8 +19,11 @@ use gpgpu_sne::coordinator::KnnMethod;
 use gpgpu_sne::embed::common::Repulsion;
 use gpgpu_sne::embed::exact::ExactRepulsion;
 use gpgpu_sne::embed::fieldcpu::{compute_fields, compute_fields_splat, grid_placement, FieldCpu, FieldRepulsion};
+use gpgpu_sne::embed::fieldfft::FieldFft;
 use gpgpu_sne::embed::gpgpu::GridPolicy;
 use gpgpu_sne::embed::{Engine, OptParams};
+use gpgpu_sne::field::conv::FftBackend;
+use gpgpu_sne::field::{FieldBackend, Placement};
 use gpgpu_sne::hd::{bruteforce, kdforest, perplexity};
 use gpgpu_sne::metrics::kl;
 use gpgpu_sne::runtime::{self, Runtime};
@@ -52,26 +55,43 @@ fn main() -> anyhow::Result<()> {
     ExactRepulsion.compute(&y_probe, &mut exact_num);
     let scale = exact_num.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
     for grid in [16usize, 32, 64, 128, 256] {
-        let mut engine = FieldCpu {
-            rep: FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() },
-        };
-        let t = std::time::Instant::now();
-        let y = engine.run(&p, &opt, None)?;
-        let secs = t.elapsed().as_secs_f64();
-        let kl_v = kl::kl_divergence_exact(&p, &y);
-        let mut num = vec![0.0f32; 2 * n];
-        let mut fr = FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() };
-        fr.compute(&y_probe, &mut num);
-        let err = num
-            .iter()
-            .zip(&exact_num)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f32, f32::max)
-            / scale;
-        rep.row(
-            &format!("G={grid}"),
-            vec![format!("{kl_v:.4}"), format!("{secs:.2}s"), format!("{:.1}%", err * 100.0)],
-        );
+        // Same fixed-grid sweep for both field backends: gather (fieldcpu)
+        // and FFT convolution (fieldfft) — the accuracy cost of the O(N)
+        // formulation rides along with the ρ ablation.
+        for fft in [false, true] {
+            let make_rep = || {
+                if fft {
+                    FieldRepulsion {
+                        min_grid: grid,
+                        max_grid: grid,
+                        ..FieldRepulsion::with_backend(Box::new(FftBackend::new()))
+                    }
+                } else {
+                    FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() }
+                }
+            };
+            let t = std::time::Instant::now();
+            let y = if fft {
+                FieldFft { rep: make_rep() }.run(&p, &opt, None)?
+            } else {
+                FieldCpu { rep: make_rep() }.run(&p, &opt, None)?
+            };
+            let secs = t.elapsed().as_secs_f64();
+            let kl_v = kl::kl_divergence_exact(&p, &y);
+            let mut num = vec![0.0f32; 2 * n];
+            let mut fr = make_rep();
+            fr.compute(&y_probe, &mut num);
+            let err = num
+                .iter()
+                .zip(&exact_num)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+                / scale;
+            rep.row(
+                &format!("G={grid}{}", if fft { " fft" } else { "" }),
+                vec![format!("{kl_v:.4}"), format!("{secs:.2}s"), format!("{:.1}%", err * 100.0)],
+            );
+        }
     }
     rep.print();
     rep.write_csv("ablation_grid.csv")?;
@@ -92,6 +112,25 @@ fn main() -> anyhow::Result<()> {
     .median();
     rep.row("gather (unbounded)", vec![format!("{:.1}ms", gather_t * 1e3), "0.0%".into()]);
     let s_full: f64 = full[..grid * grid].iter().map(|&v| v as f64).sum();
+    // The FFT backend: unbounded support like the gather, O(N + G² log G)
+    // like the splat — the best of both axes of this ablation.
+    {
+        let mut backend = FftBackend::new();
+        let placement = Placement { origin, pixel };
+        let t = measure(warmup.max(1), iters, || {
+            let _ = backend.compute(&y, placement, grid);
+        })
+        .median();
+        let tex = backend.compute(&y, placement, grid);
+        let s_fft: f64 = tex.tex[..grid * grid].iter().map(|&v| v as f64).sum();
+        rep.row(
+            "fft conv (unbounded)",
+            vec![
+                format!("{:.1}ms", t * 1e3),
+                format!("{:.2}%", (1.0 - s_fft / s_full).abs() * 100.0),
+            ],
+        );
+    }
     for support in [2.0f32, 5.0, 15.0] {
         let t = measure(warmup, iters, || {
             let _ = compute_fields_splat(&y, origin, pixel, grid, support);

@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let nnp_sample = 1000;
 
     let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
-    let mut engines = vec!["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu"];
+    let mut engines = vec!["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu", "fieldfft"];
     if rt.is_some() {
         engines.push("gpgpu");
     }

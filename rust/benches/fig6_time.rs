@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     for dataset in ["mnist", "wikiword", "word2vec"] {
         let mut report = Report::new(
             &format!("Fig6 time — {dataset} (1000-iter equivalent)"),
-            &["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5*", "fieldcpu", "gpgpu"],
+            &["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5*", "fieldcpu", "fieldfft", "gpgpu"],
         );
         for &n in &ns {
             let ds = gpgpu_sne::data::by_name(dataset, n, 3)?;
@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
             // t-SNE-CUDA: modelled from the measured BH θ=0.5 time.
             let cuda = tsnecuda::TsneCudaSim::modelled_time(bh05_time.unwrap());
             cells.push(format!("{}*", fmt_secs(cuda)));
-            for (name, runtime) in [("fieldcpu", None), ("gpgpu", rt.clone())] {
+            for (name, runtime) in [("fieldcpu", None), ("fieldfft", None), ("gpgpu", rt.clone())] {
                 let over_capacity = name == "gpgpu"
                     && runtime.as_ref().map(|r| n > r.manifest.max_bucket()).unwrap_or(true);
                 if over_capacity || (name == "gpgpu" && runtime.is_none()) {

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
     // The paper's Fig. 7 engine set.
-    let mut engines = vec!["bh-0.5", "tsne-cuda-0.0", "tsne-cuda-0.5", "fieldcpu"];
+    let mut engines = vec!["bh-0.5", "tsne-cuda-0.0", "tsne-cuda-0.5", "fieldcpu", "fieldfft"];
     if rt.is_some() {
         engines.push("gpgpu");
     }

@@ -1,8 +1,13 @@
 //! Micro-benchmarks of the hot paths (EXPERIMENTS.md §Perf): field
-//! evaluation (the L1 kernel's CPU mirror, by grid and N), the device
-//! step (by grid, measuring the full PJRT execute round-trip and its
-//! host-boundary overhead), the repulsion baselines, attractive pass,
-//! and the kNN structures.
+//! evaluation (gather mirror of the L1 kernel vs the FFT backend, by grid
+//! and N), the device step (by grid, measuring the full PJRT execute
+//! round-trip and its host-boundary overhead), the repulsion baselines,
+//! attractive pass, and the kNN structures.
+//!
+//! Besides the human-readable tables/CSVs this emits `BENCH_micro.json`
+//! (in the package root): per-engine ns/iter at fixed (N, G) plus the
+//! field-stage head-to-head at N=50 000, G=256, so the perf trajectory is
+//! machine-trackable across PRs.
 //!
 //!     cargo bench --bench micro_hotpath [-- --quick]
 
@@ -10,13 +15,16 @@ use std::sync::Arc;
 
 use gpgpu_sne::coordinator::pipeline::compute_knn;
 use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::embed::bh::BhRepulsion;
 use gpgpu_sne::embed::common::Repulsion;
 use gpgpu_sne::embed::exact::ExactRepulsion;
-use gpgpu_sne::embed::bh::BhRepulsion;
 use gpgpu_sne::embed::fieldcpu::{compute_fields, grid_placement, FieldRepulsion};
+use gpgpu_sne::field::conv::FftBackend;
+use gpgpu_sne::field::{FieldBackend, Placement};
 use gpgpu_sne::hd::{kdforest, perplexity, vptree};
 use gpgpu_sne::runtime::{self, Runtime, StepState};
 use gpgpu_sne::util::bench::{measure, quick_mode, Report};
+use gpgpu_sne::util::json::Json;
 use gpgpu_sne::util::rng::Rng;
 
 fn random_points(n: usize, seed: u64, spread: f32) -> Vec<f32> {
@@ -27,37 +35,123 @@ fn random_points(n: usize, seed: u64, spread: f32) -> Vec<f32> {
 fn main() -> anyhow::Result<()> {
     let quick = quick_mode();
     let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+    let mut json_sections: Vec<(&str, Json)> = vec![
+        ("bench", Json::Str("micro_hotpath".into())),
+        ("quick", Json::Bool(quick)),
+    ];
 
-    // --- Field evaluation: grid × N scaling (the paper's O(N·ρ²) claim:
-    // cost linear in N at fixed grid; quadratic in grid at fixed N).
-    let mut rep = Report::new("fields eval (CPU mirror of the L1 kernel)", &["median", "per-point"]);
-    for &(n, grid) in &[(1000usize, 64usize), (1000, 128), (1000, 256), (4000, 128), (16_000, 128)] {
+    // --- Field evaluation: grid × N scaling. Gather is the paper's
+    // O(N·G²) compute-shader mirror; fft is the O(N + G² log G) backend.
+    let mut rep = Report::new(
+        "fields eval (gather mirror of the L1 kernel vs FFT backend)",
+        &["gather", "fft", "speedup"],
+    );
+    let mut fft_backend = FftBackend::new();
+    for &(n, grid) in &[(1000usize, 64usize), (1000, 128), (1000, 256), (4000, 128), (16_000, 128)]
+    {
         let y = random_points(n, 1, 10.0);
         let (origin, pixel) = grid_placement([-30.0, -30.0, 30.0, 30.0], grid);
         let st = measure(warmup, iters, || {
             let _ = compute_fields(&y, origin, pixel, grid);
         });
+        let placement = Placement { origin, pixel };
+        let stf = measure(warmup, iters, || {
+            let _ = fft_backend.compute(&y, placement, grid);
+        });
         rep.row(
             &format!("n={n} G={grid}"),
             vec![
                 format!("{:.2}ms", st.median() * 1e3),
-                format!("{:.2}µs", st.median() * 1e6 / n as f64),
+                format!("{:.2}ms", stf.median() * 1e3),
+                format!("{:.1}x", st.median() / stf.median()),
             ],
         );
     }
     rep.print();
     rep.write_csv("micro_fields.csv")?;
 
-    // --- Repulsion approaches at fixed n.
+    // --- Field stage head-to-head at production scale (the acceptance
+    // point for the fieldfft engine): N=50 000, G=256.
+    {
+        let n = 50_000usize;
+        let grid = 256usize;
+        let y = random_points(n, 9, 15.0);
+        let (origin, pixel) = grid_placement([-60.0, -60.0, 60.0, 60.0], grid);
+        let placement = Placement { origin, pixel };
+        let (w, it) = if quick { (0, 1) } else { (1, 3) };
+        let gather_t = measure(w, it, || {
+            let _ = compute_fields(&y, origin, pixel, grid);
+        })
+        .median();
+        let mut backend = FftBackend::new();
+        // One warmup always: the first call builds the kernel spectra that
+        // every later iteration reuses (that is the steady-state cost).
+        let fft_t = measure(w.max(1), it.max(2), || {
+            let _ = backend.compute(&y, placement, grid);
+        })
+        .median();
+        let speedup = gather_t / fft_t;
+        let mut rep = Report::new(
+            &format!("field stage @ N={n}, G={grid} (steady state)"),
+            &["median", "per-point", "vs gather"],
+        );
+        rep.row(
+            "fieldcpu (gather)",
+            vec![
+                format!("{:.1}ms", gather_t * 1e3),
+                format!("{:.2}µs", gather_t * 1e6 / n as f64),
+                "1.0x".into(),
+            ],
+        );
+        rep.row(
+            "fieldfft (splat+FFT)",
+            vec![
+                format!("{:.1}ms", fft_t * 1e3),
+                format!("{:.2}µs", fft_t * 1e6 / n as f64),
+                format!("{speedup:.1}x"),
+            ],
+        );
+        rep.print();
+        rep.write_csv("micro_field_stage.csv")?;
+        json_sections.push((
+            "field_stage",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("grid", Json::Num(grid as f64)),
+                (
+                    "engines",
+                    Json::Arr(vec![
+                        Json::obj(vec![
+                            ("name", Json::Str("fieldcpu".into())),
+                            ("ns_per_iter", Json::Num(gather_t * 1e9)),
+                        ]),
+                        Json::obj(vec![
+                            ("name", Json::Str("fieldfft".into())),
+                            ("ns_per_iter", Json::Num(fft_t * 1e9)),
+                        ]),
+                    ]),
+                ),
+                ("speedup_fieldfft_vs_fieldcpu", Json::Num(speedup)),
+            ]),
+        ));
+    }
+
+    // --- Repulsion approaches at fixed n (per-engine ns/iter).
     let n = if quick { 2000 } else { 8000 };
+    let grid_fixed = 256usize;
     let y = random_points(n, 2, 20.0);
     let mut num = vec![0.0f32; 2 * n];
     let mut rep = Report::new(&format!("repulsion variants (n={n})"), &["median", "vs exact"]);
+    let mut engine_rows: Vec<Json> = Vec::new();
     let exact_t = measure(warmup, iters, || {
         ExactRepulsion.compute(&y, &mut num);
     })
     .median();
     rep.row("exact O(N²)", vec![format!("{:.1}ms", exact_t * 1e3), "1.0x".into()]);
+    engine_rows.push(Json::obj(vec![
+        ("name", Json::Str("exact".into())),
+        ("ns_per_iter", Json::Num(exact_t * 1e9)),
+    ]));
     for theta in [0.1f32, 0.5] {
         let t = measure(warmup, iters, || {
             BhRepulsion { theta }.compute(&y, &mut num);
@@ -67,20 +161,44 @@ fn main() -> anyhow::Result<()> {
             &format!("BH θ={theta}"),
             vec![format!("{:.1}ms", t * 1e3), format!("{:.1}x", exact_t / t)],
         );
+        engine_rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("bh-{theta}"))),
+            ("ns_per_iter", Json::Num(t * 1e9)),
+        ]));
     }
-    for grid in [128usize, 256] {
-        let mut fr = FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() };
+    for (label, fft) in [("fieldcpu", false), ("fieldfft", true)] {
+        let mut fr = if fft {
+            FieldRepulsion {
+                min_grid: grid_fixed,
+                max_grid: grid_fixed,
+                ..FieldRepulsion::with_backend(Box::new(FftBackend::new()))
+            }
+        } else {
+            FieldRepulsion { min_grid: grid_fixed, max_grid: grid_fixed, ..Default::default() }
+        };
         let t = measure(warmup, iters, || {
             fr.compute(&y, &mut num);
         })
         .median();
         rep.row(
-            &format!("field G={grid}"),
+            &format!("{label} G={grid_fixed}"),
             vec![format!("{:.1}ms", t * 1e3), format!("{:.1}x", exact_t / t)],
         );
+        engine_rows.push(Json::obj(vec![
+            ("name", Json::Str(label.into())),
+            ("ns_per_iter", Json::Num(t * 1e9)),
+        ]));
     }
     rep.print();
     rep.write_csv("micro_repulsion.csv")?;
+    json_sections.push((
+        "repulsion",
+        Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("grid", Json::Num(grid_fixed as f64)),
+            ("engines", Json::Arr(engine_rows)),
+        ]),
+    ));
 
     // --- Device step: per-grid execute cost + host-boundary overhead.
     if let Some(dir) = runtime::locate_artifacts() {
@@ -165,5 +283,10 @@ fn main() -> anyhow::Result<()> {
     rep.row("perplexity+P build", vec![format!("{:.2}ms", pt.median() * 1e3)]);
     rep.print();
     rep.write_csv("micro_sparse.csv")?;
+
+    // --- Machine-readable summary for cross-PR tracking.
+    let json = Json::obj(json_sections);
+    std::fs::write("BENCH_micro.json", format!("{json}\n"))?;
+    eprintln!("  [json] wrote BENCH_micro.json");
     Ok(())
 }

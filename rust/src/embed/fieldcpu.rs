@@ -4,141 +4,23 @@
 //! with the paper's adaptive-resolution policy ρ = diameter/G applied
 //! continuously rather than over a discrete artifact set.
 //!
-//! Serves three roles: the test oracle the GPGPU engine is validated
-//! against, the no-artifact fallback engine, and the reference point for
-//! the ablation benches (grid resolution, splat-vs-gather).
+//! Field-texture computation itself lives in `crate::field` behind the
+//! [`FieldBackend`] trait; this module owns the *repulsion adapter*
+//! (bbox → grid choice → backend → bilinear queries) shared by every
+//! field engine, plus the exact-gather engine `fieldcpu`. The historical
+//! entry points (`compute_fields`, `grid_placement`, …) are re-exported
+//! so existing benches/examples keep working.
 
 use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams, Repulsion};
+use crate::field::gather::GatherBackend;
+use crate::field::{bbox_of, FieldBackend, Placement};
 use crate::hd::SparseP;
-use crate::util::parallel;
 
-/// Margin in pixels around the bbox (matches `model.GRID_MARGIN_PX`).
-const GRID_MARGIN_PX: f32 = 1.5;
+pub use crate::field::gather::{compute_fields, compute_fields_splat};
+pub use crate::field::{bilinear, grid_placement, FieldTexture, GRID_MARGIN_PX};
 
-/// The field texture: S, V_x, V_y on a G×G grid plus its placement.
-pub struct FieldTexture {
-    pub grid: usize,
-    pub origin: [f32; 2],
-    pub pixel: f32,
-    /// Channel-major `(3, G, G)`: S, Vx, Vy.
-    pub tex: Vec<f32>,
-}
-
-/// Square grid placement covering `bbox` with margin (mirrors
-/// `python/compile/model.py::grid_placement`).
-pub fn grid_placement(bbox: [f32; 4], grid: usize) -> ([f32; 2], f32) {
-    let g = grid as f32;
-    let span = (bbox[2] - bbox[0]).max(bbox[3] - bbox[1]).max(1e-3);
-    let pixel = span / (g - 2.0 * GRID_MARGIN_PX);
-    let cx = 0.5 * (bbox[0] + bbox[2]);
-    let cy = 0.5 * (bbox[1] + bbox[3]);
-    let half = 0.5 * g * pixel;
-    ([cx - half, cy - half], pixel)
-}
-
-/// Evaluate the fields exactly at every pixel centre (Eq. 10/11), i.e.
-/// the compute-shader / gather formulation with unbounded support.
-/// Threaded over pixel rows.
-pub fn compute_fields(y: &[f32], origin: [f32; 2], pixel: f32, grid: usize) -> Vec<f32> {
-    let n = y.len() / 2;
-    let mut tex = vec![0.0f32; 3 * grid * grid];
-    let plane = grid * grid;
-    {
-        let slots = parallel::SyncSlice::new(&mut tex);
-        parallel::par_chunks(grid, 4, |rows| {
-            for r in rows {
-                let py = origin[1] + (r as f32 + 0.5) * pixel;
-                for c in 0..grid {
-                    let px = origin[0] + (c as f32 + 0.5) * pixel;
-                    let (mut s, mut vx, mut vy) = (0.0f32, 0.0f32, 0.0f32);
-                    for i in 0..n {
-                        let dx = y[2 * i] - px;
-                        let dy = y[2 * i + 1] - py;
-                        let t = 1.0 / (1.0 + dx * dx + dy * dy);
-                        s += t;
-                        let t2 = t * t;
-                        vx += t2 * dx;
-                        vy += t2 * dy;
-                    }
-                    unsafe {
-                        *slots.get_mut(r * grid + c) = s;
-                        *slots.get_mut(plane + r * grid + c) = vx;
-                        *slots.get_mut(2 * plane + r * grid + c) = vy;
-                    }
-                }
-            }
-        });
-    }
-    tex
-}
-
-/// Bounded-support splat-style field accumulation — the paper's §5.1.2
-/// rasterisation variant: each point only touches pixels within `support`
-/// embedding-units (the texture-quad footprint). Kept for the ablation
-/// bench (accuracy/speed vs the unbounded gather above).
-pub fn compute_fields_splat(
-    y: &[f32],
-    origin: [f32; 2],
-    pixel: f32,
-    grid: usize,
-    support: f32,
-) -> Vec<f32> {
-    let n = y.len() / 2;
-    let mut tex = vec![0.0f32; 3 * grid * grid];
-    let plane = grid * grid;
-    let rad_px = (support / pixel).ceil() as isize;
-    for i in 0..n {
-        let (yx, yy) = (y[2 * i], y[2 * i + 1]);
-        let ci = (((yy - origin[1]) / pixel) - 0.5).round() as isize;
-        let cj = (((yx - origin[0]) / pixel) - 0.5).round() as isize;
-        for r in (ci - rad_px).max(0)..=(ci + rad_px).min(grid as isize - 1) {
-            let py = origin[1] + (r as f32 + 0.5) * pixel;
-            for c in (cj - rad_px).max(0)..=(cj + rad_px).min(grid as isize - 1) {
-                let px = origin[0] + (c as f32 + 0.5) * pixel;
-                let dx = yx - px;
-                let dy = yy - py;
-                let d2 = dx * dx + dy * dy;
-                if d2 > support * support {
-                    continue;
-                }
-                let t = 1.0 / (1.0 + d2);
-                let idx = (r as usize) * grid + c as usize;
-                tex[idx] += t;
-                let t2 = t * t;
-                tex[plane + idx] += t2 * dx;
-                tex[2 * plane + idx] += t2 * dy;
-            }
-        }
-    }
-    tex
-}
-
-/// Bilinear sample of the 3-channel texture at `(x, y)` (mirrors
-/// `ref.bilinear_ref`): returns (S, Vx, Vy).
-#[inline]
-pub fn bilinear(tex: &[f32], grid: usize, origin: [f32; 2], pixel: f32, x: f32, y: f32) -> [f32; 3] {
-    let plane = grid * grid;
-    let u = ((x - origin[0]) / pixel - 0.5).clamp(0.0, grid as f32 - 1.000001);
-    let v = ((y - origin[1]) / pixel - 0.5).clamp(0.0, grid as f32 - 1.000001);
-    let j0 = (u.floor() as usize).min(grid - 2);
-    let i0 = (v.floor() as usize).min(grid - 2);
-    let fu = u - j0 as f32;
-    let fv = v - i0 as f32;
-    let mut out = [0.0f32; 3];
-    for (ch, o) in out.iter_mut().enumerate() {
-        let base = ch * plane;
-        let f00 = tex[base + i0 * grid + j0];
-        let f01 = tex[base + i0 * grid + j0 + 1];
-        let f10 = tex[base + (i0 + 1) * grid + j0];
-        let f11 = tex[base + (i0 + 1) * grid + j0 + 1];
-        let top = f00 * (1.0 - fu) + f01 * fu;
-        let bot = f10 * (1.0 - fu) + f11 * fu;
-        *o = top * (1.0 - fv) + bot * fv;
-    }
-    out
-}
-
-/// Field-based repulsion with the continuous adaptive-ρ policy.
+/// Field-based repulsion with the continuous adaptive-ρ policy, generic
+/// over the texture backend (exact gather, FFT convolution, …).
 pub struct FieldRepulsion {
     /// Embedding-units per pixel (the paper's ρ = 0.5 default).
     pub rho: f32,
@@ -146,15 +28,21 @@ pub struct FieldRepulsion {
     pub max_grid: usize,
     /// Grid size used on the last iteration (observable for tests/benches).
     pub last_grid: usize,
+    /// How the texture is computed (default: exact gather).
+    pub backend: Box<dyn FieldBackend + Send>,
 }
 
 impl Default for FieldRepulsion {
     fn default() -> Self {
-        Self { rho: 0.5, min_grid: 32, max_grid: 512, last_grid: 0 }
+        Self::with_backend(Box::new(GatherBackend))
     }
 }
 
 impl FieldRepulsion {
+    pub fn with_backend(backend: Box<dyn FieldBackend + Send>) -> Self {
+        Self { rho: 0.5, min_grid: 32, max_grid: 512, last_grid: 0, backend }
+    }
+
     /// The ρ policy: G ≈ diameter / ρ, clamped.
     pub fn choose_grid(&self, diameter: f32) -> usize {
         let g = (diameter / self.rho).ceil() as usize;
@@ -165,24 +53,18 @@ impl FieldRepulsion {
 impl Repulsion for FieldRepulsion {
     fn compute(&mut self, y: &[f32], num: &mut [f32]) -> f64 {
         let n = y.len() / 2;
-        let mut bbox = [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
-        for i in 0..n {
-            bbox[0] = bbox[0].min(y[2 * i]);
-            bbox[1] = bbox[1].min(y[2 * i + 1]);
-            bbox[2] = bbox[2].max(y[2 * i]);
-            bbox[3] = bbox[3].max(y[2 * i + 1]);
-        }
+        let bbox = bbox_of(y);
         let diameter = (bbox[2] - bbox[0]).max(bbox[3] - bbox[1]);
         let grid = self.choose_grid(diameter);
         self.last_grid = grid;
         let (origin, pixel) = grid_placement(bbox, grid);
-        let tex = compute_fields(y, origin, pixel, grid);
+        let tex = self.backend.compute(y, Placement { origin, pixel }, grid);
         // Query: Ẑ = Σ (S(y_i) − 1). The gradient's repulsion numerator is
         // Σ_j t²(y_i − y_j) = −V(y_i) (Eq. 11 defines V with y_j − p; the
         // paper's Eq. 14 sign is an erratum — see model.py).
         let mut z = 0.0f64;
         for i in 0..n {
-            let svv = bilinear(&tex, grid, origin, pixel, y[2 * i], y[2 * i + 1]);
+            let svv = tex.sample(y[2 * i], y[2 * i + 1]);
             z += (svv[0] - 1.0) as f64;
             num[2 * i] = -svv[1];
             num[2 * i + 1] = -svv[2];
@@ -191,7 +73,8 @@ impl Repulsion for FieldRepulsion {
     }
 }
 
-/// The field-based CPU engine (the paper's algorithm, host-side).
+/// The field-based CPU engine (the paper's algorithm, host-side, exact
+/// gather fields).
 #[derive(Default)]
 pub struct FieldCpu {
     pub rep: FieldRepulsion,
@@ -249,43 +132,6 @@ mod tests {
     }
 
     #[test]
-    fn splat_with_wide_support_matches_gather() {
-        let n = 60;
-        let y = random_y(n, 2, 1.0);
-        let bbox = {
-            let mut b = [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
-            for i in 0..n {
-                b[0] = b[0].min(y[2 * i]);
-                b[1] = b[1].min(y[2 * i + 1]);
-                b[2] = b[2].max(y[2 * i]);
-                b[3] = b[3].max(y[2 * i + 1]);
-            }
-            b
-        };
-        let grid = 64;
-        let (origin, pixel) = grid_placement(bbox, grid);
-        let a = compute_fields(&y, origin, pixel, grid);
-        let b = compute_fields_splat(&y, origin, pixel, grid, 1e6);
-        for (x, y) in a.iter().zip(&b) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
-    }
-
-    #[test]
-    fn splat_with_narrow_support_underestimates_s() {
-        let n = 40;
-        let y = random_y(n, 3, 1.0);
-        let grid = 32;
-        let (origin, pixel) = grid_placement([-3.0, -3.0, 3.0, 3.0], grid);
-        let full = compute_fields(&y, origin, pixel, grid);
-        let cut = compute_fields_splat(&y, origin, pixel, grid, 0.5);
-        let s_full: f32 = full[..grid * grid].iter().sum();
-        let s_cut: f32 = cut[..grid * grid].iter().sum();
-        assert!(s_cut < s_full, "bounded support must lose mass");
-        assert!(s_cut > 0.0);
-    }
-
-    #[test]
     fn rho_policy_scales_grid_with_diameter() {
         let rep = FieldRepulsion::default();
         assert_eq!(rep.choose_grid(10.0), 32); // clamped at min
@@ -294,17 +140,29 @@ mod tests {
     }
 
     #[test]
-    fn bilinear_matches_python_convention() {
-        // Exact at pixel centres.
-        let grid = 4;
-        let mut tex = vec![0.0f32; 3 * 16];
-        tex[1 * 16 + 2 * 4 + 1] = 7.0; // Vx at (row 2, col 1)
-        let origin = [0.0f32, 0.0];
-        let pixel = 1.0;
-        let out = bilinear(&tex, grid, origin, pixel, 1.5, 2.5);
-        assert!((out[1] - 7.0).abs() < 1e-6);
-        // Halfway to the next column: linear halving.
-        let out = bilinear(&tex, grid, origin, pixel, 2.0, 2.5);
-        assert!((out[1] - 3.5).abs() < 1e-6);
+    fn backend_swap_changes_math_not_contract() {
+        // Gather and FFT backends plugged into the same adapter agree.
+        let n = 150;
+        let y = random_y(n, 9, 4.0);
+        let mut num_a = vec![0.0f32; 2 * n];
+        let mut num_b = vec![0.0f32; 2 * n];
+        let mut rep_a = FieldRepulsion { min_grid: 64, max_grid: 64, ..Default::default() };
+        let mut rep_b = FieldRepulsion {
+            min_grid: 64,
+            max_grid: 64,
+            ..FieldRepulsion::with_backend(Box::new(crate::field::conv::FftBackend::new()))
+        };
+        let za = rep_a.compute(&y, &mut num_a);
+        let zb = rep_b.compute(&y, &mut num_b);
+        assert!((za - zb).abs() < 0.01 * za.abs().max(1.0), "Z: {za} vs {zb}");
+        let scale = num_a.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for i in 0..2 * n {
+            assert!(
+                (num_a[i] - num_b[i]).abs() < 0.01 * scale,
+                "num[{i}]: {} vs {}",
+                num_a[i],
+                num_b[i]
+            );
+        }
     }
 }

@@ -1,0 +1,82 @@
+//! `fieldfft` — the paper's field-based optimiser with the repulsive
+//! fields computed by FFT convolution (`field::conv::FftBackend`),
+//! O(N + G² log G) per iteration instead of the gather mirror's O(N·G²).
+//!
+//! This is the interpolation-FFT formulation of Linderman et al.
+//! ("Efficient Algorithms for t-distributed Stochastic Neighborhood
+//! Embedding"; the same mathematics t-SNE-CUDA runs on device), so this
+//! engine doubles as the honest CPU basis for the simulated GPU
+//! baselines. Everything outside the field stage — gradient-descent loop,
+//! attractive pass, adaptive-ρ grid policy — is shared with `fieldcpu`,
+//! which is exactly the paper's axis of comparison.
+
+use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams};
+use super::fieldcpu::FieldRepulsion;
+use crate::field::conv::FftBackend;
+use crate::hd::SparseP;
+
+/// The FFT-accelerated field engine.
+pub struct FieldFft {
+    pub rep: FieldRepulsion,
+}
+
+impl Default for FieldFft {
+    fn default() -> Self {
+        Self { rep: FieldRepulsion::with_backend(Box::new(FftBackend::new())) }
+    }
+}
+
+impl Engine for FieldFft {
+    fn name(&self) -> &'static str {
+        "fieldfft"
+    }
+
+    fn run(
+        &mut self,
+        p: &SparseP,
+        params: &OptParams,
+        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+    ) -> anyhow::Result<Vec<f32>> {
+        run_gd_loop("fieldfft", &mut self.rep, p, params, observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::common::Repulsion;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn engine_reports_name_and_runs() {
+        let mut e = FieldFft::default();
+        assert_eq!(e.name(), "fieldfft");
+        // A tiny smoke run: 3 points, uniform P.
+        let p = SparseP {
+            csr: crate::hd::sparse::Csr::from_rows(
+                3,
+                3,
+                2,
+                vec![1, 2, 0, 2, 0, 1],
+                vec![1.0 / 6.0; 6],
+            ),
+            perplexity: 2.0,
+        };
+        let params = OptParams { iters: 5, exaggeration_iters: 2, ..Default::default() };
+        let y = e.run(&p, &params, None).unwrap();
+        assert_eq!(y.len(), 6);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn repulsion_z_is_positive_for_spread_layouts() {
+        let mut rng = Rng::new(3);
+        let n = 120;
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 3.0)).collect();
+        let mut num = vec![0.0f32; 2 * n];
+        let mut rep = FieldFft::default().rep;
+        let z = rep.compute(&y, &mut num);
+        assert!(z > 0.0, "Ẑ must be positive, got {z}");
+        assert!(num.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,5 +1,6 @@
 //! Embedding optimisers: the paper's field-based GPGPU-SNE (device via
-//! `runtime/`, CPU mirror in `fieldcpu`) and every baseline its evaluation
+//! `runtime/`, CPU mirror in `fieldcpu`, FFT-accelerated CPU path in
+//! `fieldfft` over `crate::field`) and every baseline its evaluation
 //! compares against — exact t-SNE [42], Barnes-Hut-SNE [41] and a
 //! simulated t-SNE-CUDA [7] (DESIGN.md S11–S16).
 //!
@@ -12,6 +13,7 @@ pub mod bh;
 pub mod common;
 pub mod exact;
 pub mod fieldcpu;
+pub mod fieldfft;
 pub mod gpgpu;
 pub mod quadtree;
 pub mod tsnecuda;
@@ -35,6 +37,7 @@ pub fn by_name(
         "tsne-cuda-0.5" => Box::new(tsnecuda::TsneCudaSim::new(0.5)),
         "tsne-cuda-0.0" => Box::new(tsnecuda::TsneCudaSim::new(0.0)),
         "fieldcpu" => Box::new(fieldcpu::FieldCpu::default()),
+        "fieldfft" => Box::new(fieldfft::FieldFft::default()),
         "gpgpu" => {
             let rt = runtime
                 .ok_or_else(|| anyhow::anyhow!("gpgpu engine needs artifacts (run `make artifacts`)"))?;
@@ -45,8 +48,16 @@ pub fn by_name(
 }
 
 /// All engine names in the order the paper's figures list them.
-pub const ENGINES: &[&str] =
-    &["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.0", "tsne-cuda-0.5", "fieldcpu", "gpgpu"];
+pub const ENGINES: &[&str] = &[
+    "exact",
+    "bh-0.1",
+    "bh-0.5",
+    "tsne-cuda-0.0",
+    "tsne-cuda-0.5",
+    "fieldcpu",
+    "fieldfft",
+    "gpgpu",
+];
 
 /// Shared CPU attractive-force pass over the sparse P (Eq. 12).
 ///
@@ -117,7 +128,9 @@ mod tests {
 
     #[test]
     fn by_name_knows_all_cpu_engines() {
-        for name in ["exact", "bh-0.5", "bh-0.1", "tsne-cuda-0.0", "tsne-cuda-0.5", "fieldcpu"] {
+        // Derive the CPU list from ENGINES so a new engine cannot be
+        // forgotten here (gpgpu is the only runtime-gated entry).
+        for &name in ENGINES.iter().filter(|&&n| n != "gpgpu") {
             assert!(by_name(name, None).is_ok(), "{name}");
         }
         assert!(by_name("gpgpu", None).is_err(), "gpgpu without runtime must error");

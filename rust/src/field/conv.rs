@@ -1,0 +1,408 @@
+//! FFT convolution of the splatted charge grid with sampled Cauchy
+//! kernels — the O(N + G² log G) field backend.
+//!
+//! The kernel sums of Eq. 10/11 are translation-invariant, so with point
+//! charges deposited on a regular grid (`splat`) the three field channels
+//! are discrete convolutions with
+//!
+//!   k_S(δ)  =  1 / (1 + |δ|²)
+//!   k_Vx(δ) = −δ_x / (1 + |δ|²)²      (sign: the field is Σ K(y_i − p),
+//!   k_Vy(δ) = −δ_y / (1 + |δ|²)²       i.e. the kernel mirrored in δ)
+//!
+//! computed via zero-padded FFTs: the fine grid (G_f = s·G nodes) is
+//! embedded in the top-left of an `M×M` plane, `M = next_pow2(2·G_f)`,
+//! which makes the circular convolution exact for every in-grid
+//! displacement (no wraparound).
+//!
+//! Accuracy comes from two knobs validated against the gather oracle:
+//! cubic-Lagrange deposition (O(h⁴), `splat`) and internal oversampling —
+//! the convolution runs at a fine pixel `h_f = pixel / s ≤ FINE_PIXEL`,
+//! with the fine grid offset by `(pixel − h_f)/2` so every s-th fine node
+//! coincides *exactly* with a coarse pixel centre; the coarse texture is
+//! then a stride-s copy, not an interpolation. At the paper's ρ = 0.5
+//! operating point this keeps max force error vs the oracle ≲ 0.3%
+//! (bilinear deposition without oversampling measures 8–15%).
+//!
+//! Kernel spectra depend only on `(M, h_f)`, so they are cached. A live
+//! optimisation drifts the placement pixel a little every iteration, so
+//! exact-key caching would never hit there; the cache therefore reuses a
+//! spectra set whenever the pixel is within `KERNEL_PIXEL_RTOL` (0.1%)
+//! of the cached one — a ≤ ~0.2% field perturbation, well inside the 1%
+//! accuracy budget — which skips the rebuild (half the transform work)
+//! through steady phases and in benches alike.
+
+use std::sync::Arc;
+
+use super::fft::{fft2d, Fft};
+use super::{splat, FieldBackend, FieldTexture, Placement};
+use crate::util::parallel::{self, SyncSlice};
+
+/// Internal pixel target (embedding units). The Cauchy kernels have an
+/// intrinsic scale of 1 embedding unit, so an absolute target is the
+/// right policy knob; 0.35 keeps cubic-deposition error under 1% with
+/// margin while ρ = 0.5 placements oversample only 2×.
+pub const FINE_PIXEL: f32 = 0.35;
+
+/// Hard cap on the oversampling factor (memory guard: M grows with s).
+pub const MAX_OVERSAMPLE: usize = 4;
+
+/// Relative pixel tolerance within which cached kernel spectra are
+/// reused instead of rebuilt. The Cauchy kernels' sensitivity to the
+/// sampling pitch is O(1) relative, so this contributes ≤ ~2× the
+/// tolerance in field error — negligible against the 1% budget, while
+/// letting slowly-drifting placements (every real optimisation) hit.
+pub const KERNEL_PIXEL_RTOL: f32 = 1e-3;
+
+/// Cap on the padded transform side M. Oversampling is reduced (never
+/// below 1) to respect it, bounding the scratch planes at 4·M² and each
+/// cached kernel set at 6·M² f32 (64 MB + 96 MB/set at the default).
+/// At the ρ-policy operating point the cap never binds (G ≤ 512, s = 2
+/// → M = 2048); it only sheds oversampling once the grid is clamped at
+/// `max_grid` AND the diameter has outgrown it — where field accuracy
+/// is pixel-limited for every backend anyway.
+pub const MAX_TRANSFORM: usize = 2048;
+
+/// Frequency-domain Cauchy kernels for one `(M, fine-pixel)` pair.
+pub struct SpectralKernels {
+    pub m: usize,
+    pub pixel: f32,
+    /// Per channel (S, Vx, Vy): split re/im spectra of length M².
+    chan: [(Vec<f32>, Vec<f32>); 3],
+}
+
+impl SpectralKernels {
+    /// Sample the three kernels over signed displacements and transform.
+    pub fn build(plan: &Fft, pixel: f32) -> Self {
+        let m = plan.len();
+        let mut chan: [(Vec<f32>, Vec<f32>); 3] = [
+            (vec![0.0; m * m], vec![0.0; m * m]),
+            (vec![0.0; m * m], vec![0.0; m * m]),
+            (vec![0.0; m * m], vec![0.0; m * m]),
+        ];
+        let signed = |i: usize| -> f64 {
+            if i < m / 2 {
+                i as f64
+            } else {
+                i as f64 - m as f64
+            }
+        };
+        {
+            let [c_s, c_vx, c_vy] = &mut chan;
+            let s = SyncSlice::new(&mut c_s.0);
+            let vx = SyncSlice::new(&mut c_vx.0);
+            let vy = SyncSlice::new(&mut c_vy.0);
+            parallel::par_chunks(m, 16, |rows| {
+                for r in rows {
+                    let dy = signed(r) * pixel as f64;
+                    for c in 0..m {
+                        let dx = signed(c) * pixel as f64;
+                        let ks = 1.0 / (1.0 + dx * dx + dy * dy);
+                        let kv = ks * ks;
+                        unsafe {
+                            *s.get_mut(r * m + c) = ks as f32;
+                            *vx.get_mut(r * m + c) = (-dx * kv) as f32;
+                            *vy.get_mut(r * m + c) = (-dy * kv) as f32;
+                        }
+                    }
+                }
+            });
+        }
+        for (re, im) in chan.iter_mut() {
+            fft2d(plan, re, im, false);
+        }
+        Self { m, pixel, chan }
+    }
+}
+
+/// Tiny LRU over kernel spectra, matched by `(M, pixel ≈ within rtol)`.
+pub struct KernelCache {
+    entries: Vec<Arc<SpectralKernels>>,
+    capacity: usize,
+    /// Relative pixel tolerance for a hit (see [`KERNEL_PIXEL_RTOL`]).
+    pub pixel_rtol: f32,
+}
+
+impl KernelCache {
+    pub fn new(capacity: usize) -> Self {
+        Self { entries: Vec::new(), capacity: capacity.max(1), pixel_rtol: KERNEL_PIXEL_RTOL }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fetch (moving to front) or build (evicting the oldest). A cached
+    /// set matches when its transform size is identical and its pixel is
+    /// within `pixel_rtol` (relative) of the requested one.
+    pub fn get(&mut self, plan: &Fft, pixel: f32) -> Arc<SpectralKernels> {
+        let m = plan.len();
+        let rtol = self.pixel_rtol.max(0.0);
+        if let Some(pos) = self
+            .entries
+            .iter()
+            .position(|k| k.m == m && (k.pixel - pixel).abs() <= rtol * pixel.abs())
+        {
+            let hit = self.entries.remove(pos);
+            self.entries.insert(0, hit);
+            return self.entries[0].clone();
+        }
+        let built = Arc::new(SpectralKernels::build(plan, pixel));
+        self.entries.insert(0, built.clone());
+        self.entries.truncate(self.capacity);
+        built
+    }
+}
+
+/// The FFT field backend: splat → FFT → spectral multiply → inverse FFT.
+pub struct FftBackend {
+    /// Internal pixel target; lower = more accurate, bigger transforms.
+    pub fine_pixel: f32,
+    /// Oversampling cap.
+    pub max_oversample: usize,
+    /// Padded-transform cap (memory bound; see [`MAX_TRANSFORM`]).
+    pub max_transform: usize,
+    kernels: KernelCache,
+    /// FFT plans keyed by size (at most a few sizes alive per run).
+    plans: Vec<Arc<Fft>>,
+    /// Reusable M² scratch planes (charge re/im, product re/im) — the
+    /// backend is called every iteration, so the hot path must not
+    /// re-allocate ~4×M² floats each time.
+    cre: Vec<f32>,
+    cim: Vec<f32>,
+    pre: Vec<f32>,
+    pim: Vec<f32>,
+    /// Oversample factor used by the last `compute` (observability).
+    pub last_oversample: usize,
+    /// Padded transform size used by the last `compute` (observability).
+    pub last_m: usize,
+}
+
+impl Default for FftBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FftBackend {
+    pub fn new() -> Self {
+        Self {
+            fine_pixel: FINE_PIXEL,
+            max_oversample: MAX_OVERSAMPLE,
+            max_transform: MAX_TRANSFORM,
+            kernels: KernelCache::new(2),
+            plans: Vec::new(),
+            cre: Vec::new(),
+            cim: Vec::new(),
+            pre: Vec::new(),
+            pim: Vec::new(),
+            last_oversample: 0,
+            last_m: 0,
+        }
+    }
+
+    /// The oversampling factor the accuracy policy picks for a pixel size.
+    pub fn oversample_for(&self, pixel: f32) -> usize {
+        ((pixel / self.fine_pixel).ceil() as usize).clamp(1, self.max_oversample)
+    }
+
+    /// Cached kernel-spectra count (test observability).
+    pub fn cached_kernel_sets(&self) -> usize {
+        self.kernels.len()
+    }
+
+    fn plan(&mut self, m: usize) -> Arc<Fft> {
+        if let Some(p) = self.plans.iter().find(|p| p.len() == m) {
+            return p.clone();
+        }
+        let p = Arc::new(Fft::new(m));
+        self.plans.push(p.clone());
+        if self.plans.len() > 4 {
+            self.plans.remove(0);
+        }
+        p
+    }
+}
+
+impl FieldBackend for FftBackend {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn compute(&mut self, y: &[f32], placement: Placement, grid: usize) -> FieldTexture {
+        let pixel = placement.pixel;
+        let mut s = self.oversample_for(pixel);
+        // Shed oversampling (never below 1) to respect the memory cap.
+        while s > 1 && (2 * s * grid).next_power_of_two() > self.max_transform {
+            s -= 1;
+        }
+        let gf = s * grid;
+        let pf = pixel / s as f32;
+        // Offset so fine node s·c lands exactly on coarse pixel centre c.
+        let shift = 0.5 * (pixel - pf);
+        let of = [placement.origin[0] + shift, placement.origin[1] + shift];
+        let m = (2 * gf).next_power_of_two();
+        self.last_oversample = s;
+        self.last_m = m;
+        let plan = self.plan(m);
+        let kernels = self.kernels.get(&plan, pf);
+
+        // Charge plane (real input, imaginary part starts zero). The
+        // scratch buffers are reused across calls; clear+resize zeroes
+        // them without reallocating once capacity is established.
+        let (cre, cim, pre, pim) = (&mut self.cre, &mut self.cim, &mut self.pre, &mut self.pim);
+        cre.clear();
+        cre.resize(m * m, 0.0);
+        cim.clear();
+        cim.resize(m * m, 0.0);
+        // pre/pim are fully overwritten by the spectral multiply.
+        pre.resize(m * m, 0.0);
+        pim.resize(m * m, 0.0);
+        splat::splat_cubic(y, of, pf, gf, m, cre);
+        fft2d(&plan, cre, cim, false);
+
+        let mut tex = vec![0.0f32; 3 * grid * grid];
+        let plane = grid * grid;
+        for ch in 0..3 {
+            let (kre, kim) = &kernels.chan[ch];
+            {
+                let pre_s = SyncSlice::new(pre);
+                let pim_s = SyncSlice::new(pim);
+                let (cre, cim) = (&*cre, &*cim);
+                parallel::par_chunks(m * m, 1 << 15, |range| {
+                    for i in range {
+                        unsafe {
+                            *pre_s.get_mut(i) = cre[i] * kre[i] - cim[i] * kim[i];
+                            *pim_s.get_mut(i) = cre[i] * kim[i] + cim[i] * kre[i];
+                        }
+                    }
+                });
+            }
+            fft2d(&plan, pre, pim, true);
+            // Stride-s copy of the fine plane back onto coarse centres.
+            for r in 0..grid {
+                let src = r * s * m;
+                let dst = ch * plane + r * grid;
+                for c in 0..grid {
+                    tex[dst + c] = pre[src + c * s];
+                }
+            }
+        }
+        FieldTexture { grid, origin: placement.origin, pixel, tex }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::gather::GatherBackend;
+    use crate::field::{bbox_of, place};
+    use crate::util::rng::Rng;
+
+    fn random_y(n: usize, seed: u64, spread: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.gauss_f32(0.0, spread)).collect()
+    }
+
+    fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+        let scale = a.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-9);
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max) / scale
+    }
+
+    #[test]
+    fn matches_gather_oracle_per_channel() {
+        let y = random_y(400, 2, 5.0);
+        let grid = 64;
+        let p = place(bbox_of(&y), grid);
+        let oracle = GatherBackend.compute(&y, p, grid);
+        let mut backend = FftBackend::new();
+        let t = backend.compute(&y, p, grid);
+        let plane = grid * grid;
+        for ch in 0..3 {
+            let err = max_rel_err(
+                &oracle.tex[ch * plane..(ch + 1) * plane],
+                &t.tex[ch * plane..(ch + 1) * plane],
+            );
+            assert!(err < 0.01, "channel {ch}: max rel err {err}");
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_grids_work() {
+        let y = random_y(150, 4, 4.0);
+        let grid = 48; // pads internally to a power of two
+        let p = place(bbox_of(&y), grid);
+        let oracle = GatherBackend.compute(&y, p, grid);
+        let t = FftBackend::new().compute(&y, p, grid);
+        assert_eq!(t.tex.len(), 3 * grid * grid);
+        assert!(max_rel_err(&oracle.tex, &t.tex) < 0.01);
+    }
+
+    #[test]
+    fn oversample_policy_tracks_pixel_size() {
+        let b = FftBackend::new();
+        assert_eq!(b.oversample_for(0.1), 1);
+        assert_eq!(b.oversample_for(0.5), 2);
+        assert_eq!(b.oversample_for(0.99), 3);
+        assert_eq!(b.oversample_for(10.0), MAX_OVERSAMPLE);
+    }
+
+    #[test]
+    fn transform_cap_sheds_oversampling() {
+        let mut b = FftBackend::new();
+        b.max_transform = 256;
+        let y = random_y(50, 11, 30.0); // big spread -> large pixel -> wants s=4
+        let p = place(bbox_of(&y), 64);
+        assert!(b.oversample_for(p.pixel) > 2, "case must want heavy oversampling");
+        let _ = b.compute(&y, p, 64);
+        assert!(b.last_m <= 256, "cap must bound the transform, got M={}", b.last_m);
+        assert!(b.last_oversample >= 1);
+    }
+
+    #[test]
+    fn kernel_cache_hits_on_repeat_placement() {
+        let y = random_y(100, 6, 3.0);
+        let p = place(bbox_of(&y), 32);
+        let mut b = FftBackend::new();
+        let t1 = b.compute(&y, p, 32);
+        assert_eq!(b.cached_kernel_sets(), 1);
+        let t2 = b.compute(&y, p, 32);
+        assert_eq!(b.cached_kernel_sets(), 1, "same placement must hit the cache");
+        assert_eq!(t1.tex, t2.tex, "cached kernels must be deterministic");
+        // A different pixel size builds a second entry.
+        let p2 = Placement { origin: p.origin, pixel: p.pixel * 1.5 };
+        let _ = b.compute(&y, p2, 32);
+        assert_eq!(b.cached_kernel_sets(), 2);
+    }
+
+    #[test]
+    fn cache_tolerates_small_pixel_drift() {
+        // A live optimisation drifts the pixel a fraction of a percent per
+        // iteration; that must reuse the cached spectra, while a real
+        // resolution change must rebuild.
+        let plan = Fft::new(8);
+        let mut cache = KernelCache::new(4);
+        let a = cache.get(&plan, 0.5);
+        let b = cache.get(&plan, 0.5 * 1.0005); // within 0.1% -> hit
+        assert!(Arc::ptr_eq(&a, &b), "0.05% drift must hit the cache");
+        let c = cache.get(&plan, 0.55); // 10% away -> rebuild
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_lru_evicts_oldest() {
+        let plan = Fft::new(8);
+        let mut cache = KernelCache::new(2);
+        let a = cache.get(&plan, 0.1);
+        let _b = cache.get(&plan, 0.2);
+        let _a2 = cache.get(&plan, 0.1); // refresh a
+        let _c = cache.get(&plan, 0.3); // evicts 0.2
+        assert_eq!(cache.len(), 2);
+        let a3 = cache.get(&plan, 0.1);
+        assert!(Arc::ptr_eq(&a, &a3), "0.1 must have survived");
+    }
+}

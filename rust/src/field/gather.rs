@@ -1,0 +1,154 @@
+//! Exact per-pixel field evaluation — the compute-shader / gather
+//! formulation (paper §5.2) with unbounded support, O(N·G²).
+//!
+//! This is the subsystem's *oracle*: every other backend is validated
+//! against it (and it is itself validated against the exact O(N²)
+//! repulsion in `embed::fieldcpu` tests). It also remains the fallback
+//! engine's workhorse and the reference point for the ablation benches.
+
+use super::{FieldBackend, FieldTexture, Placement};
+use crate::util::parallel;
+
+/// Evaluate the fields exactly at every pixel centre (Eq. 10/11).
+/// Threaded over pixel rows.
+pub fn compute_fields(y: &[f32], origin: [f32; 2], pixel: f32, grid: usize) -> Vec<f32> {
+    let n = y.len() / 2;
+    let mut tex = vec![0.0f32; 3 * grid * grid];
+    let plane = grid * grid;
+    {
+        let slots = parallel::SyncSlice::new(&mut tex);
+        parallel::par_chunks(grid, 4, |rows| {
+            for r in rows {
+                let py = origin[1] + (r as f32 + 0.5) * pixel;
+                for c in 0..grid {
+                    let px = origin[0] + (c as f32 + 0.5) * pixel;
+                    let (mut s, mut vx, mut vy) = (0.0f32, 0.0f32, 0.0f32);
+                    for i in 0..n {
+                        let dx = y[2 * i] - px;
+                        let dy = y[2 * i + 1] - py;
+                        let t = 1.0 / (1.0 + dx * dx + dy * dy);
+                        s += t;
+                        let t2 = t * t;
+                        vx += t2 * dx;
+                        vy += t2 * dy;
+                    }
+                    unsafe {
+                        *slots.get_mut(r * grid + c) = s;
+                        *slots.get_mut(plane + r * grid + c) = vx;
+                        *slots.get_mut(2 * plane + r * grid + c) = vy;
+                    }
+                }
+            }
+        });
+    }
+    tex
+}
+
+/// Bounded-support splat-style field accumulation — the paper's §5.1.2
+/// rasterisation variant: each point only touches pixels within `support`
+/// embedding-units (the texture-quad footprint). Kept for the ablation
+/// bench (accuracy/speed vs the unbounded gather above).
+pub fn compute_fields_splat(
+    y: &[f32],
+    origin: [f32; 2],
+    pixel: f32,
+    grid: usize,
+    support: f32,
+) -> Vec<f32> {
+    let n = y.len() / 2;
+    let mut tex = vec![0.0f32; 3 * grid * grid];
+    let plane = grid * grid;
+    let rad_px = (support / pixel).ceil() as isize;
+    for i in 0..n {
+        let (yx, yy) = (y[2 * i], y[2 * i + 1]);
+        let ci = (((yy - origin[1]) / pixel) - 0.5).round() as isize;
+        let cj = (((yx - origin[0]) / pixel) - 0.5).round() as isize;
+        for r in (ci - rad_px).max(0)..=(ci + rad_px).min(grid as isize - 1) {
+            let py = origin[1] + (r as f32 + 0.5) * pixel;
+            for c in (cj - rad_px).max(0)..=(cj + rad_px).min(grid as isize - 1) {
+                let px = origin[0] + (c as f32 + 0.5) * pixel;
+                let dx = yx - px;
+                let dy = yy - py;
+                let d2 = dx * dx + dy * dy;
+                if d2 > support * support {
+                    continue;
+                }
+                let t = 1.0 / (1.0 + d2);
+                let idx = (r as usize) * grid + c as usize;
+                tex[idx] += t;
+                let t2 = t * t;
+                tex[plane + idx] += t2 * dx;
+                tex[2 * plane + idx] += t2 * dy;
+            }
+        }
+    }
+    tex
+}
+
+/// The exact-gather backend (test oracle / fallback).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GatherBackend;
+
+impl FieldBackend for GatherBackend {
+    fn name(&self) -> &'static str {
+        "gather"
+    }
+
+    fn compute(&mut self, y: &[f32], placement: Placement, grid: usize) -> FieldTexture {
+        FieldTexture {
+            grid,
+            origin: placement.origin,
+            pixel: placement.pixel,
+            tex: compute_fields(y, placement.origin, placement.pixel, grid),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::grid_placement;
+    use crate::util::rng::Rng;
+
+    fn random_y(n: usize, seed: u64, spread: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.gauss_f32(0.0, spread)).collect()
+    }
+
+    #[test]
+    fn splat_with_wide_support_matches_gather() {
+        let n = 60;
+        let y = random_y(n, 2, 1.0);
+        let bbox = crate::field::bbox_of(&y);
+        let grid = 64;
+        let (origin, pixel) = grid_placement(bbox, grid);
+        let a = compute_fields(&y, origin, pixel, grid);
+        let b = compute_fields_splat(&y, origin, pixel, grid, 1e6);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn splat_with_narrow_support_underestimates_s() {
+        let n = 40;
+        let y = random_y(n, 3, 1.0);
+        let grid = 32;
+        let (origin, pixel) = grid_placement([-3.0, -3.0, 3.0, 3.0], grid);
+        let full = compute_fields(&y, origin, pixel, grid);
+        let cut = compute_fields_splat(&y, origin, pixel, grid, 0.5);
+        let s_full: f32 = full[..grid * grid].iter().sum();
+        let s_cut: f32 = cut[..grid * grid].iter().sum();
+        assert!(s_cut < s_full, "bounded support must lose mass");
+        assert!(s_cut > 0.0);
+    }
+
+    #[test]
+    fn backend_wraps_free_fn() {
+        let y = random_y(30, 5, 2.0);
+        let p = crate::field::place(crate::field::bbox_of(&y), 32);
+        let t = GatherBackend.compute(&y, p, 32);
+        assert_eq!(t.tex, compute_fields(&y, p.origin, p.pixel, 32));
+        assert_eq!(t.grid, 32);
+    }
+}

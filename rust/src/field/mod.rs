@@ -1,0 +1,163 @@
+//! Field-texture subsystem (DESIGN.md S13, paper §5): everything that
+//! turns an embedding `y` into the 3-channel field texture `(S, Vx, Vy)`
+//! the repulsive forces are read from.
+//!
+//! The paper draws this texture on the GPU; this module owns every host
+//! implementation behind the [`FieldBackend`] trait:
+//!
+//! * [`gather::GatherBackend`] — exact per-pixel evaluation, O(N·G²).
+//!   The reference/oracle implementation (the compute-shader formulation).
+//! * [`conv::FftBackend`] — splat + FFT convolution, O(N + G² log G)
+//!   (Linderman et al.'s interpolation-FFT formulation; the same
+//!   mathematics t-SNE-CUDA uses on device). The production CPU path.
+//!
+//! Shared pieces live here: the texture type, the square-grid placement
+//! policy (mirroring `python/compile/model.py::grid_placement`), and
+//! bilinear sampling.
+
+pub mod conv;
+pub mod fft;
+pub mod gather;
+pub mod splat;
+
+/// Margin in pixels around the bbox (matches `model.GRID_MARGIN_PX`).
+pub const GRID_MARGIN_PX: f32 = 1.5;
+
+/// Where a `G×G` texture sits in embedding space: pixel `(r, c)` has its
+/// centre at `origin + (idx + 0.5) * pixel` per axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub origin: [f32; 2],
+    pub pixel: f32,
+}
+
+/// The field texture: S, V_x, V_y on a G×G grid plus its placement.
+pub struct FieldTexture {
+    pub grid: usize,
+    pub origin: [f32; 2],
+    pub pixel: f32,
+    /// Channel-major `(3, G, G)`: S, Vx, Vy.
+    pub tex: Vec<f32>,
+}
+
+impl FieldTexture {
+    /// Bilinear sample at `(x, y)`: returns `(S, Vx, Vy)`.
+    #[inline]
+    pub fn sample(&self, x: f32, y: f32) -> [f32; 3] {
+        bilinear(&self.tex, self.grid, self.origin, self.pixel, x, y)
+    }
+}
+
+/// A field-texture implementation. `compute` evaluates (or approximates)
+///
+///   S(p)  = Σ_i 1 / (1 + |y_i − p|²)            (Eq. 10)
+///   V(p)  = Σ_i (y_i − p) / (1 + |y_i − p|²)²   (Eq. 11)
+///
+/// at every pixel centre of the placed grid. Backends may carry mutable
+/// state (plan/kernel caches), hence `&mut self`.
+pub trait FieldBackend {
+    fn name(&self) -> &'static str;
+
+    fn compute(&mut self, y: &[f32], placement: Placement, grid: usize) -> FieldTexture;
+}
+
+/// Square grid placement covering `bbox` with margin (mirrors
+/// `python/compile/model.py::grid_placement`).
+pub fn grid_placement(bbox: [f32; 4], grid: usize) -> ([f32; 2], f32) {
+    let g = grid as f32;
+    let span = (bbox[2] - bbox[0]).max(bbox[3] - bbox[1]).max(1e-3);
+    let pixel = span / (g - 2.0 * GRID_MARGIN_PX);
+    let cx = 0.5 * (bbox[0] + bbox[2]);
+    let cy = 0.5 * (bbox[1] + bbox[3]);
+    let half = 0.5 * g * pixel;
+    ([cx - half, cy - half], pixel)
+}
+
+/// [`grid_placement`] as a [`Placement`].
+pub fn place(bbox: [f32; 4], grid: usize) -> Placement {
+    let (origin, pixel) = grid_placement(bbox, grid);
+    Placement { origin, pixel }
+}
+
+/// Bilinear sample of a 3-channel channel-major texture at `(x, y)`
+/// (mirrors `ref.bilinear_ref`): returns (S, Vx, Vy).
+#[inline]
+pub fn bilinear(tex: &[f32], grid: usize, origin: [f32; 2], pixel: f32, x: f32, y: f32) -> [f32; 3] {
+    let plane = grid * grid;
+    let u = ((x - origin[0]) / pixel - 0.5).clamp(0.0, grid as f32 - 1.000001);
+    let v = ((y - origin[1]) / pixel - 0.5).clamp(0.0, grid as f32 - 1.000001);
+    let j0 = (u.floor() as usize).min(grid - 2);
+    let i0 = (v.floor() as usize).min(grid - 2);
+    let fu = u - j0 as f32;
+    let fv = v - i0 as f32;
+    let mut out = [0.0f32; 3];
+    for (ch, o) in out.iter_mut().enumerate() {
+        let base = ch * plane;
+        let f00 = tex[base + i0 * grid + j0];
+        let f01 = tex[base + i0 * grid + j0 + 1];
+        let f10 = tex[base + (i0 + 1) * grid + j0];
+        let f11 = tex[base + (i0 + 1) * grid + j0 + 1];
+        let top = f00 * (1.0 - fu) + f01 * fu;
+        let bot = f10 * (1.0 - fu) + f11 * fu;
+        *o = top * (1.0 - fv) + bot * fv;
+    }
+    out
+}
+
+/// Bounding box `[min_x, min_y, max_x, max_y]` of an `(n, 2)` layout.
+pub fn bbox_of(y: &[f32]) -> [f32; 4] {
+    let n = y.len() / 2;
+    let mut b = [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
+    for i in 0..n {
+        b[0] = b[0].min(y[2 * i]);
+        b[1] = b[1].min(y[2 * i + 1]);
+        b[2] = b[2].max(y[2 * i]);
+        b[3] = b[3].max(y[2 * i + 1]);
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bilinear_matches_python_convention() {
+        // Exact at pixel centres.
+        let grid = 4;
+        let mut tex = vec![0.0f32; 3 * 16];
+        tex[16 + 2 * 4 + 1] = 7.0; // Vx at (row 2, col 1)
+        let origin = [0.0f32, 0.0];
+        let pixel = 1.0;
+        let out = bilinear(&tex, grid, origin, pixel, 1.5, 2.5);
+        assert!((out[1] - 7.0).abs() < 1e-6);
+        // Halfway to the next column: linear halving.
+        let out = bilinear(&tex, grid, origin, pixel, 2.0, 2.5);
+        assert!((out[1] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn placement_covers_bbox_with_margin() {
+        let bbox = [-3.0f32, -1.0, 5.0, 7.0];
+        let grid = 64;
+        let (origin, pixel) = grid_placement(bbox, grid);
+        // The span (8.0) maps onto grid − 2·margin pixels.
+        assert!((pixel - 8.0 / (64.0 - 3.0)).abs() < 1e-6);
+        // Every bbox corner lies strictly inside the placed grid.
+        let hi = [origin[0] + 64.0 * pixel, origin[1] + 64.0 * pixel];
+        assert!(bbox[0] > origin[0] && bbox[1] > origin[1]);
+        assert!(bbox[2] < hi[0] && bbox[3] < hi[1]);
+    }
+
+    #[test]
+    fn bbox_of_contains_points() {
+        let y = [0.0f32, 1.0, -2.0, 3.0, 4.0, -1.0];
+        assert_eq!(bbox_of(&y), [-2.0, -1.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn texture_sample_matches_free_fn() {
+        let t = FieldTexture { grid: 4, origin: [0.0, 0.0], pixel: 1.0, tex: vec![1.5; 48] };
+        assert_eq!(t.sample(1.7, 2.2), bilinear(&t.tex, 4, [0.0, 0.0], 1.0, 1.7, 2.2));
+    }
+}

@@ -15,9 +15,11 @@
 //!   iteration and is AOT-lowered to HLO-text artifacts,
 //! * **L3** (this crate) is the runtime system: dataset substrates, kNN
 //!   and perplexity pipelines, the PJRT runtime that executes the AOT
-//!   artifacts, baseline optimisers (exact t-SNE, Barnes-Hut, simulated
-//!   t-SNE-CUDA), metrics, and the progressive embedding *service* with
-//!   the paper's adaptive field-resolution policy.
+//!   artifacts, the host field subsystem (`field/`: exact gather oracle
+//!   plus the O(N + G² log G) FFT-convolution backend behind a pluggable
+//!   `FieldBackend` trait), baseline optimisers (exact t-SNE, Barnes-Hut,
+//!   simulated t-SNE-CUDA), metrics, and the progressive embedding
+//!   *service* with the paper's adaptive field-resolution policy.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! binary is self-contained.
@@ -25,6 +27,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod embed;
+pub mod field;
 pub mod hd;
 pub mod metrics;
 pub mod runtime;

@@ -39,7 +39,7 @@ fn print_help() {
     println!(
         "gpgpu-sne — field-based linear-complexity t-SNE (Pezzotti et al. 2018)\n\n\
          usage: gpgpu-sne <embed|serve|info|datasets> [options]\n\n\
-         embed    --dataset mnist --n 2000 --engine gpgpu|fieldcpu|bh-0.5|bh-0.1|exact|tsne-cuda-0.5\n\
+         embed    --dataset mnist --n 2000 --engine gpgpu|fieldfft|fieldcpu|bh-0.5|bh-0.1|exact|tsne-cuda-0.5\n\
                   --iters 1000 --perplexity 30 --knn brute|vptree|kdforest --seed 42\n\
                   --out embedding.csv --image embedding.pgm\n\
          serve    --addr 127.0.0.1:7878 --max-concurrent 2\n\

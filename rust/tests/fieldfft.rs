@@ -1,0 +1,144 @@
+//! Golden tests for the FFT field backend and the `fieldfft` engine:
+//! textures and per-point repulsive forces against the exact gather
+//! oracle (within 1% relative error on random and clustered layouts),
+//! and end-to-end optimisation behaviour mirroring the fieldcpu checks.
+
+use gpgpu_sne::coordinator::pipeline::compute_knn;
+use gpgpu_sne::coordinator::KnnMethod;
+use gpgpu_sne::data;
+use gpgpu_sne::embed::common::Repulsion;
+use gpgpu_sne::embed::fieldcpu::FieldRepulsion;
+use gpgpu_sne::embed::{self, Control, IterStats, OptParams};
+use gpgpu_sne::field::conv::FftBackend;
+use gpgpu_sne::field::gather::GatherBackend;
+use gpgpu_sne::field::{bbox_of, place, FieldBackend};
+use gpgpu_sne::hd::perplexity;
+use gpgpu_sne::util::rng::Rng;
+
+fn random_layout(n: usize, seed: u64, spread: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..2 * n).map(|_| rng.gauss_f32(0.0, spread)).collect()
+}
+
+/// k Gaussian blobs — the post-convergence shape fields actually see.
+fn clustered_layout(n: usize, seed: u64, k: usize, spread: f32, std: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<(f32, f32)> =
+        (0..k).map(|_| (rng.gauss_f32(0.0, spread), rng.gauss_f32(0.0, spread))).collect();
+    let mut y = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        let (cx, cy) = centers[i % k];
+        y.push(cx + rng.gauss_f32(0.0, std));
+        y.push(cy + rng.gauss_f32(0.0, std));
+    }
+    y
+}
+
+/// max |a−b| / max |a| over a slice pair.
+fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let scale = a.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-9);
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max) / scale
+}
+
+fn assert_textures_match(y: &[f32], grid: usize, label: &str) {
+    let p = place(bbox_of(y), grid);
+    let oracle = GatherBackend.compute(y, p, grid);
+    let t = FftBackend::new().compute(y, p, grid);
+    assert_eq!(t.grid, grid);
+    assert_eq!(t.origin, oracle.origin);
+    let plane = grid * grid;
+    for (ch, name) in ["S", "Vx", "Vy"].iter().enumerate() {
+        let err = max_rel_err(
+            &oracle.tex[ch * plane..(ch + 1) * plane],
+            &t.tex[ch * plane..(ch + 1) * plane],
+        );
+        assert!(err < 0.01, "{label}: channel {name} rel err {err} (G={grid})");
+    }
+}
+
+#[test]
+fn golden_texture_random_layouts() {
+    for (grid, seed) in [(64usize, 2u64), (128, 3)] {
+        assert_textures_match(&random_layout(400, seed, 5.0), grid, "random");
+    }
+}
+
+#[test]
+fn golden_texture_clustered_layouts() {
+    assert_textures_match(&clustered_layout(600, 4, 8, 12.0, 0.8), 128, "clustered");
+    assert_textures_match(&clustered_layout(800, 5, 5, 20.0, 0.5), 256, "clustered-tight");
+}
+
+fn assert_forces_match(y: &[f32], grid: usize, label: &str) {
+    let n = y.len() / 2;
+    let mut rep_gather = FieldRepulsion { min_grid: grid, max_grid: grid, ..Default::default() };
+    let mut rep_fft = FieldRepulsion {
+        min_grid: grid,
+        max_grid: grid,
+        ..FieldRepulsion::with_backend(Box::new(FftBackend::new()))
+    };
+    let mut num_gather = vec![0.0f32; 2 * n];
+    let mut num_fft = vec![0.0f32; 2 * n];
+    let z_gather = rep_gather.compute(y, &mut num_gather);
+    let z_fft = rep_fft.compute(y, &mut num_fft);
+    let ferr = max_rel_err(&num_gather, &num_fft);
+    assert!(ferr < 0.01, "{label}: per-point force rel err {ferr} (G={grid})");
+    let zerr = (z_gather - z_fft).abs() / z_gather.abs().max(1e-9);
+    assert!(zerr < 0.01, "{label}: Ẑ rel err {zerr} ({z_gather} vs {z_fft})");
+}
+
+#[test]
+fn golden_forces_random_layout() {
+    assert_forces_match(&random_layout(500, 7, 5.0), 128, "random");
+}
+
+#[test]
+fn golden_forces_clustered_layout() {
+    assert_forces_match(&clustered_layout(600, 8, 8, 12.0, 0.8), 128, "clustered");
+}
+
+#[test]
+fn fieldfft_reduces_kl_on_gaussians() {
+    // Mirrors integration.rs::all_cpu_engines_reduce_kl_on_gaussians for
+    // the new engine specifically.
+    let ds = data::by_name("gaussians", 200, 1).unwrap();
+    let knn = compute_knn(&ds, KnnMethod::Brute, 30, 1);
+    let p = perplexity::joint_p(&knn, 10.0);
+    let params = OptParams { iters: 120, exaggeration_iters: 30, seed: 11, ..Default::default() };
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    let mut obs = |s: &IterStats, _: &[f32]| {
+        if s.iter == 0 {
+            first = s.kl_est;
+        }
+        last = s.kl_est;
+        Control::Continue
+    };
+    let mut engine = embed::by_name("fieldfft", None).unwrap();
+    let y = engine.run(&p, &params, Some(&mut obs)).unwrap();
+    assert!(last < 0.7 * first, "fieldfft: KL should drop substantially ({first:.3} -> {last:.3})");
+    assert!(y.iter().all(|v| v.is_finite()), "fieldfft: non-finite output");
+}
+
+#[test]
+fn fieldfft_matches_fieldcpu_quality() {
+    // Same maths, different evaluation: final objective values of the two
+    // field engines must track each other closely.
+    let ds = data::by_name("gaussians", 250, 2).unwrap();
+    let knn = compute_knn(&ds, KnnMethod::Brute, 30, 2);
+    let p = perplexity::joint_p(&knn, 10.0);
+    let params = OptParams { iters: 250, exaggeration_iters: 60, seed: 11, ..Default::default() };
+    let run = |name: &str| {
+        let y = embed::by_name(name, None).unwrap().run(&p, &params, None).unwrap();
+        gpgpu_sne::metrics::kl::kl_divergence_exact(&p, &y)
+    };
+    let kl_cpu = run("fieldcpu");
+    let kl_fft = run("fieldfft");
+    // Same tolerance the device-vs-mirror test uses: trajectories may
+    // diverge point-wise, the objective value must not.
+    assert!(
+        (kl_fft - kl_cpu).abs() < 0.15 * kl_cpu.abs().max(0.1),
+        "fieldfft {kl_fft:.4} should track fieldcpu {kl_cpu:.4}"
+    );
+}

@@ -27,7 +27,7 @@ fn quick_params(iters: usize) -> OptParams {
 #[test]
 fn all_cpu_engines_reduce_kl_on_gaussians() {
     let (_ds, p) = problem(200, 1);
-    for name in ["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu"] {
+    for name in ["exact", "bh-0.1", "bh-0.5", "tsne-cuda-0.5", "fieldcpu", "fieldfft"] {
         let mut engine = embed::by_name(name, None).unwrap();
         let mut first = f64::NAN;
         let mut last = f64::NAN;
@@ -169,6 +169,34 @@ fn gpgpu_engine_bucket_padding_is_inert() {
     assert_eq!(y.len(), 2 * 123);
     assert!(y.iter().all(|v| v.is_finite()));
     assert!(last < first, "KL {first:.3} -> {last:.3}");
+}
+
+#[test]
+fn engine_registry_and_const_list_cannot_drift() {
+    // Every name in embed::ENGINES must round-trip through embed::by_name,
+    // so the const list and the registry can never diverge. `gpgpu` is
+    // exercised only when artifacts are present (otherwise its by_name
+    // error must be the artifact hint, not "unknown engine").
+    let rt = runtime::locate_artifacts().and_then(|d| Runtime::new(&d).ok()).map(Arc::new);
+    for &name in embed::ENGINES {
+        let runtime = if name == "gpgpu" { rt.clone() } else { None };
+        if name == "gpgpu" && runtime.is_none() {
+            match embed::by_name(name, None) {
+                Ok(_) => panic!("gpgpu without runtime must fail to construct"),
+                Err(err) => assert!(
+                    format!("{err:#}").contains("artifacts"),
+                    "gpgpu without runtime must explain artifacts, got: {err:#}"
+                ),
+            }
+            eprintln!("SKIP gpgpu construction: no artifacts/");
+            continue;
+        }
+        let engine = embed::by_name(name, runtime)
+            .unwrap_or_else(|e| panic!("ENGINES lists '{name}' but by_name failed: {e:#}"));
+        assert_eq!(engine.name(), name, "engine renames itself");
+    }
+    // And by_name must still reject names that are not in the list.
+    assert!(embed::by_name("not-an-engine", None).is_err());
 }
 
 #[test]

@@ -1,0 +1,207 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build environment for this repo is fully offline, so instead of the
+//! crates.io `anyhow` we ship the small slice the codebase actually uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros. Semantics
+//! mirror upstream where it matters:
+//!
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole cause chain joined by `": "`.
+//! * Any `E: std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`, capturing its `source()` chain.
+//! * `Error` itself does NOT implement `std::error::Error` (exactly like
+//!   upstream), which is what makes the blanket `From` impl coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: an outermost-first chain of messages.
+pub struct Error {
+    /// `chain[0]` is the outermost context, `chain.last()` the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single printable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return Err($crate::Error::msg(format!($msg)))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($fmt, $($arg)*)))
+    };
+    ($err:expr $(,)?) => {
+        return Err($crate::Error::msg($err))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($msg)));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($fmt, $($arg)*)));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        let v: Option<u8> = Some(3);
+        assert_eq!(v.with_context(|| "x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<u8> {
+            ensure!(!flag, "flag was {flag}");
+            bail!("always fails with {}", 42);
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "always fails with 42");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+    }
+}
