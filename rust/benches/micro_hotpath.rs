@@ -5,9 +5,10 @@
 //! attractive pass, and the kNN structures.
 //!
 //! Besides the human-readable tables/CSVs this emits `BENCH_micro.json`
-//! (in the package root): per-engine ns/iter at fixed (N, G) plus the
-//! field-stage head-to-head at N=50 000, G=256, so the perf trajectory is
-//! machine-trackable across PRs.
+//! (at the *workspace* root, where it is committed): per-engine ns/iter
+//! at fixed (N, G), the field-stage head-to-head at N=50 000, G=256, and
+//! the FFT-core complex-vs-real pipeline ratio, so the perf trajectory
+//! is machine-trackable across PRs.
 //!
 //!     cargo bench --bench micro_hotpath [-- --quick]
 
@@ -132,6 +133,53 @@ fn main() -> anyhow::Result<()> {
                     ]),
                 ),
                 ("speedup_fieldfft_vs_fieldcpu", Json::Num(speedup)),
+            ]),
+        ));
+    }
+
+    // --- FFT core: full-complex vs real-packed (r2c/c2r) 2-D pipeline
+    // at the production transform size (M=2048 is what G=256, s=2 pads
+    // to). Roundtrip = forward + inverse, the per-channel unit of work.
+    {
+        use gpgpu_sne::field::fft::{fft2d, half_width, irfft2d, rfft2d, Fft};
+        let m = if quick { 512usize } else { 2048 };
+        let hw = half_width(m);
+        let plan = Fft::new(m);
+        let base = random_points(m * m / 2, 5, 1.0); // m·m values
+        let mut cre = vec![0.0f32; m * m];
+        let mut cim = vec![0.0f32; m * m];
+        let complex_t = measure(warmup, iters, || {
+            cre.copy_from_slice(&base);
+            cim.iter_mut().for_each(|v| *v = 0.0);
+            fft2d(&plan, &mut cre, &mut cim, false);
+            fft2d(&plan, &mut cre, &mut cim, true);
+        })
+        .median();
+        let mut plane = vec![0.0f32; m * m];
+        let mut sre = vec![0.0f32; hw * m];
+        let mut sim = vec![0.0f32; hw * m];
+        let mut tre = vec![0.0f32; m * hw];
+        let mut tim = vec![0.0f32; m * hw];
+        let inv_m2 = 1.0 / (m * m) as f32;
+        let real_t = measure(warmup, iters, || {
+            plane.copy_from_slice(&base);
+            rfft2d(&plan, &mut plane, &mut sre, &mut sim, &mut tre, &mut tim);
+            irfft2d(&plan, &mut sre, &mut sim, &mut plane, &mut tre, &mut tim, inv_m2);
+        })
+        .median();
+        let speedup = complex_t / real_t;
+        let mut rep = Report::new(&format!("fft core roundtrip @ M={m}"), &["median", "speedup"]);
+        rep.row("complex 2-D", vec![format!("{:.2}ms", complex_t * 1e3), "1.0x".into()]);
+        rep.row("real r2c/c2r", vec![format!("{:.2}ms", real_t * 1e3), format!("{speedup:.2}x")]);
+        rep.print();
+        rep.write_csv("micro_fft_core.csv")?;
+        json_sections.push((
+            "fft_core",
+            Json::obj(vec![
+                ("m", Json::Num(m as f64)),
+                ("complex_roundtrip_ns", Json::Num(complex_t * 1e9)),
+                ("real_roundtrip_ns", Json::Num(real_t * 1e9)),
+                ("speedup_real_vs_complex", Json::Num(speedup)),
             ]),
         ));
     }
@@ -284,9 +332,12 @@ fn main() -> anyhow::Result<()> {
     rep.print();
     rep.write_csv("micro_sparse.csv")?;
 
-    // --- Machine-readable summary for cross-PR tracking.
+    // --- Machine-readable summary for cross-PR tracking, committed at
+    // the workspace root (cargo runs benches with the *package* root as
+    // cwd, hence the explicit path).
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_micro.json");
     let json = Json::obj(json_sections);
-    std::fs::write("BENCH_micro.json", format!("{json}\n"))?;
-    eprintln!("  [json] wrote BENCH_micro.json");
+    std::fs::write(out, format!("{json}\n"))?;
+    eprintln!("  [json] wrote {out}");
     Ok(())
 }

@@ -73,7 +73,7 @@ impl Engine for BarnesHut {
         params: &OptParams,
         observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
     ) -> anyhow::Result<Vec<f32>> {
-        run_gd_loop(self.name, &mut BhRepulsion { theta: self.theta }, p, params, observer)
+        run_gd_loop(&mut BhRepulsion { theta: self.theta }, p, params, observer)
     }
 }
 

@@ -59,7 +59,7 @@ impl Engine for ExactTsne {
         params: &OptParams,
         observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
     ) -> anyhow::Result<Vec<f32>> {
-        run_gd_loop("exact", &mut ExactRepulsion, p, params, observer)
+        run_gd_loop(&mut ExactRepulsion, p, params, observer)
     }
 }
 

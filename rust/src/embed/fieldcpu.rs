@@ -91,7 +91,7 @@ impl Engine for FieldCpu {
         params: &OptParams,
         observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
     ) -> anyhow::Result<Vec<f32>> {
-        run_gd_loop("fieldcpu", &mut self.rep, p, params, observer)
+        run_gd_loop(&mut self.rep, p, params, observer)
     }
 }
 

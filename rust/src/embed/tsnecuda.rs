@@ -55,7 +55,7 @@ impl Engine for TsneCudaSim {
     ) -> anyhow::Result<Vec<f32>> {
         // Quality path: identical to BH at this θ (by construction —
         // that IS the simulation, per DESIGN.md §7).
-        run_gd_loop(self.name, &mut BhRepulsion { theta: self.theta }, p, params, observer)
+        run_gd_loop(&mut BhRepulsion { theta: self.theta }, p, params, observer)
     }
 }
 

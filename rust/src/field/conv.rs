@@ -14,6 +14,18 @@
 //! which makes the circular convolution exact for every in-grid
 //! displacement (no wraparound).
 //!
+//! Every spatial plane here is purely *real*, so the spectral pipeline is
+//! the r2c/c2r one ([`crate::field::fft::rfft2d`]): only the Hermitian
+//! half-spectrum (`hw = M/2 + 1` column frequencies, stored `hw×M`) is
+//! ever computed, stored or multiplied. Per iteration that is one real
+//! forward (the charge) plus three real inverses (S, Vx, Vy) — about
+//! **2 complex-transform equivalents instead of the 4** the full-complex
+//! formulation costs — and the three spectral multiplies are fused into
+//! a single pass that reads the charge spectrum and each kernel spectrum
+//! exactly once (3× less plane traffic than channel-at-a-time). The
+//! inverse-transform 1/M² normalisation is folded into the cached kernel
+//! spectra at build time, so the per-iteration inverses run raw.
+//!
 //! Accuracy comes from two knobs validated against the gather oracle:
 //! cubic-Lagrange deposition (O(h⁴), `splat`) and internal oversampling —
 //! the convolution runs at a fine pixel `h_f = pixel / s ≤ FINE_PIXEL`,
@@ -33,7 +45,7 @@
 
 use std::sync::Arc;
 
-use super::fft::{fft2d, Fft};
+use super::fft::{half_width, irfft2d, rfft2d, Fft};
 use super::{splat, FieldBackend, FieldTexture, Placement};
 use crate::util::parallel::{self, SyncSlice};
 
@@ -54,31 +66,32 @@ pub const MAX_OVERSAMPLE: usize = 4;
 pub const KERNEL_PIXEL_RTOL: f32 = 1e-3;
 
 /// Cap on the padded transform side M. Oversampling is reduced (never
-/// below 1) to respect it, bounding the scratch planes at 4·M² and each
-/// cached kernel set at 6·M² f32 (64 MB + 96 MB/set at the default).
-/// At the ρ-policy operating point the cap never binds (G ≤ 512, s = 2
-/// → M = 2048); it only sheds oversampling once the grid is clamped at
-/// `max_grid` AND the diameter has outgrown it — where field accuracy
-/// is pixel-limited for every backend anyway.
+/// below 1) to respect it, bounding the backend scratch at ~5·M² f32
+/// (80 MB at the default) and each cached kernel set at its 6 half-
+/// spectra ≈ 3·M² f32 (48 MB/set — the half-spectrum layout halved
+/// this). At the ρ-policy operating point the cap never binds (G ≤ 512,
+/// s = 2 → M = 2048); it only sheds oversampling once the grid is
+/// clamped at `max_grid` AND the diameter has outgrown it — where field
+/// accuracy is pixel-limited for every backend anyway.
 pub const MAX_TRANSFORM: usize = 2048;
 
-/// Frequency-domain Cauchy kernels for one `(M, fine-pixel)` pair.
+/// Frequency-domain Cauchy kernels for one `(M, fine-pixel)` pair, in
+/// the `hw×M` half-spectrum layout, pre-scaled by 1/M² (the inverse
+/// normalisation) so the hot path's inverse transforms run raw.
 pub struct SpectralKernels {
     pub m: usize,
     pub pixel: f32,
-    /// Per channel (S, Vx, Vy): split re/im spectra of length M².
+    /// Per channel (S, Vx, Vy): split re/im half-spectra of hw·M entries.
     chan: [(Vec<f32>, Vec<f32>); 3],
 }
 
-impl SpectralKernels {
-    /// Sample the three kernels over signed displacements and transform.
-    pub fn build(plan: &Fft, pixel: f32) -> Self {
-        let m = plan.len();
-        let mut chan: [(Vec<f32>, Vec<f32>); 3] = [
-            (vec![0.0; m * m], vec![0.0; m * m]),
-            (vec![0.0; m * m], vec![0.0; m * m]),
-            (vec![0.0; m * m], vec![0.0; m * m]),
-        ];
+/// Sample one spatial Cauchy kernel channel over signed displacements
+/// onto an `m×m` plane (row-major, wrap-ordered: index i ≥ m/2 means
+/// displacement i − m).
+fn sample_kernel(ch: usize, pixel: f32, m: usize, plane: &mut [f32]) {
+    debug_assert_eq!(plane.len(), m * m);
+    let cells = SyncSlice::new(plane);
+    parallel::par_chunks(m, 16, |rows| {
         let signed = |i: usize| -> f64 {
             if i < m / 2 {
                 i as f64
@@ -86,29 +99,48 @@ impl SpectralKernels {
                 i as f64 - m as f64
             }
         };
-        {
-            let [c_s, c_vx, c_vy] = &mut chan;
-            let s = SyncSlice::new(&mut c_s.0);
-            let vx = SyncSlice::new(&mut c_vx.0);
-            let vy = SyncSlice::new(&mut c_vy.0);
-            parallel::par_chunks(m, 16, |rows| {
-                for r in rows {
-                    let dy = signed(r) * pixel as f64;
-                    for c in 0..m {
-                        let dx = signed(c) * pixel as f64;
-                        let ks = 1.0 / (1.0 + dx * dx + dy * dy);
-                        let kv = ks * ks;
-                        unsafe {
-                            *s.get_mut(r * m + c) = ks as f32;
-                            *vx.get_mut(r * m + c) = (-dx * kv) as f32;
-                            *vy.get_mut(r * m + c) = (-dy * kv) as f32;
-                        }
-                    }
+        for r in rows {
+            let dy = signed(r) * pixel as f64;
+            for c in 0..m {
+                let dx = signed(c) * pixel as f64;
+                let ks = 1.0 / (1.0 + dx * dx + dy * dy);
+                let v = match ch {
+                    0 => ks,
+                    1 => -dx * ks * ks,
+                    _ => -dy * ks * ks,
+                };
+                unsafe {
+                    *cells.get_mut(r * m + c) = v as f32;
                 }
-            });
+            }
         }
-        for (re, im) in chan.iter_mut() {
-            fft2d(plan, re, im, false);
+    });
+}
+
+impl SpectralKernels {
+    /// Sample the three kernels over signed displacements, transform each
+    /// through the real pipeline, and fold in the 1/M² inverse scale.
+    pub fn build(plan: &Fft, pixel: f32) -> Self {
+        let m = plan.len();
+        let hw = half_width(m);
+        let mut chan: [(Vec<f32>, Vec<f32>); 3] = [
+            (vec![0.0; hw * m], vec![0.0; hw * m]),
+            (vec![0.0; hw * m], vec![0.0; hw * m]),
+            (vec![0.0; hw * m], vec![0.0; hw * m]),
+        ];
+        let mut plane = vec![0.0f32; m * m];
+        let mut tmp_re = vec![0.0f32; m * hw];
+        let mut tmp_im = vec![0.0f32; m * hw];
+        let inv_m2 = 1.0 / (m * m) as f32;
+        for (ch, (kre, kim)) in chan.iter_mut().enumerate() {
+            sample_kernel(ch, pixel, m, &mut plane);
+            rfft2d(plan, &mut plane, kre, kim, &mut tmp_re, &mut tmp_im);
+            for v in kre.iter_mut() {
+                *v *= inv_m2;
+            }
+            for v in kim.iter_mut() {
+                *v *= inv_m2;
+            }
         }
         Self { m, pixel, chan }
     }
@@ -157,7 +189,8 @@ impl KernelCache {
     }
 }
 
-/// The FFT field backend: splat → FFT → spectral multiply → inverse FFT.
+/// The FFT field backend: splat → r2c FFT → fused spectral multiply →
+/// three c2r inverse FFTs.
 pub struct FftBackend {
     /// Internal pixel target; lower = more accurate, bigger transforms.
     pub fine_pixel: f32,
@@ -168,13 +201,21 @@ pub struct FftBackend {
     kernels: KernelCache,
     /// FFT plans keyed by size (at most a few sizes alive per run).
     plans: Vec<Arc<Fft>>,
-    /// Reusable M² scratch planes (charge re/im, product re/im) — the
-    /// backend is called every iteration, so the hot path must not
-    /// re-allocate ~4×M² floats each time.
-    cre: Vec<f32>,
-    cim: Vec<f32>,
-    pre: Vec<f32>,
-    pim: Vec<f32>,
+    /// Reusable scratch — the backend runs every iteration, so the hot
+    /// path must not re-allocate ~5·M² floats each time. `plane` is the
+    /// real M² plane (charge in, per-channel field out); `spec_*` holds
+    /// the charge half-spectrum and is overwritten in place by the S
+    /// product during the fused multiply; `vxp_*`/`vyp_*` receive the
+    /// Vx/Vy products; `tmp_*` is the transform transpose scratch.
+    plane: Vec<f32>,
+    spec_re: Vec<f32>,
+    spec_im: Vec<f32>,
+    vxp_re: Vec<f32>,
+    vxp_im: Vec<f32>,
+    vyp_re: Vec<f32>,
+    vyp_im: Vec<f32>,
+    tmp_re: Vec<f32>,
+    tmp_im: Vec<f32>,
     /// Oversample factor used by the last `compute` (observability).
     pub last_oversample: usize,
     /// Padded transform size used by the last `compute` (observability).
@@ -195,10 +236,15 @@ impl FftBackend {
             max_transform: MAX_TRANSFORM,
             kernels: KernelCache::new(2),
             plans: Vec::new(),
-            cre: Vec::new(),
-            cim: Vec::new(),
-            pre: Vec::new(),
-            pim: Vec::new(),
+            plane: Vec::new(),
+            spec_re: Vec::new(),
+            spec_im: Vec::new(),
+            vxp_re: Vec::new(),
+            vxp_im: Vec::new(),
+            vyp_re: Vec::new(),
+            vyp_im: Vec::new(),
+            tmp_re: Vec::new(),
+            tmp_im: Vec::new(),
             last_oversample: 0,
             last_m: 0,
         }
@@ -245,49 +291,83 @@ impl FieldBackend for FftBackend {
         let shift = 0.5 * (pixel - pf);
         let of = [placement.origin[0] + shift, placement.origin[1] + shift];
         let m = (2 * gf).next_power_of_two();
+        let hw = half_width(m);
+        let ns = hw * m;
         self.last_oversample = s;
         self.last_m = m;
         let plan = self.plan(m);
         let kernels = self.kernels.get(&plan, pf);
 
-        // Charge plane (real input, imaginary part starts zero). The
-        // scratch buffers are reused across calls; clear+resize zeroes
-        // them without reallocating once capacity is established.
-        let (cre, cim, pre, pim) = (&mut self.cre, &mut self.cim, &mut self.pre, &mut self.pim);
-        cre.clear();
-        cre.resize(m * m, 0.0);
-        cim.clear();
-        cim.resize(m * m, 0.0);
-        // pre/pim are fully overwritten by the spectral multiply.
-        pre.resize(m * m, 0.0);
-        pim.resize(m * m, 0.0);
-        splat::splat_cubic(y, of, pf, gf, m, cre);
-        fft2d(&plan, cre, cim, false);
+        // The charge plane must start zeroed (splat accumulates); every
+        // other scratch plane is fully overwritten, so a bare resize
+        // (no clearing pass) suffices once capacity is established.
+        let (plane, spec_re, spec_im, vxp_re, vxp_im, vyp_re, vyp_im, tmp_re, tmp_im) = (
+            &mut self.plane,
+            &mut self.spec_re,
+            &mut self.spec_im,
+            &mut self.vxp_re,
+            &mut self.vxp_im,
+            &mut self.vyp_re,
+            &mut self.vyp_im,
+            &mut self.tmp_re,
+            &mut self.tmp_im,
+        );
+        plane.clear();
+        plane.resize(m * m, 0.0);
+        spec_re.resize(ns, 0.0);
+        spec_im.resize(ns, 0.0);
+        vxp_re.resize(ns, 0.0);
+        vxp_im.resize(ns, 0.0);
+        vyp_re.resize(ns, 0.0);
+        vyp_im.resize(ns, 0.0);
+        tmp_re.resize(ns, 0.0);
+        tmp_im.resize(ns, 0.0);
+        splat::splat_cubic(y, of, pf, gf, m, plane);
+        rfft2d(&plan, plane, spec_re, spec_im, tmp_re, tmp_im);
 
-        let mut tex = vec![0.0f32; 3 * grid * grid];
-        let plane = grid * grid;
-        for ch in 0..3 {
-            let (kre, kim) = &kernels.chan[ch];
-            {
-                let pre_s = SyncSlice::new(pre);
-                let pim_s = SyncSlice::new(pim);
-                let (cre, cim) = (&*cre, &*cim);
-                parallel::par_chunks(m * m, 1 << 15, |range| {
-                    for i in range {
-                        unsafe {
-                            *pre_s.get_mut(i) = cre[i] * kre[i] - cim[i] * kim[i];
-                            *pim_s.get_mut(i) = cre[i] * kim[i] + cim[i] * kre[i];
-                        }
+        // Fused spectral multiply: ONE pass over the charge half-spectrum
+        // produces all three channel products — charge and kernel spectra
+        // are each read exactly once, the S product lands back in spec_*
+        // (each entry is read before it is overwritten), Vx/Vy land in
+        // their own planes.
+        {
+            let (ks, kx, ky) = (&kernels.chan[0], &kernels.chan[1], &kernels.chan[2]);
+            let sre = SyncSlice::new(spec_re);
+            let sim = SyncSlice::new(spec_im);
+            let xre = SyncSlice::new(vxp_re);
+            let xim = SyncSlice::new(vxp_im);
+            let yre = SyncSlice::new(vyp_re);
+            let yim = SyncSlice::new(vyp_im);
+            parallel::par_chunks(ns, 1 << 15, |range| {
+                for i in range {
+                    unsafe {
+                        let cr = *sre.get_mut(i);
+                        let ci = *sim.get_mut(i);
+                        *sre.get_mut(i) = cr * ks.0[i] - ci * ks.1[i];
+                        *sim.get_mut(i) = cr * ks.1[i] + ci * ks.0[i];
+                        *xre.get_mut(i) = cr * kx.0[i] - ci * kx.1[i];
+                        *xim.get_mut(i) = cr * kx.1[i] + ci * kx.0[i];
+                        *yre.get_mut(i) = cr * ky.0[i] - ci * ky.1[i];
+                        *yim.get_mut(i) = cr * ky.1[i] + ci * ky.0[i];
                     }
-                });
-            }
-            fft2d(&plan, pre, pim, true);
-            // Stride-s copy of the fine plane back onto coarse centres.
+                }
+            });
+        }
+
+        // Inverse-transform each product (raw: the 1/M² normalisation
+        // lives in the cached kernel spectra) and stride-copy the fine
+        // plane back onto coarse pixel centres.
+        let mut tex = vec![0.0f32; 3 * grid * grid];
+        let coarse = grid * grid;
+        let prods: [(&mut Vec<f32>, &mut Vec<f32>); 3] =
+            [(spec_re, spec_im), (vxp_re, vxp_im), (vyp_re, vyp_im)];
+        for (ch, (pre, pim)) in prods.into_iter().enumerate() {
+            irfft2d(&plan, pre, pim, plane, tmp_re, tmp_im, 1.0);
             for r in 0..grid {
                 let src = r * s * m;
-                let dst = ch * plane + r * grid;
+                let dst = ch * coarse + r * grid;
                 for c in 0..grid {
-                    tex[dst + c] = pre[src + c * s];
+                    tex[dst + c] = plane[src + c * s];
                 }
             }
         }
@@ -404,5 +484,61 @@ mod tests {
         assert_eq!(cache.len(), 2);
         let a3 = cache.get(&plan, 0.1);
         assert!(Arc::ptr_eq(&a, &a3), "0.1 must have survived");
+    }
+
+    #[test]
+    fn half_spectrum_kernels_match_full_complex_build() {
+        // The cached half-spectrum kernels (scale folded in) must carry
+        // exactly the information of the old full-complex build: convolve
+        // a random charge through the backend pipeline and through a
+        // straight full-complex reference, compare the S channel.
+        use crate::field::fft::fft2d;
+        let m = 32usize;
+        let plan = Fft::new(m);
+        let mut rng = Rng::new(13);
+        let charge: Vec<f32> = (0..m * m).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let pixel = 0.4f32;
+
+        // Reference: full complex transforms, explicit normalisation.
+        let mut kre = vec![0.0f32; m * m];
+        sample_kernel(0, pixel, m, &mut kre);
+        let mut kim = vec![0.0f32; m * m];
+        fft2d(&plan, &mut kre, &mut kim, false);
+        let mut cre = charge.clone();
+        let mut cim = vec![0.0f32; m * m];
+        fft2d(&plan, &mut cre, &mut cim, false);
+        let mut pre = vec![0.0f32; m * m];
+        let mut pim = vec![0.0f32; m * m];
+        for i in 0..m * m {
+            pre[i] = cre[i] * kre[i] - cim[i] * kim[i];
+            pim[i] = cre[i] * kim[i] + cim[i] * kre[i];
+        }
+        fft2d(&plan, &mut pre, &mut pim, true);
+
+        // Half-spectrum path, as the backend runs it.
+        let hw = half_width(m);
+        let kernels = SpectralKernels::build(&plan, pixel);
+        let mut plane = charge.clone();
+        let mut sre = vec![0.0f32; hw * m];
+        let mut sim = vec![0.0f32; hw * m];
+        let mut tre = vec![0.0f32; m * hw];
+        let mut tim = vec![0.0f32; m * hw];
+        rfft2d(&plan, &mut plane, &mut sre, &mut sim, &mut tre, &mut tim);
+        for i in 0..hw * m {
+            let (cr, ci) = (sre[i], sim[i]);
+            sre[i] = cr * kernels.chan[0].0[i] - ci * kernels.chan[0].1[i];
+            sim[i] = cr * kernels.chan[0].1[i] + ci * kernels.chan[0].0[i];
+        }
+        irfft2d(&plan, &mut sre, &mut sim, &mut plane, &mut tre, &mut tim, 1.0);
+
+        let scale = pre.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-9);
+        for i in 0..m * m {
+            assert!(
+                (plane[i] - pre[i]).abs() < 1e-3 * scale,
+                "i={i}: {} vs {}",
+                plane[i],
+                pre[i]
+            );
+        }
     }
 }

@@ -1,4 +1,6 @@
-//! Dependency-free radix-2 FFT (power-of-two sizes only).
+//! Dependency-free radix-2 FFT (power-of-two sizes only) plus the
+//! real-input (r2c/c2r) 2-D spectral pipeline the field convolution runs
+//! on.
 //!
 //! Iterative Cooley–Tukey with a bit-reversal permutation and a twiddle
 //! table computed once per plan in f64 (then rounded to f32), which keeps
@@ -8,15 +10,48 @@
 //!
 //! Data layout is split re/im `&mut [f32]` (structure-of-arrays): the
 //! butterflies vectorise, and real-input planes (charge grids, kernels)
-//! reuse the same buffers without an interleave pass. 2-D transforms are
-//! row FFTs → in-place transpose → row FFTs → transpose, with the row
-//! passes threaded over `util::parallel`.
+//! reuse the same buffers without an interleave pass.
+//!
+//! Two 2-D pipelines are exposed:
+//!
+//! * [`fft2d`] — full complex `M×M` transform (rows → transpose → rows →
+//!   transpose). Kept as the correctness reference and for callers with
+//!   genuinely complex planes.
+//! * [`rfft2d`] / [`irfft2d`] — the production *real* pipeline. The
+//!   charge grid and the Cauchy kernels are purely real, so their spectra
+//!   are Hermitian (`F[-u,-v] = conj F[u,v]`) and only the half-spectrum
+//!   of `hw = M/2 + 1` column frequencies needs computing or storing.
+//!   Row transforms use the two-for-one trick — adjacent real rows `a`,
+//!   `b` are packed as `a + i·b` (for split storage that is literally
+//!   "use row `a` as re and row `b` as im"), one complex FFT runs, and
+//!   the two row spectra are separated by Hermitian symmetry — so the
+//!   row pass does `M/2` FFTs instead of `M`, and the column pass runs
+//!   over `hw ≈ M/2` rows instead of `M`. A full real 2-D transform is
+//!   therefore ~half a complex one; the conv pipeline's per-iteration
+//!   transform work drops from 4 complex-equivalents to ~2.
+//!
+//! Half-spectrum layout is **column-frequency-major**: `spec[k·M + j]`
+//! holds bin `(row-frequency j, column-frequency k)` for `k < hw` — i.e.
+//! the transpose of the top `hw` columns of the full spectrum. That is
+//! exactly the state the pipeline is in after its single mid-transform
+//! transpose, so no extra data movement is spent restoring row-major
+//! order; the elementwise spectral multiply is layout-agnostic.
+//!
+//! Transposes are tiled and threaded ([`transpose`], [`transpose_into`]):
+//! at M = 2048 a plane is 16 MB, far beyond L2, and the naive
+//! element-swap walk is the pipeline's memory-bandwidth bottleneck —
+//! `TILE×TILE` blocks keep both the read and write streams inside L1.
+//!
+//! `inverse`/`fft2d` own their 1/n normalisation; [`irfft2d`] instead
+//! takes an explicit `scale` fused into its final write, so callers that
+//! fold the normalisation elsewhere (conv.rs bakes 1/M² into the cached
+//! kernel spectra) pay nothing for it.
 
-use crate::util::parallel;
+use crate::util::parallel::{self, SyncSlice};
 
 /// An FFT plan for one power-of-two size: the twiddle half-table
 /// `tw[k] = e^{-2πik/n}`, `k < n/2`, plus the bit-reversal index table
-/// (both computed once — `run` is called 2·m times per 2-D transform).
+/// (both computed once — `run` is called O(m) times per 2-D transform).
 pub struct Fft {
     n: usize,
     tw_re: Vec<f32>,
@@ -46,8 +81,11 @@ impl Fft {
         self.n
     }
 
+    /// True only for a zero-length plan — which `new` rejects, so a
+    /// constructed plan is never empty. Present for the `len`/`is_empty`
+    /// pair convention; it must answer honestly, not stub `false`.
     pub fn is_empty(&self) -> bool {
-        false
+        self.n == 0
     }
 
     /// In-place forward DFT of one length-`n` signal.
@@ -67,6 +105,7 @@ impl Fft {
         }
     }
 
+    /// In-place raw DFT (no normalisation in either direction).
     fn run(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
         let n = self.n;
         debug_assert_eq!(re.len(), n);
@@ -103,20 +142,78 @@ impl Fft {
     }
 }
 
-/// In-place transpose of a square row-major `m×m` matrix.
+/// Number of stored column frequencies of a real length-`m` transform:
+/// the non-redundant Hermitian half, `m/2 + 1`.
+pub const fn half_width(m: usize) -> usize {
+    m / 2 + 1
+}
+
+/// Edge of the cache blocks used by the tiled transposes. Two f32 tiles
+/// (the read stream and the write stream) are 2·32² · 4 B = 8 KB —
+/// comfortably inside L1 on every target.
+const TILE: usize = 32;
+
+/// In-place transpose of a square row-major `m×m` matrix, cache-blocked
+/// (`TILE×TILE` tile pairs) and threaded over tile-row bands. Bands own
+/// disjoint tile pairs — band `bi` swaps blocks `(bi, bj)`/`(bj, bi)`
+/// for `bj ≥ bi` only — so no two workers touch the same element.
 pub fn transpose(a: &mut [f32], m: usize) {
     debug_assert_eq!(a.len(), m * m);
-    for r in 0..m {
-        for c in r + 1..m {
-            a.swap(r * m + c, c * m + r);
+    let nb = m.div_ceil(TILE);
+    let cells = SyncSlice::new(a);
+    parallel::par_chunks(nb, 1, |band| {
+        for bi in band {
+            let r0 = bi * TILE;
+            let r1 = (r0 + TILE).min(m);
+            // Diagonal tile: swap its upper triangle.
+            for r in r0..r1 {
+                for c in (r + 1)..r1 {
+                    unsafe {
+                        std::mem::swap(cells.get_mut(r * m + c), cells.get_mut(c * m + r));
+                    }
+                }
+            }
+            // Off-diagonal tiles (bi, bj>bi): swap the two mirror blocks.
+            for c0 in ((bi + 1) * TILE..m).step_by(TILE) {
+                let c1 = (c0 + TILE).min(m);
+                for r in r0..r1 {
+                    for c in c0..c1 {
+                        unsafe {
+                            std::mem::swap(cells.get_mut(r * m + c), cells.get_mut(c * m + r));
+                        }
+                    }
+                }
+            }
         }
-    }
+    });
+}
+
+/// Out-of-place transpose of a row-major `rows×cols` matrix into a
+/// `cols×rows` one: `dst[c·rows + r] = src[r·cols + c]`. Tiled so the
+/// strided stream stays within `TILE` cache lines per block, threaded
+/// over column bands (each band writes a disjoint contiguous dst slab).
+pub fn transpose_into(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    debug_assert!(src.len() >= rows * cols);
+    debug_assert!(dst.len() >= rows * cols);
+    let out = SyncSlice::new(dst);
+    parallel::par_chunks(cols, TILE, |cband| {
+        for r0 in (0..rows).step_by(TILE) {
+            let r1 = (r0 + TILE).min(rows);
+            for c in cband.clone() {
+                for r in r0..r1 {
+                    unsafe {
+                        *out.get_mut(c * rows + r) = src[r * cols + c];
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// Shared-buffer handle for threading row transforms (rows are disjoint).
 struct Rows {
     ptr: *mut f32,
-    m: usize,
+    stride: usize,
 }
 
 unsafe impl Send for Rows {}
@@ -126,43 +223,170 @@ impl Rows {
     /// # Safety
     /// Each row index must be used by at most one thread at a time.
     unsafe fn row(&self, r: usize) -> &mut [f32] {
-        std::slice::from_raw_parts_mut(self.ptr.add(r * self.m), self.m)
+        std::slice::from_raw_parts_mut(self.ptr.add(r * self.stride), self.stride)
     }
 }
 
-fn fft_rows(plan: &Fft, re: &mut [f32], im: &mut [f32], inverse: bool) {
+/// Raw (unnormalised) complex FFTs over `nrows` contiguous rows of
+/// length `plan.len()`, threaded.
+fn fft_rows(plan: &Fft, re: &mut [f32], im: &mut [f32], nrows: usize, inverse: bool) {
     let m = plan.len();
-    let re_rows = Rows { ptr: re.as_mut_ptr(), m };
-    let im_rows = Rows { ptr: im.as_mut_ptr(), m };
-    parallel::par_chunks(m, 8, |rows| {
+    debug_assert!(re.len() >= nrows * m && im.len() >= nrows * m);
+    let re_rows = Rows { ptr: re.as_mut_ptr(), stride: m };
+    let im_rows = Rows { ptr: im.as_mut_ptr(), stride: m };
+    parallel::par_chunks(nrows, 8, |rows| {
         for r in rows {
             let (rr, ri) = unsafe { (re_rows.row(r), im_rows.row(r)) };
             plan.run(rr, ri, inverse);
         }
     });
-    if inverse {
-        let s = 1.0 / m as f32;
-        for v in re.iter_mut() {
-            *v *= s;
-        }
-        for v in im.iter_mut() {
-            *v *= s;
-        }
-    }
 }
 
-/// In-place 2-D DFT of a row-major `m×m` plane (`m = plan.len()`).
-/// The inverse includes the full 1/m² scale.
+/// Threaded in-place scale of a whole plane.
+fn scale_plane(buf: &mut [f32], s: f32) {
+    let n = buf.len();
+    let slots = SyncSlice::new(buf);
+    parallel::par_chunks(n, 1 << 15, |range| {
+        for i in range {
+            unsafe {
+                *slots.get_mut(i) *= s;
+            }
+        }
+    });
+}
+
+/// In-place 2-D DFT of a row-major `m×m` complex plane
+/// (`m = plan.len()`). The inverse includes the full 1/m² scale.
 pub fn fft2d(plan: &Fft, re: &mut [f32], im: &mut [f32], inverse: bool) {
     let m = plan.len();
     assert_eq!(re.len(), m * m);
     assert_eq!(im.len(), m * m);
-    fft_rows(plan, re, im, inverse);
+    fft_rows(plan, re, im, m, inverse);
     transpose(re, m);
     transpose(im, m);
-    fft_rows(plan, re, im, inverse);
+    fft_rows(plan, re, im, m, inverse);
     transpose(re, m);
     transpose(im, m);
+    if inverse {
+        let s = 1.0 / (m * m) as f32;
+        scale_plane(re, s);
+        scale_plane(im, s);
+    }
+}
+
+/// Forward real 2-D transform: row-major real `m×m` `plane` (destroyed)
+/// → half-spectrum `spec_re/spec_im` of `hw×m` entries, where
+/// `spec[k·m + j]` is bin (row-frequency `j`, column-frequency `k`),
+/// `k < hw = m/2 + 1` (see the module docs for why this transposed
+/// layout is the natural resting state). `tmp_re/tmp_im` are `m·hw`
+/// scratch planes; all output/scratch contents are fully overwritten.
+pub fn rfft2d(
+    plan: &Fft,
+    plane: &mut [f32],
+    spec_re: &mut [f32],
+    spec_im: &mut [f32],
+    tmp_re: &mut [f32],
+    tmp_im: &mut [f32],
+) {
+    let m = plan.len();
+    let hw = half_width(m);
+    assert_eq!(plane.len(), m * m);
+    assert!(spec_re.len() >= hw * m && spec_im.len() >= hw * m);
+    assert!(tmp_re.len() >= m * hw && tmp_im.len() >= m * hw);
+    // 1. Two-for-one row FFTs: row pair (a, b) = (2p, 2p+1) packed as
+    //    a + i·b runs one in-place complex FFT inside the plane itself,
+    //    then the Hermitian unpack separates the two row spectra into
+    //    the m×hw half rows:
+    //      A[k] = (Z[k] + conj Z[m−k]) / 2
+    //      B[k] = (Z[k] − conj Z[m−k]) / 2i
+    {
+        let prows = Rows { ptr: plane.as_mut_ptr(), stride: m };
+        let tre = Rows { ptr: tmp_re.as_mut_ptr(), stride: hw };
+        let tim = Rows { ptr: tmp_im.as_mut_ptr(), stride: hw };
+        parallel::par_chunks(m / 2, 4, |pairs| {
+            for pair in pairs {
+                let (a, b) = (2 * pair, 2 * pair + 1);
+                let (zre, zim) = unsafe { (prows.row(a), prows.row(b)) };
+                plan.run(zre, zim, false);
+                let (are, aim) = unsafe { (tre.row(a), tim.row(a)) };
+                let (bre, bim) = unsafe { (tre.row(b), tim.row(b)) };
+                for k in 0..hw {
+                    let mk = (m - k) & (m - 1); // (m − k) mod m
+                    are[k] = 0.5 * (zre[k] + zre[mk]);
+                    aim[k] = 0.5 * (zim[k] - zim[mk]);
+                    bre[k] = 0.5 * (zim[k] + zim[mk]);
+                    bim[k] = 0.5 * (zre[mk] - zre[k]);
+                }
+            }
+        });
+    }
+    // 2. m×hw → hw×m: the half-spectrum's resting layout.
+    transpose_into(tmp_re, spec_re, m, hw);
+    transpose_into(tmp_im, spec_im, m, hw);
+    // 3. Column FFTs: hw complex rows of length m.
+    fft_rows(plan, spec_re, spec_im, hw, false);
+}
+
+/// Inverse of [`rfft2d`]: half-spectrum `spec_re/spec_im` (`hw×m`,
+/// destroyed) → real `m×m` `plane`. The transforms are raw; `scale` is
+/// fused into the final row writes — pass `1.0 / (m·m)` for a true
+/// inverse, or `1.0` when the normalisation was folded upstream (the
+/// conv pipeline bakes it into the cached kernel spectra).
+pub fn irfft2d(
+    plan: &Fft,
+    spec_re: &mut [f32],
+    spec_im: &mut [f32],
+    plane: &mut [f32],
+    tmp_re: &mut [f32],
+    tmp_im: &mut [f32],
+    scale: f32,
+) {
+    let m = plan.len();
+    let hw = half_width(m);
+    assert_eq!(plane.len(), m * m);
+    assert!(spec_re.len() >= hw * m && spec_im.len() >= hw * m);
+    assert!(tmp_re.len() >= m * hw && tmp_im.len() >= m * hw);
+    // 1. Raw inverse column FFTs.
+    fft_rows(plan, spec_re, spec_im, hw, true);
+    // 2. hw×m → m×hw.
+    transpose_into(spec_re, tmp_re, hw, m);
+    transpose_into(spec_im, tmp_im, hw, m);
+    // 3. Row pairs: rebuild the packed full-width row a + i·b from the
+    //    two Hermitian half rows (the mirror of the forward unpack:
+    //    Z[k] = A[k] + i·B[k] for k < hw, Z[k] = conj A[m−k] +
+    //    i·conj B[m−k] above), one raw inverse FFT in place in the
+    //    plane, scale fused into the final write.
+    {
+        let prows = Rows { ptr: plane.as_mut_ptr(), stride: m };
+        let tre = Rows { ptr: tmp_re.as_mut_ptr(), stride: hw };
+        let tim = Rows { ptr: tmp_im.as_mut_ptr(), stride: hw };
+        parallel::par_chunks(m / 2, 4, |pairs| {
+            for pair in pairs {
+                let (a, b) = (2 * pair, 2 * pair + 1);
+                let (are, aim) = unsafe { (tre.row(a), tim.row(a)) };
+                let (bre, bim) = unsafe { (tre.row(b), tim.row(b)) };
+                let (zre, zim) = unsafe { (prows.row(a), prows.row(b)) };
+                for k in 0..hw {
+                    zre[k] = are[k] - bim[k];
+                    zim[k] = aim[k] + bre[k];
+                }
+                for k in hw..m {
+                    let mk = m - k;
+                    zre[k] = are[mk] + bim[mk];
+                    zim[k] = bre[mk] - aim[mk];
+                }
+                plan.run(zre, zim, true);
+                if scale != 1.0 {
+                    for v in zre.iter_mut() {
+                        *v *= scale;
+                    }
+                    for v in zim.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +407,11 @@ mod tests {
             }
         }
         (re, im)
+    }
+
+    fn random_plane(m: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..m * m).map(|_| rng.gauss_f32(0.0, 1.0)).collect()
     }
 
     #[test]
@@ -236,6 +465,16 @@ mod tests {
     }
 
     #[test]
+    fn plan_is_never_empty() {
+        // The convention pair must not lie: a constructed plan has
+        // positive length, so is_empty is false (it used to stub
+        // `false` unconditionally — same answer, honest derivation).
+        let p = Fft::new(8);
+        assert_eq!(p.len(), 8);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
     fn fft2d_roundtrip_and_dc() {
         let mut rng = Rng::new(3);
         let m = 32;
@@ -255,6 +494,75 @@ mod tests {
     }
 
     #[test]
+    fn rfft2d_matches_full_complex_spectrum() {
+        // Golden equivalence: the half-spectrum entry (k, j) must be the
+        // full complex transform's bin (row-freq j, col-freq k).
+        for (m, seed) in [(2usize, 4u64), (8, 5), (32, 6), (64, 7)] {
+            let hw = half_width(m);
+            let plan = Fft::new(m);
+            let x = random_plane(m, seed);
+            let mut fre = x.clone();
+            let mut fim = vec![0.0f32; m * m];
+            fft2d(&plan, &mut fre, &mut fim, false);
+            let mut plane = x.clone();
+            let mut sre = vec![0.0f32; hw * m];
+            let mut sim = vec![0.0f32; hw * m];
+            let mut tre = vec![0.0f32; m * hw];
+            let mut tim = vec![0.0f32; m * hw];
+            rfft2d(&plan, &mut plane, &mut sre, &mut sim, &mut tre, &mut tim);
+            let scale = fre
+                .iter()
+                .chain(fim.iter())
+                .fold(0.0f32, |a, v| a.max(v.abs()))
+                .max(1.0);
+            for k in 0..hw {
+                for j in 0..m {
+                    let dr = (sre[k * m + j] - fre[j * m + k]).abs();
+                    let di = (sim[k * m + j] - fim[j * m + k]).abs();
+                    assert!(
+                        dr < 2e-4 * scale && di < 2e-4 * scale,
+                        "m={m} bin(j={j},k={k}): ({},{}) vs ({},{})",
+                        sre[k * m + j],
+                        sim[k * m + j],
+                        fre[j * m + k],
+                        fim[j * m + k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rfft2d_roundtrip() {
+        for (m, seed) in [(2usize, 8u64), (16, 9), (64, 10)] {
+            let hw = half_width(m);
+            let plan = Fft::new(m);
+            let x = random_plane(m, seed);
+            let mut plane = x.clone();
+            let mut sre = vec![0.0f32; hw * m];
+            let mut sim = vec![0.0f32; hw * m];
+            let mut tre = vec![0.0f32; m * hw];
+            let mut tim = vec![0.0f32; m * hw];
+            rfft2d(&plan, &mut plane, &mut sre, &mut sim, &mut tre, &mut tim);
+            let s = 1.0 / (m * m) as f32;
+            irfft2d(&plan, &mut sre, &mut sim, &mut plane, &mut tre, &mut tim, s);
+            for i in 0..m * m {
+                assert!((plane[i] - x[i]).abs() < 1e-4, "m={m} i={i}: {} vs {}", plane[i], x[i]);
+            }
+        }
+    }
+
+    fn transpose_naive(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = a[r * cols + c];
+            }
+        }
+        out
+    }
+
+    #[test]
     fn transpose_involution() {
         let m = 5;
         let a: Vec<f32> = (0..25).map(|i| i as f32).collect();
@@ -263,5 +571,26 @@ mod tests {
         assert_eq!(b[1], a[5]); // (0,1) <- (1,0)
         transpose(&mut b, m);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tiled_transpose_matches_naive_square() {
+        // Sizes straddling the tile edge, including non-tile-aligned.
+        for m in [1usize, 5, 31, 32, 33, 100] {
+            let a: Vec<f32> = (0..m * m).map(|i| i as f32).collect();
+            let mut b = a.clone();
+            transpose(&mut b, m);
+            assert_eq!(b, transpose_naive(&a, m, m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn tiled_transpose_into_matches_naive_rect() {
+        for (rows, cols) in [(1usize, 7usize), (5, 3), (32, 32), (33, 65), (100, 17), (17, 100)] {
+            let a: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+            let mut b = vec![0.0f32; rows * cols];
+            transpose_into(&a, &mut b, rows, cols);
+            assert_eq!(b, transpose_naive(&a, rows, cols), "{rows}x{cols}");
+        }
     }
 }

@@ -11,6 +11,17 @@
 //!   (Linderman et al.'s interpolation-FFT formulation; the same
 //!   mathematics t-SNE-CUDA uses on device). The production CPU path.
 //!
+//! The spectral machinery ([`fft`]) exploits that every plane here is
+//! *real*: transforms run through an r2c/c2r pipeline that packs row
+//! pairs two-for-one and keeps only the Hermitian half-spectrum
+//! (`M/2 + 1` column frequencies, stored transposed). Per iteration the
+//! convolution costs one real forward plus three real inverses ≈ 2
+//! complex-transform equivalents (the full-complex formulation needs 4),
+//! the three channel multiplies are fused into one pass over the charge
+//! spectrum, and the mid-transform transposes are tiled and threaded.
+//! Cached kernel spectra ([`conv::SpectralKernels`]) live in the same
+//! half-spectrum layout, halving the cache footprint.
+//!
 //! Shared pieces live here: the texture type, the square-grid placement
 //! policy (mirroring `python/compile/model.py::grid_placement`), and
 //! bilinear sampling.

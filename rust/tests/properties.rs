@@ -185,6 +185,49 @@ fn prop_field_repulsion_tracks_exact() {
 }
 
 #[test]
+fn prop_rfft2d_roundtrip_and_half_spectrum() {
+    // r2c/c2r forward-inverse is the identity on random real planes of
+    // every power-of-two size, and the half-spectrum agrees with the
+    // full complex transform bin-for-bin.
+    use gpgpu_sne::field::fft::{fft2d, half_width, irfft2d, rfft2d, Fft};
+    prop::check("r2c/c2r roundtrip", &usize_in(1, 6), |&e| {
+        let m = 1usize << e; // 2..64
+        let hw = half_width(m);
+        let plan = Fft::new(m);
+        let mut rng = Rng::new(0xF0 + m as u64);
+        let x: Vec<f32> = (0..m * m).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+        let mut plane = x.clone();
+        let mut sre = vec![0.0f32; hw * m];
+        let mut sim = vec![0.0f32; hw * m];
+        let mut tre = vec![0.0f32; m * hw];
+        let mut tim = vec![0.0f32; m * hw];
+        rfft2d(&plan, &mut plane, &mut sre, &mut sim, &mut tre, &mut tim);
+        // Half-spectrum vs full-complex golden equivalence.
+        let mut fre = x.clone();
+        let mut fim = vec![0.0f32; m * m];
+        fft2d(&plan, &mut fre, &mut fim, false);
+        let scale = fre.iter().chain(fim.iter()).fold(1.0f32, |a, v| a.max(v.abs()));
+        for k in 0..hw {
+            for j in 0..m {
+                let dr = (sre[k * m + j] - fre[j * m + k]).abs();
+                let di = (sim[k * m + j] - fim[j * m + k]).abs();
+                if dr > 2e-4 * scale || di > 2e-4 * scale {
+                    return Err(format!("m={m} bin({j},{k}) off by ({dr},{di})"));
+                }
+            }
+        }
+        // Roundtrip identity.
+        irfft2d(&plan, &mut sre, &mut sim, &mut plane, &mut tre, &mut tim, 1.0 / (m * m) as f32);
+        for i in 0..m * m {
+            if (plane[i] - x[i]).abs() > 1e-4 {
+                return Err(format!("m={m} i={i}: {} vs {}", plane[i], x[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_kbest_matches_sort() {
     prop::check("KBest == full sort", &vec_f32(1, 200, 0.0, 100.0), |ds| {
         let k = 7.min(ds.len());
