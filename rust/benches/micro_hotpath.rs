@@ -6,9 +6,10 @@
 //!
 //! Besides the human-readable tables/CSVs this emits `BENCH_micro.json`
 //! (at the *workspace* root, where it is committed): per-engine ns/iter
-//! at fixed (N, G), the field-stage head-to-head at N=50 000, G=256, and
-//! the FFT-core complex-vs-real pipeline ratio, so the perf trajectory
-//! is machine-trackable across PRs.
+//! at fixed (N, G), the field-stage head-to-head at N=50 000, G=256, the
+//! FFT-core complex-vs-real pipeline ratio, and the similarities section
+//! (blocked vs scalar brute kNN at N=10k/D=128, fused vs reference P
+//! build), so the perf trajectory is machine-trackable across PRs.
 //!
 //!     cargo bench --bench micro_hotpath [-- --quick]
 
@@ -22,7 +23,7 @@ use gpgpu_sne::embed::exact::ExactRepulsion;
 use gpgpu_sne::embed::fieldcpu::{compute_fields, grid_placement, FieldRepulsion};
 use gpgpu_sne::field::conv::FftBackend;
 use gpgpu_sne::field::{FieldBackend, Placement};
-use gpgpu_sne::hd::{kdforest, perplexity, vptree};
+use gpgpu_sne::hd::{bruteforce, kdforest, perplexity, vptree, Dataset};
 use gpgpu_sne::runtime::{self, Runtime, StepState};
 use gpgpu_sne::util::bench::{measure, quick_mode, Report};
 use gpgpu_sne::util::json::Json;
@@ -315,6 +316,83 @@ fn main() -> anyhow::Result<()> {
     rep.row("kdforest", vec![format!("{:.2}s", kd_t), format!("{:.3}", kd.recall_against(&exact))]);
     rep.print();
     rep.write_csv("micro_knn.csv")?;
+
+    // --- Similarities: blocked panel kernel vs the scalar per-pair scan
+    // (brute kNN at the acceptance point N=10k, D=128; quick mode scales
+    // N down like every other section) and the fused one-pass P build vs
+    // the seed's transpose-and-merge reference.
+    {
+        let sn = if quick { 2000usize } else { 10_000 };
+        let sd = 128usize;
+        let sk = 90usize;
+        let mut rng = Rng::new(12);
+        let x: Vec<f32> = (0..sn * sd).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let ds = Dataset::new("similarities-bench", sn, sd, x, vec![]);
+        let it = if quick { 1 } else { 3 };
+        // The oracle graphs double as warmup for the timed runs below.
+        let g_scalar = bruteforce::knn_scalar_reference(&ds, sk);
+        let g = bruteforce::knn(&ds, sk);
+        let recall = g.recall_against(&g_scalar);
+        let scalar_t = measure(0, it, || {
+            let _ = bruteforce::knn_scalar_reference(&ds, sk);
+        })
+        .median();
+        let blocked_t = measure(0, it, || {
+            let _ = bruteforce::knn(&ds, sk);
+        })
+        .median();
+        let knn_speedup = scalar_t / blocked_t;
+        let p_ref_t = measure(0, it.max(2), || {
+            let _ = perplexity::joint_p_reference(&g, 30.0);
+        })
+        .median();
+        let p_fused_t = measure(0, it.max(2), || {
+            let _ = perplexity::joint_p(&g, 30.0);
+        })
+        .median();
+        let p_speedup = p_ref_t / p_fused_t;
+        let mut rep = Report::new(
+            &format!("similarities @ N={sn}, D={sd}, k={sk}"),
+            &["median", "speedup", "recall"],
+        );
+        rep.row(
+            "brute kNN scalar (seed)",
+            vec![format!("{:.2}s", scalar_t), "1.0x".into(), "1.000".into()],
+        );
+        rep.row(
+            "brute kNN blocked",
+            vec![
+                format!("{:.2}s", blocked_t),
+                format!("{knn_speedup:.1}x"),
+                format!("{recall:.3}"),
+            ],
+        );
+        rep.row(
+            "P build reference (seed)",
+            vec![format!("{:.1}ms", p_ref_t * 1e3), "1.0x".into(), "-".into()],
+        );
+        rep.row(
+            "P build fused",
+            vec![format!("{:.1}ms", p_fused_t * 1e3), format!("{p_speedup:.1}x"), "-".into()],
+        );
+        rep.print();
+        rep.write_csv("micro_similarities.csv")?;
+        json_sections.push((
+            "similarities",
+            Json::obj(vec![
+                ("n", Json::Num(sn as f64)),
+                ("d", Json::Num(sd as f64)),
+                ("k", Json::Num(sk as f64)),
+                ("knn_scalar_ns", Json::Num(scalar_t * 1e9)),
+                ("knn_blocked_ns", Json::Num(blocked_t * 1e9)),
+                ("speedup_blocked_vs_scalar", Json::Num(knn_speedup)),
+                ("recall_blocked_vs_scalar", Json::Num(recall)),
+                ("p_build_reference_ns", Json::Num(p_ref_t * 1e9)),
+                ("p_build_fused_ns", Json::Num(p_fused_t * 1e9)),
+                ("speedup_fused_vs_reference", Json::Num(p_speedup)),
+            ]),
+        ));
+    }
 
     // --- Perplexity + attractive pass.
     let p = perplexity::joint_p(&exact, 30.0);

@@ -2,8 +2,10 @@
 
 use crate::embed::OptParams;
 
-/// How the high-dimensional kNN graph is computed.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// How the high-dimensional kNN graph is computed. Each variant names a
+/// `hd::backend` registry entry; `Hash` because the method is part of the
+/// similarity-cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KnnMethod {
     /// Exact O(N²D) brute force.
     Brute,
@@ -11,6 +13,26 @@ pub enum KnnMethod {
     VpTree,
     /// Approximate randomised KD-forest (A-tSNE / FAISS stand-in).
     KdForest,
+}
+
+impl KnnMethod {
+    /// The `hd::backend::by_name` registry name.
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            KnnMethod::Brute => "brute",
+            KnnMethod::VpTree => "vptree",
+            KnnMethod::KdForest => "kdforest",
+        }
+    }
+
+    /// Whether the backend's *output* depends on the seed. Brute force
+    /// ignores it entirely, so the similarity cache can key seed-blind
+    /// and serve seed sweeps over identical data from one entry.
+    /// (VP-tree stays seed-sensitive: vantage selection can reorder
+    /// equal-distance ties, and cached results must be bit-reproducible.)
+    pub fn seed_sensitive(&self) -> bool {
+        !matches!(self, KnnMethod::Brute)
+    }
 }
 
 impl std::str::FromStr for KnnMethod {
@@ -133,6 +155,18 @@ mod tests {
         assert_eq!("vptree".parse::<KnnMethod>().unwrap(), KnnMethod::VpTree);
         assert_eq!("approx".parse::<KnnMethod>().unwrap(), KnnMethod::KdForest);
         assert!("x".parse::<KnnMethod>().is_err());
+    }
+
+    #[test]
+    fn every_method_roundtrips_through_the_backend_registry() {
+        for m in [KnnMethod::Brute, KnnMethod::VpTree, KnnMethod::KdForest] {
+            // The registry must know every method, and the name must
+            // parse back to the same method (no drift in either
+            // direction).
+            let b = crate::hd::backend::by_name(m.backend_name()).unwrap();
+            assert_eq!(b.name(), m.backend_name());
+            assert_eq!(m.backend_name().parse::<KnnMethod>().unwrap(), m);
+        }
     }
 
     #[test]

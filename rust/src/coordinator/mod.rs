@@ -8,14 +8,21 @@
 //! — for the `gpgpu` engine — applies the adaptive field-resolution
 //! policy over the AOT artifact set. `serve.rs` exposes the whole thing
 //! over a line-oriented TCP protocol; `service.rs` multiplexes concurrent
-//! jobs over one shared PJRT runtime.
+//! jobs over one shared PJRT runtime and holds the *similarity cache*
+//! (`simcache.rs`): repeated jobs whose `(dataset fingerprint, knn
+//! method, k, perplexity, seed)` match a previous job skip the entire
+//! similarity stage and go straight to optimisation, reported through
+//! `StageTimings::sim_cache_hit` and the protocol's `wait`/`status`
+//! responses.
 
 pub mod job;
 pub mod pipeline;
 pub mod progress;
 pub mod protocol;
 pub mod service;
+pub mod simcache;
 
 pub use job::{JobPhase, JobSpec, KnnMethod, Snapshot};
-pub use pipeline::{run_pipeline, JobResult, StageTimings};
+pub use pipeline::{run_pipeline, run_pipeline_cached, JobResult, StageTimings};
 pub use service::{EmbeddingService, JobId};
+pub use simcache::{SimKey, SimilarityCache};

@@ -1,15 +1,20 @@
 //! The per-job pipeline: dataset → kNN → perplexity/P → optimise, with
 //! stage timings, progressive snapshots, auto-stop and user stop.
+//!
+//! The similarity stage (kNN + P) can be served from a
+//! [`super::simcache::SimilarityCache`]: a cache hit replaces both stages
+//! with a dataset fingerprint and sets [`StageTimings::sim_cache_hit`].
 
 use std::sync::Arc;
 
 use crate::data;
 use crate::embed::{self, Control};
-use crate::hd::{bruteforce, kdforest, perplexity, vptree, Dataset, KnnGraph, SparseP};
+use crate::hd::{backend, perplexity, Dataset, KnnGraph, SparseP};
 use crate::runtime::Runtime;
 
 use super::job::{JobPhase, JobSpec, KnnMethod, Snapshot};
 use super::progress::JobState;
+use super::simcache::{SimKey, SimilarityCache};
 
 /// Wall time per pipeline stage (seconds) — the breakdown the paper's
 /// timing rows decompose into (similarities vs minimisation).
@@ -19,11 +24,20 @@ pub struct StageTimings {
     pub knn_s: f64,
     pub perplexity_s: f64,
     pub optimize_s: f64,
+    /// The similarity stage (kNN + perplexity/P) was served from the
+    /// coordinator cache; `knn_s` then measures only the dataset
+    /// fingerprint + lookup and `perplexity_s` is 0.
+    pub sim_cache_hit: bool,
 }
 
 impl StageTimings {
     pub fn total(&self) -> f64 {
         self.dataset_s + self.knn_s + self.perplexity_s + self.optimize_s
+    }
+
+    /// The paper's "similarities" row: kNN + perplexity/P.
+    pub fn similarities_s(&self) -> f64 {
+        self.knn_s + self.perplexity_s
     }
 }
 
@@ -41,15 +55,12 @@ pub struct JobResult {
     pub stopped_early: bool,
 }
 
-/// Compute the kNN graph by the requested method.
+/// Compute the kNN graph by the requested method (dispatched through the
+/// `hd::backend` registry — `KnnMethod` names are registry names).
 pub fn compute_knn(data: &Dataset, method: KnnMethod, k: usize, seed: u64) -> KnnGraph {
-    match method {
-        KnnMethod::Brute => bruteforce::knn(data, k),
-        KnnMethod::VpTree => vptree::VpTree::build(data, seed).knn(k),
-        KnnMethod::KdForest => {
-            kdforest::KdForest::build(data, kdforest::ForestParams::default(), seed).knn(k)
-        }
-    }
+    backend::by_name(method.backend_name())
+        .expect("KnnMethod names are registry names")
+        .knn(data, k, seed)
 }
 
 /// Run a full job synchronously. `state` carries phase/stop/snapshots;
@@ -58,6 +69,17 @@ pub fn run_pipeline(
     spec: &JobSpec,
     runtime: Option<Arc<Runtime>>,
     state: &JobState,
+) -> anyhow::Result<JobResult> {
+    run_pipeline_cached(spec, runtime, state, None)
+}
+
+/// [`run_pipeline`] with an optional similarity cache (the service passes
+/// its own): on a hit the kNN + perplexity stages are skipped entirely.
+pub fn run_pipeline_cached(
+    spec: &JobSpec,
+    runtime: Option<Arc<Runtime>>,
+    state: &JobState,
+    cache: Option<&SimilarityCache>,
 ) -> anyhow::Result<JobResult> {
     let mut timings = StageTimings::default();
 
@@ -68,14 +90,37 @@ pub fn run_pipeline(
     state.set_phase(JobPhase::Knn);
     let t = std::time::Instant::now();
     let k = spec.knn_k().min(dataset.n.saturating_sub(1)).max(1);
-    let knn = compute_knn(&dataset, spec.knn, k, spec.seed);
-    timings.knn_s = t.elapsed().as_secs_f64();
-
-    state.set_phase(JobPhase::Perplexity);
-    let t = std::time::Instant::now();
     let perp = spec.perplexity.min(k as f32);
-    let p = perplexity::joint_p(&knn, perp);
-    timings.perplexity_s = t.elapsed().as_secs_f64();
+    let key = cache.map(|_| SimKey {
+        fingerprint: dataset.fingerprint(),
+        method: spec.knn,
+        k,
+        perplexity_bits: perp.to_bits(),
+        // Seed-insensitive backends (brute) key seed-blind so that seed
+        // sweeps over identical data share one cache entry.
+        seed: if spec.knn.seed_sensitive() { spec.seed } else { 0 },
+    });
+    let cached = match (cache, &key) {
+        (Some(c), Some(key)) => c.get(key),
+        _ => None,
+    };
+    let p: Arc<SparseP> = if let Some(hit) = cached {
+        timings.sim_cache_hit = true;
+        timings.knn_s = t.elapsed().as_secs_f64(); // fingerprint + lookup
+        hit
+    } else {
+        let knn = compute_knn(&dataset, spec.knn, k, spec.seed);
+        timings.knn_s = t.elapsed().as_secs_f64();
+
+        state.set_phase(JobPhase::Perplexity);
+        let t = std::time::Instant::now();
+        let p = Arc::new(perplexity::joint_p(&knn, perp));
+        timings.perplexity_s = t.elapsed().as_secs_f64();
+        if let (Some(c), Some(key)) = (cache, key) {
+            c.insert(key, p.clone());
+        }
+        p
+    };
 
     let (embedding, kl_est, iters_run, stopped) =
         optimize(spec, &p, runtime, state, &mut timings)?;
@@ -209,6 +254,26 @@ mod tests {
         let res = run_pipeline(&spec, None, &state).unwrap();
         assert!(res.stopped_early, "a 150-point problem must plateau well before 400 iters");
         assert!(res.iters_run < 400);
+    }
+
+    #[test]
+    fn cached_pipeline_skips_similarities_and_matches_uncached() {
+        let cache = crate::coordinator::simcache::SimilarityCache::new(4);
+        let spec = quick_spec("bh-0.5", 40);
+        let a = run_pipeline_cached(&spec, None, &JobState::default(), Some(&cache)).unwrap();
+        assert!(!a.timings.sim_cache_hit, "first run must miss");
+        assert_eq!(cache.len(), 1);
+        let b = run_pipeline_cached(&spec, None, &JobState::default(), Some(&cache)).unwrap();
+        assert!(b.timings.sim_cache_hit, "identical second run must hit");
+        assert_eq!(b.timings.perplexity_s, 0.0);
+        // Same P + same optimiser seed ⇒ bit-identical embedding.
+        assert_eq!(a.embedding, b.embedding, "cache hit must not change the result");
+        // A different perplexity (different k) is a different key.
+        let mut other = quick_spec("bh-0.5", 40);
+        other.perplexity = 12.0;
+        let c = run_pipeline_cached(&other, None, &JobState::default(), Some(&cache)).unwrap();
+        assert!(!c.timings.sim_cache_hit, "different perplexity/k must miss");
+        assert_eq!(cache.stats(), (1, 2));
     }
 
     #[test]

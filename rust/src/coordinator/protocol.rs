@@ -11,9 +11,15 @@
 //! <- {"ok":true,"job":1,"iter":119,"kl":2.31,"positions":[x0,y0,x1,y1,...]}
 //! -> {"cmd":"stop","job":1}      // user-driven early termination
 //! -> {"cmd":"wait","job":1}      // blocks until terminal
+//! <- {"ok":true,"job":1,...,"knn_s":1.2,"perplexity_s":0.3,"sim_cache_hit":false}
 //! -> {"cmd":"list"}
+//! -> {"cmd":"stats"}             // similarity-cache hit/miss counters
 //! -> {"cmd":"quit"}
 //! ```
+//!
+//! `wait` reports the per-stage similarity timings and whether the job's
+//! kNN + P matrix came from the coordinator similarity cache (a repeat
+//! job over the same data: `knn_s + perplexity_s ≈ 0`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -143,6 +149,9 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                         ("iters", Json::Num(res.iters_run as f64)),
                         ("kl", Json::Num(res.kl_est)),
                         ("stopped_early", Json::Bool(res.stopped_early)),
+                        ("knn_s", Json::Num(res.timings.knn_s)),
+                        ("perplexity_s", Json::Num(res.timings.perplexity_s)),
+                        ("sim_cache_hit", Json::Bool(res.timings.sim_cache_hit)),
                         ("optimize_s", Json::Num(res.timings.optimize_s)),
                         ("total_s", Json::Num(res.timings.total())),
                     ]),
@@ -150,6 +159,17 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 ),
                 Err(e) => (err_msg(&format!("{e:#}")), true),
             }
+        }
+        "stats" => {
+            let (hits, misses) = svc.sim_cache().stats();
+            (
+                ok_fields(vec![
+                    ("sim_cache_hits", Json::Num(hits as f64)),
+                    ("sim_cache_misses", Json::Num(misses as f64)),
+                    ("sim_cache_entries", Json::Num(svc.sim_cache().len() as f64)),
+                ]),
+                true,
+            )
         }
         "list" => {
             let jobs = Json::Arr(
@@ -253,6 +273,31 @@ mod tests {
         let v = json::parse(&resp).unwrap();
         let pos = v.get("positions").unwrap().as_arr().unwrap();
         assert_eq!(pos.len(), 120);
+    }
+
+    #[test]
+    fn repeat_submit_reports_cache_hit_and_stats() {
+        let s = svc();
+        let submit =
+            r#"{"cmd":"submit","dataset":"gaussians","n":90,"engine":"bh-0.5","iters":15,"perplexity":8,"knn":"brute"}"#;
+        let wait = |s: &EmbeddingService, id: u64| {
+            json::parse(&handle_line(s, &format!(r#"{{"cmd":"wait","job":{id}}}"#)).0).unwrap()
+        };
+        let id1 = json::parse(&handle_line(&s, submit).0).unwrap().num_field("job").unwrap();
+        let v = wait(&s, id1 as u64);
+        assert_eq!(v.get("sim_cache_hit"), Some(&Json::Bool(false)), "{v}");
+        assert!(v.num_field("knn_s").unwrap() >= 0.0);
+        assert!(v.num_field("perplexity_s").unwrap() >= 0.0);
+
+        let id2 = json::parse(&handle_line(&s, submit).0).unwrap().num_field("job").unwrap();
+        let v = wait(&s, id2 as u64);
+        assert_eq!(v.get("sim_cache_hit"), Some(&Json::Bool(true)), "{v}");
+        assert_eq!(v.num_field("perplexity_s").unwrap(), 0.0);
+
+        let v = json::parse(&handle_line(&s, r#"{"cmd":"stats"}"#).0).unwrap();
+        assert_eq!(v.num_field("sim_cache_hits").unwrap() as u64, 1, "{v}");
+        assert_eq!(v.num_field("sim_cache_misses").unwrap() as u64, 1);
+        assert_eq!(v.num_field("sim_cache_entries").unwrap() as u64, 1);
     }
 
     #[test]

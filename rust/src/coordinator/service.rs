@@ -9,8 +9,14 @@ use std::sync::{Arc, Mutex};
 use crate::runtime::Runtime;
 
 use super::job::{JobPhase, JobSpec, Snapshot};
-use super::pipeline::{run_pipeline, JobResult};
+use super::pipeline::{run_pipeline_cached, JobResult};
 use super::progress::JobState;
+use super::simcache::SimilarityCache;
+
+/// Similarity-cache capacity: distinct `(dataset, knn, k, perplexity,
+/// seed)` combinations kept hot. P matrices are O(N·k) f32 — at the
+/// paper's defaults a 100k-point entry is ~100 MB, so keep few.
+const SIM_CACHE_CAPACITY: usize = 8;
 
 pub type JobId = u64;
 
@@ -30,6 +36,9 @@ pub struct EmbeddingService {
     /// control; kNN stages are already parallel internally).
     semaphore: Arc<(Mutex<usize>, std::sync::Condvar)>,
     max_concurrent: usize,
+    /// Shared similarity cache: repeated jobs over the same dataset and
+    /// kNN/perplexity parameters skip straight to optimisation.
+    sim_cache: Arc<SimilarityCache>,
 }
 
 impl EmbeddingService {
@@ -40,11 +49,17 @@ impl EmbeddingService {
             next_id: std::sync::atomic::AtomicU64::new(1),
             semaphore: Arc::new((Mutex::new(0), std::sync::Condvar::new())),
             max_concurrent: max_concurrent.max(1),
+            sim_cache: Arc::new(SimilarityCache::new(SIM_CACHE_CAPACITY)),
         }
     }
 
     pub fn has_runtime(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// The service-wide similarity cache (stats/tests).
+    pub fn sim_cache(&self) -> &SimilarityCache {
+        &self.sim_cache
     }
 
     /// Submit a job; returns immediately with its id.
@@ -58,6 +73,7 @@ impl EmbeddingService {
         let sem = self.semaphore.clone();
         let max = self.max_concurrent;
         let spec2 = spec.clone();
+        let cache = self.sim_cache.clone();
         let handle = std::thread::spawn(move || {
             // Admission control.
             {
@@ -68,7 +84,7 @@ impl EmbeddingService {
                 }
                 *running += 1;
             }
-            let out = run_pipeline(&spec2, rt, &st);
+            let out = run_pipeline_cached(&spec2, rt, &st, Some(&cache));
             if let Err(e) = &out {
                 st.set_phase(JobPhase::Failed(format!("{e:#}")));
             }
@@ -186,6 +202,20 @@ mod tests {
         let res = svc.wait(id).unwrap();
         assert!(res.stopped_early);
         assert_eq!(svc.phase(id), Some(JobPhase::Stopped));
+    }
+
+    #[test]
+    fn repeated_jobs_hit_the_similarity_cache() {
+        let svc = EmbeddingService::new(None, 2);
+        let a = svc.submit(tiny_spec(20));
+        let ra = svc.wait(a).unwrap();
+        assert!(!ra.timings.sim_cache_hit);
+        let b = svc.submit(tiny_spec(20));
+        let rb = svc.wait(b).unwrap();
+        assert!(rb.timings.sim_cache_hit, "identical resubmission must hit");
+        assert_eq!(ra.embedding, rb.embedding);
+        assert_eq!(svc.sim_cache().stats(), (1, 1));
+        assert_eq!(svc.sim_cache().len(), 1);
     }
 
     #[test]

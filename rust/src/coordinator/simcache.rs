@@ -1,0 +1,170 @@
+//! Coordinator-level similarity cache (DESIGN.md S20, ROADMAP north
+//! star): the kNN graph + perplexity calibration + P-matrix build is a
+//! pure function of `(dataset content, knn method, k, perplexity, seed)`,
+//! and under heavy repeated traffic the same dataset is embedded over and
+//! over (engine sweeps, parameter tweaks to the *optimiser*, progressive
+//! re-runs). Caching the finished [`SparseP`] lets every repeat job skip
+//! straight to optimisation — the paper's entire "similarities" timing
+//! row drops to a dataset fingerprint.
+//!
+//! The cache is a small LRU keyed by [`SimKey`] holding `Arc<SparseP>`
+//! (jobs share the matrix; it is immutable after construction). One per
+//! [`super::EmbeddingService`]; pipelines run outside a service pass
+//! `None` and behave exactly as before.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::hd::SparseP;
+
+use super::job::KnnMethod;
+
+/// Everything the similarity stage's output depends on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SimKey {
+    /// `Dataset::fingerprint()` — content hash, not the dataset name.
+    pub fingerprint: u64,
+    pub method: KnnMethod,
+    /// Effective neighbour count (after the `min(n-1)` clamp).
+    pub k: usize,
+    /// Bit pattern of the *effective* perplexity (after the `min(k)`
+    /// clamp); f32 carries no NaN here so bit equality is value equality.
+    pub perplexity_bits: u32,
+    /// Seed feeding randomised kNN construction (0 for backends whose
+    /// output ignores the seed — see `KnnMethod::seed_sensitive`).
+    pub seed: u64,
+}
+
+struct Entry {
+    p: Arc<SparseP>,
+    last_used: u64,
+}
+
+/// Bounded LRU map from [`SimKey`] to a shared P matrix.
+pub struct SimilarityCache {
+    map: Mutex<HashMap<SimKey, Entry>>,
+    capacity: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SimilarityCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            capacity: capacity.max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a P matrix; counts a hit or miss and refreshes recency.
+    pub fn get(&self, key: &SimKey) -> Option<Arc<SparseP>> {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut map = self.map.lock().unwrap();
+        match map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.p.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used
+    /// one when over capacity.
+    pub fn insert(&self, key: SimKey, p: Arc<SparseP>) {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut map = self.map.lock().unwrap();
+        map.insert(key, Entry { p, last_used: tick });
+        while map.len() > self.capacity {
+            let oldest = map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty map over capacity");
+            map.remove(&oldest);
+        }
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::sparse::Csr;
+
+    fn p(tag: f32) -> Arc<SparseP> {
+        Arc::new(SparseP {
+            csr: Csr::from_rows(1, 1, 1, vec![0], vec![tag]),
+            perplexity: tag,
+        })
+    }
+
+    fn key(fp: u64) -> SimKey {
+        SimKey {
+            fingerprint: fp,
+            method: KnnMethod::Brute,
+            k: 10,
+            perplexity_bits: 8.0f32.to_bits(),
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let c = SimilarityCache::new(4);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), p(1.0));
+        let got = c.get(&key(1)).expect("hit");
+        assert_eq!(got.perplexity, 1.0);
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn distinct_parameters_are_distinct_keys() {
+        let c = SimilarityCache::new(4);
+        c.insert(key(1), p(1.0));
+        let mut k2 = key(1);
+        k2.k = 11;
+        assert!(c.get(&k2).is_none(), "different k must miss");
+        let mut k3 = key(1);
+        k3.perplexity_bits = 9.0f32.to_bits();
+        assert!(c.get(&k3).is_none(), "different perplexity must miss");
+        let mut k4 = key(1);
+        k4.method = KnnMethod::VpTree;
+        assert!(c.get(&k4).is_none(), "different method must miss");
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest() {
+        let c = SimilarityCache::new(2);
+        c.insert(key(1), p(1.0));
+        c.insert(key(2), p(2.0));
+        let _ = c.get(&key(1)); // key 2 is now the coldest
+        c.insert(key(3), p(3.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(2)).is_none(), "LRU entry must be evicted");
+        assert!(c.get(&key(3)).is_some());
+    }
+}

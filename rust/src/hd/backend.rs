@@ -1,0 +1,130 @@
+//! Pluggable kNN backends — the similarity-stage mirror of
+//! `field::FieldBackend` / `embed::ENGINES`.
+//!
+//! Every way of building the high-dimensional kNN graph lives behind
+//! [`KnnBackend`], constructed by [`by_name`] from the same strings the
+//! CLI / protocol accept ([`BACKENDS`] is the registry benches and the
+//! drift test iterate). Backends may carry tuning state (hence
+//! `&mut self`), and all of them score candidates through the blocked
+//! distance kernels in [`super::blocked`].
+
+use super::bruteforce;
+use super::dataset::Dataset;
+use super::kdforest::{ForestParams, KdForest};
+use super::knn::KnnGraph;
+use super::vptree::VpTree;
+
+/// A kNN-graph implementation: for each point of `data`, its `k` nearest
+/// neighbours (self excluded), rows sorted by ascending distance.
+pub trait KnnBackend {
+    fn name(&self) -> &'static str;
+
+    /// `seed` feeds any randomised construction (vantage-point choice,
+    /// tree splits); exact backends ignore it.
+    fn knn(&mut self, data: &Dataset, k: usize, seed: u64) -> KnnGraph;
+}
+
+/// Exact O(N²D) brute force over blocked distance panels.
+pub struct BruteBackend;
+
+impl KnnBackend for BruteBackend {
+    fn name(&self) -> &'static str {
+        "brute"
+    }
+
+    fn knn(&mut self, data: &Dataset, k: usize, _seed: u64) -> KnnGraph {
+        bruteforce::knn(data, k)
+    }
+}
+
+/// Exact VP-tree (BH-SNE's metric tree) with bucket leaves.
+pub struct VpTreeBackend;
+
+impl KnnBackend for VpTreeBackend {
+    fn name(&self) -> &'static str {
+        "vptree"
+    }
+
+    fn knn(&mut self, data: &Dataset, k: usize, seed: u64) -> KnnGraph {
+        VpTree::build(data, seed).knn(k)
+    }
+}
+
+/// Approximate randomised KD-forest (A-tSNE / FAISS stand-in).
+pub struct KdForestBackend {
+    pub params: ForestParams,
+}
+
+impl Default for KdForestBackend {
+    fn default() -> Self {
+        Self { params: ForestParams::default() }
+    }
+}
+
+impl KnnBackend for KdForestBackend {
+    fn name(&self) -> &'static str {
+        "kdforest"
+    }
+
+    fn knn(&mut self, data: &Dataset, k: usize, seed: u64) -> KnnGraph {
+        KdForest::build(data, self.params, seed).knn(k)
+    }
+}
+
+/// Canonical backend names, in the order benches sweep them.
+pub const BACKENDS: &[&str] = &["brute", "vptree", "kdforest"];
+
+/// Construct a backend by its CLI / protocol name.
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn KnnBackend>> {
+    Ok(match name {
+        "brute" | "exact" => Box::new(BruteBackend),
+        "vptree" => Box::new(VpTreeBackend),
+        "kdforest" | "approx" => Box::new(KdForestBackend::default()),
+        other => anyhow::bail!("unknown knn backend '{other}' (expected brute|vptree|kdforest)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        Dataset::new("r", n, d, x, vec![])
+    }
+
+    #[test]
+    fn registry_resolves_every_backend() {
+        for &name in BACKENDS {
+            let b = by_name(name).unwrap();
+            assert_eq!(b.name(), name, "registry drift for '{name}'");
+        }
+        assert!(by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(by_name("exact").unwrap().name(), "brute");
+        assert_eq!(by_name("approx").unwrap().name(), "kdforest");
+    }
+
+    #[test]
+    fn all_backends_produce_valid_graphs() {
+        let data = random_dataset(120, 8, 7);
+        let exact = by_name("brute").unwrap().knn(&data, 6, 0);
+        for &name in BACKENDS {
+            let g = by_name(name).unwrap().knn(&data, 6, 0);
+            assert_eq!(g.n, 120);
+            assert_eq!(g.k, 6);
+            for i in 0..g.n {
+                assert!(!g.row_idx(i).contains(&(i as u32)), "{name}: self in row {i}");
+                for w in g.row_d2(i).windows(2) {
+                    assert!(w[0] <= w[1], "{name}: row {i} not sorted");
+                }
+            }
+            assert!(g.recall_against(&exact) > 0.85, "{name}: recall too low");
+        }
+    }
+}

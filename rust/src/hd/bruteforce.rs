@@ -1,41 +1,25 @@
 //! Exact kNN by threaded brute force — the ground truth for recall
 //! measurements and for the NNP metric (DESIGN.md S6), and the honest
 //! baseline for small N.
+//!
+//! The pair loop runs through the blocked panel kernel (`hd::blocked`):
+//! row norms are precomputed and distances come from `‖x‖²+‖y‖²−2x·y`
+//! panels over cached base blocks. The seed's per-pair scalar scan is
+//! kept as [`knn_scalar_reference`] — the equivalence oracle the property
+//! tests and the `similarities` bench section compare against.
 
+use super::blocked;
 use super::dataset::Dataset;
 use super::knn::{KBest, KnnGraph};
 use crate::util::parallel;
 
-/// Exact k-nearest neighbours of every point (self excluded), O(N² D).
+/// Exact k-nearest neighbours of every point (self excluded), O(N² D),
+/// via packed blocked distance panels.
 pub fn knn(data: &Dataset, k: usize) -> KnnGraph {
     assert!(k < data.n, "k={k} must be < n={}", data.n);
-    let mut g = KnnGraph::new(data.n, k);
-    {
-        let rows = parallel::SyncSlice::new(&mut g.idx);
-        let dists = parallel::SyncSlice::new(&mut g.d2);
-        parallel::par_chunks(data.n, 16, |range| {
-            for i in range {
-                let qi = data.row(i);
-                let mut kb = KBest::new(k);
-                for j in 0..data.n {
-                    if j == i {
-                        continue;
-                    }
-                    let d = super::dist2(qi, data.row(j));
-                    if d < kb.bound() {
-                        kb.push(d, j as u32);
-                    }
-                }
-                for (slot, (d, id)) in kb.into_sorted().into_iter().enumerate() {
-                    unsafe {
-                        *rows.get_mut(i * k + slot) = id;
-                        *dists.get_mut(i * k + slot) = d;
-                    }
-                }
-            }
-        });
-    }
-    g
+    let norms = blocked::row_sq_norms(&data.x, data.n, data.d);
+    let packed = blocked::PackedBase::pack(&data.x, data.n, data.d);
+    blocked::knn_blocked(&packed, &norms, &data.x, data.n, &norms, k, true)
 }
 
 /// Exact kNN of `queries` rows against `base` rows (used by the NNP metric
@@ -50,19 +34,29 @@ pub fn knn_cross(
     exclude_self_index: bool,
 ) -> KnnGraph {
     let qn = queries.len() / dim;
-    let mut g = KnnGraph::new(qn, k);
+    let b_norms = blocked::row_sq_norms(base, base_n, dim);
+    let q_norms = blocked::row_sq_norms(queries, qn, dim);
+    let packed = blocked::PackedBase::pack(base, base_n, dim);
+    blocked::knn_blocked(&packed, &b_norms, queries, qn, &q_norms, k, exclude_self_index)
+}
+
+/// The seed's per-pair scalar scan, kept verbatim as the oracle the
+/// blocked kernel is validated (and benchmarked) against.
+pub fn knn_scalar_reference(data: &Dataset, k: usize) -> KnnGraph {
+    assert!(k < data.n, "k={k} must be < n={}", data.n);
+    let mut g = KnnGraph::new(data.n, k);
     {
         let rows = parallel::SyncSlice::new(&mut g.idx);
         let dists = parallel::SyncSlice::new(&mut g.d2);
-        parallel::par_chunks(qn, 32, |range| {
+        parallel::par_chunks(data.n, 16, |range| {
             for i in range {
-                let qi = &queries[i * dim..(i + 1) * dim];
+                let qi = data.row(i);
                 let mut kb = KBest::new(k);
-                for j in 0..base_n {
-                    if exclude_self_index && j == i {
+                for j in 0..data.n {
+                    if j == i {
                         continue;
                     }
-                    let d = super::dist2(qi, &base[j * dim..(j + 1) * dim]);
+                    let d = super::dist2(qi, data.row(j));
                     if d < kb.bound() {
                         kb.push(d, j as u32);
                     }
@@ -129,5 +123,24 @@ mod tests {
         let g = knn_cross(&pts, 4, 2, &pts, 2, true);
         let r0: Vec<u32> = g.row_idx(0).to_vec();
         assert!(r0.contains(&1) && r0.contains(&2));
+    }
+
+    #[test]
+    fn blocked_matches_scalar_reference() {
+        let mut rng = Rng::new(9);
+        let n = 300;
+        let x: Vec<f32> = (0..n * 17).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let d = Dataset::new("r", n, 17, x, vec![]);
+        let blocked = knn(&d, 12);
+        let scalar = knn_scalar_reference(&d, 12);
+        // Tie-insensitive exactness: identical sorted neighbour distances
+        // (f32 rounding can swap equal-distance neighbour *identities*).
+        for i in 0..n {
+            for j in 0..12 {
+                let (a, b) = (blocked.row_d2(i)[j], scalar.row_d2(i)[j]);
+                assert!((a - b).abs() < 1e-4 * b.max(1.0), "d2[{i}][{j}]: {a} vs {b}");
+            }
+        }
+        assert!(blocked.recall_against(&scalar) > 0.999, "blocked kernel must be exact");
     }
 }

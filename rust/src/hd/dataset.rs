@@ -48,25 +48,103 @@ impl Dataset {
     /// Per-feature standardisation (zero mean, unit variance); features
     /// with zero variance are left centred. Standard preprocessing before
     /// the perplexity search.
+    ///
+    /// One Welford pass over *row chunks* in parallel (cache-friendly
+    /// row-major access instead of the seed's two strided column passes),
+    /// per-chunk `(count, mean, M2)` partials merged in chunk order
+    /// (Chan et al. — deterministic regardless of thread scheduling),
+    /// then a parallel row-major apply pass.
     pub fn standardize(&mut self) {
-        for j in 0..self.d {
-            let mut mean = 0.0f64;
-            for i in 0..self.n {
-                mean += self.x[i * self.d + j] as f64;
-            }
-            mean /= self.n as f64;
-            let mut var = 0.0f64;
-            for i in 0..self.n {
-                let v = self.x[i * self.d + j] as f64 - mean;
-                var += v * v;
-            }
-            var /= self.n as f64;
-            let inv = if var > 1e-12 { 1.0 / var.sqrt() } else { 0.0 };
-            for i in 0..self.n {
-                let v = &mut self.x[i * self.d + j];
-                *v = ((*v as f64 - mean) * inv) as f32;
-            }
+        let (n, d) = (self.n, self.d);
+        if n == 0 || d == 0 {
+            return;
         }
+        const CHUNK: usize = 512;
+        let nchunks = n.div_ceil(CHUNK);
+        let mut partials: Vec<Option<(usize, Vec<f64>, Vec<f64>)>> = vec![None; nchunks];
+        {
+            let slots = crate::util::parallel::SyncSlice::new(&mut partials);
+            let x = &self.x;
+            crate::util::parallel::par_chunks(n, CHUNK, |range| {
+                let ci = range.start / CHUNK;
+                let mut count = 0usize;
+                let mut mean = vec![0.0f64; d];
+                let mut m2 = vec![0.0f64; d];
+                for i in range {
+                    count += 1;
+                    let inv = 1.0 / count as f64;
+                    let row = &x[i * d..(i + 1) * d];
+                    for j in 0..d {
+                        let v = row[j] as f64;
+                        let delta = v - mean[j];
+                        mean[j] += delta * inv;
+                        m2[j] += delta * (v - mean[j]);
+                    }
+                }
+                unsafe {
+                    *slots.get_mut(ci) = Some((count, mean, m2));
+                }
+            });
+        }
+        let mut count = 0usize;
+        let mut mean = vec![0.0f64; d];
+        let mut m2 = vec![0.0f64; d];
+        for (cb, mb, m2b) in partials.into_iter().flatten() {
+            if cb == 0 {
+                continue;
+            }
+            let tot = (count + cb) as f64;
+            for j in 0..d {
+                let delta = mb[j] - mean[j];
+                mean[j] += delta * (cb as f64 / tot);
+                m2[j] += m2b[j] + delta * delta * (count as f64 * cb as f64 / tot);
+            }
+            count += cb;
+        }
+        let inv_std: Vec<f64> = (0..d)
+            .map(|j| {
+                let var = m2[j] / n as f64;
+                if var > 1e-12 {
+                    1.0 / var.sqrt()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        {
+            let xs = crate::util::parallel::SyncSlice::new(&mut self.x);
+            let (mean, inv_std) = (&mean, &inv_std);
+            crate::util::parallel::par_chunks(n, CHUNK, |range| {
+                for i in range {
+                    for j in 0..d {
+                        unsafe {
+                            let v = xs.get_mut(i * d + j);
+                            *v = ((*v as f64 - mean[j]) * inv_std[j]) as f32;
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    /// Content fingerprint (FNV-1a over the shape and every value's bit
+    /// pattern) — the dataset component of the coordinator's similarity
+    /// cache key. One O(N·D) pass, negligible next to any kNN build.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |w: u64| {
+            h ^= w;
+            h = h.wrapping_mul(PRIME);
+        };
+        mix(self.n as u64);
+        mix(self.d as u64);
+        for &v in &self.x {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h
     }
 }
 
@@ -100,5 +178,56 @@ mod tests {
         let var: f32 = d.x.iter().map(|v| v * v).sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-6);
         assert!((var - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn standardize_matches_two_pass_reference() {
+        // Welford + chunk merge vs the seed's two-pass column loop, on a
+        // dataset spanning several parallel chunks (n > 512).
+        let n = 1100usize;
+        let d = 3usize;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.gauss_f32(5.0, 3.0)).collect();
+        let mut ds = Dataset::new("t", n, d, x.clone(), vec![]);
+        ds.standardize();
+        for j in 0..d {
+            let mut mean = 0.0f64;
+            for i in 0..n {
+                mean += x[i * d + j] as f64;
+            }
+            mean /= n as f64;
+            let mut var = 0.0f64;
+            for i in 0..n {
+                let v = x[i * d + j] as f64 - mean;
+                var += v * v;
+            }
+            var /= n as f64;
+            let inv = if var > 1e-12 { 1.0 / var.sqrt() } else { 0.0 };
+            for i in (0..n).step_by(97) {
+                let want = ((x[i * d + j] as f64 - mean) * inv) as f32;
+                let got = ds.x[i * d + j];
+                assert!((got - want).abs() < 1e-5, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn standardize_leaves_constant_features_at_zero() {
+        let mut d = Dataset::new("t", 3, 2, vec![7., 1., 7., 2., 7., 3.], vec![]);
+        d.standardize();
+        for i in 0..3 {
+            assert_eq!(d.x[i * 2], 0.0, "constant feature must map to 0");
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_content_and_is_stable() {
+        let a = Dataset::new("a", 3, 2, vec![1., 2., 3., 4., 5., 6.], vec![]);
+        let b = Dataset::new("b", 3, 2, vec![1., 2., 3., 4., 5., 6.], vec![]);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "name must not matter");
+        let c = Dataset::new("c", 3, 2, vec![1., 2., 3., 4., 5., 6.5], vec![]);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let shape = Dataset::new("s", 2, 3, vec![1., 2., 3., 4., 5., 6.], vec![]);
+        assert_ne!(a.fingerprint(), shape.fingerprint(), "shape must matter");
     }
 }

@@ -7,7 +7,25 @@
 //! substrates this repo must provide (DESIGN.md S6–S10): exact brute-force
 //! kNN, the VP-tree used by BH-SNE [45], and the randomised KD-forest used
 //! by A-tSNE / as a FAISS stand-in [29].
+//!
+//! # The similarity pipeline
+//!
+//! Every kNN structure lives behind the pluggable [`backend::KnnBackend`]
+//! trait (the similarity-stage mirror of `field::FieldBackend`, with the
+//! same `by_name` + registry discipline as `embed::ENGINES`), and all of
+//! them score candidates through the *blocked distance kernels* of
+//! [`blocked`]: precomputed row norms plus tiled `‖x‖²+‖y‖²−2x·y` panels,
+//! so the innermost loop is a dense dot-product micro-kernel instead of a
+//! per-pair scalar scan ([`dist2`] remains the scalar oracle). Downstream,
+//! [`perplexity::joint_p`] fuses calibration, symmetrisation and global
+//! normalisation into one chunk-parallel pass with deterministic
+//! chunk-indexed partials (the seed's transpose-and-merge path survives
+//! as [`perplexity::joint_p_reference`], the equivalence oracle). The
+//! coordinator caches the finished `SparseP` per dataset fingerprint —
+//! see `coordinator::simcache`.
 
+pub mod backend;
+pub mod blocked;
 pub mod bruteforce;
 pub mod dataset;
 pub mod kdforest;
@@ -16,14 +34,17 @@ pub mod perplexity;
 pub mod sparse;
 pub mod vptree;
 
+pub use backend::KnnBackend;
 pub use dataset::Dataset;
 pub use knn::KnnGraph;
 pub use perplexity::SparseP;
 
 /// Squared Euclidean distance between two vectors.
 ///
-/// Manually unrolled 4-wide so LLVM vectorises it; this is the innermost
-/// loop of every kNN structure and of the perplexity search.
+/// Manually unrolled 4-wide so LLVM vectorises it. Once the innermost
+/// loop of every kNN structure, now the *scalar reference* the blocked
+/// panel kernels ([`blocked`]) are validated against; still used where a
+/// single pair is genuinely needed.
 #[inline]
 pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

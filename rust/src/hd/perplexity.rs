@@ -5,6 +5,14 @@
 //! 1/(2σ_i²) whose conditional distribution over the k nearest neighbours
 //! has the requested perplexity; the conditional matrix is then
 //! symmetrised and normalised into a joint P with Σ p_ij = 1.
+//!
+//! [`joint_p`] fuses the three steps — calibration, symmetrisation,
+//! global normalisation — into one chunk-parallel pipeline with
+//! deterministic chunk-indexed partials (the discipline of
+//! `embed::common::GdState::fused_step`): no intermediate transpose CSR,
+//! no per-row linear-search merging, one output allocation sized exactly.
+//! The seed's transpose-and-merge construction survives as
+//! [`joint_p_reference`], the oracle the property tests compare against.
 
 use super::knn::KnnGraph;
 use super::sparse::Csr;
@@ -28,8 +36,20 @@ pub fn calibrate_row(d2: &[f32], perplexity: f64) -> (f64, Vec<f32>) {
     let mut beta = 1.0f64;
     let (mut beta_min, mut beta_max) = (f64::NEG_INFINITY, f64::INFINITY);
     let mut probs = vec![0.0f32; d2.len()];
+    if d2.is_empty() {
+        return (beta, probs);
+    }
     // Shift distances for numerical stability: exp(-β (d² - d²_min)).
     let dmin = d2.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let dmax = d2.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    // Degenerate row: all distances (numerically) equal. The entropy is
+    // the constant ln(k) for every β, so the bisection below would run
+    // all MAX_BISECT iterations doubling β toward overflow without ever
+    // moving the entropy. The uniform distribution is the exact answer.
+    if dmax - dmin <= 1e-12 * dmax.abs().max(1.0) {
+        probs.fill(1.0 / d2.len() as f32);
+        return (beta, probs);
+    }
     for _ in 0..MAX_BISECT {
         let mut sum = 0.0f64;
         let mut sum_dp = 0.0f64;
@@ -85,10 +105,189 @@ pub fn conditional_p(knn: &KnnGraph, perplexity: f32) -> Csr {
     Csr::from_rows(n, n, k, knn.idx.iter().copied().collect(), val)
 }
 
-/// Joint P (Eq. 2): symmetrise the conditional matrix and normalise the
-/// whole matrix to Σ p_ij = 1 (the 1/N of Eq. 2 followed by the implicit
-/// global normalisation t-SNE implementations apply).
+/// Sum of the column-sorted conditional row `j`'s entries at column `c`
+/// (0.0 when absent; padded duplicate edges sum, as the reference path
+/// merges them).
+#[inline]
+fn cond_at(fcol: &[u32], fval: &[f32], j: usize, k: usize, c: u32) -> f32 {
+    let row = &fcol[j * k..(j + 1) * k];
+    let vals = &fval[j * k..(j + 1) * k];
+    let mut t = row.partition_point(|&x| x < c);
+    let mut s = 0.0f32;
+    while t < k && row[t] == c {
+        s += vals[t];
+        t += 1;
+    }
+    s
+}
+
+/// Joint P (Eq. 2), fused: calibration, symmetrisation and global
+/// normalisation in one chunk-parallel pipeline.
+///
+/// 1. **Calibrate** (parallel): each row's bisection, then the row's
+///    `(column, p_{j|i})` pairs sorted by column into two flat `(n, k)`
+///    arrays — the column-sorted conditional matrix.
+/// 2. **Reverse offsets** (one O(N·k) counting pass): for every point,
+///    which rows point at it. Only *sources* are recorded (stable
+///    counting order keeps them sorted); values are read back from the
+///    sorted forward rows by binary search — no transposed value array.
+/// 3. **Merge** (parallel): output row i is the sorted two-pointer union
+///    of the forward row and its reverse sources with
+///    `p_ij = (p_{j|i} + p_{i|j})/2`, written straight into one exactly
+///    sized output allocation; per-chunk f64 partial sums combined in
+///    chunk order give the deterministic global total for the final
+///    parallel Σ p_ij = 1 scaling.
 pub fn joint_p(knn: &KnnGraph, perplexity: f32) -> SparseP {
+    let (n, k) = (knn.n, knn.k);
+    assert!(
+        k as f32 >= perplexity,
+        "need k >= perplexity (k={k}, mu={perplexity}); BH-SNE uses k = 3*mu"
+    );
+    // --- Pass 1: calibrate + column-sort each conditional row.
+    let mut fcol = vec![0u32; n * k];
+    let mut fval = vec![0.0f32; n * k];
+    {
+        let cs = parallel::SyncSlice::new(&mut fcol);
+        let vs = parallel::SyncSlice::new(&mut fval);
+        parallel::par_chunks(n, 32, |range| {
+            let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(k);
+            for i in range {
+                let (_beta, probs) = calibrate_row(knn.row_d2(i), perplexity as f64);
+                pairs.clear();
+                pairs.extend(knn.row_idx(i).iter().copied().zip(probs));
+                pairs.sort_unstable_by_key(|e| e.0);
+                for (slot, (c, v)) in pairs.iter().enumerate() {
+                    unsafe {
+                        *cs.get_mut(i * k + slot) = *c;
+                        *vs.get_mut(i * k + slot) = *v;
+                    }
+                }
+            }
+        });
+    }
+    // --- Pass 2: reverse-edge offsets (counting sort over columns;
+    // iterating sources in ascending order keeps each reverse row sorted).
+    let mut rptr = vec![0usize; n + 1];
+    for &c in &fcol {
+        rptr[c as usize + 1] += 1;
+    }
+    for i in 0..n {
+        rptr[i + 1] += rptr[i];
+    }
+    let mut rsrc = vec![0u32; n * k];
+    {
+        let mut cursor = rptr.clone();
+        for i in 0..n {
+            for &c in &fcol[i * k..(i + 1) * k] {
+                rsrc[cursor[c as usize]] = i as u32;
+                cursor[c as usize] += 1;
+            }
+        }
+    }
+    // --- Pass 3a: output row lengths (distinct columns in the union).
+    let mut row_ptr = vec![0usize; n + 1];
+    {
+        let lens = parallel::SyncSlice::new(&mut row_ptr);
+        parallel::par_chunks(n, 64, |range| {
+            for i in range {
+                let fwd = &fcol[i * k..(i + 1) * k];
+                let rev = &rsrc[rptr[i]..rptr[i + 1]];
+                let (mut a, mut b, mut len) = (0usize, 0usize, 0usize);
+                while a < fwd.len() || b < rev.len() {
+                    let ca = if a < fwd.len() { fwd[a] } else { u32::MAX };
+                    let cb = if b < rev.len() { rev[b] } else { u32::MAX };
+                    let c = ca.min(cb);
+                    while a < fwd.len() && fwd[a] == c {
+                        a += 1;
+                    }
+                    while b < rev.len() && rev[b] == c {
+                        b += 1;
+                    }
+                    len += 1;
+                }
+                unsafe {
+                    *lens.get_mut(i + 1) = len;
+                }
+            }
+        });
+    }
+    for i in 0..n {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let nnz = row_ptr[n];
+    // --- Pass 3b: merge-fill the single output allocation; chunk-indexed
+    // f64 partials give a deterministic global sum.
+    const CHUNK: usize = 64;
+    let nchunks = n.div_ceil(CHUNK).max(1);
+    let mut col = vec![0u32; nnz];
+    let mut val = vec![0.0f32; nnz];
+    let mut partials = vec![0.0f64; nchunks];
+    {
+        let ocs = parallel::SyncSlice::new(&mut col);
+        let ovs = parallel::SyncSlice::new(&mut val);
+        let parts = parallel::SyncSlice::new(&mut partials);
+        parallel::par_chunks(n, CHUNK, |range| {
+            let ci = range.start / CHUNK;
+            let mut local_sum = 0.0f64;
+            for i in range {
+                let fwd_cols = &fcol[i * k..(i + 1) * k];
+                let fwd_vals = &fval[i * k..(i + 1) * k];
+                let rev = &rsrc[rptr[i]..rptr[i + 1]];
+                let mut out = row_ptr[i];
+                let (mut a, mut b) = (0usize, 0usize);
+                while a < fwd_cols.len() || b < rev.len() {
+                    let ca = if a < fwd_cols.len() { fwd_cols[a] } else { u32::MAX };
+                    let cb = if b < rev.len() { rev[b] } else { u32::MAX };
+                    let c = ca.min(cb);
+                    let mut v = 0.0f32;
+                    // Forward contribution: Σ p_{c|i} over duplicate slots.
+                    while a < fwd_cols.len() && fwd_cols[a] == c {
+                        v += 0.5 * fwd_vals[a];
+                        a += 1;
+                    }
+                    // Reverse contribution: p_{i|c} looked up in row c
+                    // (the lookup already sums duplicate edges, so the
+                    // run of equal sources advances without re-adding).
+                    if b < rev.len() && rev[b] == c {
+                        v += 0.5 * cond_at(&fcol, &fval, c as usize, k, i as u32);
+                        while b < rev.len() && rev[b] == c {
+                            b += 1;
+                        }
+                    }
+                    unsafe {
+                        *ocs.get_mut(out) = c;
+                        *ovs.get_mut(out) = v;
+                    }
+                    local_sum += v as f64;
+                    out += 1;
+                }
+                debug_assert_eq!(out, row_ptr[i + 1]);
+            }
+            unsafe {
+                *parts.get_mut(ci) = local_sum;
+            }
+        });
+    }
+    let total: f64 = partials.iter().sum();
+    if total > 0.0 {
+        let s = (1.0 / total) as f32;
+        let vs = parallel::SyncSlice::new(&mut val);
+        parallel::par_chunks(nnz, 4096, |range| {
+            for i in range {
+                unsafe {
+                    *vs.get_mut(i) *= s;
+                }
+            }
+        });
+    }
+    let csr = Csr { n_rows: n, n_cols: n, row_ptr, col, val };
+    SparseP { csr, perplexity }
+}
+
+/// The seed construction — conditional CSR, explicit transpose,
+/// per-row merge, then a global scale — kept as the equivalence oracle
+/// for [`joint_p`] (property tests and the `similarities` bench).
+pub fn joint_p_reference(knn: &KnnGraph, perplexity: f32) -> SparseP {
     let cond = conditional_p(knn, perplexity);
     let mut sym = cond.symmetrize_mean();
     let total = sym.sum();
@@ -185,6 +384,25 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_equal_distance_row_is_uniform() {
+        // All distances identical: entropy is ln(k) for every β, so the
+        // bisection can never converge — the fix must return the uniform
+        // distribution immediately (and not after 200 doubling steps).
+        let d2 = vec![2.5f32; 12];
+        let (beta, probs) = calibrate_row(&d2, 5.0);
+        assert_eq!(beta, 1.0, "β must be left at its initial value");
+        for &p in &probs {
+            assert!((p - 1.0 / 12.0).abs() < 1e-7, "uniform probs, got {p}");
+        }
+        // Zero-distance degenerate rows (duplicated points) too.
+        let d2 = vec![0.0f32; 7];
+        let (_beta, probs) = calibrate_row(&d2, 3.0);
+        for &p in &probs {
+            assert!((p - 1.0 / 7.0).abs() < 1e-7);
+        }
+    }
+
+    #[test]
     fn joint_p_is_normalised_and_symmetric() {
         let g = toy_graph();
         let p = joint_p(&g, 8.0);
@@ -202,6 +420,45 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fused_matches_reference_exactly() {
+        let g = toy_graph();
+        let fused = joint_p(&g, 8.0);
+        let refp = joint_p_reference(&g, 8.0);
+        assert_eq!(fused.csr.row_ptr, refp.csr.row_ptr, "identical sparsity structure");
+        assert_eq!(fused.csr.col, refp.csr.col, "identical column order");
+        for (a, b) in fused.csr.val.iter().zip(&refp.csr.val) {
+            assert!((a - b).abs() < 1e-6, "fused {a} vs reference {b}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_reference_with_padded_duplicate_rows() {
+        // Under-full padded rows (duplicate neighbour entries) are the
+        // nasty case: duplicates must merge identically on both paths.
+        let mut g = KnnGraph::new(4, 3);
+        g.idx = vec![
+            1, 2, 2, // row 0: duplicate neighbour 2
+            0, 3, 3, // row 1: duplicate neighbour 3
+            0, 1, 3, //
+            2, 0, 0, // row 3: duplicate neighbour 0
+        ];
+        g.d2 = vec![
+            1.0, 2.0, 2.0, //
+            1.0, 3.0, 3.0, //
+            2.0, 4.0, 5.0, //
+            5.0, 6.0, 6.0, //
+        ];
+        let fused = joint_p(&g, 2.0);
+        let refp = joint_p_reference(&g, 2.0);
+        assert_eq!(fused.csr.row_ptr, refp.csr.row_ptr);
+        assert_eq!(fused.csr.col, refp.csr.col);
+        for (a, b) in fused.csr.val.iter().zip(&refp.csr.val) {
+            assert!((a - b).abs() < 1e-6, "fused {a} vs reference {b}");
+        }
+        assert!((fused.csr.sum() - 1.0).abs() < 1e-5);
     }
 
     #[test]

@@ -5,114 +5,170 @@
 //! paper's own prior work observes (A-tSNE [34]), pruning degrades in high
 //! dimensions — which is precisely the motivation for the KD-forest
 //! (`kdforest.rs`); the benches quantify that crossover.
+//!
+//! Small subtrees collapse into *bucket leaves* scanned with the blocked
+//! dot-product kernel (`hd::blocked::scan_candidates` over precomputed row
+//! norms): the bottom of the tree — where most of the work is — becomes a
+//! dense micro-kernel sweep instead of per-node pointer chasing, and every
+//! ball-node distance reuses the same `‖x‖²+‖y‖²−2x·y` factorisation.
 
+use super::blocked;
 use super::dataset::Dataset;
 use super::knn::{KBest, KnnGraph};
 use crate::util::parallel;
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone)]
-struct Node {
-    /// Index of the vantage point (into the dataset).
-    vp: u32,
-    /// Median distance (not squared) splitting inside/outside.
-    radius: f32,
-    /// Child node indices (usize::MAX = none).
-    inside: u32,
-    outside: u32,
-}
-
 const NONE: u32 = u32::MAX;
+/// Subtrees at or below this size become bucket leaves.
+const LEAF_SIZE: usize = 16;
+
+#[derive(Debug, Clone)]
+enum Node {
+    /// A vantage point with its median ball.
+    Ball {
+        vp: u32,
+        /// Median distance (not squared) splitting inside/outside.
+        radius: f32,
+        /// Child node indices (NONE = absent).
+        inside: u32,
+        outside: u32,
+    },
+    /// A bucket of point ids (`order[start..end]`), scanned densely.
+    Leaf { start: u32, end: u32 },
+}
 
 /// An exact VP-tree over a dataset.
 pub struct VpTree<'a> {
     data: &'a Dataset,
     nodes: Vec<Node>,
+    /// Point ids; leaf ranges index into this.
+    order: Vec<u32>,
+    /// Per-row squared norms (shared by build and every query).
+    norms: Vec<f32>,
     root: u32,
 }
 
 impl<'a> VpTree<'a> {
     /// Build with deterministic vantage-point selection (seeded).
     pub fn build(data: &'a Dataset, seed: u64) -> Self {
+        let norms = blocked::row_sq_norms(&data.x, data.n, data.d);
         let mut items: Vec<(u32, f32)> = (0..data.n as u32).map(|i| (i, 0.0)).collect();
-        let mut nodes = Vec::with_capacity(data.n);
+        let mut nodes = Vec::with_capacity(2 * data.n / LEAF_SIZE.max(1) + 1);
+        let mut order = Vec::with_capacity(data.n);
         let mut rng = Rng::new(seed);
-        let root = Self::build_rec(data, &mut items[..], &mut nodes, &mut rng);
-        Self { data, nodes, root }
+        let root =
+            Self::build_rec(data, &norms, &mut items[..], &mut nodes, &mut order, &mut rng);
+        Self { data, nodes, order, norms, root }
+    }
+
+    #[inline]
+    fn d2(data: &Dataset, norms: &[f32], a: u32, b: u32) -> f32 {
+        let (ai, bi) = (a as usize, b as usize);
+        (norms[ai] + norms[bi] - 2.0 * blocked::dot(data.row(ai), data.row(bi))).max(0.0)
     }
 
     fn build_rec(
         data: &Dataset,
+        norms: &[f32],
         items: &mut [(u32, f32)],
         nodes: &mut Vec<Node>,
+        order: &mut Vec<u32>,
         rng: &mut Rng,
     ) -> u32 {
         if items.is_empty() {
             return NONE;
+        }
+        if items.len() <= LEAF_SIZE {
+            let start = order.len() as u32;
+            order.extend(items.iter().map(|it| it.0));
+            let id = nodes.len() as u32;
+            nodes.push(Node::Leaf { start, end: order.len() as u32 });
+            return id;
         }
         // Pick a random vantage point, move it to the front.
         let pick = rng.below(items.len());
         items.swap(0, pick);
         let vp = items[0].0;
         let rest = &mut items[1..];
-        if rest.is_empty() {
-            let id = nodes.len() as u32;
-            nodes.push(Node { vp, radius: 0.0, inside: NONE, outside: NONE });
-            return id;
-        }
-        let vprow = data.row(vp as usize);
         for it in rest.iter_mut() {
-            it.1 = super::dist2(vprow, data.row(it.0 as usize)).sqrt();
+            it.1 = Self::d2(data, norms, vp, it.0).sqrt();
         }
         // Median split.
         let mid = rest.len() / 2;
         rest.select_nth_unstable_by(mid, |a, b| a.1.partial_cmp(&b.1).unwrap());
         let radius = rest[mid].1;
         let id = nodes.len() as u32;
-        nodes.push(Node { vp, radius, inside: NONE, outside: NONE });
+        nodes.push(Node::Ball { vp, radius, inside: NONE, outside: NONE });
         let (ins, outs) = rest.split_at_mut(mid);
-        let inside = Self::build_rec(data, ins, nodes, rng);
-        let outside = Self::build_rec(data, outs, nodes, rng);
-        nodes[id as usize].inside = inside;
-        nodes[id as usize].outside = outside;
+        let inside = Self::build_rec(data, norms, ins, nodes, order, rng);
+        let outside = Self::build_rec(data, norms, outs, nodes, order, rng);
+        if let Node::Ball { inside: i, outside: o, .. } = &mut nodes[id as usize] {
+            *i = inside;
+            *o = outside;
+        }
         id
     }
 
     /// Exact k nearest neighbours of `query` (optionally excluding one id).
     pub fn knn_query(&self, query: &[f32], k: usize, exclude: Option<u32>) -> Vec<(f32, u32)> {
+        let q_norm = blocked::dot(query, query);
         let mut kb = KBest::new(k);
-        self.search(self.root, query, exclude, &mut kb);
+        let mut scratch: Vec<u32> = Vec::with_capacity(LEAF_SIZE);
+        self.search(self.root, query, q_norm, exclude, &mut kb, &mut scratch);
         kb.into_sorted()
     }
 
-    fn search(&self, node: u32, query: &[f32], exclude: Option<u32>, kb: &mut KBest) {
+    fn search(
+        &self,
+        node: u32,
+        query: &[f32],
+        q_norm: f32,
+        exclude: Option<u32>,
+        kb: &mut KBest,
+        scratch: &mut Vec<u32>,
+    ) {
         if node == NONE {
             return;
         }
-        let n = &self.nodes[node as usize];
-        let d = super::dist2(query, self.data.row(n.vp as usize)).sqrt();
-        if Some(n.vp) != exclude {
-            let d2 = d * d;
-            if d2 < kb.bound() {
-                kb.push(d2, n.vp);
+        match &self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                let ids = &self.order[*start as usize..*end as usize];
+                if let Some(ex) = exclude {
+                    scratch.clear();
+                    scratch.extend(ids.iter().copied().filter(|&i| i != ex));
+                    blocked::scan_candidates(
+                        query, q_norm, &self.data.x, self.data.d, &self.norms, scratch, kb,
+                    );
+                } else {
+                    blocked::scan_candidates(
+                        query, q_norm, &self.data.x, self.data.d, &self.norms, ids, kb,
+                    );
+                }
+            }
+            Node::Ball { vp, radius, inside, outside } => {
+                let vpi = *vp as usize;
+                let d2 = (q_norm + self.norms[vpi]
+                    - 2.0 * blocked::dot(query, self.data.row(vpi)))
+                .max(0.0);
+                if Some(*vp) != exclude && d2 < kb.bound() {
+                    kb.push(d2, *vp);
+                }
+                let d = d2.sqrt();
+                // Search the nearer side first; prune the other with the
+                // triangle inequality.
+                if d < *radius {
+                    self.search(*inside, query, q_norm, exclude, kb, scratch);
+                    if d + kb.bound().sqrt() >= *radius {
+                        self.search(*outside, query, q_norm, exclude, kb, scratch);
+                    }
+                } else {
+                    self.search(*outside, query, q_norm, exclude, kb, scratch);
+                    if d - kb.bound().sqrt() <= *radius {
+                        self.search(*inside, query, q_norm, exclude, kb, scratch);
+                    }
+                }
             }
         }
-        // Search the nearer side first; prune with the triangle inequality.
-        let tau = kb.bound().sqrt();
-        if d < n.radius {
-            self.search(n.inside, query, exclude, kb);
-            let tau = kb.bound().sqrt();
-            if d + tau >= n.radius {
-                self.search(n.outside, query, exclude, kb);
-            }
-        } else {
-            self.search(n.outside, query, exclude, kb);
-            let tau = kb.bound().sqrt();
-            if d - tau <= n.radius {
-                self.search(n.inside, query, exclude, kb);
-            }
-        }
-        let _ = tau;
     }
 
     /// Full kNN graph (parallel over queries).
@@ -139,6 +195,18 @@ impl<'a> VpTree<'a> {
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
+
+    /// Every point id, exactly once: vantage points plus leaf buckets.
+    #[cfg(test)]
+    fn all_point_ids(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.order.clone();
+        for n in &self.nodes {
+            if let Node::Ball { vp, .. } = n {
+                ids.push(*vp);
+            }
+        }
+        ids
+    }
 }
 
 #[cfg(test)]
@@ -153,16 +221,17 @@ mod tests {
     }
 
     #[test]
-    fn tree_contains_every_point_once() {
+    fn tree_partitions_every_point_once() {
         let data = random_dataset(257, 4, 3);
         let t = VpTree::build(&data, 7);
-        assert_eq!(t.node_count(), 257);
-        let mut seen = vec![false; 257];
-        for n in &t.nodes {
-            assert!(!seen[n.vp as usize], "duplicate vantage point");
-            seen[n.vp as usize] = true;
+        let mut ids = t.all_point_ids();
+        assert_eq!(ids.len(), 257, "every point exactly once (vp or leaf)");
+        ids.sort_unstable();
+        for (want, got) in ids.iter().enumerate() {
+            assert_eq!(*got, want as u32, "duplicate or missing point");
         }
-        assert!(seen.iter().all(|&s| s));
+        // Bucket leaves actually formed (far fewer nodes than points).
+        assert!(t.node_count() < 257, "expected bucket leaves, got {} nodes", t.node_count());
     }
 
     #[test]
@@ -188,5 +257,15 @@ mod tests {
                 assert!((g.row_d2(i)[j] - e.row_d2(i)[j]).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn tiny_dataset_is_all_leaf() {
+        let data = random_dataset(9, 3, 1);
+        let t = VpTree::build(&data, 2);
+        assert_eq!(t.node_count(), 1);
+        let g = t.knn(4);
+        let e = bruteforce::knn(&data, 4);
+        assert!(g.recall_against(&e) > 0.999);
     }
 }

@@ -13,8 +13,10 @@
 //!   restricted-neighbourhood attractive forces,
 //! * **L2** (JAX, build-time Python) fuses a full gradient-descent
 //!   iteration and is AOT-lowered to HLO-text artifacts,
-//! * **L3** (this crate) is the runtime system: dataset substrates, kNN
-//!   and perplexity pipelines, the PJRT runtime that executes the AOT
+//! * **L3** (this crate) is the runtime system: dataset substrates, the
+//!   similarity pipeline (pluggable `KnnBackend`s over blocked distance
+//!   kernels, fused perplexity/P build, coordinator-level similarity
+//!   caching — `hd/`), the PJRT runtime that executes the AOT
 //!   artifacts, the host field subsystem (`field/`: exact gather oracle
 //!   plus the O(N + G² log G) FFT-convolution backend behind a pluggable
 //!   `FieldBackend` trait), baseline optimisers (exact t-SNE, Barnes-Hut,

@@ -109,13 +109,15 @@ fn cmd_embed(args: &Args) -> anyhow::Result<()> {
     let _ = printer.join();
 
     println!(
-        "done: {} iters, KL≈{:.4}; stages: data {} | knn {} | perplexity {} | optimize {}",
+        "done: {} iters, KL≈{:.4}; stages: data {} | knn {} | perplexity {} | optimize {} | similarities {}{}",
         res.iters_run,
         res.kl_est,
         fmt_secs(res.timings.dataset_s),
         fmt_secs(res.timings.knn_s),
         fmt_secs(res.timings.perplexity_s),
         fmt_secs(res.timings.optimize_s),
+        fmt_secs(res.timings.similarities_s()),
+        if res.timings.sim_cache_hit { " (cache hit)" } else { "" },
     );
     if let Some(path) = out {
         let n = res.embedding.len() / 2;

@@ -97,6 +97,38 @@ fn auto_stop_saves_iterations_on_small_problems() {
 }
 
 #[test]
+fn similarity_cache_hit_and_miss_through_the_service() {
+    let svc = EmbeddingService::new(None, 2);
+    let base = spec("gaussians", 400, "bh-0.5", 30);
+
+    // Miss: first job computes kNN + P.
+    let id = svc.submit(base.clone());
+    let first = svc.wait(id).unwrap();
+    assert!(!first.timings.sim_cache_hit);
+    assert!(first.timings.similarities_s() > 0.0);
+
+    // Hit: identical job skips the similarity stage entirely. The stage
+    // timings collapse to the fingerprint+lookup cost (perplexity_s is
+    // exactly 0 — no P build ran; no wall-clock comparison, which would
+    // flake under CI load).
+    let id = svc.submit(base.clone());
+    let second = svc.wait(id).unwrap();
+    assert!(second.timings.sim_cache_hit, "identical job must hit");
+    assert_eq!(second.timings.perplexity_s, 0.0);
+    assert_eq!(first.embedding, second.embedding, "hit must not change the result");
+
+    // Miss again: different perplexity ⇒ different k ⇒ different key.
+    let mut other = base.clone();
+    other.perplexity = 25.0;
+    let id = svc.submit(other);
+    let third = svc.wait(id).unwrap();
+    assert!(!third.timings.sim_cache_hit, "different k must miss");
+
+    assert_eq!(svc.sim_cache().stats(), (1, 2));
+    assert_eq!(svc.sim_cache().len(), 2);
+}
+
+#[test]
 fn perplexity_larger_than_k_is_clamped_not_fatal() {
     let state = JobState::default();
     let mut s = spec("gaussians", 50, "bh-0.5", 20);

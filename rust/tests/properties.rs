@@ -131,6 +131,72 @@ fn prop_perplexity_row_invariants() {
 }
 
 #[test]
+fn prop_blocked_knn_equals_scalar_reference() {
+    // The blocked ‖x‖²+‖y‖²−2x·y panel kernel must recover exactly the
+    // same neighbour sets as the seed's per-pair scalar scan, across
+    // dimensions that exercise every unroll remainder path.
+    prop::check("blocked == scalar kNN", &usize_in(20, 250), |&n| {
+        let d = 3 + (n % 19); // 3..21, rarely a multiple of 4
+        let data = dataset_from(n as u64 * 7 + 3, n, d);
+        let k = 8.min(n - 1);
+        let blocked = bruteforce::knn(&data, k);
+        let scalar = bruteforce::knn_scalar_reference(&data, k);
+        // The strong, tie-insensitive statement: identical sorted
+        // neighbour *distances* (the two paths differ only by f32
+        // rounding, so a near-tie can swap neighbour identity without
+        // being wrong — same convention as the vptree exactness test).
+        for i in 0..n {
+            for j in 0..k {
+                let (a, b) = (blocked.row_d2(i)[j], scalar.row_d2(i)[j]);
+                if (a - b).abs() > 1e-4 * b.max(1.0) {
+                    return Err(format!("d2[{i}][{j}]: {a} vs {b}"));
+                }
+            }
+        }
+        let recall = blocked.recall_against(&scalar);
+        if recall < 0.999 {
+            return Err(format!("recall {recall} at n={n}, d={d}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_joint_p_matches_reference() {
+    // The fused one-pass P build must reproduce the seed's
+    // calibrate→transpose→merge→normalise path: identical sparsity
+    // structure, values within 1e-6, plus the joint-P invariants
+    // (symmetry, Σ = 1, non-negativity).
+    prop::check("fused P == reference P", &usize_in(20, 150), |&n| {
+        let data = dataset_from(n as u64 * 5 + 11, n, 6);
+        let k = 12.min(n - 1);
+        let g = bruteforce::knn(&data, k);
+        let mu = (k as f32 / 3.0).max(2.0);
+        let fused = perplexity::joint_p(&g, mu);
+        let reference = perplexity::joint_p_reference(&g, mu);
+        if fused.csr.row_ptr != reference.csr.row_ptr {
+            return Err("row_ptr mismatch".into());
+        }
+        if fused.csr.col != reference.csr.col {
+            return Err("column structure mismatch".into());
+        }
+        for (i, (a, b)) in fused.csr.val.iter().zip(&reference.csr.val).enumerate() {
+            if (a - b).abs() > 1e-6 {
+                return Err(format!("val[{i}]: fused {a} vs reference {b}"));
+            }
+            if *a < 0.0 {
+                return Err(format!("val[{i}] negative: {a}"));
+            }
+        }
+        let total = fused.csr.sum();
+        if (total - 1.0).abs() > 1e-4 {
+            return Err(format!("ΣP = {total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_joint_p_symmetric_normalised() {
     prop::check("joint P invariants", &usize_in(20, 150), |&n| {
         let data = dataset_from(n as u64 + 1000, n, 5);

@@ -108,6 +108,27 @@ fn stop_over_tcp_terminates_early() {
 }
 
 #[test]
+fn repeat_job_reports_similarity_cache_hit_over_tcp() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+    let submit = r#"{"cmd":"submit","dataset":"gaussians","n":120,"engine":"bh-0.5","iters":20,"perplexity":8,"knn":"brute"}"#;
+
+    let id = c.call(submit).num_field("job").unwrap() as u64;
+    let v = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+    assert_eq!(v.get("sim_cache_hit"), Some(&Json::Bool(false)), "{v}");
+    assert!(v.num_field("knn_s").unwrap() > 0.0);
+
+    let id = c.call(submit).num_field("job").unwrap() as u64;
+    let v = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+    assert_eq!(v.get("sim_cache_hit"), Some(&Json::Bool(true)), "{v}");
+    assert_eq!(v.num_field("perplexity_s").unwrap(), 0.0);
+
+    let v = c.call(r#"{"cmd":"stats"}"#);
+    assert_eq!(v.num_field("sim_cache_hits").unwrap() as u64, 1, "{v}");
+    assert_eq!(v.num_field("sim_cache_misses").unwrap() as u64, 1);
+}
+
+#[test]
 fn malformed_lines_keep_the_connection_alive() {
     let addr = start_server();
     let mut c = Client::connect(addr);
