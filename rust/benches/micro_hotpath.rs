@@ -202,8 +202,9 @@ fn main() -> anyhow::Result<()> {
         ("ns_per_iter", Json::Num(exact_t * 1e9)),
     ]));
     for theta in [0.1f32, 0.5] {
+        let mut bhr = BhRepulsion::new(theta);
         let t = measure(warmup, iters, || {
-            BhRepulsion { theta }.compute(&y, &mut num);
+            bhr.compute(&y, &mut num);
         })
         .median();
         rep.row(
@@ -390,6 +391,93 @@ fn main() -> anyhow::Result<()> {
                 ("p_build_reference_ns", Json::Num(p_ref_t * 1e9)),
                 ("p_build_fused_ns", Json::Num(p_fused_t * 1e9)),
                 ("speedup_fused_vs_reference", Json::Num(p_speedup)),
+            ]),
+        ));
+    }
+
+    // --- Session-API dispatch overhead: the stepwise EmbeddingSession
+    // (one virtual `step()` per iteration, always-on stats/bbox) vs the
+    // old fused loop shape (repulsion + attractive + fused_step inlined,
+    // headless). Same engine math on both sides; the target is <1%
+    // overhead at N=10k — the price of pause/resume/checkpoint being
+    // first-class.
+    {
+        use gpgpu_sne::embed::common::GdState;
+        use gpgpu_sne::embed::Engine;
+        use gpgpu_sne::hd::sparse::Csr;
+        use gpgpu_sne::hd::SparseP;
+
+        let sn = if quick { 2000usize } else { 10_000 };
+        let sk = 8usize;
+        let mut col = Vec::with_capacity(sn * sk);
+        let mut val = Vec::with_capacity(sn * sk);
+        for i in 0..sn {
+            for j in 1..=sk {
+                col.push(((i + j) % sn) as u32);
+                val.push(1.0 / (sn * sk) as f32);
+            }
+        }
+        let p = SparseP {
+            csr: Csr::from_rows(sn, sn, sk, col, val),
+            perplexity: sk as f32,
+        };
+        let bench_iters = 30usize;
+        let opt = gpgpu_sne::embed::OptParams {
+            iters: bench_iters,
+            exaggeration_iters: 10,
+            seed: 3,
+            ..Default::default()
+        };
+        let it = if quick { 2 } else { 4 };
+
+        // Old fused-loop shape, reconstructed from the same public parts
+        // the sessions use (this IS what run_gd_loop compiled to before
+        // the session API, headless variant: no bbox, no stats).
+        let fused_t = measure(1, it, || {
+            let mut state = GdState::init(sn, opt.seed, opt.init_std);
+            let mut rep = BhRepulsion::new(0.5);
+            let mut attr = vec![0.0f32; 2 * sn];
+            let mut repnum = vec![0.0f32; 2 * sn];
+            for iter in 0..opt.iters {
+                let ex = opt.exaggeration_at(iter);
+                let _ = gpgpu_sne::embed::attractive_forces(&p, &state.y, &mut attr);
+                let z = rep.compute(&state.y, &mut repnum).max(1e-12);
+                let inv_z = (1.0 / z) as f32;
+                state.fused_step(&attr, &repnum, ex, inv_z, opt.eta, opt.momentum_at(iter), false);
+            }
+        })
+        .median();
+        let session_t = measure(1, it, || {
+            let mut engine = gpgpu_sne::embed::by_name("bh-0.5", None).unwrap();
+            let mut session = engine.begin(Arc::new(p.clone()), &opt).unwrap();
+            while !session.is_done() {
+                let _ = session.step().unwrap();
+            }
+        })
+        .median();
+        let fused_ns = fused_t * 1e9 / bench_iters as f64;
+        let session_ns = session_t * 1e9 / bench_iters as f64;
+        let overhead_pct = (session_ns - fused_ns) / fused_ns * 100.0;
+        let mut rep = Report::new(
+            &format!("session-API step dispatch @ N={sn} (bh-0.5, {bench_iters} iters)"),
+            &["ns/iter", "overhead"],
+        );
+        rep.row("fused loop (pre-session shape)", vec![format!("{fused_ns:.0}"), "-".into()]);
+        rep.row(
+            "EmbeddingSession::step loop",
+            vec![format!("{session_ns:.0}"), format!("{overhead_pct:+.2}%")],
+        );
+        rep.print();
+        rep.write_csv("micro_session_step.csv")?;
+        json_sections.push((
+            "session_step",
+            Json::obj(vec![
+                ("n", Json::Num(sn as f64)),
+                ("engine", Json::Str("bh-0.5".into())),
+                ("iters", Json::Num(bench_iters as f64)),
+                ("fused_loop_ns_per_iter", Json::Num(fused_ns)),
+                ("session_ns_per_iter", Json::Num(session_ns)),
+                ("overhead_pct", Json::Num(overhead_pct)),
             ]),
         ));
     }

@@ -55,6 +55,68 @@ pub struct AutoStop {
     pub rel_eps: f64,
 }
 
+/// A mid-run hyperparameter update (the protocol's `update` command and
+/// [`crate::embed::EmbeddingSession::set_params`] payload): every field
+/// is optional, set fields overwrite the session's current
+/// [`OptParams`]. Raising `iters` extends a finished job; lowering it
+/// below the current iteration ends the job at the next scheduler slice.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ParamUpdate {
+    pub iters: Option<usize>,
+    pub eta: Option<f32>,
+    pub exaggeration: Option<f32>,
+    pub exaggeration_iters: Option<usize>,
+    pub momentum0: Option<f32>,
+    pub momentum1: Option<f32>,
+    pub momentum_switch: Option<usize>,
+}
+
+impl ParamUpdate {
+    pub fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Overwrite `params`' fields with the set ones.
+    pub fn apply(&self, params: &mut OptParams) {
+        if let Some(v) = self.iters {
+            params.iters = v;
+        }
+        if let Some(v) = self.eta {
+            params.eta = v;
+        }
+        if let Some(v) = self.exaggeration {
+            params.exaggeration = v;
+        }
+        if let Some(v) = self.exaggeration_iters {
+            params.exaggeration_iters = v;
+        }
+        if let Some(v) = self.momentum0 {
+            params.momentum0 = v;
+        }
+        if let Some(v) = self.momentum1 {
+            params.momentum1 = v;
+        }
+        if let Some(v) = self.momentum_switch {
+            params.momentum_switch = v;
+        }
+    }
+
+    /// Layer `later` on top of this update (later's set fields win) —
+    /// how the job control slot merges updates that arrive faster than
+    /// the scheduler drains them.
+    pub fn merged_with(&self, later: &ParamUpdate) -> ParamUpdate {
+        ParamUpdate {
+            iters: later.iters.or(self.iters),
+            eta: later.eta.or(self.eta),
+            exaggeration: later.exaggeration.or(self.exaggeration),
+            exaggeration_iters: later.exaggeration_iters.or(self.exaggeration_iters),
+            momentum0: later.momentum0.or(self.momentum0),
+            momentum1: later.momentum1.or(self.momentum1),
+            momentum_switch: later.momentum_switch.or(self.momentum_switch),
+        }
+    }
+}
+
 /// Everything needed to run one embedding job.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -104,6 +166,8 @@ pub enum JobPhase {
     Knn,
     Perplexity,
     Optimizing { iter: usize, total: usize },
+    /// Parked by a `pause` command; `resume` re-enters the scheduler.
+    Paused { iter: usize, total: usize },
     Done,
     Stopped,
     Failed(String),
@@ -120,6 +184,7 @@ impl JobPhase {
             JobPhase::Knn => "knn".into(),
             JobPhase::Perplexity => "perplexity".into(),
             JobPhase::Optimizing { iter, total } => format!("optimizing {iter}/{total}"),
+            JobPhase::Paused { iter, total } => format!("paused {iter}/{total}"),
             JobPhase::Done => "done".into(),
             JobPhase::Stopped => "stopped".into(),
             JobPhase::Failed(e) => format!("failed: {e}"),
@@ -175,5 +240,24 @@ mod tests {
         assert!(JobPhase::Failed("x".into()).is_terminal());
         assert!(!JobPhase::Optimizing { iter: 1, total: 2 }.is_terminal());
         assert_eq!(JobPhase::Optimizing { iter: 1, total: 2 }.label(), "optimizing 1/2");
+        assert!(!JobPhase::Paused { iter: 3, total: 9 }.is_terminal());
+        assert_eq!(JobPhase::Paused { iter: 3, total: 9 }.label(), "paused 3/9");
+    }
+
+    #[test]
+    fn param_update_applies_and_merges() {
+        let mut p = OptParams::default();
+        let u = ParamUpdate { eta: Some(50.0), iters: Some(10), ..Default::default() };
+        assert!(!u.is_empty());
+        assert!(ParamUpdate::default().is_empty());
+        u.apply(&mut p);
+        assert_eq!(p.eta, 50.0);
+        assert_eq!(p.iters, 10);
+        assert_eq!(p.momentum1, OptParams::default().momentum1, "unset fields untouched");
+        let later = ParamUpdate { eta: Some(75.0), momentum1: Some(0.9), ..Default::default() };
+        let m = u.merged_with(&later);
+        assert_eq!(m.eta, Some(75.0), "later wins");
+        assert_eq!(m.iters, Some(10), "earlier survives");
+        assert_eq!(m.momentum1, Some(0.9));
     }
 }

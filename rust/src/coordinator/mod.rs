@@ -3,17 +3,20 @@
 //! in (Fig. 1, the A-tSNE lineage, the in-browser demo).
 //!
 //! A job flows through **kNN → perplexity/P → optimise**; the optimise
-//! stage streams progressive snapshots (iteration, KL estimate, point
-//! positions) to subscribers, honours user-driven early termination, and
-//! — for the `gpgpu` engine — applies the adaptive field-resolution
-//! policy over the AOT artifact set. `serve.rs` exposes the whole thing
-//! over a line-oriented TCP protocol; `service.rs` multiplexes concurrent
-//! jobs over one shared PJRT runtime and holds the *similarity cache*
-//! (`simcache.rs`): repeated jobs whose `(dataset fingerprint, knn
-//! method, k, perplexity, seed)` match a previous job skip the entire
-//! similarity stage and go straight to optimisation, reported through
-//! `StageTimings::sim_cache_hit` and the protocol's `wait`/`status`
-//! responses.
+//! stage is a stepwise [`crate::embed::EmbeddingSession`] driven by the
+//! service's *cooperative scheduler* (`service.rs`): `max_concurrent`
+//! workers time-slice every active session in step quanta (fair
+//! round-robin — a 100k-point job cannot starve small interactive ones),
+//! publishing live snapshots straight from session state, honouring
+//! user-driven stop, `pause`/`resume` parking, and live `update`
+//! re-parameterisation (`job.rs::ParamUpdate`). `protocol.rs` exposes
+//! the whole thing over a line-oriented TCP protocol; the service also
+//! holds the *similarity cache* (`simcache.rs`): repeated jobs whose
+//! `(dataset fingerprint, knn method, k, perplexity, seed)` match a
+//! previous job skip the entire similarity stage, and *concurrent*
+//! identical submissions coalesce onto a single in-flight computation,
+//! reported through `StageTimings::sim_cache_hit` and the protocol's
+//! `wait`/`stats` responses.
 
 pub mod job;
 pub mod pipeline;
@@ -22,7 +25,10 @@ pub mod protocol;
 pub mod service;
 pub mod simcache;
 
-pub use job::{JobPhase, JobSpec, KnnMethod, Snapshot};
-pub use pipeline::{run_pipeline, run_pipeline_cached, JobResult, StageTimings};
+pub use job::{AutoStop, JobPhase, JobSpec, KnnMethod, ParamUpdate, Snapshot};
+pub use pipeline::{
+    begin_session, prepare_similarities, run_pipeline, run_pipeline_cached, AutoStopTracker,
+    JobResult, PreparedJob, StageTimings,
+};
 pub use service::{EmbeddingService, JobId};
 pub use simcache::{SimKey, SimilarityCache};

@@ -1,18 +1,29 @@
 //! The per-job pipeline: dataset → kNN → perplexity/P → optimise, with
 //! stage timings, progressive snapshots, auto-stop and user stop.
 //!
-//! The similarity stage (kNN + P) can be served from a
-//! [`super::simcache::SimilarityCache`]: a cache hit replaces both stages
-//! with a dataset fingerprint and sets [`StageTimings::sim_cache_hit`].
+//! The pipeline is split at the session boundary so the service's
+//! cooperative scheduler can drive the optimise stage in step quanta:
+//!
+//! * [`prepare_similarities`] — dataset load + kNN + P build, optionally
+//!   served from (and coalesced through) a
+//!   [`super::simcache::SimilarityCache`]: a cache hit replaces both
+//!   stages with a dataset fingerprint, and concurrent identical
+//!   submissions block on the first computation instead of re-running it.
+//! * [`begin_session`] — construct the engine and open its
+//!   [`EmbeddingSession`].
+//! * [`run_pipeline`] / [`run_pipeline_cached`] — the synchronous
+//!   convenience used by the CLI, examples and tests: prepare, begin,
+//!   then loop the session to completion inline (honouring stop
+//!   requests, pending parameter updates and auto-stop).
 
 use std::sync::Arc;
 
 use crate::data;
-use crate::embed::{self, Control};
+use crate::embed::{self, EmbeddingSession};
 use crate::hd::{backend, perplexity, Dataset, KnnGraph, SparseP};
 use crate::runtime::Runtime;
 
-use super::job::{JobPhase, JobSpec, KnnMethod, Snapshot};
+use super::job::{AutoStop, JobPhase, JobSpec, KnnMethod, Snapshot};
 use super::progress::JobState;
 use super::simcache::{SimKey, SimilarityCache};
 
@@ -25,8 +36,9 @@ pub struct StageTimings {
     pub perplexity_s: f64,
     pub optimize_s: f64,
     /// The similarity stage (kNN + perplexity/P) was served from the
-    /// coordinator cache; `knn_s` then measures only the dataset
-    /// fingerprint + lookup and `perplexity_s` is 0.
+    /// coordinator cache — either a ready entry or coalesced onto a
+    /// concurrent identical computation; `knn_s` then measures only the
+    /// fingerprint + lookup (or wait) and `perplexity_s` is 0.
     pub sim_cache_hit: bool,
 }
 
@@ -63,6 +75,108 @@ pub fn compute_knn(data: &Dataset, method: KnnMethod, k: usize, seed: u64) -> Kn
         .knn(data, k, seed)
 }
 
+/// Everything the optimise stage needs, produced by
+/// [`prepare_similarities`].
+pub struct PreparedJob {
+    pub p: Arc<SparseP>,
+    pub labels: Vec<u8>,
+}
+
+/// Dataset load + similarity stage (kNN + perplexity/P), optionally
+/// through the coalescing cache. Fills `dataset_s`/`knn_s`/
+/// `perplexity_s`/`sim_cache_hit` and advances the job phase.
+pub fn prepare_similarities(
+    spec: &JobSpec,
+    state: &JobState,
+    cache: Option<&SimilarityCache>,
+    timings: &mut StageTimings,
+) -> anyhow::Result<PreparedJob> {
+    let t = std::time::Instant::now();
+    let dataset = data::by_name(&spec.dataset, spec.n, spec.seed)?;
+    timings.dataset_s = t.elapsed().as_secs_f64();
+
+    state.set_phase(JobPhase::Knn);
+    let t = std::time::Instant::now();
+    let k = spec.knn_k().min(dataset.n.saturating_sub(1)).max(1);
+    let perp = spec.perplexity.min(k as f32);
+    let compute_uncached = |timings: &mut StageTimings| -> anyhow::Result<Arc<SparseP>> {
+        let knn_t = std::time::Instant::now();
+        let knn = compute_knn(&dataset, spec.knn, k, spec.seed);
+        timings.knn_s = knn_t.elapsed().as_secs_f64();
+        state.set_phase(JobPhase::Perplexity);
+        let p_t = std::time::Instant::now();
+        let p = Arc::new(perplexity::joint_p(&knn, perp));
+        timings.perplexity_s = p_t.elapsed().as_secs_f64();
+        Ok(p)
+    };
+    let p = match cache {
+        Some(cache) => {
+            let key = SimKey {
+                fingerprint: dataset.fingerprint(),
+                method: spec.knn,
+                k,
+                perplexity_bits: perp.to_bits(),
+                // Seed-insensitive backends (brute) key seed-blind so
+                // that seed sweeps over identical data share one entry.
+                seed: if spec.knn.seed_sensitive() { spec.seed } else { 0 },
+            };
+            let (p, hit) = cache.get_or_compute(&key, || compute_uncached(timings))?;
+            if hit {
+                // Ready entry or coalesced onto a concurrent leader:
+                // knn_s is the fingerprint/lookup/wait, no P build ran.
+                timings.sim_cache_hit = true;
+                timings.knn_s = t.elapsed().as_secs_f64();
+                timings.perplexity_s = 0.0;
+            }
+            p
+        }
+        None => compute_uncached(timings)?,
+    };
+    Ok(PreparedJob { p, labels: dataset.labels })
+}
+
+/// Construct the engine named by the spec and open its session.
+pub fn begin_session(
+    spec: &JobSpec,
+    p: Arc<SparseP>,
+    runtime: Option<Arc<Runtime>>,
+) -> anyhow::Result<Box<dyn EmbeddingSession>> {
+    embed::by_name(&spec.engine, runtime)?.begin(p, &spec.params)
+}
+
+/// Plateau detector for automatic early termination: stop once the KL
+/// estimate improved less than `rel_eps` over the last `window`
+/// iterations (only armed after the exaggeration phase). Used by both
+/// the synchronous drive loop and the service scheduler.
+pub struct AutoStopTracker {
+    cfg: Option<AutoStop>,
+    armed_after: usize,
+    kl_window: Vec<f64>,
+}
+
+impl AutoStopTracker {
+    pub fn new(cfg: Option<AutoStop>, exaggeration_iters: usize) -> Self {
+        Self { cfg, armed_after: exaggeration_iters, kl_window: Vec::new() }
+    }
+
+    /// Observe one iteration's KL estimate; true means "plateaued, stop".
+    pub fn should_stop(&mut self, iter: usize, kl_est: f64) -> bool {
+        let Some(auto) = self.cfg else {
+            return false;
+        };
+        if iter < self.armed_after {
+            return false;
+        }
+        self.kl_window.push(kl_est);
+        if self.kl_window.len() > auto.window {
+            let old = self.kl_window[self.kl_window.len() - 1 - auto.window];
+            let rel = (old - kl_est) / old.abs().max(1e-12);
+            return rel < auto.rel_eps;
+        }
+        false
+    }
+}
+
 /// Run a full job synchronously. `state` carries phase/stop/snapshots;
 /// pass a fresh `JobState` when running outside the service.
 pub fn run_pipeline(
@@ -82,54 +196,14 @@ pub fn run_pipeline_cached(
     cache: Option<&SimilarityCache>,
 ) -> anyhow::Result<JobResult> {
     let mut timings = StageTimings::default();
-
-    let t = std::time::Instant::now();
-    let dataset = data::by_name(&spec.dataset, spec.n, spec.seed)?;
-    timings.dataset_s = t.elapsed().as_secs_f64();
-
-    state.set_phase(JobPhase::Knn);
-    let t = std::time::Instant::now();
-    let k = spec.knn_k().min(dataset.n.saturating_sub(1)).max(1);
-    let perp = spec.perplexity.min(k as f32);
-    let key = cache.map(|_| SimKey {
-        fingerprint: dataset.fingerprint(),
-        method: spec.knn,
-        k,
-        perplexity_bits: perp.to_bits(),
-        // Seed-insensitive backends (brute) key seed-blind so that seed
-        // sweeps over identical data share one cache entry.
-        seed: if spec.knn.seed_sensitive() { spec.seed } else { 0 },
-    });
-    let cached = match (cache, &key) {
-        (Some(c), Some(key)) => c.get(key),
-        _ => None,
-    };
-    let p: Arc<SparseP> = if let Some(hit) = cached {
-        timings.sim_cache_hit = true;
-        timings.knn_s = t.elapsed().as_secs_f64(); // fingerprint + lookup
-        hit
-    } else {
-        let knn = compute_knn(&dataset, spec.knn, k, spec.seed);
-        timings.knn_s = t.elapsed().as_secs_f64();
-
-        state.set_phase(JobPhase::Perplexity);
-        let t = std::time::Instant::now();
-        let p = Arc::new(perplexity::joint_p(&knn, perp));
-        timings.perplexity_s = t.elapsed().as_secs_f64();
-        if let (Some(c), Some(key)) = (cache, key) {
-            c.insert(key, p.clone());
-        }
-        p
-    };
-
+    let prepared = prepare_similarities(spec, state, cache, &mut timings)?;
     let (embedding, kl_est, iters_run, stopped) =
-        optimize(spec, &p, runtime, state, &mut timings)?;
-
+        optimize(spec, prepared.p, runtime, state, &mut timings)?;
     state.set_phase(if stopped { JobPhase::Stopped } else { JobPhase::Done });
     Ok(JobResult {
         spec: spec.clone(),
         embedding,
-        labels: dataset.labels,
+        labels: prepared.labels,
         timings,
         kl_est,
         iters_run,
@@ -137,64 +211,63 @@ pub fn run_pipeline_cached(
     })
 }
 
-/// The optimise stage (shared with `run_pipeline`; public for benches
-/// that precompute P once and sweep engines).
+/// The synchronous optimise stage: open a session and step it to
+/// completion inline (public for benches that precompute P once and
+/// sweep engines). Emits snapshots at the spec's `snapshot_every`
+/// cadence plus the final iteration, honours stop requests, pending
+/// parameter updates and auto-stop. Pause requests are a scheduler
+/// feature and are ignored here — the synchronous caller *is* the
+/// driver.
 pub fn optimize(
     spec: &JobSpec,
-    p: &SparseP,
+    p: Arc<SparseP>,
     runtime: Option<Arc<Runtime>>,
     state: &JobState,
     timings: &mut StageTimings,
 ) -> anyhow::Result<(Vec<f32>, f64, usize, bool)> {
-    let mut engine = embed::by_name(&spec.engine, runtime)?;
-    let total = spec.params.iters;
+    let mut session = begin_session(spec, p, runtime)?;
+    let t = std::time::Instant::now();
+    let mut auto = AutoStopTracker::new(spec.auto_stop, spec.params.exaggeration_iters);
     let mut last_kl = f64::NAN;
     let mut iters_run = 0usize;
     let mut stopped = false;
-    let mut kl_window: Vec<f64> = Vec::new();
-    let t = std::time::Instant::now();
-    let mut observer = |stats: &embed::IterStats, y: &[f32]| -> Control {
+    while !session.is_done() {
+        if let Some(update) = state.take_update() {
+            let mut params = session.params().clone();
+            update.apply(&mut params);
+            session.set_params(params);
+        }
+        let stats = session.step()?;
         iters_run = stats.iter + 1;
         last_kl = stats.kl_est;
+        let total = session.params().iters;
         state.set_phase(JobPhase::Optimizing { iter: stats.iter + 1, total });
         let emit = spec.snapshot_every > 0 && (stats.iter % spec.snapshot_every == 0);
-        if emit || stats.iter + 1 == total {
+        if emit || session.is_done() {
             state.publish(Snapshot {
                 iter: stats.iter,
                 kl_est: stats.kl_est,
                 elapsed_s: stats.elapsed_s,
-                positions: Arc::new(y.to_vec()),
+                positions: Arc::new(session.positions().to_vec()),
             });
         }
         if state.stop_requested() {
             stopped = true;
-            return Control::Stop;
+            break;
         }
-        if let Some(auto) = spec.auto_stop {
-            // Only meaningful after exaggeration is lifted.
-            if stats.iter >= spec.params.exaggeration_iters {
-                kl_window.push(stats.kl_est);
-                if kl_window.len() > auto.window {
-                    let old = kl_window[kl_window.len() - 1 - auto.window];
-                    let rel = (old - stats.kl_est) / old.abs().max(1e-12);
-                    if rel < auto.rel_eps {
-                        stopped = true;
-                        return Control::Stop;
-                    }
-                }
-            }
+        if auto.should_stop(stats.iter, stats.kl_est) {
+            stopped = true;
+            break;
         }
-        Control::Continue
-    };
-    let embedding = engine.run(p, &spec.params, Some(&mut observer))?;
+    }
     timings.optimize_s = t.elapsed().as_secs_f64();
-    Ok((embedding, last_kl, iters_run, stopped))
+    Ok((session.positions().to_vec(), last_kl, iters_run, stopped))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::AutoStop;
+    use crate::coordinator::job::{AutoStop, ParamUpdate};
     use crate::embed::OptParams;
 
     fn quick_spec(engine: &str, iters: usize) -> JobSpec {
@@ -257,6 +330,19 @@ mod tests {
     }
 
     #[test]
+    fn pending_update_applies_mid_run() {
+        // Queue an eta/iters update before starting: the drive loop must
+        // apply it at the first step boundary, so the run ends at the
+        // updated iteration count.
+        let state = JobState::default();
+        state.push_update(ParamUpdate { iters: Some(25), ..Default::default() });
+        let res = run_pipeline(&quick_spec("bh-0.5", 500), None, &state).unwrap();
+        assert_eq!(res.iters_run, 25, "updated iters must cap the run");
+        assert!(!res.stopped_early, "shortened, not stopped");
+        assert_eq!(state.phase(), JobPhase::Done);
+    }
+
+    #[test]
     fn cached_pipeline_skips_similarities_and_matches_uncached() {
         let cache = crate::coordinator::simcache::SimilarityCache::new(4);
         let spec = quick_spec("bh-0.5", 40);
@@ -274,6 +360,7 @@ mod tests {
         let c = run_pipeline_cached(&other, None, &JobState::default(), Some(&cache)).unwrap();
         assert!(!c.timings.sim_cache_hit, "different perplexity/k must miss");
         assert_eq!(cache.stats(), (1, 2));
+        assert_eq!(cache.computes(), 2);
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use super::job::{JobPhase, Snapshot};
+use super::job::{JobPhase, ParamUpdate, Snapshot};
 
 /// Clone-fanout broadcast channel: every subscriber gets every message
 /// sent after it subscribed. Dead subscribers are pruned on send.
@@ -36,12 +36,16 @@ impl<T: Clone> Broadcast<T> {
     }
 }
 
-/// Shared mutable view of a running job.
+/// Shared mutable view of a running job: phase, snapshots, and the
+/// control surface the scheduler polls between step quanta (stop, pause,
+/// pending hyperparameter update).
 #[derive(Clone)]
 pub struct JobState {
     phase: Arc<Mutex<JobPhase>>,
     latest: Arc<Mutex<Option<Snapshot>>>,
     stop: Arc<AtomicBool>,
+    paused: Arc<AtomicBool>,
+    pending_update: Arc<Mutex<Option<ParamUpdate>>>,
     pub snapshots: Arc<Broadcast<Snapshot>>,
 }
 
@@ -51,6 +55,8 @@ impl Default for JobState {
             phase: Arc::new(Mutex::new(JobPhase::Queued)),
             latest: Arc::new(Mutex::new(None)),
             stop: Arc::new(AtomicBool::new(false)),
+            paused: Arc::new(AtomicBool::new(false)),
+            pending_update: Arc::new(Mutex::new(None)),
             snapshots: Arc::new(Broadcast::default()),
         }
     }
@@ -82,6 +88,36 @@ impl JobState {
     pub fn stop_requested(&self) -> bool {
         self.stop.load(Ordering::SeqCst)
     }
+
+    /// Ask the scheduler to park this job at the next step boundary.
+    pub fn request_pause(&self) {
+        self.paused.store(true, Ordering::SeqCst);
+    }
+
+    /// Clear the pause flag (the service also re-enqueues the job).
+    pub fn clear_pause(&self) {
+        self.paused.store(false, Ordering::SeqCst);
+    }
+
+    pub fn pause_requested(&self) -> bool {
+        self.paused.load(Ordering::SeqCst)
+    }
+
+    /// Queue a hyperparameter update for the scheduler to apply at the
+    /// next step boundary; updates arriving before the previous one was
+    /// consumed merge (later fields win).
+    pub fn push_update(&self, update: ParamUpdate) {
+        let mut slot = self.pending_update.lock().unwrap();
+        *slot = Some(match slot.take() {
+            Some(prev) => prev.merged_with(&update),
+            None => update,
+        });
+    }
+
+    /// Claim the pending update, if any.
+    pub fn take_update(&self) -> Option<ParamUpdate> {
+        self.pending_update.lock().unwrap().take()
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +144,24 @@ mod tests {
         b.send(1);
         assert_eq!(b.subscriber_count(), 1);
         assert_eq!(r2.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn pause_and_update_controls_roundtrip() {
+        let js = JobState::default();
+        assert!(!js.pause_requested());
+        js.request_pause();
+        assert!(js.pause_requested());
+        js.clear_pause();
+        assert!(!js.pause_requested());
+
+        assert!(js.take_update().is_none());
+        js.push_update(ParamUpdate { eta: Some(10.0), iters: Some(5), ..Default::default() });
+        js.push_update(ParamUpdate { eta: Some(20.0), ..Default::default() });
+        let u = js.take_update().expect("merged update pending");
+        assert_eq!(u.eta, Some(20.0), "later update wins");
+        assert_eq!(u.iters, Some(5), "earlier field survives the merge");
+        assert!(js.take_update().is_none(), "take consumes");
     }
 
     #[test]

@@ -7,19 +7,41 @@
 //! <- {"ok":true,"job":1}
 //! -> {"cmd":"status","job":1}
 //! <- {"ok":true,"job":1,"phase":"optimizing 120/500","kl":2.31,"iter":119}
-//! -> {"cmd":"snapshot","job":1}
+//! -> {"cmd":"snapshot","job":1}  // live positions, straight from the session
 //! <- {"ok":true,"job":1,"iter":119,"kl":2.31,"positions":[x0,y0,x1,y1,...]}
+//! -> {"cmd":"pause","job":1}     // park at the next step boundary
+//! <- {"ok":true,"job":1}         //   (status then reads "paused 130/500")
+//! -> {"cmd":"update","job":1,"eta":120,"iters":800}
+//! <- {"ok":true,"job":1}         // live re-parameterisation mid-run
+//! -> {"cmd":"resume","job":1}    // re-enter the scheduler
 //! -> {"cmd":"stop","job":1}      // user-driven early termination
 //! -> {"cmd":"wait","job":1}      // blocks until terminal
 //! <- {"ok":true,"job":1,...,"knn_s":1.2,"perplexity_s":0.3,"sim_cache_hit":false}
 //! -> {"cmd":"list"}
-//! -> {"cmd":"stats"}             // similarity-cache hit/miss counters
+//! -> {"cmd":"stats"}             // similarity-cache hit/miss/compute counters
 //! -> {"cmd":"quit"}
 //! ```
 //!
+//! The service behind these commands is a cooperative scheduler: jobs
+//! are embedding *sessions* time-sliced across `max_concurrent` workers
+//! in step quanta (fair round-robin — a large job cannot starve small
+//! ones), each quantum publishing a snapshot straight from the session
+//! state, so `snapshot` is always live without configuring
+//! `snapshot_every`. `pause` parks a session (its optimiser state and
+//! caches stay warm), `resume` re-enters it, and `update` overwrites
+//! eta / exaggeration(+iters) / momentum(0/1/switch) / iters on the live
+//! session — raising `iters` extends a run, lowering it ends the run at
+//! the next boundary.
+//!
+//! `submit` also accepts `auto_stop_window` (+ optional
+//! `auto_stop_eps`, default 1e-5): automatic termination once the KL
+//! estimate improves less than `eps` (relative) over the last `window`
+//! iterations after exaggeration lifts.
+//!
 //! `wait` reports the per-stage similarity timings and whether the job's
 //! kNN + P matrix came from the coordinator similarity cache (a repeat
-//! job over the same data: `knn_s + perplexity_s ≈ 0`).
+//! job over the same data: `knn_s + perplexity_s ≈ 0`; concurrent
+//! identical submissions coalesce onto one computation).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -28,7 +50,7 @@ use std::sync::Arc;
 use crate::embed::OptParams;
 use crate::util::json::{self, Json};
 
-use super::job::JobSpec;
+use super::job::{AutoStop, JobSpec, ParamUpdate};
 use super::service::EmbeddingService;
 
 /// Parse a submit command into a JobSpec (missing fields -> defaults).
@@ -67,7 +89,26 @@ pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
     if let Some(s) = v.num_field("snapshot_every") {
         spec.snapshot_every = s as usize;
     }
+    if let Some(w) = v.num_field("auto_stop_window") {
+        spec.auto_stop = Some(AutoStop {
+            window: (w as usize).max(1),
+            rel_eps: v.num_field("auto_stop_eps").unwrap_or(1e-5),
+        });
+    }
     Ok(spec)
+}
+
+/// Parse the optional fields of an `update` command.
+pub fn update_from_json(v: &Json) -> ParamUpdate {
+    ParamUpdate {
+        iters: v.num_field("iters").map(|x| x as usize),
+        eta: v.num_field("eta").map(|x| x as f32),
+        exaggeration: v.num_field("exaggeration").map(|x| x as f32),
+        exaggeration_iters: v.num_field("exaggeration_iters").map(|x| x as usize),
+        momentum0: v.num_field("momentum0").map(|x| x as f32),
+        momentum1: v.num_field("momentum1").map(|x| x as f32),
+        momentum_switch: v.num_field("momentum_switch").map(|x| x as usize),
+    }
 }
 
 fn ok_fields(fields: Vec<(&str, Json)>) -> String {
@@ -140,6 +181,33 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 (err_msg("unknown job"), true)
             }
         }
+        "pause" => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            if svc.pause(id) {
+                (ok_fields(vec![("job", Json::Num(id as f64))]), true)
+            } else {
+                (err_msg("unknown or finished job"), true)
+            }
+        }
+        "resume" => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            if svc.resume(id) {
+                (ok_fields(vec![("job", Json::Num(id as f64))]), true)
+            } else {
+                (err_msg("unknown or finished job"), true)
+            }
+        }
+        "update" => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            let update = update_from_json(&v);
+            if update.is_empty() {
+                (err_msg("update carries no fields (iters/eta/exaggeration/exaggeration_iters/momentum0/momentum1/momentum_switch)"), true)
+            } else if svc.update(id, update) {
+                (ok_fields(vec![("job", Json::Num(id as f64))]), true)
+            } else {
+                (err_msg("unknown or finished job"), true)
+            }
+        }
         "wait" => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             match svc.wait(id) {
@@ -166,6 +234,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 ok_fields(vec![
                     ("sim_cache_hits", Json::Num(hits as f64)),
                     ("sim_cache_misses", Json::Num(misses as f64)),
+                    ("sim_cache_computes", Json::Num(svc.sim_cache().computes() as f64)),
                     ("sim_cache_entries", Json::Num(svc.sim_cache().len() as f64)),
                 ]),
                 true,
@@ -298,6 +367,103 @@ mod tests {
         assert_eq!(v.num_field("sim_cache_hits").unwrap() as u64, 1, "{v}");
         assert_eq!(v.num_field("sim_cache_misses").unwrap() as u64, 1);
         assert_eq!(v.num_field("sim_cache_entries").unwrap() as u64, 1);
+    }
+
+    #[test]
+    fn submit_parses_auto_stop() {
+        let v = json::parse(r#"{"cmd":"submit","auto_stop_window":25,"auto_stop_eps":0.001}"#)
+            .unwrap();
+        let auto = spec_from_json(&v).unwrap().auto_stop.expect("auto stop set");
+        assert_eq!(auto.window, 25);
+        assert!((auto.rel_eps - 0.001).abs() < 1e-12);
+        // Window alone gets the default epsilon.
+        let v = json::parse(r#"{"cmd":"submit","auto_stop_window":10}"#).unwrap();
+        assert_eq!(spec_from_json(&v).unwrap().auto_stop.unwrap().rel_eps, 1e-5);
+        // Absent -> none (the pre-existing default).
+        let v = json::parse(r#"{"cmd":"submit"}"#).unwrap();
+        assert!(spec_from_json(&v).unwrap().auto_stop.is_none());
+    }
+
+    #[test]
+    fn pause_update_resume_cycle() {
+        let s = svc();
+        let (resp, _) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":120,"engine":"bh-0.5","iters":100000,"perplexity":8,"knn":"brute"}"#,
+        );
+        let id = json::parse(&resp).unwrap().num_field("job").unwrap() as u64;
+        let status = |s: &EmbeddingService| {
+            json::parse(&handle_line(s, &format!(r#"{{"cmd":"status","job":{id}}}"#)).0).unwrap()
+        };
+        // Wait until it is optimising, then pause.
+        while !status(&s).str_field("phase").unwrap_or("").starts_with("optimizing") {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let v = json::parse(&handle_line(&s, &format!(r#"{{"cmd":"pause","job":{id}}}"#)).0)
+            .unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+        // The scheduler parks it at the next step boundary.
+        let paused_iter = loop {
+            let v = status(&s);
+            let phase = v.str_field("phase").unwrap_or("").to_string();
+            if phase.starts_with("paused") {
+                break v.num_field("iter").unwrap_or(0.0) as usize;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        // Re-parameterise while parked: cut the run short.
+        let cut = paused_iter.max(1) + 1;
+        let v = json::parse(
+            &handle_line(&s, &format!(r#"{{"cmd":"update","job":{id},"iters":{cut},"eta":50}}"#))
+                .0,
+        )
+        .unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+        let v = json::parse(&handle_line(&s, &format!(r#"{{"cmd":"resume","job":{id}}}"#)).0)
+            .unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+        let v = json::parse(&handle_line(&s, &format!(r#"{{"cmd":"wait","job":{id}}}"#)).0)
+            .unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+        assert_eq!(v.get("stopped_early"), Some(&Json::Bool(false)), "shortened, not stopped");
+        assert!(v.num_field("iters").unwrap() < 100000.0, "update must cap the run: {v}");
+        // Control commands on a finished job are errors.
+        let v = json::parse(&handle_line(&s, &format!(r#"{{"cmd":"pause","job":{id}}}"#)).0)
+            .unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn zero_iteration_job_yields_parseable_wait() {
+        // A job can now legitimately finalise before any step runs
+        // (iters:0, or stop before the first quantum); its KL is NaN,
+        // which must serialise as null — not break the JSON line.
+        let s = svc();
+        let (resp, _) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":50,"engine":"bh-0.5","iters":0,"perplexity":5,"knn":"brute"}"#,
+        );
+        let id = json::parse(&resp).unwrap().num_field("job").unwrap() as u64;
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"wait","job":{id}}}"#));
+        let v = json::parse(&resp)
+            .expect("wait response must stay valid JSON with no iterations run");
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(v.num_field("iters").unwrap() as usize, 0);
+        assert_eq!(v.get("kl"), Some(&Json::Null), "NaN KL serialises as null: {resp}");
+    }
+
+    #[test]
+    fn update_with_no_fields_is_an_error() {
+        let s = svc();
+        let (resp, _) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":80,"engine":"bh-0.5","iters":30,"perplexity":8,"knn":"brute"}"#,
+        );
+        let id = json::parse(&resp).unwrap().num_field("job").unwrap() as u64;
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"update","job":{id}}}"#));
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v}");
+        handle_line(&s, &format!(r#"{{"cmd":"wait","job":{id}}}"#));
     }
 
     #[test]

@@ -1,15 +1,31 @@
-//! The embedding service: submits jobs onto worker threads, multiplexes
-//! them over one shared PJRT runtime, exposes status / snapshots / stop /
-//! wait. This is the process-lifetime object behind both the CLI and the
-//! TCP server.
+//! The embedding service: a cooperatively scheduled pool of
+//! `max_concurrent` workers time-slicing every active embedding session,
+//! multiplexed over one shared PJRT runtime. This is the process-lifetime
+//! object behind both the CLI and the TCP server.
+//!
+//! Jobs are not threads. A submitted job becomes a [`JobTask`] — the
+//! similarity stage plus a live [`EmbeddingSession`] — and enters a FIFO
+//! ready queue. Workers pop a job, run **one quantum** (at most
+//! [`MAX_QUANTUM_STEPS`] gradient-descent steps or [`QUANTUM_MS`]
+//! milliseconds, whichever comes first), publish a live snapshot straight
+//! from the session state, and re-enqueue the job at the back — fair
+//! round-robin in step quanta, so a 100k-point job cannot starve ten
+//! 2k-point jobs the way run-to-completion workers did. Between quanta
+//! the scheduler honours the job's control surface: `stop` finalises,
+//! `pause` parks the task (session state intact, caches warm),
+//! `resume` re-enqueues it, and pending [`ParamUpdate`]s are applied to
+//! the session — live re-parameterisation mid-optimisation.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
+use crate::embed::EmbeddingSession;
 use crate::runtime::Runtime;
 
-use super::job::{JobPhase, JobSpec, Snapshot};
-use super::pipeline::{run_pipeline_cached, JobResult};
+use super::job::{JobPhase, JobSpec, ParamUpdate, Snapshot};
+use super::pipeline::{self, AutoStopTracker, JobResult, StageTimings};
 use super::progress::JobState;
 use super::simcache::SimilarityCache;
 
@@ -18,138 +34,470 @@ use super::simcache::SimilarityCache;
 /// paper's defaults a 100k-point entry is ~100 MB, so keep few.
 const SIM_CACHE_CAPACITY: usize = 8;
 
+/// Time-slice budget per scheduler quantum. Long enough to amortise the
+/// queue round-trip, short enough that ten interactive jobs sharing two
+/// workers each see fresh snapshots several times a second.
+const QUANTUM_MS: u64 = 25;
+
+/// Step cap per quantum — keeps tiny problems (sub-millisecond steps)
+/// from monopolising a worker for a full time slice anyway.
+const MAX_QUANTUM_STEPS: usize = 64;
+
+/// Refresh floor for the `latest` snapshot when nobody is subscribed to
+/// the stream: the `snapshot` command stays live to within this interval
+/// without paying a full positions copy every quantum. Subscribers (and
+/// pause/finalise boundaries) always get an immediate publish.
+const IDLE_SNAPSHOT_MS: u64 = 100;
+
 pub type JobId = u64;
 
-struct JobEntry {
-    state: JobState,
-    handle: Option<std::thread::JoinHandle<()>>,
-    result: Arc<Mutex<Option<anyhow::Result<JobResult>>>>,
+/// A job's live optimisation state, owned by whichever worker is
+/// currently driving it (or parked in the entry's slot between quanta).
+struct JobTask {
     spec: JobSpec,
+    /// Labels from the dataset (carried into the final [`JobResult`]).
+    labels: Vec<u8>,
+    timings: StageTimings,
+    /// None until the prepare stage (dataset + kNN + P + `begin`) ran.
+    session: Option<Box<dyn EmbeddingSession>>,
+    auto: AutoStopTracker,
+    iters_run: usize,
+    last_kl: f64,
+    /// When the last snapshot was published (idle-throttling).
+    last_snapshot: Option<std::time::Instant>,
+}
+
+struct JobEntry {
+    spec: JobSpec,
+    state: JobState,
+    /// The task, parked between quanta. `None` while a worker drives it
+    /// or after the job finished.
+    task: Mutex<Option<JobTask>>,
+    /// Terminal result (`Err` keeps the message only — clonable, so any
+    /// number of clients can `wait` on the same job).
+    result: Mutex<Option<Result<JobResult, String>>>,
+    done_cv: Condvar,
+}
+
+/// State shared between the service handle and its workers.
+struct ServiceInner {
+    runtime: Option<Arc<Runtime>>,
+    jobs: Mutex<HashMap<JobId, Arc<JobEntry>>>,
+    queue: Mutex<VecDeque<JobId>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    sim_cache: Arc<SimilarityCache>,
+}
+
+impl ServiceInner {
+    fn enqueue(&self, id: JobId) {
+        self.queue.lock().unwrap().push_back(id);
+        self.queue_cv.notify_one();
+    }
+}
+
+/// What a worker does with the task after one scheduling slice.
+enum SliceOutcome {
+    /// More steps to run — back of the ready queue.
+    Requeue,
+    /// Paused — park until `resume` (or `stop`) re-enqueues it.
+    Park,
+    /// Terminal (done, stopped, failed) — result is set.
+    Finished,
 }
 
 /// Multiplexes embedding jobs over a shared (optional) PJRT runtime.
 pub struct EmbeddingService {
-    runtime: Option<Arc<Runtime>>,
-    jobs: Mutex<HashMap<JobId, JobEntry>>,
-    next_id: std::sync::atomic::AtomicU64,
-    /// Cap on concurrently *running* optimisations (simple admission
-    /// control; kNN stages are already parallel internally).
-    semaphore: Arc<(Mutex<usize>, std::sync::Condvar)>,
-    max_concurrent: usize,
-    /// Shared similarity cache: repeated jobs over the same dataset and
-    /// kNN/perplexity parameters skip straight to optimisation.
-    sim_cache: Arc<SimilarityCache>,
+    inner: Arc<ServiceInner>,
+    next_id: AtomicU64,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl EmbeddingService {
     pub fn new(runtime: Option<Arc<Runtime>>, max_concurrent: usize) -> Self {
-        Self {
+        let inner = Arc::new(ServiceInner {
             runtime,
             jobs: Mutex::new(HashMap::new()),
-            next_id: std::sync::atomic::AtomicU64::new(1),
-            semaphore: Arc::new((Mutex::new(0), std::sync::Condvar::new())),
-            max_concurrent: max_concurrent.max(1),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
             sim_cache: Arc::new(SimilarityCache::new(SIM_CACHE_CAPACITY)),
-        }
+        });
+        let workers = (0..max_concurrent.max(1))
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || worker_loop(inner))
+            })
+            .collect();
+        Self { inner, next_id: AtomicU64::new(1), workers: Mutex::new(workers) }
     }
 
     pub fn has_runtime(&self) -> bool {
-        self.runtime.is_some()
+        self.inner.runtime.is_some()
     }
 
     /// The service-wide similarity cache (stats/tests).
     pub fn sim_cache(&self) -> &SimilarityCache {
-        &self.sim_cache
+        &self.inner.sim_cache
     }
 
     /// Submit a job; returns immediately with its id.
     pub fn submit(&self, spec: JobSpec) -> JobId {
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        let state = JobState::default();
-        let result: Arc<Mutex<Option<anyhow::Result<JobResult>>>> = Arc::new(Mutex::new(None));
-        let rt = self.runtime.clone();
-        let st = state.clone();
-        let res = result.clone();
-        let sem = self.semaphore.clone();
-        let max = self.max_concurrent;
-        let spec2 = spec.clone();
-        let cache = self.sim_cache.clone();
-        let handle = std::thread::spawn(move || {
-            // Admission control.
-            {
-                let (lock, cv) = &*sem;
-                let mut running = lock.lock().unwrap();
-                while *running >= max {
-                    running = cv.wait(running).unwrap();
-                }
-                *running += 1;
-            }
-            let out = run_pipeline_cached(&spec2, rt, &st, Some(&cache));
-            if let Err(e) = &out {
-                st.set_phase(JobPhase::Failed(format!("{e:#}")));
-            }
-            *res.lock().unwrap() = Some(out);
-            let (lock, cv) = &*sem;
-            *lock.lock().unwrap() -= 1;
-            cv.notify_one();
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let task = JobTask {
+            spec: spec.clone(),
+            labels: Vec::new(),
+            timings: StageTimings::default(),
+            session: None,
+            auto: AutoStopTracker::new(spec.auto_stop, spec.params.exaggeration_iters),
+            iters_run: 0,
+            last_kl: f64::NAN,
+            last_snapshot: None,
+        };
+        let entry = Arc::new(JobEntry {
+            spec: spec.clone(),
+            state: JobState::default(),
+            task: Mutex::new(Some(task)),
+            result: Mutex::new(None),
+            done_cv: Condvar::new(),
         });
-        self.jobs
-            .lock()
-            .unwrap()
-            .insert(id, JobEntry { state, handle: Some(handle), result, spec });
+        self.inner.jobs.lock().unwrap().insert(id, entry);
+        self.inner.enqueue(id);
         id
     }
 
+    fn entry(&self, id: JobId) -> Option<Arc<JobEntry>> {
+        self.inner.jobs.lock().unwrap().get(&id).cloned()
+    }
+
     pub fn phase(&self, id: JobId) -> Option<JobPhase> {
-        self.jobs.lock().unwrap().get(&id).map(|j| j.state.phase())
+        self.entry(id).map(|e| e.state.phase())
     }
 
     pub fn spec(&self, id: JobId) -> Option<JobSpec> {
-        self.jobs.lock().unwrap().get(&id).map(|j| j.spec.clone())
+        self.entry(id).map(|e| e.spec.clone())
     }
 
     pub fn latest_snapshot(&self, id: JobId) -> Option<Snapshot> {
-        self.jobs.lock().unwrap().get(&id).and_then(|j| j.state.latest_snapshot())
+        self.entry(id).and_then(|e| e.state.latest_snapshot())
     }
 
     /// Subscribe to a job's snapshot stream.
     pub fn subscribe(&self, id: JobId) -> Option<std::sync::mpsc::Receiver<Snapshot>> {
-        self.jobs.lock().unwrap().get(&id).map(|j| j.state.snapshots.subscribe())
+        self.entry(id).map(|e| e.state.snapshots.subscribe())
     }
 
-    /// Request user-driven early termination.
+    /// Request user-driven early termination. Also wakes a paused job so
+    /// it can finalise.
     pub fn stop(&self, id: JobId) -> bool {
-        if let Some(j) = self.jobs.lock().unwrap().get(&id) {
-            j.state.request_stop();
-            true
-        } else {
-            false
+        let Some(e) = self.entry(id) else {
+            return false;
+        };
+        e.state.request_stop();
+        self.inner.enqueue(id);
+        true
+    }
+
+    /// Park the job at its next step boundary (no-op once terminal).
+    /// The session — optimiser state, engine caches, device tensors —
+    /// stays alive; `resume` picks up exactly where it stopped.
+    pub fn pause(&self, id: JobId) -> bool {
+        match self.entry(id) {
+            Some(e) if !e.state.phase().is_terminal() => {
+                e.state.request_pause();
+                true
+            }
+            _ => false,
         }
     }
 
-    /// Block until the job finishes; returns its result.
-    pub fn wait(&self, id: JobId) -> anyhow::Result<JobResult> {
-        let handle = {
-            let mut jobs = self.jobs.lock().unwrap();
-            let j = jobs.get_mut(&id).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
-            j.handle.take()
-        };
-        if let Some(h) = handle {
-            h.join().map_err(|_| anyhow::anyhow!("job thread panicked"))?;
+    /// Re-enter a paused job into the scheduler.
+    pub fn resume(&self, id: JobId) -> bool {
+        match self.entry(id) {
+            Some(e) if !e.state.phase().is_terminal() => {
+                e.state.clear_pause();
+                self.inner.enqueue(id);
+                true
+            }
+            _ => false,
         }
-        let jobs = self.jobs.lock().unwrap();
-        let j = jobs.get(&id).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
-        let mut slot = j.result.lock().unwrap();
-        slot.take().ok_or_else(|| anyhow::anyhow!("job {id} result already taken"))?
+    }
+
+    /// Queue a live hyperparameter update; the scheduler applies it to
+    /// the session at the next step boundary.
+    pub fn update(&self, id: JobId, update: ParamUpdate) -> bool {
+        match self.entry(id) {
+            Some(e) if !e.state.phase().is_terminal() => {
+                e.state.push_update(update);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Block until the job finishes; returns (a clone of) its result.
+    pub fn wait(&self, id: JobId) -> anyhow::Result<JobResult> {
+        let entry = self.entry(id).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
+        let mut slot = entry.result.lock().unwrap();
+        while slot.is_none() {
+            slot = entry.done_cv.wait(slot).unwrap();
+        }
+        match slot.as_ref().unwrap() {
+            Ok(res) => Ok(res.clone()),
+            Err(msg) => Err(anyhow::anyhow!("{msg}")),
+        }
     }
 
     /// All known job ids with their phases.
     pub fn list(&self) -> Vec<(JobId, JobPhase)> {
-        let mut v: Vec<_> =
-            self.jobs.lock().unwrap().iter().map(|(id, j)| (*id, j.state.phase())).collect();
+        let mut v: Vec<_> = self
+            .inner
+            .jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, e)| (*id, e.state.phase()))
+            .collect();
         v.sort_by_key(|(id, _)| *id);
         v
     }
+}
+
+impl Drop for EmbeddingService {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<ServiceInner>) {
+    loop {
+        // Pop the next ready job (or exit on shutdown).
+        let id = {
+            let mut queue = inner.queue.lock().unwrap();
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = queue.pop_front() {
+                    break id;
+                }
+                queue = inner.queue_cv.wait(queue).unwrap();
+            }
+        };
+        let Some(entry) = inner.jobs.lock().unwrap().get(&id).cloned() else {
+            continue;
+        };
+        // Claim the task. None ⇒ another worker is driving it right now
+        // (stale queue entry) or it already finished — either way, skip.
+        let Some(mut task) = entry.task.lock().unwrap().take() else {
+            continue;
+        };
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_slice(&inner, &entry, &mut task)
+        }))
+        .unwrap_or_else(|_| {
+            let msg = "job worker panicked".to_string();
+            entry.state.set_phase(JobPhase::Failed(msg.clone()));
+            *entry.result.lock().unwrap() = Some(Err(msg));
+            entry.done_cv.notify_all();
+            SliceOutcome::Finished
+        });
+        match outcome {
+            SliceOutcome::Requeue => {
+                *entry.task.lock().unwrap() = Some(task);
+                inner.enqueue(id);
+            }
+            SliceOutcome::Park => {
+                *entry.task.lock().unwrap() = Some(task);
+                // A resume/stop that raced with the park may have enqueued
+                // the id while we still held the task (that pop was
+                // skipped) — re-enqueue so the job is not stranded.
+                if !entry.state.pause_requested() || entry.state.stop_requested() {
+                    inner.enqueue(id);
+                }
+            }
+            SliceOutcome::Finished => {
+                // Task dropped: session scratch and device tensors freed.
+            }
+        }
+    }
+}
+
+/// One scheduling slice: prepare if needed, apply control, run a step
+/// quantum, publish a live snapshot.
+fn run_slice(inner: &ServiceInner, entry: &JobEntry, task: &mut JobTask) -> SliceOutcome {
+    // Lazily run the similarity stage + session begin on first claim.
+    if task.session.is_none() {
+        if entry.state.stop_requested() {
+            return finalize(entry, task, true);
+        }
+        if entry.state.pause_requested() {
+            let total = task.spec.params.iters;
+            entry.state.set_phase(JobPhase::Paused { iter: 0, total });
+            return SliceOutcome::Park;
+        }
+        let prepared = pipeline::prepare_similarities(
+            &task.spec,
+            &entry.state,
+            Some(&inner.sim_cache),
+            &mut task.timings,
+        )
+        .and_then(|prep| {
+            let session = pipeline::begin_session(&task.spec, prep.p, inner.runtime.clone())?;
+            Ok((prep.labels, session))
+        });
+        match prepared {
+            Ok((labels, session)) => {
+                task.labels = labels;
+                task.session = Some(session);
+            }
+            Err(e) => return finalize_err(entry, format!("{e:#}")),
+        }
+    }
+
+    // Live re-parameterisation at the step boundary.
+    if let Some(update) = entry.state.take_update() {
+        let session = task.session.as_mut().expect("session prepared above");
+        let mut params = session.params().clone();
+        update.apply(&mut params);
+        session.set_params(params);
+    }
+
+    if entry.state.stop_requested() {
+        return finalize(entry, task, true);
+    }
+
+    // Split the task borrow so the step loop can write the bookkeeping
+    // fields while holding the session.
+    let (done, auto_stopped, cur_iter, total) = {
+        let JobTask { session, auto, iters_run, last_kl, timings, last_snapshot, .. } = task;
+        let session = session.as_mut().expect("session prepared above");
+        let total = session.params().iters;
+
+        if entry.state.pause_requested() {
+            entry.state.set_phase(JobPhase::Paused { iter: *iters_run, total });
+            publish_snapshot(entry, session.as_ref(), last_snapshot, true);
+            return SliceOutcome::Park;
+        }
+
+        // The quantum: up to MAX_QUANTUM_STEPS steps or QUANTUM_MS.
+        // (A session may already be done — e.g. an update lowered
+        // `iters` below the current iteration — and falls straight
+        // through to finalisation.)
+        let t = std::time::Instant::now();
+        let mut auto_stopped = false;
+        let mut steps = 0usize;
+        while !session.is_done() {
+            match session.step() {
+                Ok(stats) => {
+                    *iters_run = stats.iter + 1;
+                    *last_kl = stats.kl_est;
+                    if auto.should_stop(stats.iter, stats.kl_est) {
+                        auto_stopped = true;
+                        break;
+                    }
+                }
+                Err(e) => {
+                    timings.optimize_s += t.elapsed().as_secs_f64();
+                    return finalize_err(entry, format!("{e:#}"));
+                }
+            }
+            steps += 1;
+            if entry.state.stop_requested() || entry.state.pause_requested() {
+                break;
+            }
+            if steps >= MAX_QUANTUM_STEPS || t.elapsed().as_millis() as u64 >= QUANTUM_MS {
+                break;
+            }
+        }
+        timings.optimize_s += t.elapsed().as_secs_f64();
+        // Boundary states (done/stop/pause) always publish so clients
+        // see the final positions; mid-run quanta publish immediately
+        // when subscribers are streaming and throttle otherwise.
+        let at_boundary = session.is_done()
+            || auto_stopped
+            || entry.state.stop_requested()
+            || entry.state.pause_requested();
+        publish_snapshot(entry, session.as_ref(), last_snapshot, at_boundary);
+        (session.is_done(), auto_stopped, *iters_run, total)
+    };
+
+    if done || auto_stopped || entry.state.stop_requested() {
+        let stopped = (auto_stopped || entry.state.stop_requested()) && !done;
+        return finalize(entry, task, stopped);
+    }
+    if entry.state.pause_requested() {
+        entry.state.set_phase(JobPhase::Paused { iter: cur_iter, total });
+        return SliceOutcome::Park;
+    }
+    entry.state.set_phase(JobPhase::Optimizing { iter: cur_iter, total });
+    SliceOutcome::Requeue
+}
+
+/// Publish a live snapshot straight from the session state (no
+/// `snapshot_every` gating — the scheduler's quantum is the cadence).
+/// The positions copy is the cost, so without an active subscriber the
+/// `latest` slot is only refreshed every [`IDLE_SNAPSHOT_MS`]; `force`
+/// (boundaries: pause, stop, done) always publishes.
+fn publish_snapshot(
+    entry: &JobEntry,
+    session: &dyn EmbeddingSession,
+    last: &mut Option<std::time::Instant>,
+    force: bool,
+) {
+    let Some(stats) = session.last_stats() else {
+        return;
+    };
+    let due = force
+        || entry.state.snapshots.subscriber_count() > 0
+        || last.map_or(true, |t| t.elapsed().as_millis() as u64 >= IDLE_SNAPSHOT_MS);
+    if !due {
+        return;
+    }
+    *last = Some(std::time::Instant::now());
+    entry.state.publish(Snapshot {
+        iter: stats.iter,
+        kl_est: stats.kl_est,
+        elapsed_s: stats.elapsed_s,
+        positions: Arc::new(session.positions().to_vec()),
+    });
+}
+
+fn finalize(entry: &JobEntry, task: &mut JobTask, stopped: bool) -> SliceOutcome {
+    let embedding = task
+        .session
+        .as_ref()
+        .map(|s| s.positions().to_vec())
+        .unwrap_or_default();
+    if let Some(session) = task.session.as_ref() {
+        publish_snapshot(entry, session.as_ref(), &mut task.last_snapshot, true);
+    }
+    let result = JobResult {
+        spec: task.spec.clone(),
+        embedding,
+        labels: std::mem::take(&mut task.labels),
+        timings: task.timings.clone(),
+        kl_est: task.last_kl,
+        iters_run: task.iters_run,
+        stopped_early: stopped,
+    };
+    entry
+        .state
+        .set_phase(if stopped { JobPhase::Stopped } else { JobPhase::Done });
+    *entry.result.lock().unwrap() = Some(Ok(result));
+    entry.done_cv.notify_all();
+    SliceOutcome::Finished
+}
+
+fn finalize_err(entry: &JobEntry, msg: String) -> SliceOutcome {
+    entry.state.set_phase(JobPhase::Failed(msg.clone()));
+    *entry.result.lock().unwrap() = Some(Err(msg));
+    entry.done_cv.notify_all();
+    SliceOutcome::Finished
 }
 
 #[cfg(test)]
@@ -193,11 +541,98 @@ mod tests {
     }
 
     #[test]
+    fn more_jobs_than_workers_interleave_not_starve() {
+        // One worker, three long jobs: round-robin quanta mean every job
+        // must make progress long before any of them completes.
+        let svc = EmbeddingService::new(None, 1);
+        let ids: Vec<_> = (0..3).map(|_| svc.submit(tiny_spec(100_000))).collect();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let progressed = ids
+                .iter()
+                .filter(|&&id| {
+                    matches!(svc.phase(id), Some(JobPhase::Optimizing { iter, .. }) if iter > 0)
+                        || svc.latest_snapshot(id).is_some()
+                })
+                .count();
+            if progressed == ids.len() {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "jobs failed to interleave: phases {:?}",
+                svc.list()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        for &id in &ids {
+            assert!(svc.stop(id));
+        }
+        for &id in &ids {
+            let res = svc.wait(id).unwrap();
+            assert!(res.stopped_early);
+        }
+    }
+
+    #[test]
     fn stop_mid_flight() {
         let svc = EmbeddingService::new(None, 1);
         let id = svc.submit(tiny_spec(5000));
         let rx = svc.subscribe(id).unwrap();
         let _ = rx.recv(); // first snapshot = job is running
+        assert!(svc.stop(id));
+        let res = svc.wait(id).unwrap();
+        assert!(res.stopped_early);
+        assert_eq!(svc.phase(id), Some(JobPhase::Stopped));
+    }
+
+    #[test]
+    fn pause_parks_and_resume_finishes() {
+        let svc = EmbeddingService::new(None, 1);
+        let id = svc.submit(tiny_spec(100_000));
+        let rx = svc.subscribe(id).unwrap();
+        let first = rx.recv().expect("job is stepping");
+        assert!(svc.pause(id));
+        // Wait until the scheduler actually parks it.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let paused_iter = loop {
+            if let Some(JobPhase::Paused { iter, .. }) = svc.phase(id) {
+                break iter;
+            }
+            assert!(std::time::Instant::now() < deadline, "never parked");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert!(paused_iter >= first.iter, "pause can only move forward");
+        // Parked: no further progress.
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        assert!(
+            matches!(svc.phase(id), Some(JobPhase::Paused { iter, .. }) if iter == paused_iter),
+            "paused job must not advance"
+        );
+        // Cut the job short at the next boundary, then resume.
+        assert!(svc.update(
+            id,
+            ParamUpdate { iters: Some(paused_iter.max(1)), ..Default::default() }
+        ));
+        assert!(svc.resume(id));
+        let res = svc.wait(id).unwrap();
+        assert!(!res.stopped_early, "shortened via update, not stopped");
+        assert!(res.iters_run <= paused_iter.max(1) + MAX_QUANTUM_STEPS);
+        assert_eq!(svc.phase(id), Some(JobPhase::Done));
+    }
+
+    #[test]
+    fn stop_finalises_a_paused_job() {
+        let svc = EmbeddingService::new(None, 1);
+        let id = svc.submit(tiny_spec(100_000));
+        let rx = svc.subscribe(id).unwrap();
+        let _ = rx.recv();
+        assert!(svc.pause(id));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !matches!(svc.phase(id), Some(JobPhase::Paused { .. })) {
+            assert!(std::time::Instant::now() < deadline, "never parked");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
         assert!(svc.stop(id));
         let res = svc.wait(id).unwrap();
         assert!(res.stopped_early);
@@ -219,6 +654,22 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_identical_submits_run_one_knn() {
+        // Two identical jobs racing through two workers: whether they
+        // overlap in the similarity stage (coalesced wait) or not (plain
+        // ready hit), exactly one kNN+P computation may run.
+        let svc = EmbeddingService::new(None, 2);
+        let a = svc.submit(tiny_spec(15));
+        let b = svc.submit(tiny_spec(15));
+        let ra = svc.wait(a).unwrap();
+        let rb = svc.wait(b).unwrap();
+        assert_eq!(svc.sim_cache().computes(), 1, "second submit must reuse the first's work");
+        assert_eq!(svc.sim_cache().stats(), (1, 1));
+        assert!(ra.timings.sim_cache_hit != rb.timings.sim_cache_hit, "one leader, one hit");
+        assert_eq!(ra.embedding, rb.embedding);
+    }
+
+    #[test]
     fn failed_job_reports_phase() {
         let svc = EmbeddingService::new(None, 1);
         let mut spec = tiny_spec(5);
@@ -233,5 +684,8 @@ mod tests {
         let svc = EmbeddingService::new(None, 1);
         assert!(svc.phase(999).is_none());
         assert!(!svc.stop(999));
+        assert!(!svc.pause(999));
+        assert!(!svc.resume(999));
+        assert!(!svc.update(999, ParamUpdate::default()));
     }
 }

@@ -8,13 +8,22 @@
 //! row drops to a dataset fingerprint.
 //!
 //! The cache is a small LRU keyed by [`SimKey`] holding `Arc<SparseP>`
-//! (jobs share the matrix; it is immutable after construction). One per
-//! [`super::EmbeddingService`]; pipelines run outside a service pass
-//! `None` and behave exactly as before.
+//! (jobs share the matrix; it is immutable after construction), with
+//! **in-flight coalescing**: [`SimilarityCache::get_or_compute`] publishes
+//! a *pending* entry before the leader starts computing, so concurrent
+//! identical submissions block on the leader's result instead of all
+//! missing and recomputing the same kNN graph. Exactly one computation
+//! runs per distinct key no matter how many jobs race on it (the
+//! `computes` counter is the proof the tests pin). Pending entries are
+//! never evicted; if the leader fails, waiters wake, one of them becomes
+//! the new leader, and the rest re-wait.
+//!
+//! One per [`super::EmbeddingService`]; pipelines run outside a service
+//! pass `None` and behave exactly as before.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::hd::SparseP;
 
@@ -36,18 +45,34 @@ pub struct SimKey {
     pub seed: u64,
 }
 
-struct Entry {
-    p: Arc<SparseP>,
-    last_used: u64,
+/// Rendezvous for one in-flight computation.
+struct Pending {
+    state: Mutex<PendingState>,
+    cv: Condvar,
 }
 
-/// Bounded LRU map from [`SimKey`] to a shared P matrix.
+enum PendingState {
+    Computing,
+    Ready(Arc<SparseP>),
+    Failed,
+}
+
+enum Slot {
+    Ready { p: Arc<SparseP>, last_used: u64 },
+    Pending(Arc<Pending>),
+}
+
+/// Bounded LRU map from [`SimKey`] to a shared P matrix, with in-flight
+/// coalescing of concurrent identical computations.
 pub struct SimilarityCache {
-    map: Mutex<HashMap<SimKey, Entry>>,
+    map: Mutex<HashMap<SimKey, Slot>>,
     capacity: usize,
     tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Similarity computations actually run through `get_or_compute`
+    /// (coalesced waiters do not count — that is the point).
+    computes: AtomicU64,
 }
 
 impl SimilarityCache {
@@ -58,45 +83,189 @@ impl SimilarityCache {
             tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            computes: AtomicU64::new(0),
+        }
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Evict least-recently-used *ready* entries down to capacity
+    /// (pending entries are in flight and never evicted).
+    fn evict_over_capacity(map: &mut HashMap<SimKey, Slot>, capacity: usize) {
+        loop {
+            let ready = map
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready { last_used, .. } => Some((*k, *last_used)),
+                    Slot::Pending(_) => None,
+                })
+                .collect::<Vec<_>>();
+            if ready.len() <= capacity {
+                return;
+            }
+            let oldest = ready.iter().min_by_key(|(_, t)| *t).map(|(k, _)| *k).unwrap();
+            map.remove(&oldest);
         }
     }
 
     /// Look up a P matrix; counts a hit or miss and refreshes recency.
+    /// A pending (in-flight) entry counts as a miss and returns `None`
+    /// without waiting — use [`Self::get_or_compute`] to coalesce.
     pub fn get(&self, key: &SimKey) -> Option<Arc<SparseP>> {
-        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let tick = self.next_tick();
         let mut map = self.map.lock().unwrap();
         match map.get_mut(key) {
-            Some(e) => {
-                e.last_used = tick;
+            Some(Slot::Ready { p, last_used }) => {
+                *last_used = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(e.p.clone())
+                Some(p.clone())
             }
-            None => {
+            _ => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
-    /// Insert (or refresh) an entry, evicting the least-recently-used
-    /// one when over capacity.
+    /// Insert (or refresh) a ready entry, evicting the least-recently-
+    /// used one when over capacity.
     pub fn insert(&self, key: SimKey, p: Arc<SparseP>) {
-        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let tick = self.next_tick();
         let mut map = self.map.lock().unwrap();
-        map.insert(key, Entry { p, last_used: tick });
-        while map.len() > self.capacity {
-            let oldest = map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-                .expect("non-empty map over capacity");
-            map.remove(&oldest);
+        map.insert(key, Slot::Ready { p, last_used: tick });
+        Self::evict_over_capacity(&mut map, self.capacity);
+    }
+
+    /// The coalescing entry point: returns `(P, was_hit)`.
+    ///
+    /// * Ready entry → hit, immediately.
+    /// * Nothing → this caller is the *leader*: a pending entry is
+    ///   published, `compute` runs (outside the map lock), the result is
+    ///   installed and every waiter woken. Counts one miss + one compute.
+    /// * Pending entry → the caller blocks until the leader finishes and
+    ///   shares its result (counts a *hit*: no computation ran for it).
+    ///   If the leader failed, one waiter takes over as the new leader.
+    pub fn get_or_compute(
+        &self,
+        key: &SimKey,
+        compute: impl FnOnce() -> anyhow::Result<Arc<SparseP>>,
+    ) -> anyhow::Result<(Arc<SparseP>, bool)> {
+        let mut compute = Some(compute);
+        loop {
+            enum Action {
+                Hit(Arc<SparseP>),
+                Lead(Arc<Pending>),
+                Wait(Arc<Pending>),
+            }
+            let action = {
+                let tick = self.next_tick();
+                let mut map = self.map.lock().unwrap();
+                match map.get_mut(key) {
+                    Some(Slot::Ready { p, last_used }) => {
+                        *last_used = tick;
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        Action::Hit(p.clone())
+                    }
+                    Some(Slot::Pending(pending)) => Action::Wait(pending.clone()),
+                    None => {
+                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        let pending = Arc::new(Pending {
+                            state: Mutex::new(PendingState::Computing),
+                            cv: Condvar::new(),
+                        });
+                        map.insert(*key, Slot::Pending(pending.clone()));
+                        Action::Lead(pending)
+                    }
+                }
+            };
+            match action {
+                Action::Hit(p) => return Ok((p, true)),
+                Action::Lead(pending) => {
+                    let f = compute.take().expect("a caller leads at most once");
+                    self.computes.fetch_add(1, Ordering::Relaxed);
+                    // Run the computation with no cache lock held; on
+                    // success promote the entry, on failure (or panic —
+                    // the guard below) remove it so waiters can retry.
+                    struct Cleanup<'a> {
+                        cache: &'a SimilarityCache,
+                        key: SimKey,
+                        pending: Arc<Pending>,
+                        armed: bool,
+                    }
+                    impl Drop for Cleanup<'_> {
+                        fn drop(&mut self) {
+                            if !self.armed {
+                                return;
+                            }
+                            let mut map = self.cache.map.lock().unwrap();
+                            if let Some(Slot::Pending(cur)) = map.get(&self.key) {
+                                if Arc::ptr_eq(cur, &self.pending) {
+                                    map.remove(&self.key);
+                                }
+                            }
+                            drop(map);
+                            *self.pending.state.lock().unwrap() = PendingState::Failed;
+                            self.pending.cv.notify_all();
+                        }
+                    }
+                    let mut guard =
+                        Cleanup { cache: self, key: *key, pending: pending.clone(), armed: true };
+                    let result = f();
+                    match result {
+                        Ok(p) => {
+                            guard.armed = false;
+                            let tick = self.next_tick();
+                            {
+                                let mut map = self.map.lock().unwrap();
+                                map.insert(*key, Slot::Ready { p: p.clone(), last_used: tick });
+                                Self::evict_over_capacity(&mut map, self.capacity);
+                            }
+                            *pending.state.lock().unwrap() = PendingState::Ready(p.clone());
+                            pending.cv.notify_all();
+                            return Ok((p, false));
+                        }
+                        Err(e) => {
+                            // Cleanup runs via the guard.
+                            drop(guard);
+                            return Err(e);
+                        }
+                    }
+                }
+                Action::Wait(pending) => {
+                    let mut state = pending.state.lock().unwrap();
+                    let outcome = loop {
+                        let resolved = match &*state {
+                            PendingState::Computing => None,
+                            PendingState::Ready(p) => Some(Some(p.clone())),
+                            PendingState::Failed => Some(None),
+                        };
+                        match resolved {
+                            None => state = pending.cv.wait(state).unwrap(),
+                            Some(out) => break out,
+                        }
+                    };
+                    drop(state);
+                    if let Some(p) = outcome {
+                        // Coalesced: the leader's work served us.
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok((p, true));
+                    }
+                    // Leader failed — loop: retry as a potential leader.
+                }
+            }
         }
     }
 
     /// `(hits, misses)` since construction.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Similarity computations actually executed via `get_or_compute`.
+    pub fn computes(&self) -> u64 {
+        self.computes.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -166,5 +335,115 @@ mod tests {
         assert!(c.get(&key(1)).is_some());
         assert!(c.get(&key(2)).is_none(), "LRU entry must be evicted");
         assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn get_or_compute_sequential_hit_miss() {
+        let c = SimilarityCache::new(4);
+        let (a, hit) = c.get_or_compute(&key(1), || Ok(p(1.0))).unwrap();
+        assert!(!hit, "first caller leads");
+        let (b, hit) = c
+            .get_or_compute(&key(1), || panic!("must not recompute"))
+            .unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b), "both callers share one matrix");
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.computes(), 1);
+    }
+
+    #[test]
+    fn concurrent_identical_submissions_coalesce_to_one_compute() {
+        // Deterministic interleaving: the leader signals from inside its
+        // compute closure, the waiter only starts once the pending entry
+        // is definitely published, then the leader finishes.
+        let c = Arc::new(SimilarityCache::new(4));
+        let in_compute = Arc::new((Mutex::new(false), Condvar::new()));
+        let release = Arc::new((Mutex::new(false), Condvar::new()));
+
+        let leader = {
+            let c = c.clone();
+            let in_compute = in_compute.clone();
+            let release = release.clone();
+            std::thread::spawn(move || {
+                c.get_or_compute(&key(7), || {
+                    // Announce we are computing (pending entry is live).
+                    *in_compute.0.lock().unwrap() = true;
+                    in_compute.1.notify_all();
+                    // Block until the waiter is in the cache too.
+                    let mut go = release.0.lock().unwrap();
+                    while !*go {
+                        go = release.1.wait(go).unwrap();
+                    }
+                    Ok(p(7.0))
+                })
+                .unwrap()
+            })
+        };
+        {
+            let mut started = in_compute.0.lock().unwrap();
+            while !*started {
+                started = in_compute.1.wait(started).unwrap();
+            }
+        }
+        let waiter = {
+            let c = c.clone();
+            let release = release.clone();
+            std::thread::spawn(move || {
+                // Give the waiter a moment to actually block, then let
+                // the leader finish. (Ordering is already guaranteed by
+                // the pending entry; the sleep only widens the window in
+                // which a broken implementation would double-compute.)
+                let releaser = std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                    *release.0.lock().unwrap() = true;
+                    release.1.notify_all();
+                });
+                let out = c
+                    .get_or_compute(&key(7), || panic!("waiter must never compute"))
+                    .unwrap();
+                releaser.join().unwrap();
+                out
+            })
+        };
+        let (pl, lead_hit) = leader.join().unwrap();
+        let (pw, wait_hit) = waiter.join().unwrap();
+        assert!(!lead_hit, "leader missed");
+        assert!(wait_hit, "waiter coalesced into a hit");
+        assert!(Arc::ptr_eq(&pl, &pw));
+        assert_eq!(c.computes(), 1, "exactly one computation ran");
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn failed_leader_lets_a_waiter_take_over() {
+        let c = Arc::new(SimilarityCache::new(4));
+        let failed = c.get_or_compute(&key(3), || anyhow::bail!("knn exploded"));
+        assert!(failed.is_err());
+        assert_eq!(c.len(), 0, "failed computation leaves no entry");
+        // The key is free again: the next caller leads and succeeds.
+        let (got, hit) = c.get_or_compute(&key(3), || Ok(p(3.0))).unwrap();
+        assert!(!hit);
+        assert_eq!(got.perplexity, 3.0);
+        assert_eq!(c.computes(), 2);
+    }
+
+    #[test]
+    fn pending_entries_survive_eviction_pressure() {
+        let c = SimilarityCache::new(1);
+        // Manually wedge a pending entry, then flood with ready inserts.
+        let pending = Arc::new(Pending {
+            state: Mutex::new(PendingState::Computing),
+            cv: Condvar::new(),
+        });
+        c.map.lock().unwrap().insert(key(9), Slot::Pending(pending));
+        c.insert(key(1), p(1.0));
+        c.insert(key(2), p(2.0));
+        let map = c.map.lock().unwrap();
+        assert!(
+            matches!(map.get(&key(9)), Some(Slot::Pending(_))),
+            "in-flight entry must never be evicted"
+        );
+        assert_eq!(map.len(), 2, "one ready + the pending");
     }
 }

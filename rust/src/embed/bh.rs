@@ -2,28 +2,53 @@
 //! (DESIGN.md S12). Repulsion via the quadtree at opening angle θ
 //! (θ = 0.5 default speed/accuracy trade-off, θ = 0.1 high quality).
 
-use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams, Repulsion};
+use std::sync::Arc;
+
+use super::common::{EmbeddingSession, Engine, GdSession, OptParams, Repulsion};
 use super::quadtree::QuadTree;
 use crate::hd::SparseP;
 use crate::util::parallel;
 
-/// Quadtree-approximated repulsion (rebuilds the tree every iteration, as
-/// BH-SNE must — point positions change each step).
+const CHUNK: usize = 64;
+
+/// Quadtree-approximated repulsion. The tree is rebuilt every iteration
+/// (BH-SNE must — point positions change each step) but its node storage
+/// is session-owned scratch, reused across steps; each worker chunk also
+/// reuses one traversal stack across its queries. The Z partials land in
+/// chunk-indexed slots and combine in chunk order — deterministic
+/// regardless of thread scheduling, so a checkpointed session replays
+/// identically on any worker.
 pub struct BhRepulsion {
     pub theta: f32,
+    /// Reused tree storage (None until the first step).
+    tree: Option<QuadTree>,
+}
+
+impl BhRepulsion {
+    pub fn new(theta: f32) -> Self {
+        Self { theta, tree: None }
+    }
 }
 
 impl Repulsion for BhRepulsion {
     fn compute(&mut self, y: &[f32], num: &mut [f32]) -> f64 {
         let n = y.len() / 2;
-        let tree = QuadTree::build(y);
-        let z_total = std::sync::Mutex::new(0.0f64);
+        let theta = self.theta;
+        let tree = self.tree.get_or_insert_with(QuadTree::empty);
+        tree.rebuild(y);
+        let tree = &*tree;
+        let nchunks = n.div_ceil(CHUNK).max(1);
+        let mut z_parts = vec![0.0f64; nchunks];
         {
+            let parts = parallel::SyncSlice::new(&mut z_parts);
             let slots = parallel::SyncSlice::new(num);
-            parallel::par_chunks(n, 64, |range| {
+            parallel::par_chunks(n, CHUNK, |range| {
+                let ci = range.start / CHUNK;
                 let mut local_z = 0.0f64;
+                let mut stack: Vec<u32> = Vec::with_capacity(64);
                 for i in range {
-                    let (fx, fy, z) = tree.accumulate(y[2 * i], y[2 * i + 1], self.theta);
+                    let (fx, fy, z) =
+                        tree.accumulate_with(y[2 * i], y[2 * i + 1], theta, &mut stack);
                     // z includes the query's own t(0)=1 (Eq. 13's S−1).
                     local_z += z - 1.0;
                     unsafe {
@@ -31,10 +56,12 @@ impl Repulsion for BhRepulsion {
                         *slots.get_mut(2 * i + 1) = fy as f32;
                     }
                 }
-                *z_total.lock().unwrap() += local_z;
+                unsafe {
+                    *parts.get_mut(ci) = local_z;
+                }
             });
         }
-        z_total.into_inner().unwrap()
+        z_parts.iter().sum()
     }
 }
 
@@ -67,22 +94,41 @@ impl Engine for BarnesHut {
         self.name
     }
 
-    fn run(
+    fn begin(
         &mut self,
-        p: &SparseP,
+        p: Arc<SparseP>,
         params: &OptParams,
-        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-    ) -> anyhow::Result<Vec<f32>> {
-        run_gd_loop(&mut BhRepulsion { theta: self.theta }, p, params, observer)
+    ) -> anyhow::Result<Box<dyn EmbeddingSession>> {
+        Ok(GdSession::boxed(self.name, p, params, Box::new(BhRepulsion::new(self.theta))))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::embed::common::{Control, IterStats};
     use crate::embed::exact::ExactRepulsion;
     use crate::hd::sparse::Csr;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn reused_tree_scratch_matches_fresh_build() {
+        // A session reuses the quadtree storage across steps; rebuilding
+        // into warm scratch must be bit-identical to a cold build, and
+        // the chunk-indexed Z must not depend on scheduling.
+        let mut rng = Rng::new(11);
+        let n = 400;
+        let mut rep = BhRepulsion::new(0.5);
+        let mut warm = vec![0.0f32; 2 * n];
+        let mut cold = vec![0.0f32; 2 * n];
+        for round in 0..3 {
+            let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+            let zw = rep.compute(&y, &mut warm);
+            let zc = BhRepulsion::new(0.5).compute(&y, &mut cold);
+            assert_eq!(zw, zc, "round {round}");
+            assert_eq!(warm, cold, "round {round}");
+        }
+    }
 
     #[test]
     fn bh_theta0_matches_exact_repulsion() {
@@ -91,7 +137,7 @@ mod tests {
         let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
         let mut a = vec![0.0f32; 2 * n];
         let mut b = vec![0.0f32; 2 * n];
-        let za = BhRepulsion { theta: 0.0 }.compute(&y, &mut a);
+        let za = BhRepulsion::new(0.0).compute(&y, &mut a);
         let zb = ExactRepulsion.compute(&y, &mut b);
         assert!((za - zb).abs() / zb < 1e-5, "Z: {za} vs {zb}");
         for i in 0..2 * n {
@@ -106,7 +152,7 @@ mod tests {
         let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 3.0)).collect();
         let mut a = vec![0.0f32; 2 * n];
         let mut b = vec![0.0f32; 2 * n];
-        let za = BhRepulsion { theta: 0.5 }.compute(&y, &mut a);
+        let za = BhRepulsion::new(0.5).compute(&y, &mut a);
         let zb = ExactRepulsion.compute(&y, &mut b);
         assert!((za - zb).abs() / zb < 0.02, "Z rel err: {}", (za - zb).abs() / zb);
     }

@@ -1,7 +1,24 @@
 //! Shared gradient-descent machinery (DESIGN.md S16): the van der Maaten
 //! update rule (gains, momentum), the early-exaggeration and momentum
 //! schedules the paper's evaluation uses, the engine trait, and the
-//! generic optimisation loop every CPU engine runs through.
+//! *stepwise session* machinery every engine runs through.
+//!
+//! The paper's headline is interactive minimisation — watching the
+//! embedding evolve and steering it live (Fig. 1, the A-tSNE lineage).
+//! The unit of optimisation is therefore not a run but a *session*
+//! ([`EmbeddingSession`]): an object owning the optimiser state
+//! ([`GdState`]) plus all engine scratch (force buffers, FFT plans,
+//! quadtrees, device tensors) that advances one iteration per
+//! [`EmbeddingSession::step`] call. Sessions can be paused (just stop
+//! calling `step`), resumed, re-parameterised mid-run
+//! ([`EmbeddingSession::set_params`]), warm-started from an existing
+//! layout ([`EmbeddingSession::warm_start`]) and checkpointed to bytes
+//! ([`Checkpoint`]) — the coordinator's cooperative scheduler time-slices
+//! many such sessions over a small worker pool. [`Engine::run`] survives
+//! as a thin convenience loop over a session ([`run_session`]), so batch
+//! callers and benches are unchanged.
+
+use std::sync::Arc;
 
 use crate::hd::SparseP;
 use crate::util::parallel::{self, SyncSlice};
@@ -80,18 +97,191 @@ pub enum Control {
     Stop,
 }
 
+/// Serialisable optimiser state: everything a session needs to resume an
+/// optimisation exactly where it left off, on this process or another.
+/// The tensors are engine-agnostic (positions, velocity, gains), so a
+/// checkpoint taken from one engine can be restored into any other whose
+/// state length matches — e.g. rough in early iterations on a cheap
+/// engine and hand off to a precise one.
+///
+/// For the device engine the vectors are the *padded* bucket tensors
+/// (restore validates the length either way).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Engine that produced the checkpoint (informational).
+    pub engine: String,
+    /// Next iteration to run (i.e. `iter` steps are already applied).
+    pub iter: usize,
+    /// Active optimisation seconds accumulated so far.
+    pub elapsed_s: f64,
+    pub y: Vec<f32>,
+    pub vel: Vec<f32>,
+    pub gains: Vec<f32>,
+}
+
+const CHECKPOINT_MAGIC: &[u8; 8] = b"GSNECKP1";
+
+impl Checkpoint {
+    /// Compact binary encoding (little-endian; see `from_bytes`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + 12 * self.y.len());
+        out.extend_from_slice(CHECKPOINT_MAGIC);
+        let name = self.engine.as_bytes();
+        out.extend_from_slice(&(name.len() as u64).to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&(self.iter as u64).to_le_bytes());
+        out.extend_from_slice(&self.elapsed_s.to_le_bytes());
+        out.extend_from_slice(&(self.y.len() as u64).to_le_bytes());
+        for v in self.y.iter().chain(&self.vel).chain(&self.gains) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`Self::to_bytes`]; validates magic and lengths.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        struct Cur<'a>(&'a [u8]);
+        impl<'a> Cur<'a> {
+            fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+                anyhow::ensure!(self.0.len() >= n, "checkpoint truncated");
+                let (head, tail) = self.0.split_at(n);
+                self.0 = tail;
+                Ok(head)
+            }
+            fn u64(&mut self) -> anyhow::Result<u64> {
+                Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+            }
+        }
+        let mut c = Cur(bytes);
+        anyhow::ensure!(c.take(8)? == CHECKPOINT_MAGIC, "not a gpgpu-sne checkpoint");
+        let name_len = c.u64()? as usize;
+        anyhow::ensure!(name_len <= 256, "implausible engine-name length {name_len}");
+        let engine = String::from_utf8(c.take(name_len)?.to_vec())?;
+        let iter = c.u64()? as usize;
+        let elapsed_s = f64::from_le_bytes(c.take(8)?.try_into().unwrap());
+        let len = c.u64()? as usize;
+        // Bound before multiplying so a corrupt header cannot overflow
+        // the size arithmetic or drive a huge allocation.
+        anyhow::ensure!(len <= bytes.len() / 4, "implausible state length {len}");
+        anyhow::ensure!(
+            bytes.len() >= 8 + 8 + name_len + 24 + 12 * len,
+            "checkpoint truncated: state length {len}"
+        );
+        let mut f32s = |out: &mut Vec<f32>| -> anyhow::Result<()> {
+            out.reserve(len);
+            for _ in 0..len {
+                out.push(f32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+            }
+            Ok(())
+        };
+        let (mut y, mut vel, mut gains) = (Vec::new(), Vec::new(), Vec::new());
+        f32s(&mut y)?;
+        f32s(&mut vel)?;
+        f32s(&mut gains)?;
+        Ok(Self { engine, iter, elapsed_s, y, vel, gains })
+    }
+}
+
+/// A live, stepwise embedding optimisation: owns the optimiser state and
+/// every piece of engine scratch, and advances one gradient-descent
+/// iteration per `step()`. Pausing is simply not calling `step`; the
+/// session stays valid indefinitely and resumes exactly where it stopped.
+pub trait EmbeddingSession: Send {
+    /// Name of the engine driving this session.
+    fn engine_name(&self) -> &'static str;
+
+    /// Next iteration index (number of steps applied so far).
+    fn iter(&self) -> usize;
+
+    /// True once `iter() >= params().iters` — `step` would error.
+    fn is_done(&self) -> bool {
+        self.iter() >= self.params().iters
+    }
+
+    /// Advance one iteration; returns its statistics. Errors once the
+    /// session is done (extend with `set_params` to keep going).
+    fn step(&mut self) -> anyhow::Result<IterStats>;
+
+    /// Current `(n, 2)` row-major embedding (real points only).
+    fn positions(&self) -> &[f32];
+
+    /// Current optimisation hyperparameters.
+    fn params(&self) -> &OptParams;
+
+    /// Replace the hyperparameters mid-run: eta / exaggeration /
+    /// momentum changes apply from the next step; raising `iters`
+    /// extends a finished session. `seed`/`init_std` have no effect
+    /// after initialisation.
+    fn set_params(&mut self, params: OptParams);
+
+    /// Re-embed from an existing `(n, 2)` layout: positions are
+    /// replaced, velocity and gains reset, and the iteration counter
+    /// rewinds to 0 (set `exaggeration_iters: 0` via [`Self::set_params`]
+    /// first to resume without a second exaggeration phase).
+    fn warm_start(&mut self, y0: &[f32]) -> anyhow::Result<()>;
+
+    /// Snapshot the full optimiser state.
+    fn checkpoint(&self) -> Checkpoint;
+
+    /// Restore a previously captured state (lengths must match this
+    /// session's problem size). The stored hyperparameters are NOT part
+    /// of the checkpoint — the session keeps its own.
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()>;
+
+    /// Stats of the most recent step, if any ran.
+    fn last_stats(&self) -> Option<IterStats>;
+}
+
 /// An embedding optimiser.
 pub trait Engine: Send {
     fn name(&self) -> &'static str;
 
+    /// Start a stepwise optimisation session over `p`. The session owns
+    /// its state and scratch; the engine can begin further independent
+    /// sessions.
+    fn begin(
+        &mut self,
+        p: Arc<SparseP>,
+        params: &OptParams,
+    ) -> anyhow::Result<Box<dyn EmbeddingSession>>;
+
     /// Minimise KL(P||Q); returns the final `(n, 2)` embedding.
     /// The observer (if any) sees every iteration and can stop the run.
+    ///
+    /// This is a convenience loop over [`Engine::begin`] — stepping a
+    /// session to completion is bit-identical (pinned by the
+    /// `session_conformance` suite). It clones `p` once into an `Arc`
+    /// (an O(N·k) copy, orders of magnitude under the optimisation it
+    /// fronts); callers that already hold an `Arc<SparseP>` or run many
+    /// sessions over one P should use [`Engine::begin`] +
+    /// [`run_session`] directly, as the coordinator does.
     fn run(
         &mut self,
         p: &SparseP,
         params: &OptParams,
         observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-    ) -> anyhow::Result<Vec<f32>>;
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut session = self.begin(Arc::new(p.clone()), params)?;
+        run_session(session.as_mut(), observer)
+    }
+}
+
+/// Drive a session to completion (or until the observer stops it) and
+/// return the final embedding — the classic one-shot `Engine::run`
+/// contract, expressed over the stepwise API.
+pub fn run_session(
+    session: &mut dyn EmbeddingSession,
+    mut observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
+) -> anyhow::Result<Vec<f32>> {
+    while !session.is_done() {
+        let stats = session.step()?;
+        if let Some(obs) = observer.as_deref_mut() {
+            if obs(&stats, session.positions()) == Control::Stop {
+                break;
+            }
+        }
+    }
+    Ok(session.positions().to_vec())
 }
 
 /// Gradient-descent state for the CPU engines.
@@ -284,53 +474,167 @@ pub trait Repulsion {
     fn compute(&mut self, y: &[f32], num: &mut [f32]) -> f64;
 }
 
-/// The generic CPU optimisation loop shared by exact/BH/field engines.
+/// The stepwise session shared by every CPU engine (exact, BH, simulated
+/// t-SNE-CUDA, both field engines). Owns the gradient-descent state and
+/// the per-iteration scratch (force buffers plus whatever the repulsion
+/// carries: quadtree storage, FFT plans, cached kernel spectra), so a
+/// paused session resumes with warm caches and zero re-allocation.
 ///
 /// The per-iteration O(N) tail (gradient combine, gains/momentum update,
 /// recentre, bbox) runs through [`GdState::fused_step`] — one threaded
-/// pass instead of four serial sweeps — and the bbox/stats work is done
-/// only when an observer is actually attached.
-pub fn run_gd_loop(
-    repulsion: &mut dyn Repulsion,
-    p: &SparseP,
-    params: &OptParams,
-    mut observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-) -> anyhow::Result<Vec<f32>> {
-    let n = p.n();
-    let mut state = GdState::init(n, params.seed, params.init_std);
-    let mut attr = vec![0.0f32; 2 * n];
-    let mut rep = vec![0.0f32; 2 * n];
-    let t0 = std::time::Instant::now();
-    for iter in 0..params.iters {
-        let ex = params.exaggeration_at(iter);
-        let (kl_pairs, p_sum) = super::attractive_forces(p, &state.y, &mut attr);
-        let z = repulsion.compute(&state.y, &mut rep).max(1e-12);
-        let inv_z = (1.0 / z) as f32;
-        let track = observer.is_some();
-        let bbox = state.fused_step(
-            &attr,
-            &rep,
-            ex,
-            inv_z,
-            params.eta,
-            params.momentum_at(iter),
-            track,
-        );
-        if let Some(obs) = observer.as_deref_mut() {
-            let b = bbox.expect("bbox is tracked whenever an observer is attached");
-            let stats = IterStats {
-                iter,
-                kl_est: kl_pairs + p_sum * z.ln(),
-                z,
-                diameter: (b[2] - b[0]).max(b[3] - b[1]),
-                elapsed_s: t0.elapsed().as_secs_f64(),
-            };
-            if obs(&stats, &state.y) == Control::Stop {
-                break;
-            }
+/// pass instead of four serial sweeps.
+pub struct GdSession {
+    engine_name: &'static str,
+    p: Arc<SparseP>,
+    params: OptParams,
+    state: GdState,
+    repulsion: Box<dyn Repulsion + Send>,
+    attr: Vec<f32>,
+    rep: Vec<f32>,
+    iter: usize,
+    /// Active optimisation seconds (pauses between steps do not count).
+    elapsed_s: f64,
+    last_stats: Option<IterStats>,
+}
+
+impl GdSession {
+    pub fn new(
+        engine_name: &'static str,
+        p: Arc<SparseP>,
+        params: &OptParams,
+        repulsion: Box<dyn Repulsion + Send>,
+    ) -> Self {
+        let n = p.n();
+        Self {
+            engine_name,
+            p,
+            params: params.clone(),
+            state: GdState::init(n, params.seed, params.init_std),
+            repulsion,
+            attr: vec![0.0f32; 2 * n],
+            rep: vec![0.0f32; 2 * n],
+            iter: 0,
+            elapsed_s: 0.0,
+            last_stats: None,
         }
     }
-    Ok(state.y)
+
+    /// Boxed constructor (what `Engine::begin` implementations return).
+    pub fn boxed(
+        engine_name: &'static str,
+        p: Arc<SparseP>,
+        params: &OptParams,
+        repulsion: Box<dyn Repulsion + Send>,
+    ) -> Box<dyn EmbeddingSession> {
+        Box::new(Self::new(engine_name, p, params, repulsion))
+    }
+}
+
+impl EmbeddingSession for GdSession {
+    fn engine_name(&self) -> &'static str {
+        self.engine_name
+    }
+
+    fn iter(&self) -> usize {
+        self.iter
+    }
+
+    fn step(&mut self) -> anyhow::Result<IterStats> {
+        anyhow::ensure!(
+            self.iter < self.params.iters,
+            "session complete at iter {} (extend via set_params)",
+            self.iter
+        );
+        let t = std::time::Instant::now();
+        let iter = self.iter;
+        let ex = self.params.exaggeration_at(iter);
+        let (kl_pairs, p_sum) = super::attractive_forces(&self.p, &self.state.y, &mut self.attr);
+        let z = self.repulsion.compute(&self.state.y, &mut self.rep).max(1e-12);
+        let inv_z = (1.0 / z) as f32;
+        let bbox = self
+            .state
+            .fused_step(
+                &self.attr,
+                &self.rep,
+                ex,
+                inv_z,
+                self.params.eta,
+                self.params.momentum_at(iter),
+                true,
+            )
+            .expect("bbox tracked");
+        self.elapsed_s += t.elapsed().as_secs_f64();
+        let stats = IterStats {
+            iter,
+            kl_est: kl_pairs + p_sum * z.ln(),
+            z,
+            diameter: (bbox[2] - bbox[0]).max(bbox[3] - bbox[1]),
+            elapsed_s: self.elapsed_s,
+        };
+        self.iter += 1;
+        self.last_stats = Some(stats);
+        Ok(stats)
+    }
+
+    fn positions(&self) -> &[f32] {
+        &self.state.y
+    }
+
+    fn params(&self) -> &OptParams {
+        &self.params
+    }
+
+    fn set_params(&mut self, params: OptParams) {
+        self.params = params;
+    }
+
+    fn warm_start(&mut self, y0: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            y0.len() == 2 * self.state.n,
+            "warm_start layout has {} values, session needs {}",
+            y0.len(),
+            2 * self.state.n
+        );
+        self.state.y.copy_from_slice(y0);
+        self.state.vel.fill(0.0);
+        self.state.gains.fill(1.0);
+        self.iter = 0;
+        self.elapsed_s = 0.0;
+        self.last_stats = None;
+        Ok(())
+    }
+
+    fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            engine: self.engine_name.to_string(),
+            iter: self.iter,
+            elapsed_s: self.elapsed_s,
+            y: self.state.y.clone(),
+            vel: self.state.vel.clone(),
+            gains: self.state.gains.clone(),
+        }
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let want = 2 * self.state.n;
+        anyhow::ensure!(
+            ck.y.len() == want && ck.vel.len() == want && ck.gains.len() == want,
+            "checkpoint state length {} does not fit session n={}",
+            ck.y.len(),
+            self.state.n
+        );
+        self.state.y.copy_from_slice(&ck.y);
+        self.state.vel.copy_from_slice(&ck.vel);
+        self.state.gains.copy_from_slice(&ck.gains);
+        self.iter = ck.iter;
+        self.elapsed_s = ck.elapsed_s;
+        self.last_stats = None;
+        Ok(())
+    }
+
+    fn last_stats(&self) -> Option<IterStats> {
+        self.last_stats
+    }
 }
 
 #[cfg(test)]
@@ -406,6 +710,27 @@ mod tests {
         }
         // Headless runs skip bbox work entirely.
         assert!(fused.fused_step(&attr, &rep, ex, inv_z, eta, mom, false).is_none());
+    }
+
+    #[test]
+    fn checkpoint_bytes_roundtrip_bitwise() {
+        let mut rng = Rng::new(21);
+        let n = 37;
+        let ck = Checkpoint {
+            engine: "bh-0.5".into(),
+            iter: 123,
+            elapsed_s: 4.5,
+            y: (0..2 * n).map(|_| rng.gauss_f32(0.0, 3.0)).collect(),
+            vel: (0..2 * n).map(|_| rng.gauss_f32(0.0, 0.3)).collect(),
+            gains: (0..2 * n).map(|_| rng.gauss_f32(1.0, 0.1)).collect(),
+        };
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back, ck);
+        // Corruption is an error, not garbage.
+        assert!(Checkpoint::from_bytes(b"junk").is_err());
+        let mut bytes = ck.to_bytes();
+        bytes.truncate(bytes.len() - 3);
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
     }
 
     #[test]

@@ -2,21 +2,31 @@
 //! paper labels "t-SNE" (DESIGN.md S11). Repulsion is the full pairwise
 //! sum; attractive forces share the sparse pass with every other engine.
 
-use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams, Repulsion};
+use std::sync::Arc;
+
+use super::common::{EmbeddingSession, Engine, GdSession, OptParams, Repulsion};
 use crate::hd::SparseP;
 use crate::util::parallel;
 
+const CHUNK: usize = 32;
+
 /// Exact O(N²) repulsion: `num_i = Σ_{j≠i} t²_ij (y_i − y_j)`,
-/// `Z = Σ_{k≠l} t_kl` (threaded over rows).
+/// `Z = Σ_{k≠l} t_kl` (threaded over rows; the Z partials land in
+/// chunk-indexed slots and combine in chunk order, so the f64 sum is
+/// deterministic regardless of thread scheduling — a checkpointed
+/// session must replay identically on any worker).
 pub struct ExactRepulsion;
 
 impl Repulsion for ExactRepulsion {
     fn compute(&mut self, y: &[f32], num: &mut [f32]) -> f64 {
         let n = y.len() / 2;
-        let z_total = std::sync::Mutex::new(0.0f64);
+        let nchunks = n.div_ceil(CHUNK).max(1);
+        let mut z_parts = vec![0.0f64; nchunks];
         {
+            let parts = parallel::SyncSlice::new(&mut z_parts);
             let slots = parallel::SyncSlice::new(num);
-            parallel::par_chunks(n, 32, |range| {
+            parallel::par_chunks(n, CHUNK, |range| {
+                let ci = range.start / CHUNK;
                 let mut local_z = 0.0f64;
                 for i in range {
                     let (xi, yi) = (y[2 * i], y[2 * i + 1]);
@@ -38,10 +48,12 @@ impl Repulsion for ExactRepulsion {
                         *slots.get_mut(2 * i + 1) = fy;
                     }
                 }
-                *z_total.lock().unwrap() += local_z;
+                unsafe {
+                    *parts.get_mut(ci) = local_z;
+                }
             });
         }
-        z_total.into_inner().unwrap()
+        z_parts.iter().sum()
     }
 }
 
@@ -53,19 +65,19 @@ impl Engine for ExactTsne {
         "exact"
     }
 
-    fn run(
+    fn begin(
         &mut self,
-        p: &SparseP,
+        p: Arc<SparseP>,
         params: &OptParams,
-        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-    ) -> anyhow::Result<Vec<f32>> {
-        run_gd_loop(&mut ExactRepulsion, p, params, observer)
+    ) -> anyhow::Result<Box<dyn EmbeddingSession>> {
+        Ok(GdSession::boxed("exact", p, params, Box::new(ExactRepulsion)))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::embed::common::{Control, IterStats};
     use crate::hd::sparse::Csr;
     use crate::metrics::kl;
 
@@ -89,6 +101,20 @@ mod tests {
         let mut num = vec![0.0f32; 2 * n];
         let z = ExactRepulsion.compute(&y, &mut num);
         assert!((z - kl::exact_z(&y)).abs() / z < 1e-9);
+    }
+
+    #[test]
+    fn repulsion_z_is_bitwise_deterministic() {
+        // Chunk-indexed partials: the f64 Z must not depend on thread
+        // scheduling (checkpointed sessions replay on any worker).
+        let mut rng = crate::util::rng::Rng::new(4);
+        let n = 300; // well past one chunk
+        let y: Vec<f32> = (0..2 * n).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+        let mut num = vec![0.0f32; 2 * n];
+        let z0 = ExactRepulsion.compute(&y, &mut num);
+        for _ in 0..5 {
+            assert_eq!(ExactRepulsion.compute(&y, &mut num), z0);
+        }
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //! entry points (`compute_fields`, `grid_placement`, …) are re-exported
 //! so existing benches/examples keep working.
 
-use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams, Repulsion};
+use std::sync::Arc;
+
+use super::common::{EmbeddingSession, Engine, GdSession, OptParams, Repulsion};
 use crate::field::gather::GatherBackend;
 use crate::field::{bbox_of, FieldBackend, Placement};
 use crate::hd::SparseP;
@@ -47,6 +49,19 @@ impl FieldRepulsion {
     pub fn choose_grid(&self, diameter: f32) -> usize {
         let g = (diameter / self.rho).ceil() as usize;
         g.clamp(self.min_grid, self.max_grid)
+    }
+
+    /// A same-configuration repulsion with cold backend caches — how the
+    /// engines stamp out per-session scratch (sessions own their FFT
+    /// plans/kernel caches; cold caches recompute identical values).
+    pub fn fresh(&self) -> Self {
+        Self {
+            rho: self.rho,
+            min_grid: self.min_grid,
+            max_grid: self.max_grid,
+            last_grid: 0,
+            backend: self.backend.fresh(),
+        }
     }
 }
 
@@ -85,13 +100,12 @@ impl Engine for FieldCpu {
         "fieldcpu"
     }
 
-    fn run(
+    fn begin(
         &mut self,
-        p: &SparseP,
+        p: Arc<SparseP>,
         params: &OptParams,
-        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-    ) -> anyhow::Result<Vec<f32>> {
-        run_gd_loop(&mut self.rep, p, params, observer)
+    ) -> anyhow::Result<Box<dyn EmbeddingSession>> {
+        Ok(GdSession::boxed("fieldcpu", p, params, Box::new(self.rep.fresh())))
     }
 }
 

@@ -10,7 +10,9 @@
 //! attractive pass, adaptive-ρ grid policy — is shared with `fieldcpu`,
 //! which is exactly the paper's axis of comparison.
 
-use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams};
+use std::sync::Arc;
+
+use super::common::{EmbeddingSession, Engine, GdSession, OptParams};
 use super::fieldcpu::FieldRepulsion;
 use crate::field::conv::FftBackend;
 use crate::hd::SparseP;
@@ -31,13 +33,12 @@ impl Engine for FieldFft {
         "fieldfft"
     }
 
-    fn run(
+    fn begin(
         &mut self,
-        p: &SparseP,
+        p: Arc<SparseP>,
         params: &OptParams,
-        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-    ) -> anyhow::Result<Vec<f32>> {
-        run_gd_loop(&mut self.rep, p, params, observer)
+    ) -> anyhow::Result<Box<dyn EmbeddingSession>> {
+        Ok(GdSession::boxed("fieldfft", p, params, Box::new(self.rep.fresh())))
     }
 }
 

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use anyhow::Context;
 
-use super::common::{Control, Engine, GdState, IterStats, OptParams};
+use super::common::{Checkpoint, EmbeddingSession, Engine, GdState, IterStats, OptParams};
 use crate::hd::SparseP;
 use crate::runtime::{Runtime, StaticArgs, StepState};
 
@@ -80,15 +80,13 @@ impl GridPolicy {
 /// The device-backed engine.
 pub struct GpgpuSne {
     rt: Arc<Runtime>,
-    /// Per-run grid switch count (observability for tests/benches).
-    pub grid_switches: usize,
     /// ρ override (None = 0.5).
     pub rho: f32,
 }
 
 impl GpgpuSne {
     pub fn new(rt: Arc<Runtime>) -> Self {
-        Self { rt, grid_switches: 0, rho: 0.5 }
+        Self { rt, rho: 0.5 }
     }
 
     /// Pad a job into bucket form: (n_pad, mask, state, statics).
@@ -132,60 +130,201 @@ impl Engine for GpgpuSne {
         "gpgpu"
     }
 
-    fn run(
+    fn begin(
         &mut self,
-        p: &SparseP,
+        p: Arc<SparseP>,
         params: &OptParams,
-        mut observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<Box<dyn EmbeddingSession>> {
         let n = p.n();
-        let (n_pad, _k, mut state, statics) = self.prepare(p, params)?;
+        let (n_pad, _k, state, statics) = self.prepare(&p, params)?;
         let grids = self.rt.manifest.grids_for(n_pad);
         anyhow::ensure!(!grids.is_empty(), "no grid variants for bucket {n_pad}");
-        let mut policy = GridPolicy::new(self.rho, grids);
-        self.grid_switches = 0;
+        let policy = GridPolicy::new(self.rho, grids);
+        let diameter = diameter_of(&state.y, n);
+        Ok(Box::new(GpgpuSession {
+            rt: self.rt.clone(),
+            n,
+            n_pad,
+            params: params.clone(),
+            state,
+            statics,
+            policy,
+            iter: 0,
+            elapsed_s: 0.0,
+            diameter,
+            last_grid: 0,
+            grid_switches: 0,
+            last_stats: None,
+        }))
+    }
+}
 
-        // Initial diameter from the random init.
-        let mut diameter = {
-            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
-            for i in 0..n {
-                lo = lo.min(state.y[2 * i].min(state.y[2 * i + 1]));
-                hi = hi.max(state.y[2 * i].max(state.y[2 * i + 1]));
-            }
-            (hi - lo).max(1e-3)
-        };
-        let t0 = std::time::Instant::now();
-        let mut last_grid = 0usize;
-        for iter in 0..params.iters {
-            let grid = policy.choose(diameter);
-            if grid != last_grid && last_grid != 0 {
-                self.grid_switches += 1;
-            }
-            last_grid = grid;
-            let exe = self.rt.step_executable(n_pad, grid)?;
-            let out = self.rt.run_step(
-                &exe,
-                &mut state,
-                &statics,
-                params.eta,
-                params.momentum_at(iter),
-                params.exaggeration_at(iter),
-            )?;
-            diameter = out.diameter().max(1e-3);
-            if let Some(obs) = observer.as_deref_mut() {
-                let stats = IterStats {
-                    iter,
-                    kl_est: out.kl as f64,
-                    z: out.zhat as f64,
-                    diameter,
-                    elapsed_s: t0.elapsed().as_secs_f64(),
-                };
-                if obs(&stats, &state.y[..2 * n]) == Control::Stop {
-                    break;
-                }
-            }
+/// Max-axis spread over the first `n` (real) points — drives the
+/// adaptive-ρ grid policy.
+fn diameter_of(y: &[f32], n: usize) -> f32 {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..n {
+        lo = lo.min(y[2 * i].min(y[2 * i + 1]));
+        hi = hi.max(y[2 * i].max(y[2 * i + 1]));
+    }
+    (hi - lo).max(1e-3)
+}
+
+/// A stepwise optimisation on the device path: owns the evolving state
+/// tensors, the uploaded per-job statics (neighbour lists, P values,
+/// mask — device-resident, uploaded once at `begin`), and the adaptive
+/// grid policy. Pausing a session keeps the statics on device, so
+/// resuming costs nothing but the next step.
+pub struct GpgpuSession {
+    rt: Arc<Runtime>,
+    /// Real (unpadded) point count.
+    n: usize,
+    /// Artifact bucket size.
+    n_pad: usize,
+    params: OptParams,
+    state: StepState,
+    statics: StaticArgs,
+    policy: GridPolicy,
+    iter: usize,
+    elapsed_s: f64,
+    diameter: f32,
+    last_grid: usize,
+    /// Grid switch count since begin/warm-start (observability).
+    pub grid_switches: usize,
+    last_stats: Option<IterStats>,
+}
+
+impl EmbeddingSession for GpgpuSession {
+    fn engine_name(&self) -> &'static str {
+        "gpgpu"
+    }
+
+    fn iter(&self) -> usize {
+        self.iter
+    }
+
+    fn step(&mut self) -> anyhow::Result<IterStats> {
+        anyhow::ensure!(
+            self.iter < self.params.iters,
+            "session complete at iter {} (extend via set_params)",
+            self.iter
+        );
+        let t = std::time::Instant::now();
+        let grid = self.policy.choose(self.diameter);
+        if grid != self.last_grid && self.last_grid != 0 {
+            self.grid_switches += 1;
         }
-        Ok(state.y[..2 * n].to_vec())
+        self.last_grid = grid;
+        let exe = self.rt.step_executable(self.n_pad, grid)?;
+        let out = self.rt.run_step(
+            &exe,
+            &mut self.state,
+            &self.statics,
+            self.params.eta,
+            self.params.momentum_at(self.iter),
+            self.params.exaggeration_at(self.iter),
+        )?;
+        self.diameter = out.diameter().max(1e-3);
+        self.elapsed_s += t.elapsed().as_secs_f64();
+        let stats = IterStats {
+            iter: self.iter,
+            kl_est: out.kl as f64,
+            z: out.zhat as f64,
+            diameter: self.diameter,
+            elapsed_s: self.elapsed_s,
+        };
+        self.iter += 1;
+        self.last_stats = Some(stats);
+        Ok(stats)
+    }
+
+    fn positions(&self) -> &[f32] {
+        &self.state.y[..2 * self.n]
+    }
+
+    fn params(&self) -> &OptParams {
+        &self.params
+    }
+
+    fn set_params(&mut self, params: OptParams) {
+        self.params = params;
+    }
+
+    fn warm_start(&mut self, y0: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            y0.len() == 2 * self.n,
+            "warm_start layout has {} values, session needs {}",
+            y0.len(),
+            2 * self.n
+        );
+        self.state.y.fill(0.0);
+        self.state.y[..2 * self.n].copy_from_slice(y0);
+        self.state.vel.fill(0.0);
+        for (i, &m) in self.statics.mask_host.iter().enumerate() {
+            let g = if m > 0.0 { 1.0 } else { 0.0 };
+            self.state.gains[2 * i] = g;
+            self.state.gains[2 * i + 1] = g;
+        }
+        self.policy = GridPolicy::new(self.policy.rho, self.policy.grids.clone());
+        self.diameter = diameter_of(&self.state.y, self.n);
+        self.last_grid = 0;
+        self.grid_switches = 0;
+        self.iter = 0;
+        self.elapsed_s = 0.0;
+        self.last_stats = None;
+        Ok(())
+    }
+
+    /// Checkpoints carry the *padded* bucket tensors. The grid policy's
+    /// hysteresis state is intentionally not serialised: a restored
+    /// session re-chooses its grid from the restored diameter, which only
+    /// affects the approximation level of the next few fields.
+    fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            engine: "gpgpu".to_string(),
+            iter: self.iter,
+            elapsed_s: self.elapsed_s,
+            y: self.state.y.clone(),
+            vel: self.state.vel.clone(),
+            gains: self.state.gains.clone(),
+        }
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let padded = 2 * self.n_pad;
+        let real = 2 * self.n;
+        anyhow::ensure!(
+            ck.y.len() == ck.vel.len() && ck.y.len() == ck.gains.len(),
+            "checkpoint tensors have mismatched lengths"
+        );
+        if ck.y.len() == padded {
+            self.state.y.copy_from_slice(&ck.y);
+            self.state.vel.copy_from_slice(&ck.vel);
+            self.state.gains.copy_from_slice(&ck.gains);
+        } else if ck.y.len() == real {
+            // A CPU-engine checkpoint: pad into the bucket (padding slots
+            // are inert — zero mask, zero gains).
+            self.state.y.fill(0.0);
+            self.state.vel.fill(0.0);
+            self.state.gains.fill(0.0);
+            self.state.y[..real].copy_from_slice(&ck.y);
+            self.state.vel[..real].copy_from_slice(&ck.vel);
+            self.state.gains[..real].copy_from_slice(&ck.gains);
+        } else {
+            anyhow::bail!(
+                "checkpoint state length {} fits neither padded ({padded}) nor real ({real})",
+                ck.y.len()
+            );
+        }
+        self.diameter = diameter_of(&self.state.y, self.n);
+        self.iter = ck.iter;
+        self.elapsed_s = ck.elapsed_s;
+        self.last_stats = None;
+        Ok(())
+    }
+
+    fn last_stats(&self) -> Option<IterStats> {
+        self.last_stats
     }
 }
 

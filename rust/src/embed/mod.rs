@@ -8,6 +8,12 @@
 //! (gains + momentum + early exaggeration, `common.rs`) and the sparse
 //! attractive-force pass; they differ only in how the repulsive forces
 //! are approximated — which is exactly the paper's axis of comparison.
+//!
+//! Every engine exposes the *stepwise session* API (`Engine::begin` →
+//! [`EmbeddingSession`]): sessions advance one iteration per `step()`,
+//! can be paused/resumed/re-parameterised mid-run, warm-started from an
+//! existing layout, and checkpointed to bytes. `Engine::run` is a
+//! convenience loop over a session (`common::run_session`).
 
 pub mod bh;
 pub mod common;
@@ -18,7 +24,9 @@ pub mod gpgpu;
 pub mod quadtree;
 pub mod tsnecuda;
 
-pub use common::{Control, Engine, IterStats, OptParams};
+pub use common::{
+    run_session, Checkpoint, Control, EmbeddingSession, Engine, GdSession, IterStats, OptParams,
+};
 
 use crate::hd::SparseP;
 

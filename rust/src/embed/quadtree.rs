@@ -29,8 +29,23 @@ struct Node {
 const NONE: u32 = u32::MAX;
 
 impl QuadTree {
+    /// Empty tree (no storage) — pair with [`Self::rebuild`].
+    pub fn empty() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
     /// Build from a `(n, 2)` row-major embedding.
     pub fn build(y: &[f32]) -> Self {
+        let mut tree = Self::empty();
+        tree.rebuild(y);
+        tree
+    }
+
+    /// Rebuild in place from a new layout, reusing the node storage —
+    /// a stepwise session rebuilds the tree every iteration, and this
+    /// keeps the hot path free of the O(N) node re-allocation. Insertion
+    /// order (hence the finished tree) is identical to [`Self::build`].
+    pub fn rebuild(&mut self, y: &[f32]) {
         let n = y.len() / 2;
         let mut b = [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
         for i in 0..n {
@@ -50,11 +65,11 @@ impl QuadTree {
             point: None,
             children: [NONE; 4],
         };
-        let mut tree = Self { nodes: vec![root] };
+        self.nodes.clear();
+        self.nodes.push(root);
         for i in 0..n {
-            tree.insert(0, y[2 * i], y[2 * i + 1], 0);
+            self.insert(0, y[2 * i], y[2 * i + 1], 0);
         }
-        tree
     }
 
     fn insert(&mut self, node: u32, x: f32, y: f32, depth: usize) {
@@ -115,11 +130,26 @@ impl QuadTree {
     /// The query point itself contributes t(0)=1 to the Z sum through its
     /// own cell; the caller subtracts 1 (exactly like Eq. 13's `S−1`).
     pub fn accumulate(&self, x: f32, y: f32, theta: f32) -> (f64, f64, f64) {
+        let mut stack = Vec::with_capacity(64);
+        self.accumulate_with(x, y, theta, &mut stack)
+    }
+
+    /// [`Self::accumulate`] with a caller-provided traversal stack, so a
+    /// batched force pass reuses one allocation across all its queries
+    /// instead of allocating per point.
+    pub fn accumulate_with(
+        &self,
+        x: f32,
+        y: f32,
+        theta: f32,
+        stack: &mut Vec<u32>,
+    ) -> (f64, f64, f64) {
         let mut fx = 0.0f64;
         let mut fy = 0.0f64;
         let mut z = 0.0f64;
         let theta2 = (theta * theta).max(1e-12);
-        let mut stack: Vec<u32> = vec![0];
+        stack.clear();
+        stack.push(0);
         while let Some(ni) = stack.pop() {
             let node = &self.nodes[ni as usize];
             if node.count == 0 {

@@ -11,8 +11,10 @@
 //! pretending a CUDA device exists. Both numbers (measured CPU, modelled
 //! GPU) are printed; EXPERIMENTS.md reports the substitution.
 
+use std::sync::Arc;
+
 use super::bh::BhRepulsion;
-use super::common::{run_gd_loop, Control, Engine, IterStats, OptParams};
+use super::common::{EmbeddingSession, Engine, GdSession, OptParams};
 use crate::hd::SparseP;
 
 /// Speedup of t-SNE-CUDA over our *measured BH-SNE θ=0.5 CPU time*,
@@ -47,15 +49,14 @@ impl Engine for TsneCudaSim {
         self.name
     }
 
-    fn run(
+    fn begin(
         &mut self,
-        p: &SparseP,
+        p: Arc<SparseP>,
         params: &OptParams,
-        observer: Option<&mut dyn FnMut(&IterStats, &[f32]) -> Control>,
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> anyhow::Result<Box<dyn EmbeddingSession>> {
         // Quality path: identical to BH at this θ (by construction —
         // that IS the simulation, per DESIGN.md §7).
-        run_gd_loop(&mut BhRepulsion { theta: self.theta }, p, params, observer)
+        Ok(GdSession::boxed(self.name, p, params, Box::new(BhRepulsion::new(self.theta))))
     }
 }
 

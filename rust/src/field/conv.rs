@@ -278,6 +278,14 @@ impl FieldBackend for FftBackend {
         "fft"
     }
 
+    fn fresh(&self) -> Box<dyn FieldBackend + Send> {
+        let mut b = FftBackend::new();
+        b.fine_pixel = self.fine_pixel;
+        b.max_oversample = self.max_oversample;
+        b.max_transform = self.max_transform;
+        Box::new(b)
+    }
+
     fn compute(&mut self, y: &[f32], placement: Placement, grid: usize) -> FieldTexture {
         let pixel = placement.pixel;
         let mut s = self.oversample_for(pixel);

@@ -102,6 +102,10 @@ impl FieldBackend for GatherBackend {
             tex: compute_fields(y, placement.origin, placement.pixel, grid),
         }
     }
+
+    fn fresh(&self) -> Box<dyn FieldBackend + Send> {
+        Box::new(GatherBackend)
+    }
 }
 
 #[cfg(test)]

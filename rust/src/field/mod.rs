@@ -70,6 +70,13 @@ pub trait FieldBackend {
     fn name(&self) -> &'static str;
 
     fn compute(&mut self, y: &[f32], placement: Placement, grid: usize) -> FieldTexture;
+
+    /// A new backend of the same kind and configuration but with cold
+    /// caches/scratch — how an engine stamps out per-session backends
+    /// (each [`crate::embed::EmbeddingSession`] owns its own plans and
+    /// kernel caches). Cold caches recompute the same values, so a fresh
+    /// backend is numerically identical to a warm one.
+    fn fresh(&self) -> Box<dyn FieldBackend + Send>;
 }
 
 /// Square grid placement covering `bbox` with margin (mirrors

@@ -19,9 +19,12 @@
 //!   caching — `hd/`), the PJRT runtime that executes the AOT
 //!   artifacts, the host field subsystem (`field/`: exact gather oracle
 //!   plus the O(N + G² log G) FFT-convolution backend behind a pluggable
-//!   `FieldBackend` trait), baseline optimisers (exact t-SNE, Barnes-Hut,
-//!   simulated t-SNE-CUDA), metrics, and the progressive embedding
-//!   *service* with the paper's adaptive field-resolution policy.
+//!   `FieldBackend` trait), the optimisers (exact t-SNE, Barnes-Hut,
+//!   simulated t-SNE-CUDA, field engines — all exposed as stepwise
+//!   `embed::EmbeddingSession`s: pause/resume/warm-start/checkpoint),
+//!   metrics, and the progressive embedding *service*: a cooperative
+//!   scheduler time-slicing sessions across workers, with the paper's
+//!   adaptive field-resolution policy.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! binary is self-contained.

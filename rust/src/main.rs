@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use gpgpu_sne::coordinator::{progress::JobState, run_pipeline, JobSpec};
+use gpgpu_sne::coordinator::{job::AutoStop, progress::JobState, run_pipeline, JobSpec};
 use gpgpu_sne::embed::OptParams;
 use gpgpu_sne::runtime::{self, Runtime};
 use gpgpu_sne::util::cli::Args;
@@ -41,8 +41,11 @@ fn print_help() {
          usage: gpgpu-sne <embed|serve|info|datasets> [options]\n\n\
          embed    --dataset mnist --n 2000 --engine gpgpu|fieldfft|fieldcpu|bh-0.5|bh-0.1|exact|tsne-cuda-0.5\n\
                   --iters 1000 --perplexity 30 --knn brute|vptree|kdforest --seed 42\n\
+                  --auto-stop-window 30 [--auto-stop-eps 1e-5]\n\
                   --out embedding.csv --image embedding.pgm\n\
          serve    --addr 127.0.0.1:7878 --max-concurrent 2\n\
+                  (cooperatively scheduled sessions; TCP commands incl.\n\
+                   pause/resume/update — see coordinator/protocol.rs)\n\
          info     (artifact + platform report)\n\
          datasets (Table 1)\n\n\
          Run `make artifacts` first to enable the gpgpu engine."
@@ -79,6 +82,16 @@ fn spec_from_args(args: &Args) -> anyhow::Result<JobSpec> {
         seed: spec.seed,
         ..Default::default()
     };
+    // A-tSNE automatic early termination: stop once the KL estimate
+    // plateaus (after exaggeration lifts).
+    if let Some(window) =
+        args.opt_get::<usize>("auto-stop-window", "enable auto-stop: KL plateau window (iters)")
+    {
+        spec.auto_stop = Some(AutoStop {
+            window: window.max(1),
+            rel_eps: args.get("auto-stop-eps", 1e-5f64, "auto-stop relative KL improvement"),
+        });
+    }
     Ok(spec)
 }
 

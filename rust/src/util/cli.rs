@@ -87,6 +87,19 @@ impl Args {
         }
     }
 
+    /// Typed option without a default (`None` when absent); exits with a
+    /// message on parse failure — for options whose mere presence changes
+    /// behaviour (e.g. `--auto-stop-window` enabling auto-stop).
+    pub fn opt_get<T: std::str::FromStr>(&self, name: &str, help: &str) -> Option<T> {
+        self.note(name, format!("(optional) {help}"));
+        self.options.get(name).map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}, got '{v}'", std::any::type_name::<T>());
+                std::process::exit(2);
+            })
+        })
+    }
+
     /// Comma-separated typed list.
     pub fn list<T: std::str::FromStr>(&self, name: &str, default: &[T], help: &str) -> Vec<T>
     where
@@ -151,6 +164,13 @@ mod tests {
         assert_eq!(a.get("eta", 200.0f32, ""), 200.0);
         assert_eq!(a.str("name", "mnist", ""), "mnist");
         assert_eq!(a.opt_str("missing", ""), None);
+    }
+
+    #[test]
+    fn opt_get_distinguishes_absent_from_set() {
+        let a = args(&["--window", "25"]);
+        assert_eq!(a.opt_get::<usize>("window", ""), Some(25));
+        assert_eq!(a.opt_get::<usize>("missing", ""), None);
     }
 
     #[test]

@@ -129,6 +129,83 @@ fn repeat_job_reports_similarity_cache_hit_over_tcp() {
 }
 
 #[test]
+fn pause_resume_update_over_tcp() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+    let v = c.call(
+        r#"{"cmd":"submit","dataset":"gaussians","n":200,"engine":"bh-0.5","iters":100000,"perplexity":10,"knn":"brute"}"#,
+    );
+    let id = v.num_field("job").unwrap() as u64;
+
+    // Wait until the scheduler is stepping it.
+    loop {
+        let v = c.call(&format!(r#"{{"cmd":"status","job":{id}}}"#));
+        if v.str_field("phase").unwrap_or("").starts_with("optimizing") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // Pause parks the session at the next step boundary.
+    let v = c.call(&format!(r#"{{"cmd":"pause","job":{id}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    let paused_iter = loop {
+        let v = c.call(&format!(r#"{{"cmd":"status","job":{id}}}"#));
+        if v.str_field("phase").unwrap_or("").starts_with("paused") {
+            break v.num_field("iter").unwrap_or(0.0) as usize;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    // Parked means parked: the iteration counter stops moving.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let v = c.call(&format!(r#"{{"cmd":"status","job":{id}}}"#));
+    assert!(v.str_field("phase").unwrap_or("").starts_with("paused"), "{v}");
+    assert_eq!(v.num_field("iter").unwrap_or(0.0) as usize, paused_iter, "{v}");
+    // A paused job still serves its latest live snapshot.
+    let v = c.call(&format!(r#"{{"cmd":"snapshot","job":{id}}}"#));
+    assert_eq!(v.get("positions").unwrap().as_arr().unwrap().len(), 400, "{v}");
+
+    // Re-parameterise mid-run (while parked), then resume: the session
+    // picks up the new schedule and finishes at the reduced horizon.
+    let cut = paused_iter + 5;
+    let v = c.call(&format!(r#"{{"cmd":"update","job":{id},"iters":{cut},"eta":80}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    let v = c.call(&format!(r#"{{"cmd":"resume","job":{id}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    let v = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    assert_eq!(v.get("stopped_early"), Some(&Json::Bool(false)), "{v}");
+    let iters = v.num_field("iters").unwrap() as usize;
+    assert!(iters <= cut && iters >= paused_iter, "ran {iters}, horizon {cut}: {v}");
+}
+
+#[test]
+fn concurrent_identical_submits_coalesce_on_one_knn() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+    // Big enough that the two prepare stages realistically overlap on
+    // the two workers; correctness does not depend on the overlap —
+    // either way exactly one kNN+P computation may run.
+    let submit = r#"{"cmd":"submit","dataset":"gaussians","n":1200,"engine":"bh-0.5","iters":10,"perplexity":12,"knn":"brute"}"#;
+    let a = c.call(submit).num_field("job").unwrap() as u64;
+    let b = c.call(submit).num_field("job").unwrap() as u64;
+    let va = c.call(&format!(r#"{{"cmd":"wait","job":{a}}}"#));
+    let vb = c.call(&format!(r#"{{"cmd":"wait","job":{b}}}"#));
+    assert_eq!(va.get("ok"), Some(&Json::Bool(true)), "{va}");
+    assert_eq!(vb.get("ok"), Some(&Json::Bool(true)), "{vb}");
+    let hits = [&va, &vb]
+        .iter()
+        .filter(|v| v.get("sim_cache_hit") == Some(&Json::Bool(true)))
+        .count();
+    assert_eq!(hits, 1, "one leader, one coalesced/ready hit: {va} {vb}");
+
+    let v = c.call(r#"{"cmd":"stats"}"#);
+    assert_eq!(v.num_field("sim_cache_computes").unwrap() as u64, 1, "{v}");
+    assert_eq!(v.num_field("sim_cache_hits").unwrap() as u64, 1, "{v}");
+    assert_eq!(v.num_field("sim_cache_misses").unwrap() as u64, 1, "{v}");
+}
+
+#[test]
 fn malformed_lines_keep_the_connection_alive() {
     let addr = start_server();
     let mut c = Client::connect(addr);

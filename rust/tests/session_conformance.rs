@@ -1,0 +1,195 @@
+//! Session/run conformance: for every CPU engine the stepwise session
+//! API must be *bit-identical* to the one-shot `run()` contract —
+//! looping `step()` to completion, pausing, checkpoint/restore (through
+//! the byte codec) and resuming must all reproduce an uninterrupted run
+//! exactly. This is what makes the coordinator's cooperative scheduler
+//! safe: slicing, parking and migrating a job across workers cannot
+//! change its result.
+
+use std::sync::Arc;
+
+use gpgpu_sne::embed::{self, Checkpoint, OptParams};
+use gpgpu_sne::hd::sparse::Csr;
+use gpgpu_sne::hd::SparseP;
+
+/// Every self-contained engine (`gpgpu` needs AOT artifacts and is
+/// covered by the artifact-gated integration tests).
+fn cpu_engines() -> impl Iterator<Item = &'static str> {
+    embed::ENGINES.iter().copied().filter(|&n| n != "gpgpu")
+}
+
+fn ring_p(n: usize, k: usize) -> SparseP {
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    for i in 0..n {
+        for j in 1..=k {
+            col.push(((i + j) % n) as u32);
+            val.push(1.0 / (n * k) as f32);
+        }
+    }
+    SparseP { csr: Csr::from_rows(n, n, k, col, val), perplexity: k as f32 }
+}
+
+fn params(iters: usize) -> OptParams {
+    OptParams { iters, exaggeration_iters: 15, seed: 7, ..Default::default() }
+}
+
+#[test]
+fn step_loop_is_bit_identical_to_run() {
+    let p = ring_p(120, 3);
+    let prm = params(40);
+    for name in cpu_engines() {
+        let y_run = embed::by_name(name, None).unwrap().run(&p, &prm, None).unwrap();
+        let mut engine = embed::by_name(name, None).unwrap();
+        let mut session = engine.begin(Arc::new(p.clone()), &prm).unwrap();
+        assert_eq!(session.engine_name(), name, "session names its engine");
+        let mut steps = 0usize;
+        while !session.is_done() {
+            let stats = session.step().unwrap();
+            assert_eq!(stats.iter, steps, "{name}: stats carry the iteration index");
+            steps += 1;
+        }
+        assert_eq!(steps, 40, "{name}");
+        assert_eq!(session.iter(), 40, "{name}");
+        assert_eq!(
+            session.positions(),
+            &y_run[..],
+            "{name}: stepping to completion must be bit-identical to run()"
+        );
+        assert!(session.step().is_err(), "{name}: stepping a finished session errors");
+    }
+}
+
+#[test]
+fn checkpoint_restore_resumes_bit_identically() {
+    // Pause + checkpoint (through the byte codec, i.e. fully
+    // serialisable state) + restore into a *fresh* session — cold
+    // scratch, cold caches, possibly another worker/process — then
+    // resume: the final embedding must equal an uninterrupted run
+    // bit-for-bit, for every CPU engine.
+    let p = ring_p(100, 3);
+    let prm = params(50);
+    for name in cpu_engines() {
+        let y_full = embed::by_name(name, None).unwrap().run(&p, &prm, None).unwrap();
+
+        let mut engine = embed::by_name(name, None).unwrap();
+        let mut first = engine.begin(Arc::new(p.clone()), &prm).unwrap();
+        for _ in 0..23 {
+            first.step().unwrap();
+        }
+        let bytes = first.checkpoint().to_bytes();
+        drop(first);
+        drop(engine);
+
+        let ck = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ck.engine, name);
+        assert_eq!(ck.iter, 23);
+
+        let mut engine = embed::by_name(name, None).unwrap();
+        let mut resumed = engine.begin(Arc::new(p.clone()), &prm).unwrap();
+        resumed.restore(&ck).unwrap();
+        assert_eq!(resumed.iter(), 23, "{name}: restore rewinds the clock");
+        while !resumed.is_done() {
+            resumed.step().unwrap();
+        }
+        assert_eq!(
+            resumed.positions(),
+            &y_full[..],
+            "{name}: pause + checkpoint/restore + resume must reproduce the run"
+        );
+    }
+}
+
+#[test]
+fn warm_start_re_embeds_from_a_given_layout() {
+    let p = ring_p(80, 3);
+    let prm = params(30);
+    let mut engine = embed::by_name("bh-0.5", None).unwrap();
+    let mut session = engine.begin(Arc::new(p.clone()), &prm).unwrap();
+    for _ in 0..30 {
+        session.step().unwrap();
+    }
+    let converged = session.positions().to_vec();
+
+    // Re-embed from the converged layout (the A-tSNE "data changed a
+    // little, keep the picture" workflow).
+    session.warm_start(&converged).unwrap();
+    assert_eq!(session.iter(), 0, "warm start rewinds the schedule");
+    assert_eq!(session.positions(), &converged[..], "layout adopted verbatim");
+    let stats = session.step().unwrap();
+    assert_eq!(stats.iter, 0);
+    assert!(session.positions().iter().all(|v| v.is_finite()));
+
+    // Wrong length is an error, not UB.
+    assert!(session.warm_start(&converged[..10]).is_err());
+}
+
+#[test]
+fn set_params_extends_and_shortens_runs() {
+    let p = ring_p(60, 2);
+    let mut engine = embed::by_name("exact", None).unwrap();
+    let mut session = engine.begin(Arc::new(p.clone()), &params(10)).unwrap();
+    while !session.is_done() {
+        session.step().unwrap();
+    }
+    assert!(session.step().is_err(), "done at 10");
+
+    // Extend: the session keeps going with the new schedule.
+    let mut prm = session.params().clone();
+    prm.iters = 14;
+    prm.eta = 50.0;
+    session.set_params(prm);
+    assert!(!session.is_done(), "raising iters revives the session");
+    let mut extra = 0;
+    while !session.is_done() {
+        let stats = session.step().unwrap();
+        assert!(stats.iter >= 10);
+        extra += 1;
+    }
+    assert_eq!(extra, 4);
+
+    // Shorten below the current iteration: done immediately.
+    let mut prm = session.params().clone();
+    prm.iters = 3;
+    session.set_params(prm);
+    assert!(session.is_done());
+    assert!(session.step().is_err());
+}
+
+#[test]
+fn checkpoints_hand_off_across_engines() {
+    // The checkpoint tensors are engine-agnostic: rough in cheaply with
+    // BH, hand the state to the exact engine to finish. (No bit-equality
+    // claim here — the engines differ; the claim is the handoff works
+    // and keeps optimising the same objective.)
+    let p = ring_p(90, 3);
+    let prm = params(40);
+    let mut bh = embed::by_name("bh-0.5", None).unwrap();
+    let mut rough = bh.begin(Arc::new(p.clone()), &prm).unwrap();
+    for _ in 0..20 {
+        rough.step().unwrap();
+    }
+    let ck = rough.checkpoint();
+
+    let mut exact = embed::by_name("exact", None).unwrap();
+    let mut fine = exact.begin(Arc::new(p.clone()), &prm).unwrap();
+    fine.restore(&ck).unwrap();
+    assert_eq!(fine.iter(), 20);
+    assert_eq!(fine.positions(), &ck.y[..]);
+    let kl_at_handoff = fine.step().unwrap().kl_est;
+    let mut kl_final = kl_at_handoff;
+    while !fine.is_done() {
+        kl_final = fine.step().unwrap().kl_est;
+    }
+    // Trend, not monotone: allow momentum wobble around a plateau.
+    assert!(
+        kl_final <= kl_at_handoff + 0.05 * kl_at_handoff.abs().max(0.1),
+        "handoff keeps minimising: {kl_at_handoff} -> {kl_final}"
+    );
+    assert!(fine.positions().iter().all(|v| v.is_finite()));
+
+    // A mis-sized checkpoint is rejected.
+    let mut other = embed::by_name("exact", None).unwrap();
+    let mut small = other.begin(Arc::new(ring_p(30, 2)), &prm).unwrap();
+    assert!(small.restore(&ck).is_err());
+}
