@@ -42,6 +42,8 @@ fn main() -> anyhow::Result<()> {
         snapshot_every: 1,
         auto_stop: None,
         seed: 42,
+        y0: None,
+        resume_from: None,
     };
     let id = svc.submit(spec);
     let rx = svc.subscribe(id).unwrap();

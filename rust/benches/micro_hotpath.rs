@@ -498,6 +498,108 @@ fn main() -> anyhow::Result<()> {
     rep.print();
     rep.write_csv("micro_sparse.csv")?;
 
+    // --- Durable store: checkpoint codec encode/decode and similarity-
+    // store record write/read throughput (the costs `serve --state-dir`
+    // adds to the scheduler's quantum boundary and the prepare stage).
+    {
+        use gpgpu_sne::coordinator::store::SimStore;
+        use gpgpu_sne::coordinator::{GraphKey, SimKey};
+        use gpgpu_sne::embed::Checkpoint;
+
+        let cn = if quick { 20_000usize } else { 100_000 };
+        let mut rng = Rng::new(31);
+        let ck = Checkpoint {
+            engine: "bh-0.5".into(),
+            iter: 500,
+            elapsed_s: 12.5,
+            y: (0..2 * cn).map(|_| rng.gauss_f32(0.0, 5.0)).collect(),
+            vel: (0..2 * cn).map(|_| rng.gauss_f32(0.0, 0.5)).collect(),
+            gains: (0..2 * cn).map(|_| rng.gauss_f32(1.0, 0.1)).collect(),
+            grid: None,
+        };
+        let bytes = ck.to_bytes();
+        let mb = bytes.len() as f64 / 1e6;
+        let enc_t = measure(1, iters.max(3), || {
+            let _ = ck.to_bytes();
+        })
+        .median();
+        let dec_t = measure(1, iters.max(3), || {
+            let _ = Checkpoint::from_bytes(&bytes).unwrap();
+        })
+        .median();
+
+        let dir = std::env::temp_dir().join(format!("gsne-bench-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SimStore::open(&dir)?;
+        let gkey = GraphKey {
+            fingerprint: 0xbe7c4,
+            method: KnnMethod::Brute,
+            k: exact.k,
+            seed: 4,
+        };
+        let pkey = SimKey { graph: gkey, perplexity_bits: 30.0f32.to_bits() };
+        let graph_mb = (exact.idx.len() * 8) as f64 / 1e6;
+        let p_mb = (p.csr.val.len() * 8 + p.csr.row_ptr.len() * 8) as f64 / 1e6;
+        let wr_t = measure(1, iters.max(3), || {
+            store.store_graph(&gkey, &exact);
+            store.store_p(&pkey, &p);
+        })
+        .median();
+        let rd_t = measure(1, iters.max(3), || {
+            let g = store.load_graph(&gkey).expect("graph record");
+            let pp = store.load_p(&pkey).expect("P record");
+            std::hint::black_box((g.n, pp.perplexity));
+        })
+        .median();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut rep = Report::new(
+            &format!("durable store (checkpoint n={cn} = {mb:.1} MB; graph+P @ n={kn})"),
+            &["median", "throughput"],
+        );
+        rep.row(
+            "checkpoint encode",
+            vec![format!("{:.2}ms", enc_t * 1e3), format!("{:.0} MB/s", mb / enc_t)],
+        );
+        rep.row(
+            "checkpoint decode",
+            vec![format!("{:.2}ms", dec_t * 1e3), format!("{:.0} MB/s", mb / dec_t)],
+        );
+        rep.row(
+            "store write (graph+P)",
+            vec![
+                format!("{:.2}ms", wr_t * 1e3),
+                format!("{:.0} MB/s", (graph_mb + p_mb) / wr_t),
+            ],
+        );
+        rep.row(
+            "store read (graph+P)",
+            vec![
+                format!("{:.2}ms", rd_t * 1e3),
+                format!("{:.0} MB/s", (graph_mb + p_mb) / rd_t),
+            ],
+        );
+        rep.print();
+        rep.write_csv("micro_store.csv")?;
+        json_sections.push((
+            "store",
+            Json::obj(vec![
+                ("checkpoint_n", Json::Num(cn as f64)),
+                ("checkpoint_mb", Json::Num(mb)),
+                ("encode_ms", Json::Num(enc_t * 1e3)),
+                ("decode_ms", Json::Num(dec_t * 1e3)),
+                ("encode_mb_s", Json::Num(mb / enc_t)),
+                ("decode_mb_s", Json::Num(mb / dec_t)),
+                ("record_n", Json::Num(kn as f64)),
+                ("record_mb", Json::Num(graph_mb + p_mb)),
+                ("write_ms", Json::Num(wr_t * 1e3)),
+                ("read_ms", Json::Num(rd_t * 1e3)),
+                ("write_mb_s", Json::Num((graph_mb + p_mb) / wr_t)),
+                ("read_mb_s", Json::Num((graph_mb + p_mb) / rd_t)),
+            ]),
+        ));
+    }
+
     // --- Machine-readable summary for cross-PR tracking, committed at
     // the workspace root (cargo runs benches with the *package* root as
     // cwd, hence the explicit path).

@@ -33,6 +33,28 @@ impl KnnMethod {
     pub fn seed_sensitive(&self) -> bool {
         !matches!(self, KnnMethod::Brute)
     }
+
+    /// Stable one-byte tag for the on-disk similarity store
+    /// (`coordinator::store`). Append-only: tags are part of the record
+    /// format and must never be reused for a different method.
+    pub fn tag(&self) -> u8 {
+        match self {
+            KnnMethod::Brute => 0,
+            KnnMethod::VpTree => 1,
+            KnnMethod::KdForest => 2,
+        }
+    }
+
+    /// Inverse of [`Self::tag`]; unknown tags (a record written by a
+    /// newer build) read as `None`, i.e. a store miss.
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => KnnMethod::Brute,
+            1 => KnnMethod::VpTree,
+            2 => KnnMethod::KdForest,
+            _ => return None,
+        })
+    }
 }
 
 impl std::str::FromStr for KnnMethod {
@@ -134,6 +156,13 @@ pub struct JobSpec {
     pub auto_stop: Option<AutoStop>,
     /// Dataset/seed salt.
     pub seed: u64,
+    /// Client-supplied initial `(n, 2)` layout: the session is
+    /// warm-started from it before the first step (protocol `y0`).
+    pub y0: Option<Vec<f32>>,
+    /// Serialised [`crate::embed::Checkpoint`] to resume from (protocol
+    /// `resume_from`, journal re-admission). Applied after `y0`, so when
+    /// both are present the checkpoint wins.
+    pub resume_from: Option<Vec<u8>>,
 }
 
 impl Default for JobSpec {
@@ -148,6 +177,8 @@ impl Default for JobSpec {
             snapshot_every: 50,
             auto_stop: None,
             seed: 42,
+            y0: None,
+            resume_from: None,
         }
     }
 }
@@ -232,6 +263,14 @@ mod tests {
             assert_eq!(b.name(), m.backend_name());
             assert_eq!(m.backend_name().parse::<KnnMethod>().unwrap(), m);
         }
+    }
+
+    #[test]
+    fn knn_method_tags_roundtrip() {
+        for m in [KnnMethod::Brute, KnnMethod::VpTree, KnnMethod::KdForest] {
+            assert_eq!(KnnMethod::from_tag(m.tag()), Some(m));
+        }
+        assert_eq!(KnnMethod::from_tag(250), None, "unknown tags are store misses");
     }
 
     #[test]

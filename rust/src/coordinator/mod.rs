@@ -10,13 +10,25 @@
 //! publishing live snapshots straight from session state, honouring
 //! user-driven stop, `pause`/`resume` parking, and live `update`
 //! re-parameterisation (`job.rs::ParamUpdate`). `protocol.rs` exposes
-//! the whole thing over a line-oriented TCP protocol; the service also
-//! holds the *similarity cache* (`simcache.rs`): repeated jobs whose
-//! `(dataset fingerprint, knn method, k, perplexity, seed)` match a
-//! previous job skip the entire similarity stage, and *concurrent*
-//! identical submissions coalesce onto a single in-flight computation,
-//! reported through `StageTimings::sim_cache_hit` and the protocol's
-//! `wait`/`stats` responses.
+//! the whole thing over a line-oriented TCP protocol (reference:
+//! `docs/PROTOCOL.md`); the service also holds the **two-level
+//! similarity store** (`simcache.rs`): level 1 caches the kNN graph per
+//! `(dataset fingerprint, knn method, k, seed)`, level 2 the finished P
+//! per `(graph, perplexity)` — repeated jobs skip the entire similarity
+//! stage, perplexity sweeps recompute only the cheap fused P build, and
+//! *concurrent* identical submissions coalesce onto a single in-flight
+//! computation, reported through `StageTimings::sim_cache_hit` /
+//! `knn_cache_hit` and the protocol's `wait`/`stats` responses.
+//!
+//! The coordinator is **durable** when given a state directory
+//! (`serve --state-dir`, `ServiceConfig::state_dir`): `store.rs`
+//! persists both similarity-store levels as checksummed record files
+//! and journals every running session's checkpoint at a configurable
+//! iteration interval, so a restarted service re-admits interrupted
+//! jobs as resumable (same ids, bit-identical continuation) and serves
+//! repeat submits from disk instead of recomputing kNN graphs.
+//! `checkpoint`/`resume_from`/`y0` expose the same machinery to TCP
+//! clients. See `docs/ARCHITECTURE.md` for the full lifecycle.
 
 pub mod job;
 pub mod pipeline;
@@ -24,11 +36,13 @@ pub mod progress;
 pub mod protocol;
 pub mod service;
 pub mod simcache;
+pub mod store;
 
 pub use job::{AutoStop, JobPhase, JobSpec, KnnMethod, ParamUpdate, Snapshot};
 pub use pipeline::{
     begin_session, prepare_similarities, run_pipeline, run_pipeline_cached, AutoStopTracker,
     JobResult, PreparedJob, StageTimings,
 };
-pub use service::{EmbeddingService, JobId};
-pub use simcache::{SimKey, SimilarityCache};
+pub use service::{EmbeddingService, JobId, ServiceConfig};
+pub use simcache::{GraphKey, LevelStats, SimKey, SimilarityCache, Source};
+pub use store::{JobJournal, SimStore};

@@ -25,7 +25,7 @@ use crate::runtime::Runtime;
 
 use super::job::{AutoStop, JobPhase, JobSpec, KnnMethod, Snapshot};
 use super::progress::JobState;
-use super::simcache::{SimKey, SimilarityCache};
+use super::simcache::{GraphKey, SimKey, SimilarityCache};
 
 /// Wall time per pipeline stage (seconds) — the breakdown the paper's
 /// timing rows decompose into (similarities vs minimisation).
@@ -36,10 +36,15 @@ pub struct StageTimings {
     pub perplexity_s: f64,
     pub optimize_s: f64,
     /// The similarity stage (kNN + perplexity/P) was served from the
-    /// coordinator cache — either a ready entry or coalesced onto a
-    /// concurrent identical computation; `knn_s` then measures only the
-    /// fingerprint + lookup (or wait) and `perplexity_s` is 0.
+    /// coordinator store — a ready in-memory entry, a coalesced wait on
+    /// a concurrent identical computation, or an on-disk record;
+    /// `knn_s` then measures only the fingerprint + lookup (or wait)
+    /// and `perplexity_s` is 0.
     pub sim_cache_hit: bool,
+    /// The P matrix had to be (re)built, but its kNN *graph* was served
+    /// from the store (level 1) — the perplexity-sweep fast path: only
+    /// the cheap fused P build ran.
+    pub knn_cache_hit: bool,
 }
 
 impl StageTimings {
@@ -99,49 +104,87 @@ pub fn prepare_similarities(
     let t = std::time::Instant::now();
     let k = spec.knn_k().min(dataset.n.saturating_sub(1)).max(1);
     let perp = spec.perplexity.min(k as f32);
-    let compute_uncached = |timings: &mut StageTimings| -> anyhow::Result<Arc<SparseP>> {
-        let knn_t = std::time::Instant::now();
-        let knn = compute_knn(&dataset, spec.knn, k, spec.seed);
-        timings.knn_s = knn_t.elapsed().as_secs_f64();
-        state.set_phase(JobPhase::Perplexity);
-        let p_t = std::time::Instant::now();
-        let p = Arc::new(perplexity::joint_p(&knn, perp));
-        timings.perplexity_s = p_t.elapsed().as_secs_f64();
-        Ok(p)
-    };
     let p = match cache {
         Some(cache) => {
             let key = SimKey {
-                fingerprint: dataset.fingerprint(),
-                method: spec.knn,
-                k,
+                graph: GraphKey {
+                    fingerprint: dataset.fingerprint(),
+                    method: spec.knn,
+                    k,
+                    // Seed-insensitive backends (brute) key seed-blind
+                    // so seed sweeps over identical data share an entry.
+                    seed: if spec.knn.seed_sensitive() { spec.seed } else { 0 },
+                },
                 perplexity_bits: perp.to_bits(),
-                // Seed-insensitive backends (brute) key seed-blind so
-                // that seed sweeps over identical data share one entry.
-                seed: if spec.knn.seed_sensitive() { spec.seed } else { 0 },
             };
-            let (p, hit) = cache.get_or_compute(&key, || compute_uncached(timings))?;
-            if hit {
-                // Ready entry or coalesced onto a concurrent leader:
-                // knn_s is the fingerprint/lookup/wait, no P build ran.
+            let lookup = cache.get_or_compute(
+                &key,
+                || Ok(Arc::new(compute_knn(&dataset, spec.knn, k, spec.seed))),
+                |knn| {
+                    state.set_phase(JobPhase::Perplexity);
+                    Ok(Arc::new(perplexity::joint_p(knn, perp)))
+                },
+            )?;
+            if lookup.p_source.is_hit() {
+                // Ready entry, coalesced onto a concurrent leader, or an
+                // on-disk record: knn_s is the fingerprint/lookup/wait,
+                // no P build ran.
                 timings.sim_cache_hit = true;
                 timings.knn_s = t.elapsed().as_secs_f64();
                 timings.perplexity_s = 0.0;
+            } else {
+                // P was built; the graph may still have been served
+                // (level-1 hit — the perplexity-sweep fast path). In
+                // that case knn_s is the graph lookup/wait alone: the
+                // total elapsed minus the P build that also ran inside
+                // get_or_compute (charging the full elapsed would
+                // double-count the build in similarities_s()).
+                timings.knn_cache_hit =
+                    lookup.graph_source.map(|s| s.is_hit()).unwrap_or(false);
+                timings.knn_s = if timings.knn_cache_hit {
+                    (t.elapsed().as_secs_f64() - lookup.perplexity_s).max(0.0)
+                } else {
+                    lookup.knn_s
+                };
+                timings.perplexity_s = lookup.perplexity_s;
             }
+            lookup.p
+        }
+        None => {
+            let knn_t = std::time::Instant::now();
+            let knn = compute_knn(&dataset, spec.knn, k, spec.seed);
+            timings.knn_s = knn_t.elapsed().as_secs_f64();
+            state.set_phase(JobPhase::Perplexity);
+            let p_t = std::time::Instant::now();
+            let p = Arc::new(perplexity::joint_p(&knn, perp));
+            timings.perplexity_s = p_t.elapsed().as_secs_f64();
             p
         }
-        None => compute_uncached(timings)?,
     };
     Ok(PreparedJob { p, labels: dataset.labels })
 }
 
-/// Construct the engine named by the spec and open its session.
+/// Construct the engine named by the spec and open its session, then
+/// apply the spec's initial-state directives: `y0` warm-starts the
+/// session from a client-supplied layout, and `resume_from` restores a
+/// serialised [`crate::embed::Checkpoint`] (the durable-job path — the
+/// session continues from the checkpointed iteration as if it had never
+/// stopped). When both are present the checkpoint wins: it is applied
+/// last and carries the full optimiser state.
 pub fn begin_session(
     spec: &JobSpec,
     p: Arc<SparseP>,
     runtime: Option<Arc<Runtime>>,
 ) -> anyhow::Result<Box<dyn EmbeddingSession>> {
-    embed::by_name(&spec.engine, runtime)?.begin(p, &spec.params)
+    let mut session = embed::by_name(&spec.engine, runtime)?.begin(p, &spec.params)?;
+    if let Some(y0) = &spec.y0 {
+        session.warm_start(y0)?;
+    }
+    if let Some(bytes) = &spec.resume_from {
+        let ck = crate::embed::Checkpoint::from_bytes(bytes)?;
+        session.restore(&ck)?;
+    }
+    Ok(session)
 }
 
 /// Plateau detector for automatic early termination: stop once the KL
@@ -281,6 +324,8 @@ mod tests {
             snapshot_every: 10,
             auto_stop: None,
             seed: 3,
+            y0: None,
+            resume_from: None,
         }
     }
 
@@ -361,6 +406,59 @@ mod tests {
         assert!(!c.timings.sim_cache_hit, "different perplexity/k must miss");
         assert_eq!(cache.stats(), (1, 2));
         assert_eq!(cache.computes(), 2);
+    }
+
+    #[test]
+    fn perplexity_tweak_reuses_the_knn_graph() {
+        // ROADMAP (b): two perplexities with the same effective k share
+        // one level-1 kNN graph; only the fused P build re-runs.
+        let cache = crate::coordinator::simcache::SimilarityCache::new(4);
+        let spec = quick_spec("bh-0.5", 30);
+        let a = run_pipeline_cached(&spec, None, &JobState::default(), Some(&cache)).unwrap();
+        assert!(!a.timings.sim_cache_hit && !a.timings.knn_cache_hit);
+        let mut tweaked = quick_spec("bh-0.5", 30);
+        tweaked.perplexity = 10.2; // floor(3µ) = 30 either way: same graph key
+        let b = run_pipeline_cached(&tweaked, None, &JobState::default(), Some(&cache)).unwrap();
+        assert!(!b.timings.sim_cache_hit, "different perplexity misses the P level");
+        assert!(b.timings.knn_cache_hit, "... but shares the level-1 kNN graph");
+        assert_eq!(cache.graph_stats().computes, 1, "one kNN for the sweep");
+        assert_eq!(cache.computes(), 2, "two P builds");
+    }
+
+    #[test]
+    fn spec_resume_from_and_y0_feed_the_session() {
+        let spec = quick_spec("bh-0.5", 40);
+        let full = run_pipeline(&spec, None, &JobState::default()).unwrap();
+
+        // Re-run the first 20 iterations by hand and checkpoint them.
+        let state = JobState::default();
+        let mut timings = StageTimings::default();
+        let prep = prepare_similarities(&spec, &state, None, &mut timings).unwrap();
+        let mut session = begin_session(&spec, prep.p, None).unwrap();
+        while session.iter() < 20 {
+            session.step().unwrap();
+        }
+        let blob = session.checkpoint().to_bytes();
+
+        // A job submitted with resume_from finishes bit-identically to
+        // the uninterrupted run.
+        let mut resumed = quick_spec("bh-0.5", 40);
+        resumed.resume_from = Some(blob);
+        let res = run_pipeline(&resumed, None, &JobState::default()).unwrap();
+        assert_eq!(res.embedding, full.embedding, "resume must be bit-identical");
+        assert_eq!(res.iters_run, 40);
+
+        // y0: a client-supplied layout is the session's starting point
+        // (a 0-iteration job hands it straight back).
+        let mut warm = quick_spec("bh-0.5", 0);
+        warm.y0 = Some(full.embedding.clone());
+        let res = run_pipeline(&warm, None, &JobState::default()).unwrap();
+        assert_eq!(res.embedding, full.embedding);
+
+        // A malformed resume blob fails the job cleanly at begin.
+        let mut bad = quick_spec("bh-0.5", 10);
+        bad.resume_from = Some(b"definitely not a checkpoint".to_vec());
+        assert!(run_pipeline(&bad, None, &JobState::default()).is_err());
     }
 
     #[test]

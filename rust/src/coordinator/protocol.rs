@@ -1,57 +1,92 @@
-//! Line-oriented TCP protocol for the serve mode (DESIGN.md S20).
+//! Line-oriented TCP protocol for the serve mode (DESIGN.md S20): one
+//! JSON object per line in both directions.
 //!
-//! One JSON object per line, both directions:
+//! **The complete reference lives in `docs/PROTOCOL.md`** (repo root) —
+//! every command, request/response schemas, error cases, and an
+//! annotated session transcript. A test below asserts every [`Cmd`]
+//! name appears there, so the doc cannot drift from this dispatcher.
+//! The short version:
 //!
 //! ```text
-//! -> {"cmd":"submit","dataset":"mnist","n":2000,"engine":"fieldcpu","iters":500}
-//! <- {"ok":true,"job":1}
-//! -> {"cmd":"status","job":1}
-//! <- {"ok":true,"job":1,"phase":"optimizing 120/500","kl":2.31,"iter":119}
-//! -> {"cmd":"snapshot","job":1}  // live positions, straight from the session
-//! <- {"ok":true,"job":1,"iter":119,"kl":2.31,"positions":[x0,y0,x1,y1,...]}
-//! -> {"cmd":"pause","job":1}     // park at the next step boundary
-//! <- {"ok":true,"job":1}         //   (status then reads "paused 130/500")
-//! -> {"cmd":"update","job":1,"eta":120,"iters":800}
-//! <- {"ok":true,"job":1}         // live re-parameterisation mid-run
-//! -> {"cmd":"resume","job":1}    // re-enter the scheduler
-//! -> {"cmd":"stop","job":1}      // user-driven early termination
-//! -> {"cmd":"wait","job":1}      // blocks until terminal
-//! <- {"ok":true,"job":1,...,"knn_s":1.2,"perplexity_s":0.3,"sim_cache_hit":false}
-//! -> {"cmd":"list"}
-//! -> {"cmd":"stats"}             // similarity-cache hit/miss/compute counters
-//! -> {"cmd":"quit"}
+//! submit status snapshot checkpoint pause resume update stop wait list stats quit
 //! ```
 //!
-//! The service behind these commands is a cooperative scheduler: jobs
-//! are embedding *sessions* time-sliced across `max_concurrent` workers
-//! in step quanta (fair round-robin — a large job cannot starve small
-//! ones), each quantum publishing a snapshot straight from the session
-//! state, so `snapshot` is always live without configuring
-//! `snapshot_every`. `pause` parks a session (its optimiser state and
-//! caches stay warm), `resume` re-enters it, and `update` overwrites
-//! eta / exaggeration(+iters) / momentum(0/1/switch) / iters on the live
-//! session — raising `iters` extends a run, lowering it ends the run at
-//! the next boundary.
-//!
-//! `submit` also accepts `auto_stop_window` (+ optional
-//! `auto_stop_eps`, default 1e-5): automatic termination once the KL
-//! estimate improves less than `eps` (relative) over the last `window`
-//! iterations after exaggeration lifts.
-//!
-//! `wait` reports the per-stage similarity timings and whether the job's
-//! kNN + P matrix came from the coordinator similarity cache (a repeat
-//! job over the same data: `knn_s + perplexity_s ≈ 0`; concurrent
-//! identical submissions coalesce onto one computation).
+//! The service behind these commands is the cooperative scheduler of
+//! `service.rs` (sessions time-sliced in step quanta, live snapshots,
+//! pause/resume parking, live re-parameterisation). `checkpoint`
+//! returns a job's full optimiser state as a base64 blob; `submit`
+//! accepts `resume_from` (such a blob) and/or `y0` (a client-supplied
+//! layout), which together with `serve --state-dir` journaling makes
+//! jobs durable across service restarts.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use crate::embed::OptParams;
+use crate::embed::{Checkpoint, OptParams};
+use crate::util::b64;
 use crate::util::json::{self, Json};
 
 use super::job::{AutoStop, JobSpec, ParamUpdate};
 use super::service::EmbeddingService;
+
+/// The protocol's command set. `ALL` and `name()` are the single source
+/// of truth the dispatcher, the usage error and the `docs/PROTOCOL.md`
+/// sync test all share.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmd {
+    Submit,
+    Status,
+    Snapshot,
+    Checkpoint,
+    Pause,
+    Resume,
+    Update,
+    Stop,
+    Wait,
+    List,
+    Stats,
+    Quit,
+}
+
+impl Cmd {
+    pub const ALL: &'static [Cmd] = &[
+        Cmd::Submit,
+        Cmd::Status,
+        Cmd::Snapshot,
+        Cmd::Checkpoint,
+        Cmd::Pause,
+        Cmd::Resume,
+        Cmd::Update,
+        Cmd::Stop,
+        Cmd::Wait,
+        Cmd::List,
+        Cmd::Stats,
+        Cmd::Quit,
+    ];
+
+    /// Wire name (the `cmd` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cmd::Submit => "submit",
+            Cmd::Status => "status",
+            Cmd::Snapshot => "snapshot",
+            Cmd::Checkpoint => "checkpoint",
+            Cmd::Pause => "pause",
+            Cmd::Resume => "resume",
+            Cmd::Update => "update",
+            Cmd::Stop => "stop",
+            Cmd::Wait => "wait",
+            Cmd::List => "list",
+            Cmd::Stats => "stats",
+            Cmd::Quit => "quit",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Cmd> {
+        Cmd::ALL.iter().copied().find(|c| c.name() == s)
+    }
+}
 
 /// Parse a submit command into a JobSpec (missing fields -> defaults).
 pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
@@ -78,8 +113,23 @@ pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
     if let Some(e) = v.num_field("eta") {
         params.eta = e as f32;
     }
+    if let Some(x) = v.num_field("exaggeration") {
+        params.exaggeration = x as f32;
+    }
     if let Some(x) = v.num_field("exaggeration_iters") {
         params.exaggeration_iters = x as usize;
+    }
+    if let Some(m) = v.num_field("momentum0") {
+        params.momentum0 = m as f32;
+    }
+    if let Some(m) = v.num_field("momentum1") {
+        params.momentum1 = m as f32;
+    }
+    if let Some(m) = v.num_field("momentum_switch") {
+        params.momentum_switch = m as usize;
+    }
+    if let Some(s) = v.num_field("init_std") {
+        params.init_std = s as f32;
     }
     if let Some(s) = v.num_field("seed") {
         params.seed = s as u64;
@@ -95,7 +145,61 @@ pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
             rel_eps: v.num_field("auto_stop_eps").unwrap_or(1e-5),
         });
     }
+    if let Some(y0) = v.get("y0") {
+        let arr = y0
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("y0 must be a flat [x0,y0,x1,y1,...] array"))?;
+        let vals = arr
+            .iter()
+            .map(|e| e.as_f64().map(|f| f as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| anyhow::anyhow!("y0 must contain only numbers"))?;
+        anyhow::ensure!(vals.len() % 2 == 0, "y0 length {} is not 2·n", vals.len());
+        spec.y0 = Some(vals);
+    }
+    if let Some(blob) = v.str_field("resume_from") {
+        let bytes = b64::decode(blob)
+            .map_err(|e| anyhow::anyhow!("resume_from is not valid base64: {e}"))?;
+        // Validate eagerly so a bad blob fails the submit, not the job.
+        Checkpoint::from_bytes(&bytes)
+            .map_err(|e| anyhow::anyhow!("resume_from is not a valid checkpoint: {e:#}"))?;
+        spec.resume_from = Some(bytes);
+    }
     Ok(spec)
+}
+
+/// Inverse of [`spec_from_json`] over the same wire field names — what
+/// the checkpoint journal persists, so a re-admitted job parses through
+/// the identical code path as a TCP submit. `y0` is emitted when
+/// present (an admit-time journal record written before any checkpoint
+/// must preserve the warm start); `resume_from` never is — the journal
+/// carries the checkpoint out of band.
+pub fn spec_to_json(spec: &JobSpec) -> Json {
+    let mut fields = vec![
+        ("dataset", Json::Str(spec.dataset.clone())),
+        ("n", Json::Num(spec.n as f64)),
+        ("engine", Json::Str(spec.engine.clone())),
+        ("perplexity", Json::Num(spec.perplexity as f64)),
+        ("knn", Json::Str(spec.knn.backend_name().into())),
+        ("iters", Json::Num(spec.params.iters as f64)),
+        ("eta", Json::Num(spec.params.eta as f64)),
+        ("exaggeration", Json::Num(spec.params.exaggeration as f64)),
+        ("exaggeration_iters", Json::Num(spec.params.exaggeration_iters as f64)),
+        ("momentum0", Json::Num(spec.params.momentum0 as f64)),
+        ("momentum1", Json::Num(spec.params.momentum1 as f64)),
+        ("momentum_switch", Json::Num(spec.params.momentum_switch as f64)),
+        ("init_std", Json::Num(spec.params.init_std as f64)),
+        ("seed", Json::Num(spec.seed as f64)),
+        ("snapshot_every", Json::Num(spec.snapshot_every as f64)),
+    ];
+    if let Some(auto) = &spec.auto_stop {
+        fields.push(("auto_stop_window", Json::Num(auto.window as f64)));
+        fields.push(("auto_stop_eps", Json::Num(auto.rel_eps)));
+    }
+    if let Some(y0) = &spec.y0 {
+        fields.push(("y0", Json::Arr(y0.iter().map(|&v| Json::Num(v as f64)).collect())));
+    }
+    Json::obj(fields)
 }
 
 /// Parse the optional fields of an `update` command.
@@ -127,16 +231,19 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
         Ok(v) => v,
         Err(e) => return (err_msg(&format!("bad json: {e}")), true),
     };
-    let cmd = v.str_field("cmd").unwrap_or("");
+    let name = v.str_field("cmd").unwrap_or("");
+    let Some(cmd) = Cmd::parse(name) else {
+        return (err_msg(&format!("unknown cmd '{name}'")), true);
+    };
     match cmd {
-        "submit" => match spec_from_json(&v) {
+        Cmd::Submit => match spec_from_json(&v) {
             Ok(spec) => {
                 let id = svc.submit(spec);
                 (ok_fields(vec![("job", Json::Num(id as f64))]), true)
             }
             Err(e) => (err_msg(&format!("{e:#}")), true),
         },
-        "status" => {
+        Cmd::Status => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             match svc.phase(id) {
                 None => (err_msg("unknown job"), true),
@@ -155,7 +262,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 }
             }
         }
-        "snapshot" => {
+        Cmd::Snapshot => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             match svc.latest_snapshot(id) {
                 None => (err_msg("no snapshot yet"), true),
@@ -173,7 +280,23 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 }
             }
         }
-        "stop" => {
+        Cmd::Checkpoint => {
+            let id = v.num_field("job").unwrap_or(0.0) as u64;
+            match svc.checkpoint(id) {
+                Err(e) => (err_msg(&format!("{e:#}")), true),
+                Ok(ck) => (
+                    ok_fields(vec![
+                        ("job", Json::Num(id as f64)),
+                        ("engine", Json::Str(ck.engine.clone())),
+                        ("iter", Json::Num(ck.iter as f64)),
+                        ("elapsed_s", Json::Num(ck.elapsed_s)),
+                        ("checkpoint", Json::Str(b64::encode(&ck.to_bytes()))),
+                    ]),
+                    true,
+                ),
+            }
+        }
+        Cmd::Stop => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             if svc.stop(id) {
                 (ok_fields(vec![("job", Json::Num(id as f64))]), true)
@@ -181,7 +304,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 (err_msg("unknown job"), true)
             }
         }
-        "pause" => {
+        Cmd::Pause => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             if svc.pause(id) {
                 (ok_fields(vec![("job", Json::Num(id as f64))]), true)
@@ -189,7 +312,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 (err_msg("unknown or finished job"), true)
             }
         }
-        "resume" => {
+        Cmd::Resume => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             if svc.resume(id) {
                 (ok_fields(vec![("job", Json::Num(id as f64))]), true)
@@ -197,7 +320,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 (err_msg("unknown or finished job"), true)
             }
         }
-        "update" => {
+        Cmd::Update => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             let update = update_from_json(&v);
             if update.is_empty() {
@@ -208,7 +331,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 (err_msg("unknown or finished job"), true)
             }
         }
-        "wait" => {
+        Cmd::Wait => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             match svc.wait(id) {
                 Ok(res) => (
@@ -220,6 +343,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                         ("knn_s", Json::Num(res.timings.knn_s)),
                         ("perplexity_s", Json::Num(res.timings.perplexity_s)),
                         ("sim_cache_hit", Json::Bool(res.timings.sim_cache_hit)),
+                        ("knn_cache_hit", Json::Bool(res.timings.knn_cache_hit)),
                         ("optimize_s", Json::Num(res.timings.optimize_s)),
                         ("total_s", Json::Num(res.timings.total())),
                     ]),
@@ -228,19 +352,26 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 Err(e) => (err_msg(&format!("{e:#}")), true),
             }
         }
-        "stats" => {
-            let (hits, misses) = svc.sim_cache().stats();
+        Cmd::Stats => {
+            let cache = svc.sim_cache();
+            let (hits, misses) = cache.stats();
+            let g = cache.graph_stats();
             (
                 ok_fields(vec![
                     ("sim_cache_hits", Json::Num(hits as f64)),
                     ("sim_cache_misses", Json::Num(misses as f64)),
-                    ("sim_cache_computes", Json::Num(svc.sim_cache().computes() as f64)),
-                    ("sim_cache_entries", Json::Num(svc.sim_cache().len() as f64)),
+                    ("sim_cache_computes", Json::Num(cache.computes() as f64)),
+                    ("sim_cache_entries", Json::Num(cache.len() as f64)),
+                    ("sim_cache_disk_hits", Json::Num(cache.p_stats().disk_hits as f64)),
+                    ("knn_cache_hits", Json::Num(g.hits as f64)),
+                    ("knn_cache_computes", Json::Num(g.computes as f64)),
+                    ("knn_cache_entries", Json::Num(cache.graph_len() as f64)),
+                    ("knn_cache_disk_hits", Json::Num(g.disk_hits as f64)),
                 ]),
                 true,
             )
         }
-        "list" => {
+        Cmd::List => {
             let jobs = Json::Arr(
                 svc.list()
                     .into_iter()
@@ -254,8 +385,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
             );
             (ok_fields(vec![("jobs", jobs)]), true)
         }
-        "quit" => (ok_fields(vec![("bye", Json::Bool(true))]), false),
-        other => (err_msg(&format!("unknown cmd '{other}'")), true),
+        Cmd::Quit => (ok_fields(vec![("bye", Json::Bool(true))]), false),
     }
 }
 
@@ -490,5 +620,153 @@ mod tests {
         let (resp, keep) = handle_line(&s, r#"{"cmd":"quit"}"#);
         assert!(!keep);
         assert!(resp.contains("bye"));
+    }
+
+    #[test]
+    fn checkpoint_then_resume_from_roundtrips() {
+        let s = svc();
+        let (resp, _) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":80,"engine":"bh-0.5","iters":100000,"perplexity":8,"knn":"brute"}"#,
+        );
+        let id = json::parse(&resp).unwrap().num_field("job").unwrap() as u64;
+        // Wait until stepping, then grab a live checkpoint.
+        while !json::parse(&handle_line(&s, &format!(r#"{{"cmd":"status","job":{id}}}"#)).0)
+            .unwrap()
+            .str_field("phase")
+            .unwrap_or("")
+            .starts_with("optimizing")
+        {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"checkpoint","job":{id}}}"#));
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(v.str_field("engine"), Some("bh-0.5"));
+        let iter = v.num_field("iter").unwrap() as usize;
+        assert!(iter > 0);
+        let blob = v.str_field("checkpoint").unwrap().to_string();
+        // The blob is framed base64 of the byte codec.
+        let ck = crate::embed::Checkpoint::from_bytes(
+            &crate::util::b64::decode(&blob).expect("valid base64"),
+        )
+        .expect("valid checkpoint");
+        assert_eq!(ck.iter, iter);
+        handle_line(&s, &format!(r#"{{"cmd":"stop","job":{id}}}"#));
+        handle_line(&s, &format!(r#"{{"cmd":"wait","job":{id}}}"#));
+
+        // Submit a resumed job from the blob: it continues past `iter`.
+        let horizon = iter + 5;
+        let (resp, _) = handle_line(
+            &s,
+            &format!(
+                r#"{{"cmd":"submit","dataset":"gaussians","n":80,"engine":"bh-0.5","iters":{horizon},"perplexity":8,"knn":"brute","resume_from":"{blob}"}}"#
+            ),
+        );
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let rid = v.num_field("job").unwrap() as u64;
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"wait","job":{rid}}}"#));
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(v.num_field("iters").unwrap() as usize, horizon, "resumed, not restarted");
+    }
+
+    #[test]
+    fn submit_rejects_bad_resume_and_y0() {
+        let s = svc();
+        for line in [
+            r#"{"cmd":"submit","resume_from":"not base64!!"}"#,
+            r#"{"cmd":"submit","resume_from":"YWJj"}"#, // base64 of "abc": not a checkpoint
+            r#"{"cmd":"submit","y0":"nope"}"#,
+            r#"{"cmd":"submit","y0":[1,2,3]}"#, // odd length
+            r#"{"cmd":"submit","y0":[1,"x"]}"#,
+        ] {
+            let (resp, keep) = handle_line(&s, line);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{line} -> {resp}");
+            assert!(keep);
+        }
+    }
+
+    #[test]
+    fn submit_parses_y0() {
+        let v = json::parse(r#"{"cmd":"submit","y0":[0.5,-1.25,3,4]}"#).unwrap();
+        let spec = spec_from_json(&v).unwrap();
+        assert_eq!(spec.y0, Some(vec![0.5, -1.25, 3.0, 4.0]));
+        // Absent -> none; the end-to-end warm-start effect is pinned by
+        // `pipeline::tests::spec_resume_from_and_y0_feed_the_session`.
+        let v = json::parse(r#"{"cmd":"submit"}"#).unwrap();
+        assert!(spec_from_json(&v).unwrap().y0.is_none());
+    }
+
+    #[test]
+    fn spec_json_roundtrip_preserves_every_field() {
+        // The journal persists specs through spec_to_json and re-parses
+        // them with spec_from_json — a field either roundtrips or a
+        // restarted job silently changes behaviour.
+        let mut spec = JobSpec {
+            dataset: "wikiword".into(),
+            n: 4321,
+            engine: "fieldfft".into(),
+            perplexity: 17.5,
+            knn: "vptree".parse().unwrap(),
+            snapshot_every: 7,
+            auto_stop: Some(AutoStop { window: 33, rel_eps: 2.5e-4 }),
+            seed: 99,
+            ..Default::default()
+        };
+        spec.params = OptParams {
+            iters: 1234,
+            eta: 150.0,
+            momentum0: 0.4,
+            momentum1: 0.85,
+            momentum_switch: 200,
+            exaggeration: 9.0,
+            exaggeration_iters: 111,
+            seed: 99,
+            init_std: 0.05,
+        };
+        let json_line = spec_to_json(&spec).to_string();
+        let back = spec_from_json(&json::parse(&json_line).unwrap()).unwrap();
+        assert_eq!(back.dataset, spec.dataset);
+        assert_eq!(back.n, spec.n);
+        assert_eq!(back.engine, spec.engine);
+        assert_eq!(back.perplexity, spec.perplexity);
+        assert_eq!(back.knn, spec.knn);
+        assert_eq!(back.snapshot_every, spec.snapshot_every);
+        assert_eq!(back.seed, spec.seed);
+        let auto = back.auto_stop.unwrap();
+        assert_eq!(auto.window, 33);
+        assert!((auto.rel_eps - 2.5e-4).abs() < 1e-12);
+        assert_eq!(back.params.iters, spec.params.iters);
+        assert_eq!(back.params.eta, spec.params.eta);
+        assert_eq!(back.params.momentum0, spec.params.momentum0);
+        assert_eq!(back.params.momentum1, spec.params.momentum1);
+        assert_eq!(back.params.momentum_switch, spec.params.momentum_switch);
+        assert_eq!(back.params.exaggeration, spec.params.exaggeration);
+        assert_eq!(back.params.exaggeration_iters, spec.params.exaggeration_iters);
+        assert_eq!(back.params.init_std, spec.params.init_std);
+        assert_eq!(back.params.seed, spec.params.seed);
+    }
+
+    #[test]
+    fn protocol_doc_covers_every_command() {
+        // docs/PROTOCOL.md is the reference the doc-header points at;
+        // every wire command must appear there (as `"cmd":"<name>"`), and
+        // conversely every documented cmd string must dispatch.
+        let doc = include_str!("../../../docs/PROTOCOL.md");
+        for cmd in Cmd::ALL {
+            let needle = format!("\"cmd\":\"{}\"", cmd.name());
+            assert!(
+                doc.contains(&needle),
+                "docs/PROTOCOL.md does not document the `{}` command ({needle})",
+                cmd.name()
+            );
+        }
+        // Response-field coverage: the durable-path fields are documented.
+        for field in ["resume_from", "checkpoint", "y0", "sim_cache_hit", "knn_cache_hit"] {
+            assert!(doc.contains(field), "docs/PROTOCOL.md lost the `{field}` field");
+        }
     }
 }

@@ -15,19 +15,29 @@
 //! `pause` parks the task (session state intact, caches warm),
 //! `resume` re-enqueues it, and pending [`ParamUpdate`]s are applied to
 //! the session — live re-parameterisation mid-optimisation.
+//!
+//! With [`ServiceConfig::state_dir`] the service is **durable**: every
+//! running session's checkpoint is journalled into the state dir at the
+//! configured iteration interval (`coordinator::store::JobJournal`), the
+//! similarity store persists to disk, and a restarted service re-admits
+//! every journalled job as *resumable* — it continues from its last
+//! checkpoint instead of being lost, under the same job id.
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::embed::EmbeddingSession;
+use crate::embed::{Checkpoint, EmbeddingSession};
 use crate::runtime::Runtime;
+use crate::util::json;
 
 use super::job::{JobPhase, JobSpec, ParamUpdate, Snapshot};
 use super::pipeline::{self, AutoStopTracker, JobResult, StageTimings};
 use super::progress::JobState;
 use super::simcache::SimilarityCache;
+use super::store::JobJournal;
 
 /// Similarity-cache capacity: distinct `(dataset, knn, k, perplexity,
 /// seed)` combinations kept hot. P matrices are O(N·k) f32 — at the
@@ -51,6 +61,33 @@ const IDLE_SNAPSHOT_MS: u64 = 100;
 
 pub type JobId = u64;
 
+/// Service-construction knobs (see [`EmbeddingService::with_config`]).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker-pool size (concurrent step quanta).
+    pub max_concurrent: usize,
+    /// Durable-state directory: checkpoint journal under `jobs/`, the
+    /// on-disk similarity store under `simstore/`. `None` = in-memory
+    /// service (the previous behaviour).
+    pub state_dir: Option<PathBuf>,
+    /// Journal a running session's checkpoint every this many
+    /// iterations (clamped to ≥ 1; pause/park always journals).
+    pub journal_every: usize,
+    /// Ready entries kept per similarity-store level.
+    pub sim_cache_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            max_concurrent: 2,
+            state_dir: None,
+            journal_every: 50,
+            sim_cache_capacity: SIM_CACHE_CAPACITY,
+        }
+    }
+}
+
 /// A job's live optimisation state, owned by whichever worker is
 /// currently driving it (or parked in the entry's slot between quanta).
 struct JobTask {
@@ -65,6 +102,17 @@ struct JobTask {
     last_kl: f64,
     /// When the last snapshot was published (idle-throttling).
     last_snapshot: Option<std::time::Instant>,
+    /// Iteration count at the last journal write (durable services).
+    last_journal_iter: usize,
+}
+
+/// Rendezvous for `checkpoint` requests: a client flags `pending`, the
+/// driving worker captures the session state at its next step boundary
+/// and posts it into `ready`.
+#[derive(Default)]
+struct CkptSlot {
+    pending: bool,
+    ready: Option<Checkpoint>,
 }
 
 struct JobEntry {
@@ -77,6 +125,8 @@ struct JobEntry {
     /// number of clients can `wait` on the same job).
     result: Mutex<Option<Result<JobResult, String>>>,
     done_cv: Condvar,
+    ckpt: Mutex<CkptSlot>,
+    ckpt_cv: Condvar,
 }
 
 /// State shared between the service handle and its workers.
@@ -87,12 +137,54 @@ struct ServiceInner {
     queue_cv: Condvar,
     shutdown: AtomicBool,
     sim_cache: Arc<SimilarityCache>,
+    /// Checkpoint journal (durable services only).
+    journal: Option<JobJournal>,
+    journal_every: usize,
 }
 
 impl ServiceInner {
     fn enqueue(&self, id: JobId) {
         self.queue.lock().unwrap().push_back(id);
         self.queue_cv.notify_one();
+    }
+
+    /// Register a job under an explicit id and make it runnable — the
+    /// shared tail of `submit` and journal re-admission.
+    fn admit(&self, id: JobId, spec: JobSpec) {
+        // Durable services journal the job at admission, before any
+        // iteration runs: a service killed in the (potentially long)
+        // similarity stage must still re-admit the job on restart. The
+        // record carries the submit's own resume blob when present —
+        // repeated kill/restart cycles keep resuming from the same
+        // checkpoint until the scheduler journals a fresher one.
+        if let Some(journal) = &self.journal {
+            let mut jspec = spec.clone();
+            let ckpt = jspec.resume_from.take().unwrap_or_default();
+            let spec_json = super::protocol::spec_to_json(&jspec).to_string();
+            journal.write(id, &spec_json, &ckpt);
+        }
+        let task = JobTask {
+            spec: spec.clone(),
+            labels: Vec::new(),
+            timings: StageTimings::default(),
+            session: None,
+            auto: AutoStopTracker::new(spec.auto_stop, spec.params.exaggeration_iters),
+            iters_run: 0,
+            last_kl: f64::NAN,
+            last_snapshot: None,
+            last_journal_iter: 0,
+        };
+        let entry = Arc::new(JobEntry {
+            spec,
+            state: JobState::default(),
+            task: Mutex::new(Some(task)),
+            result: Mutex::new(None),
+            done_cv: Condvar::new(),
+            ckpt: Mutex::new(CkptSlot::default()),
+            ckpt_cv: Condvar::new(),
+        });
+        self.jobs.lock().unwrap().insert(id, entry);
+        self.enqueue(id);
     }
 }
 
@@ -115,21 +207,84 @@ pub struct EmbeddingService {
 
 impl EmbeddingService {
     pub fn new(runtime: Option<Arc<Runtime>>, max_concurrent: usize) -> Self {
+        Self::with_config(runtime, ServiceConfig { max_concurrent, ..Default::default() })
+    }
+
+    /// Construct a service from a full [`ServiceConfig`]. With a
+    /// `state_dir`, journalled jobs from a previous process are
+    /// **re-admitted** (same ids, resuming from their last checkpoint)
+    /// before the worker pool starts, and the similarity store opens its
+    /// on-disk level.
+    pub fn with_config(runtime: Option<Arc<Runtime>>, cfg: ServiceConfig) -> Self {
+        let (sim_cache, journal) = match &cfg.state_dir {
+            Some(dir) => {
+                let cache =
+                    SimilarityCache::with_disk(cfg.sim_cache_capacity, &dir.join("simstore"));
+                let journal = match JobJournal::open(&dir.join("jobs")) {
+                    Ok(j) => Some(j),
+                    Err(e) => {
+                        eprintln!(
+                            "warning: state dir {} unusable for journaling ({e}); \
+                             jobs will not survive restarts",
+                            dir.display()
+                        );
+                        None
+                    }
+                };
+                (cache, journal)
+            }
+            None => (SimilarityCache::new(cfg.sim_cache_capacity), None),
+        };
         let inner = Arc::new(ServiceInner {
             runtime,
             jobs: Mutex::new(HashMap::new()),
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            sim_cache: Arc::new(SimilarityCache::new(SIM_CACHE_CAPACITY)),
+            sim_cache: Arc::new(sim_cache),
+            journal,
+            journal_every: cfg.journal_every.max(1),
         });
-        let workers = (0..max_concurrent.max(1))
+        // Re-admit interrupted jobs before any worker can race the scan.
+        let mut max_id = 0u64;
+        if let Some(j) = &inner.journal {
+            for entry in j.read_all() {
+                let spec = json::parse(&entry.spec_json)
+                    .map_err(anyhow::Error::from)
+                    .and_then(|v| super::protocol::spec_from_json(&v));
+                match spec {
+                    Ok(mut spec) => {
+                        // An admit-time record journalled before the
+                        // first checkpoint carries an empty blob: the
+                        // job restarts from scratch (deterministically
+                        // reproducing the lost iterations).
+                        if !entry.checkpoint.is_empty() {
+                            spec.resume_from = Some(entry.checkpoint);
+                        }
+                        eprintln!(
+                            "re-admitting journalled job {} ({} n={} engine={})",
+                            entry.id, spec.dataset, spec.n, spec.engine
+                        );
+                        inner.admit(entry.id, spec);
+                        max_id = max_id.max(entry.id);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "warning: journalled job {} unreadable ({e:#}); dropped",
+                            entry.id
+                        );
+                        j.remove(entry.id);
+                    }
+                }
+            }
+        }
+        let workers = (0..cfg.max_concurrent.max(1))
             .map(|_| {
                 let inner = inner.clone();
                 std::thread::spawn(move || worker_loop(inner))
             })
             .collect();
-        Self { inner, next_id: AtomicU64::new(1), workers: Mutex::new(workers) }
+        Self { inner, next_id: AtomicU64::new(max_id + 1), workers: Mutex::new(workers) }
     }
 
     pub fn has_runtime(&self) -> bool {
@@ -141,29 +296,82 @@ impl EmbeddingService {
         &self.inner.sim_cache
     }
 
+    /// Whether this service journals checkpoints to a state dir.
+    pub fn is_durable(&self) -> bool {
+        self.inner.journal.is_some()
+    }
+
     /// Submit a job; returns immediately with its id.
     pub fn submit(&self, spec: JobSpec) -> JobId {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let task = JobTask {
-            spec: spec.clone(),
-            labels: Vec::new(),
-            timings: StageTimings::default(),
-            session: None,
-            auto: AutoStopTracker::new(spec.auto_stop, spec.params.exaggeration_iters),
-            iters_run: 0,
-            last_kl: f64::NAN,
-            last_snapshot: None,
-        };
-        let entry = Arc::new(JobEntry {
-            spec: spec.clone(),
-            state: JobState::default(),
-            task: Mutex::new(Some(task)),
-            result: Mutex::new(None),
-            done_cv: Condvar::new(),
-        });
-        self.inner.jobs.lock().unwrap().insert(id, entry);
-        self.inner.enqueue(id);
+        self.inner.admit(id, spec);
         id
+    }
+
+    /// Snapshot the job's full optimiser state (the TCP `checkpoint`
+    /// command). A parked (paused/queued-between-quanta) session is
+    /// captured directly; a session a worker is driving is captured *by
+    /// the worker* at its next step boundary (a rendezvous, not a poll —
+    /// the parked window between back-to-back quanta is microseconds, so
+    /// polling the task slot would race). Errors if the job is terminal
+    /// or its optimiser state does not exist yet (similarity stage still
+    /// running, or queued behind it).
+    pub fn checkpoint(&self, id: JobId) -> anyhow::Result<Checkpoint> {
+        let entry = self.entry(id).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            anyhow::ensure!(
+                !entry.state.phase().is_terminal(),
+                "job {id} already finished — fetch its result via wait/snapshot"
+            );
+            {
+                let guard = entry.task.lock().unwrap();
+                if let Some(task) = guard.as_ref() {
+                    if let Some(session) = task.session.as_ref() {
+                        return Ok(session.checkpoint());
+                    }
+                    // Parked before the similarity stage ran. A job
+                    // submitted with resume_from already *is* a
+                    // checkpoint; anything else has no state yet.
+                    if let Some(bytes) = &task.spec.resume_from {
+                        return Checkpoint::from_bytes(bytes);
+                    }
+                    anyhow::bail!(
+                        "job {id} has no optimiser state yet (queued or in the similarity stage)"
+                    );
+                }
+            }
+            // A worker is driving the task: ask it to capture at the
+            // next boundary and wait for the hand-off. Clear any stale
+            // capture a previous (timed-out) request left behind first.
+            let mut slot = entry.ckpt.lock().unwrap();
+            slot.ready = None;
+            slot.pending = true;
+            while slot.ready.is_none() {
+                let (s, timeout) = entry
+                    .ckpt_cv
+                    .wait_timeout(slot, std::time::Duration::from_millis(50))
+                    .unwrap();
+                slot = s;
+                if slot.ready.is_some() {
+                    break;
+                }
+                // The job may have finalised (or parked pre-begin) while
+                // we waited — fall back to the outer loop to re-inspect.
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if let Some(ck) = slot.ready.take() {
+                return Ok(ck);
+            }
+            slot.pending = false;
+            drop(slot);
+            anyhow::ensure!(
+                std::time::Instant::now() < deadline,
+                "timed out waiting for job {id}'s step boundary"
+            );
+        }
     }
 
     fn entry(&self, id: JobId) -> Option<Arc<JobEntry>> {
@@ -297,13 +505,16 @@ fn worker_loop(inner: Arc<ServiceInner>) {
             continue;
         };
         let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            run_slice(&inner, &entry, &mut task)
+            run_slice(&inner, id, &entry, &mut task)
         }))
         .unwrap_or_else(|_| {
             let msg = "job worker panicked".to_string();
             entry.state.set_phase(JobPhase::Failed(msg.clone()));
             *entry.result.lock().unwrap() = Some(Err(msg));
             entry.done_cv.notify_all();
+            if let Some(j) = &inner.journal {
+                j.remove(id);
+            }
             SliceOutcome::Finished
         });
         match outcome {
@@ -328,12 +539,17 @@ fn worker_loop(inner: Arc<ServiceInner>) {
 }
 
 /// One scheduling slice: prepare if needed, apply control, run a step
-/// quantum, publish a live snapshot.
-fn run_slice(inner: &ServiceInner, entry: &JobEntry, task: &mut JobTask) -> SliceOutcome {
+/// quantum, publish a live snapshot, journal durable state.
+fn run_slice(
+    inner: &ServiceInner,
+    id: JobId,
+    entry: &JobEntry,
+    task: &mut JobTask,
+) -> SliceOutcome {
     // Lazily run the similarity stage + session begin on first claim.
     if task.session.is_none() {
         if entry.state.stop_requested() {
-            return finalize(entry, task, true);
+            return finalize(inner, id, entry, task, true);
         }
         if entry.state.pause_requested() {
             let total = task.spec.params.iters;
@@ -353,9 +569,14 @@ fn run_slice(inner: &ServiceInner, entry: &JobEntry, task: &mut JobTask) -> Slic
         match prepared {
             Ok((labels, session)) => {
                 task.labels = labels;
+                // A resumed session starts past iteration 0; align the
+                // bookkeeping so wait/status report resumed progress and
+                // the journal cadence continues from there.
+                task.iters_run = session.iter();
+                task.last_journal_iter = session.iter();
                 task.session = Some(session);
             }
-            Err(e) => return finalize_err(entry, format!("{e:#}")),
+            Err(e) => return finalize_err(inner, id, entry, format!("{e:#}")),
         }
     }
 
@@ -368,19 +589,31 @@ fn run_slice(inner: &ServiceInner, entry: &JobEntry, task: &mut JobTask) -> Slic
     }
 
     if entry.state.stop_requested() {
-        return finalize(entry, task, true);
+        return finalize(inner, id, entry, task, true);
     }
 
     // Split the task borrow so the step loop can write the bookkeeping
     // fields while holding the session.
     let (done, auto_stopped, cur_iter, total) = {
-        let JobTask { session, auto, iters_run, last_kl, timings, last_snapshot, .. } = task;
+        let JobTask {
+            spec,
+            session,
+            auto,
+            iters_run,
+            last_kl,
+            timings,
+            last_snapshot,
+            last_journal_iter,
+            ..
+        } = task;
         let session = session.as_mut().expect("session prepared above");
         let total = session.params().iters;
 
         if entry.state.pause_requested() {
             entry.state.set_phase(JobPhase::Paused { iter: *iters_run, total });
             publish_snapshot(entry, session.as_ref(), last_snapshot, true);
+            journal_session(inner, id, spec, session.as_ref());
+            *last_journal_iter = *iters_run;
             return SliceOutcome::Park;
         }
 
@@ -403,7 +636,7 @@ fn run_slice(inner: &ServiceInner, entry: &JobEntry, task: &mut JobTask) -> Slic
                 }
                 Err(e) => {
                     timings.optimize_s += t.elapsed().as_secs_f64();
-                    return finalize_err(entry, format!("{e:#}"));
+                    return finalize_err(inner, id, entry, format!("{e:#}"));
                 }
             }
             steps += 1;
@@ -423,19 +656,67 @@ fn run_slice(inner: &ServiceInner, entry: &JobEntry, task: &mut JobTask) -> Slic
             || entry.state.stop_requested()
             || entry.state.pause_requested();
         publish_snapshot(entry, session.as_ref(), last_snapshot, at_boundary);
+        // Durable services: journal at the configured iteration cadence
+        // (pause journals unconditionally above, finalise removes).
+        if *iters_run >= *last_journal_iter + inner.journal_every {
+            journal_session(inner, id, spec, session.as_ref());
+            *last_journal_iter = *iters_run;
+        }
+        // Step-boundary rendezvous for `checkpoint` requests.
+        serve_checkpoint(entry, session.as_ref());
         (session.is_done(), auto_stopped, *iters_run, total)
     };
 
     if done || auto_stopped || entry.state.stop_requested() {
         let stopped = (auto_stopped || entry.state.stop_requested()) && !done;
-        return finalize(entry, task, stopped);
+        return finalize(inner, id, entry, task, stopped);
     }
     if entry.state.pause_requested() {
         entry.state.set_phase(JobPhase::Paused { iter: cur_iter, total });
+        // Parking always journals: a paused job may sit for days, and a
+        // restart must resume it from exactly its parked iteration.
+        if let Some(session) = task.session.as_ref() {
+            journal_session(inner, id, &task.spec, session.as_ref());
+            task.last_journal_iter = cur_iter;
+        }
         return SliceOutcome::Park;
     }
     entry.state.set_phase(JobPhase::Optimizing { iter: cur_iter, total });
     SliceOutcome::Requeue
+}
+
+/// Serve a pending `checkpoint` rendezvous (see
+/// [`EmbeddingService::checkpoint`]): capture the session state at this
+/// step boundary and wake the waiting client.
+fn serve_checkpoint(entry: &JobEntry, session: &dyn EmbeddingSession) {
+    let mut slot = entry.ckpt.lock().unwrap();
+    if slot.pending {
+        slot.pending = false;
+        slot.ready = Some(session.checkpoint());
+        entry.ckpt_cv.notify_all();
+    }
+}
+
+/// Journal one session's durable state: the spec (with the session's
+/// *current* params, so live `update`s survive restarts) plus the full
+/// checkpoint. No-op without a state dir.
+fn journal_session(
+    inner: &ServiceInner,
+    id: JobId,
+    spec: &JobSpec,
+    session: &dyn EmbeddingSession,
+) {
+    let Some(journal) = &inner.journal else {
+        return;
+    };
+    let mut spec = spec.clone();
+    spec.params = session.params().clone();
+    // The journal record carries the checkpoint out of band; the spec's
+    // own initial-state directives are consumed/superseded by it.
+    spec.y0 = None;
+    spec.resume_from = None;
+    let spec_json = super::protocol::spec_to_json(&spec).to_string();
+    journal.write(id, &spec_json, &session.checkpoint().to_bytes());
 }
 
 /// Publish a live snapshot straight from the session state (no
@@ -452,6 +733,11 @@ fn publish_snapshot(
     let Some(stats) = session.last_stats() else {
         return;
     };
+    // The subscriber count is read HERE, at publish time — never cached
+    // across the quantum. A client that subscribed while the quantum was
+    // stepping must flip this publish to streaming cadence immediately,
+    // not after the idle throttle window drains (regression-pinned by
+    // `mid_run_subscriber_streams_at_quantum_cadence`).
     let due = force
         || entry.state.snapshots.subscriber_count() > 0
         || last.map_or(true, |t| t.elapsed().as_millis() as u64 >= IDLE_SNAPSHOT_MS);
@@ -467,7 +753,13 @@ fn publish_snapshot(
     });
 }
 
-fn finalize(entry: &JobEntry, task: &mut JobTask, stopped: bool) -> SliceOutcome {
+fn finalize(
+    inner: &ServiceInner,
+    id: JobId,
+    entry: &JobEntry,
+    task: &mut JobTask,
+    stopped: bool,
+) -> SliceOutcome {
     let embedding = task
         .session
         .as_ref()
@@ -490,13 +782,21 @@ fn finalize(entry: &JobEntry, task: &mut JobTask, stopped: bool) -> SliceOutcome
         .set_phase(if stopped { JobPhase::Stopped } else { JobPhase::Done });
     *entry.result.lock().unwrap() = Some(Ok(result));
     entry.done_cv.notify_all();
+    if let Some(j) = &inner.journal {
+        j.remove(id);
+    }
     SliceOutcome::Finished
 }
 
-fn finalize_err(entry: &JobEntry, msg: String) -> SliceOutcome {
+fn finalize_err(inner: &ServiceInner, id: JobId, entry: &JobEntry, msg: String) -> SliceOutcome {
     entry.state.set_phase(JobPhase::Failed(msg.clone()));
     *entry.result.lock().unwrap() = Some(Err(msg));
     entry.done_cv.notify_all();
+    // A failed job is terminal: re-admitting it on restart would just
+    // fail again, so its journal entry goes too.
+    if let Some(j) = &inner.journal {
+        j.remove(id);
+    }
     SliceOutcome::Finished
 }
 
@@ -517,6 +817,8 @@ mod tests {
             snapshot_every: 5,
             auto_stop: None,
             seed: 1,
+            y0: None,
+            resume_from: None,
         }
     }
 
@@ -687,5 +989,127 @@ mod tests {
         assert!(!svc.pause(999));
         assert!(!svc.resume(999));
         assert!(!svc.update(999, ParamUpdate::default()));
+        assert!(svc.checkpoint(999).is_err());
+    }
+
+    #[test]
+    fn checkpoint_command_snapshots_live_state() {
+        let svc = EmbeddingService::new(None, 1);
+        let id = svc.submit(tiny_spec(100_000));
+        let rx = svc.subscribe(id).unwrap();
+        let _ = rx.recv().expect("job is stepping");
+        let ck = svc.checkpoint(id).expect("live checkpoint");
+        assert!(ck.iter > 0, "captured mid-run");
+        assert_eq!(ck.y.len(), 200);
+        // The blob round-trips through the byte codec (what the TCP
+        // layer frames in base64).
+        let back = crate::embed::Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back, ck);
+        // Resubmitting the checkpoint resumes from its iteration.
+        let mut resumed_spec = tiny_spec(ck.iter + 3);
+        resumed_spec.resume_from = Some(ck.to_bytes());
+        let rid = svc.submit(resumed_spec);
+        let res = svc.wait(rid).unwrap();
+        assert_eq!(res.iters_run, ck.iter + 3, "resumed past the checkpoint iteration");
+        assert!(svc.stop(id));
+        let _ = svc.wait(id);
+        // Terminal jobs no longer expose a live checkpoint.
+        assert!(svc.checkpoint(id).is_err());
+    }
+
+    #[test]
+    fn mid_run_subscriber_streams_at_quantum_cadence() {
+        // Regression: without a subscriber the `latest` snapshot is
+        // throttled to IDLE_SNAPSHOT_MS. A subscriber that attaches
+        // mid-run (mid-quantum included) must immediately flip
+        // publishing to streaming cadence — the subscriber count has to
+        // be re-read at publish time, not captured when the quantum
+        // started. Throttled cadence at this problem size would space
+        // snapshots thousands of iterations apart; streaming cadence is
+        // one publish per quantum (≤ MAX_QUANTUM_STEPS steps).
+        let svc = EmbeddingService::new(None, 1);
+        let id = svc.submit(tiny_spec(1_000_000));
+        // Let the job run throttled for a while first.
+        while svc.latest_snapshot(id).is_none() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let rx = svc.subscribe(id).unwrap();
+        let mut iters = Vec::new();
+        while iters.len() < 5 {
+            let s = rx
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .expect("subscriber must start receiving promptly");
+            iters.push(s.iter);
+        }
+        for w in iters.windows(2) {
+            assert!(
+                w[1] - w[0] <= 2 * MAX_QUANTUM_STEPS,
+                "snapshots {} -> {} spaced like the idle throttle, not the quantum cadence",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(svc.stop(id));
+        let _ = svc.wait(id);
+    }
+
+    #[test]
+    fn durable_service_journals_and_readmits_jobs() {
+        let dir = std::env::temp_dir()
+            .join(format!("gsne-svc-journal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = || ServiceConfig {
+            max_concurrent: 1,
+            state_dir: Some(dir.clone()),
+            journal_every: 5,
+            ..Default::default()
+        };
+        let (id, journalled_iter) = {
+            let svc = EmbeddingService::with_config(None, cfg());
+            assert!(svc.is_durable());
+            let id = svc.submit(tiny_spec(1_000_000));
+            // Wait until a journal record exists.
+            let path = dir.join("jobs").join(format!("job-{id}.job"));
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+            while !path.exists() {
+                assert!(std::time::Instant::now() < deadline, "journal never written");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            // Drop the service mid-run: the journal entry must survive.
+            let iter = svc.latest_snapshot(id).map(|s| s.iter).unwrap_or(0);
+            (id, iter)
+        };
+        // "Restart": a new service over the same state dir re-admits it
+        // (the workers may already be driving it by the time we look).
+        let svc = EmbeddingService::with_config(None, cfg());
+        let phase = svc.phase(id).expect("re-admitted under the same id");
+        assert!(!phase.is_terminal(), "re-admitted job is runnable: {phase:?}");
+        // Cap the horizon so the resumed job finishes quickly.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !matches!(svc.phase(id), Some(JobPhase::Optimizing { .. })) {
+            assert!(std::time::Instant::now() < deadline, "resumed job never ran");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(svc.update(
+            id,
+            ParamUpdate { iters: Some(journalled_iter + 500), ..Default::default() }
+        ));
+        let res = svc.wait(id).unwrap();
+        assert!(
+            res.iters_run >= journalled_iter.saturating_sub(2 * MAX_QUANTUM_STEPS),
+            "resumed near the journalled iteration, not from zero: {} vs {journalled_iter}",
+            res.iters_run
+        );
+        // Fresh submits continue above the re-admitted id.
+        let id2 = svc.submit(tiny_spec(5));
+        assert!(id2 > id);
+        let _ = svc.wait(id2);
+        // Finished jobs clear their journal entries.
+        assert!(
+            svc.inner.journal.as_ref().unwrap().read_all().is_empty(),
+            "journal drained after completion"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,82 +1,140 @@
-//! Coordinator-level similarity cache (DESIGN.md S20, ROADMAP north
-//! star): the kNN graph + perplexity calibration + P-matrix build is a
-//! pure function of `(dataset content, knn method, k, perplexity, seed)`,
-//! and under heavy repeated traffic the same dataset is embedded over and
-//! over (engine sweeps, parameter tweaks to the *optimiser*, progressive
-//! re-runs). Caching the finished [`SparseP`] lets every repeat job skip
-//! straight to optimisation — the paper's entire "similarities" timing
-//! row drops to a dataset fingerprint.
+//! Coordinator-level similarity store (DESIGN.md S20, ROADMAP (b)/(c)):
+//! the kNN graph + perplexity calibration + P-matrix build is a pure
+//! function of `(dataset content, knn method, k, perplexity, seed)`, and
+//! under heavy repeated traffic the same dataset is embedded over and
+//! over (engine sweeps, optimiser tweaks, progressive re-runs).
 //!
-//! The cache is a small LRU keyed by [`SimKey`] holding `Arc<SparseP>`
-//! (jobs share the matrix; it is immutable after construction), with
-//! **in-flight coalescing**: [`SimilarityCache::get_or_compute`] publishes
-//! a *pending* entry before the leader starts computing, so concurrent
-//! identical submissions block on the leader's result instead of all
-//! missing and recomputing the same kNN graph. Exactly one computation
-//! runs per distinct key no matter how many jobs race on it (the
-//! `computes` counter is the proof the tests pin). Pending entries are
-//! never evicted; if the leader fails, waiters wake, one of them becomes
-//! the new leader, and the rest re-wait.
+//! The store is **two-level**, mirroring the two halves of the
+//! similarity stage:
+//!
+//! * **Level 1** — the kNN *graph*, keyed by [`GraphKey`]
+//!   `(fingerprint, method, k, seed)`. The expensive half: O(N²D) /
+//!   tree construction.
+//! * **Level 2** — the finished joint [`SparseP`], keyed by [`SimKey`]
+//!   `(GraphKey, perplexity)`. The cheap half: a fused calibration pass
+//!   over the level-1 graph.
+//!
+//! A perplexity sweep over one dataset therefore computes the graph
+//! **once** and re-runs only the fused P build per perplexity, instead
+//! of one full kNN per sweep point.
+//!
+//! Both levels are bounded LRUs of `Arc`s with **in-flight coalescing**
+//! ([`CoalescingLru`]): the first caller of a missing key publishes a
+//! *pending* entry and computes; concurrent identical callers block on
+//! it and share the result — exactly one computation per key no matter
+//! how many jobs race (the `computes` counters are the proof the tests
+//! pin). Pending entries are never evicted; if a leader fails, waiters
+//! wake and one takes over.
+//!
+//! With [`SimilarityCache::with_disk`] both levels additionally persist
+//! through a [`SimStore`] (`coordinator::store`): a memory miss probes
+//! disk before computing, and every computed value is written back —
+//! versioned, checksummed records, so a restarted service keeps its hot
+//! set and corrupt or version-skewed entries degrade to recomputation,
+//! never to trusted garbage.
 //!
 //! One per [`super::EmbeddingService`]; pipelines run outside a service
 //! pass `None` and behave exactly as before.
 
 use std::collections::HashMap;
+use std::hash::Hash;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::hd::SparseP;
+use crate::hd::{KnnGraph, SparseP};
 
 use super::job::KnnMethod;
+use super::store::SimStore;
 
-/// Everything the similarity stage's output depends on.
+/// Everything the kNN graph depends on (store level 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct SimKey {
+pub struct GraphKey {
     /// `Dataset::fingerprint()` — content hash, not the dataset name.
     pub fingerprint: u64,
     pub method: KnnMethod,
     /// Effective neighbour count (after the `min(n-1)` clamp).
     pub k: usize,
-    /// Bit pattern of the *effective* perplexity (after the `min(k)`
-    /// clamp); f32 carries no NaN here so bit equality is value equality.
-    pub perplexity_bits: u32,
     /// Seed feeding randomised kNN construction (0 for backends whose
     /// output ignores the seed — see `KnnMethod::seed_sensitive`).
     pub seed: u64,
 }
 
+/// Everything the finished P matrix depends on (store level 2): the
+/// graph plus the perplexity the fused build calibrated against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SimKey {
+    pub graph: GraphKey,
+    /// Bit pattern of the *effective* perplexity (after the `min(k)`
+    /// clamp); f32 carries no NaN here so bit equality is value equality.
+    pub perplexity_bits: u32,
+}
+
+/// Where a served value came from — the cache-hit taxonomy `wait`
+/// reports and the restart tests pin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// Ready in memory, or coalesced onto a concurrent leader.
+    Memory,
+    /// Loaded from the on-disk store (restart warm-up path).
+    Disk,
+    /// Actually computed by this caller.
+    Computed,
+}
+
+impl Source {
+    /// Did the caller skip the computation?
+    pub fn is_hit(&self) -> bool {
+        !matches!(self, Source::Computed)
+    }
+}
+
 /// Rendezvous for one in-flight computation.
-struct Pending {
-    state: Mutex<PendingState>,
+struct Pending<V> {
+    state: Mutex<PendingState<V>>,
     cv: Condvar,
 }
 
-enum PendingState {
+enum PendingState<V> {
     Computing,
-    Ready(Arc<SparseP>),
+    Ready(Arc<V>),
     Failed,
 }
 
-enum Slot {
-    Ready { p: Arc<SparseP>, last_used: u64 },
-    Pending(Arc<Pending>),
+enum Slot<V> {
+    Ready { v: Arc<V>, last_used: u64 },
+    Pending(Arc<Pending<V>>),
 }
 
-/// Bounded LRU map from [`SimKey`] to a shared P matrix, with in-flight
-/// coalescing of concurrent identical computations.
-pub struct SimilarityCache {
-    map: Mutex<HashMap<SimKey, Slot>>,
+/// Counter snapshot of one level: `(hits, misses, computes, disk_hits)`.
+/// `hits` counts memory hits, coalesced waits *and* disk hits (the
+/// caller skipped the computation); `misses` and `computes` count
+/// actual computations started.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LevelStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub computes: u64,
+    pub disk_hits: u64,
+}
+
+/// Bounded LRU map with in-flight coalescing — the machinery shared by
+/// both store levels. Value-generic so the kNN-graph and P levels are
+/// one implementation.
+struct CoalescingLru<K, V> {
+    map: Mutex<HashMap<K, Slot<V>>>,
     capacity: usize,
     tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
-    /// Similarity computations actually run through `get_or_compute`
-    /// (coalesced waiters do not count — that is the point).
+    /// Computations actually run through `get_or_compute` (coalesced
+    /// waiters and disk loads do not count — that is the point).
     computes: AtomicU64,
+    disk_hits: AtomicU64,
 }
 
-impl SimilarityCache {
-    pub fn new(capacity: usize) -> Self {
+impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
+    fn new(capacity: usize) -> Self {
         Self {
             map: Mutex::new(HashMap::new()),
             capacity: capacity.max(1),
@@ -84,6 +142,7 @@ impl SimilarityCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             computes: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
         }
     }
 
@@ -93,7 +152,7 @@ impl SimilarityCache {
 
     /// Evict least-recently-used *ready* entries down to capacity
     /// (pending entries are in flight and never evicted).
-    fn evict_over_capacity(map: &mut HashMap<SimKey, Slot>, capacity: usize) {
+    fn evict_over_capacity(map: &mut HashMap<K, Slot<V>>, capacity: usize) {
         loop {
             let ready = map
                 .iter()
@@ -110,17 +169,17 @@ impl SimilarityCache {
         }
     }
 
-    /// Look up a P matrix; counts a hit or miss and refreshes recency.
+    /// Look up a value; counts a hit or miss and refreshes recency.
     /// A pending (in-flight) entry counts as a miss and returns `None`
     /// without waiting — use [`Self::get_or_compute`] to coalesce.
-    pub fn get(&self, key: &SimKey) -> Option<Arc<SparseP>> {
+    fn get(&self, key: &K) -> Option<Arc<V>> {
         let tick = self.next_tick();
         let mut map = self.map.lock().unwrap();
         match map.get_mut(key) {
-            Some(Slot::Ready { p, last_used }) => {
+            Some(Slot::Ready { v, last_used }) => {
                 *last_used = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(p.clone())
+                Some(v.clone())
             }
             _ => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -131,46 +190,48 @@ impl SimilarityCache {
 
     /// Insert (or refresh) a ready entry, evicting the least-recently-
     /// used one when over capacity.
-    pub fn insert(&self, key: SimKey, p: Arc<SparseP>) {
+    fn insert(&self, key: K, v: Arc<V>) {
         let tick = self.next_tick();
         let mut map = self.map.lock().unwrap();
-        map.insert(key, Slot::Ready { p, last_used: tick });
+        map.insert(key, Slot::Ready { v, last_used: tick });
         Self::evict_over_capacity(&mut map, self.capacity);
     }
 
-    /// The coalescing entry point: returns `(P, was_hit)`.
+    /// The coalescing entry point: returns the value and its [`Source`].
     ///
-    /// * Ready entry → hit, immediately.
+    /// * Ready entry → `Memory`, immediately.
     /// * Nothing → this caller is the *leader*: a pending entry is
-    ///   published, `compute` runs (outside the map lock), the result is
-    ///   installed and every waiter woken. Counts one miss + one compute.
+    ///   published, `load` (the disk probe) runs first; only if it
+    ///   misses does `compute` run (outside the map lock either way).
+    ///   The result is installed and every waiter woken.
     /// * Pending entry → the caller blocks until the leader finishes and
-    ///   shares its result (counts a *hit*: no computation ran for it).
-    ///   If the leader failed, one waiter takes over as the new leader.
-    pub fn get_or_compute(
+    ///   shares its result (`Memory`: no computation ran for it). If the
+    ///   leader failed, one waiter takes over as the new leader.
+    fn get_or_compute(
         &self,
-        key: &SimKey,
-        compute: impl FnOnce() -> anyhow::Result<Arc<SparseP>>,
-    ) -> anyhow::Result<(Arc<SparseP>, bool)> {
+        key: &K,
+        load: impl FnOnce() -> Option<Arc<V>>,
+        compute: impl FnOnce() -> anyhow::Result<Arc<V>>,
+    ) -> anyhow::Result<(Arc<V>, Source)> {
+        let mut load = Some(load);
         let mut compute = Some(compute);
         loop {
-            enum Action {
-                Hit(Arc<SparseP>),
-                Lead(Arc<Pending>),
-                Wait(Arc<Pending>),
+            enum Action<V> {
+                Hit(Arc<V>),
+                Lead(Arc<Pending<V>>),
+                Wait(Arc<Pending<V>>),
             }
             let action = {
                 let tick = self.next_tick();
                 let mut map = self.map.lock().unwrap();
                 match map.get_mut(key) {
-                    Some(Slot::Ready { p, last_used }) => {
+                    Some(Slot::Ready { v, last_used }) => {
                         *last_used = tick;
                         self.hits.fetch_add(1, Ordering::Relaxed);
-                        Action::Hit(p.clone())
+                        Action::Hit(v.clone())
                     }
                     Some(Slot::Pending(pending)) => Action::Wait(pending.clone()),
                     None => {
-                        self.misses.fetch_add(1, Ordering::Relaxed);
                         let pending = Arc::new(Pending {
                             state: Mutex::new(PendingState::Computing),
                             cv: Condvar::new(),
@@ -181,20 +242,19 @@ impl SimilarityCache {
                 }
             };
             match action {
-                Action::Hit(p) => return Ok((p, true)),
+                Action::Hit(v) => return Ok((v, Source::Memory)),
                 Action::Lead(pending) => {
-                    let f = compute.take().expect("a caller leads at most once");
-                    self.computes.fetch_add(1, Ordering::Relaxed);
-                    // Run the computation with no cache lock held; on
-                    // success promote the entry, on failure (or panic —
-                    // the guard below) remove it so waiters can retry.
-                    struct Cleanup<'a> {
-                        cache: &'a SimilarityCache,
-                        key: SimKey,
-                        pending: Arc<Pending>,
+                    // Run the disk probe / computation with no cache lock
+                    // held; on success promote the entry, on failure (or
+                    // panic — the guard below) remove it so waiters can
+                    // retry.
+                    struct Cleanup<'a, K: Eq + Hash + Copy, V> {
+                        cache: &'a CoalescingLru<K, V>,
+                        key: K,
+                        pending: Arc<Pending<V>>,
                         armed: bool,
                     }
-                    impl Drop for Cleanup<'_> {
+                    impl<K: Eq + Hash + Copy, V> Drop for Cleanup<'_, K, V> {
                         fn drop(&mut self) {
                             if !self.armed {
                                 return;
@@ -212,19 +272,32 @@ impl SimilarityCache {
                     }
                     let mut guard =
                         Cleanup { cache: self, key: *key, pending: pending.clone(), armed: true };
-                    let result = f();
+                    let loader = load.take().expect("a caller leads at most once");
+                    let (result, source) = match loader() {
+                        Some(v) => {
+                            self.hits.fetch_add(1, Ordering::Relaxed);
+                            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                            (Ok(v), Source::Disk)
+                        }
+                        None => {
+                            self.misses.fetch_add(1, Ordering::Relaxed);
+                            self.computes.fetch_add(1, Ordering::Relaxed);
+                            let f = compute.take().expect("a caller leads at most once");
+                            (f(), Source::Computed)
+                        }
+                    };
                     match result {
-                        Ok(p) => {
+                        Ok(v) => {
                             guard.armed = false;
                             let tick = self.next_tick();
                             {
                                 let mut map = self.map.lock().unwrap();
-                                map.insert(*key, Slot::Ready { p: p.clone(), last_used: tick });
+                                map.insert(*key, Slot::Ready { v: v.clone(), last_used: tick });
                                 Self::evict_over_capacity(&mut map, self.capacity);
                             }
-                            *pending.state.lock().unwrap() = PendingState::Ready(p.clone());
+                            *pending.state.lock().unwrap() = PendingState::Ready(v.clone());
                             pending.cv.notify_all();
-                            return Ok((p, false));
+                            return Ok((v, source));
                         }
                         Err(e) => {
                             // Cleanup runs via the guard.
@@ -238,7 +311,7 @@ impl SimilarityCache {
                     let outcome = loop {
                         let resolved = match &*state {
                             PendingState::Computing => None,
-                            PendingState::Ready(p) => Some(Some(p.clone())),
+                            PendingState::Ready(v) => Some(Some(v.clone())),
                             PendingState::Failed => Some(None),
                         };
                         match resolved {
@@ -247,29 +320,186 @@ impl SimilarityCache {
                         }
                     };
                     drop(state);
-                    if let Some(p) = outcome {
+                    if let Some(v) = outcome {
                         // Coalesced: the leader's work served us.
                         self.hits.fetch_add(1, Ordering::Relaxed);
-                        return Ok((p, true));
+                        return Ok((v, Source::Memory));
                     }
                     // Leader failed — loop: retry as a potential leader.
+                    // (A retrying waiter may still hold its own load/
+                    // compute closures; re-arm them if consumed is
+                    // impossible — they were consumed only if *we* led.)
                 }
             }
         }
     }
 
-    /// `(hits, misses)` since construction.
-    pub fn stats(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    fn stats(&self) -> LevelStats {
+        LevelStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            computes: self.computes.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+        }
     }
 
-    /// Similarity computations actually executed via `get_or_compute`.
-    pub fn computes(&self) -> u64 {
-        self.computes.load(Ordering::Relaxed)
-    }
-
-    pub fn len(&self) -> usize {
+    fn len(&self) -> usize {
         self.map.lock().unwrap().len()
+    }
+}
+
+/// What [`SimilarityCache::get_or_compute`] hands back: the P matrix,
+/// where it came from, and (when the P had to be built) where its kNN
+/// graph came from plus the split stage timings.
+pub struct SimLookup {
+    pub p: Arc<SparseP>,
+    pub p_source: Source,
+    /// `None` when the P itself was served (the graph was never needed).
+    pub graph_source: Option<Source>,
+    /// Seconds spent inside the kNN computation (0 when not computed).
+    pub knn_s: f64,
+    /// Seconds spent inside the fused P build (0 when not computed).
+    pub perplexity_s: f64,
+}
+
+/// The two-level similarity store: a P-level and a graph-level
+/// [`CoalescingLru`] over one optional on-disk [`SimStore`].
+pub struct SimilarityCache {
+    p_level: CoalescingLru<SimKey, SparseP>,
+    graph_level: CoalescingLru<GraphKey, KnnGraph>,
+    disk: Option<SimStore>,
+}
+
+impl SimilarityCache {
+    /// In-memory store: `capacity` ready entries per level.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            p_level: CoalescingLru::new(capacity),
+            graph_level: CoalescingLru::new(capacity),
+            disk: None,
+        }
+    }
+
+    /// Store with disk persistence under `dir` (see
+    /// [`crate::coordinator::store::SimStore`]). An unusable directory
+    /// degrades to the in-memory store with a warning — persistence is
+    /// an optimisation, never a failure mode of the job path.
+    pub fn with_disk(capacity: usize, dir: &Path) -> Self {
+        let disk = match SimStore::open(dir) {
+            Ok(store) => Some(store),
+            Err(e) => {
+                eprintln!(
+                    "warning: similarity store dir {} unusable ({e}); running in-memory",
+                    dir.display()
+                );
+                None
+            }
+        };
+        Self {
+            p_level: CoalescingLru::new(capacity),
+            graph_level: CoalescingLru::new(capacity),
+            disk,
+        }
+    }
+
+    /// Whether a disk store is attached (diagnostics).
+    pub fn has_disk(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// The full two-level lookup. `knn` computes the level-1 graph;
+    /// `build_p` turns a graph into the joint P (and may flag phase
+    /// transitions on the caller's side). Either closure runs at most
+    /// once, and only on the path that actually needed it:
+    ///
+    /// * P in memory/on disk → neither runs.
+    /// * P missing, graph in memory/on disk → only `build_p` runs.
+    /// * Both missing → `knn` then `build_p`.
+    ///
+    /// Computed values are written through to disk when attached.
+    pub fn get_or_compute(
+        &self,
+        key: &SimKey,
+        knn: impl FnOnce() -> anyhow::Result<Arc<KnnGraph>>,
+        build_p: impl FnOnce(&KnnGraph) -> anyhow::Result<Arc<SparseP>>,
+    ) -> anyhow::Result<SimLookup> {
+        // Shuttle the inner-level outcome out of the P-compute closure
+        // (it only runs when the P level misses everywhere).
+        let mut graph_source = None;
+        let mut knn_s = 0.0f64;
+        let mut perplexity_s = 0.0f64;
+        let (p, p_source) = self.p_level.get_or_compute(
+            key,
+            || self.disk.as_ref().and_then(|d| d.load_p(key)).map(Arc::new),
+            || {
+                let (graph, gsrc) = self.graph_level.get_or_compute(
+                    &key.graph,
+                    || self.disk.as_ref().and_then(|d| d.load_graph(&key.graph)).map(Arc::new),
+                    || {
+                        let t = std::time::Instant::now();
+                        let g = knn()?;
+                        knn_s = t.elapsed().as_secs_f64();
+                        if let Some(d) = &self.disk {
+                            d.store_graph(&key.graph, &g);
+                        }
+                        Ok(g)
+                    },
+                )?;
+                graph_source = Some(gsrc);
+                let t = std::time::Instant::now();
+                let p = build_p(&graph)?;
+                perplexity_s = t.elapsed().as_secs_f64();
+                if let Some(d) = &self.disk {
+                    d.store_p(key, &p);
+                }
+                Ok(p)
+            },
+        )?;
+        Ok(SimLookup { p, p_source, graph_source, knn_s, perplexity_s })
+    }
+
+    /// P-level lookup without computing (tests/tools).
+    pub fn get(&self, key: &SimKey) -> Option<Arc<SparseP>> {
+        self.p_level.get(key)
+    }
+
+    /// Insert a ready P entry (tests/tools).
+    pub fn insert(&self, key: SimKey, p: Arc<SparseP>) {
+        self.p_level.insert(key, p);
+    }
+
+    /// `(hits, misses)` of the P level since construction — the
+    /// service-facing numbers (`stats` command, `sim_cache_hit`).
+    pub fn stats(&self) -> (u64, u64) {
+        let s = self.p_level.stats();
+        (s.hits, s.misses)
+    }
+
+    /// P-matrix computations actually executed.
+    pub fn computes(&self) -> u64 {
+        self.p_level.stats().computes
+    }
+
+    /// Full counter snapshot of the P level.
+    pub fn p_stats(&self) -> LevelStats {
+        self.p_level.stats()
+    }
+
+    /// Full counter snapshot of the graph level. `computes` here is the
+    /// number of kNN graphs actually built — the number the restart
+    /// acceptance test pins at zero.
+    pub fn graph_stats(&self) -> LevelStats {
+        self.graph_level.stats()
+    }
+
+    /// Ready + pending entries in the P level.
+    pub fn len(&self) -> usize {
+        self.p_level.len()
+    }
+
+    /// Ready + pending entries in the graph level.
+    pub fn graph_len(&self) -> usize {
+        self.graph_level.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -289,14 +519,25 @@ mod tests {
         })
     }
 
+    fn graph(n: usize, k: usize) -> Arc<KnnGraph> {
+        let idx = (0..n * k).map(|i| ((i + 1) % n) as u32).collect();
+        let d2 = (0..n * k).map(|i| i as f32).collect();
+        Arc::new(KnnGraph { n, k, idx, d2 })
+    }
+
+    fn gkey(fp: u64) -> GraphKey {
+        GraphKey { fingerprint: fp, method: KnnMethod::Brute, k: 10, seed: 1 }
+    }
+
     fn key(fp: u64) -> SimKey {
-        SimKey {
-            fingerprint: fp,
-            method: KnnMethod::Brute,
-            k: 10,
-            perplexity_bits: 8.0f32.to_bits(),
-            seed: 1,
-        }
+        SimKey { graph: gkey(fp), perplexity_bits: 8.0f32.to_bits() }
+    }
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("gsne-simcache-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -314,13 +555,13 @@ mod tests {
         let c = SimilarityCache::new(4);
         c.insert(key(1), p(1.0));
         let mut k2 = key(1);
-        k2.k = 11;
+        k2.graph.k = 11;
         assert!(c.get(&k2).is_none(), "different k must miss");
         let mut k3 = key(1);
         k3.perplexity_bits = 9.0f32.to_bits();
         assert!(c.get(&k3).is_none(), "different perplexity must miss");
         let mut k4 = key(1);
-        k4.method = KnnMethod::VpTree;
+        k4.graph.method = KnnMethod::VpTree;
         assert!(c.get(&k4).is_none(), "different method must miss");
     }
 
@@ -340,15 +581,49 @@ mod tests {
     #[test]
     fn get_or_compute_sequential_hit_miss() {
         let c = SimilarityCache::new(4);
-        let (a, hit) = c.get_or_compute(&key(1), || Ok(p(1.0))).unwrap();
-        assert!(!hit, "first caller leads");
-        let (b, hit) = c
-            .get_or_compute(&key(1), || panic!("must not recompute"))
+        let a = c
+            .get_or_compute(&key(1), || Ok(graph(4, 2)), |_| Ok(p(1.0)))
             .unwrap();
-        assert!(hit);
-        assert!(Arc::ptr_eq(&a, &b), "both callers share one matrix");
+        assert_eq!(a.p_source, Source::Computed, "first caller leads");
+        assert_eq!(a.graph_source, Some(Source::Computed));
+        let b = c
+            .get_or_compute(
+                &key(1),
+                || panic!("must not recompute the graph"),
+                |_| panic!("must not recompute P"),
+            )
+            .unwrap();
+        assert_eq!(b.p_source, Source::Memory);
+        assert!(b.graph_source.is_none(), "P hit never touches the graph level");
+        assert!(Arc::ptr_eq(&a.p, &b.p), "both callers share one matrix");
         assert_eq!(c.stats(), (1, 1));
         assert_eq!(c.computes(), 1);
+    }
+
+    #[test]
+    fn perplexity_sweep_shares_one_graph() {
+        // ROADMAP (b): same (fingerprint, method, k, seed), three
+        // perplexities — one kNN computation, three P builds.
+        let c = SimilarityCache::new(8);
+        for (i, perp) in [4.0f32, 8.0, 16.0].iter().enumerate() {
+            let k = SimKey { graph: gkey(1), perplexity_bits: perp.to_bits() };
+            let lookup = c
+                .get_or_compute(
+                    &k,
+                    || Ok(graph(6, 3)),
+                    |g| {
+                        assert_eq!(g.n, 6, "P build sees the shared graph");
+                        Ok(p(*perp))
+                    },
+                )
+                .unwrap();
+            assert_eq!(lookup.p_source, Source::Computed);
+            let expect = if i == 0 { Source::Computed } else { Source::Memory };
+            assert_eq!(lookup.graph_source, Some(expect), "perplexity #{i}");
+        }
+        assert_eq!(c.computes(), 3, "three P builds");
+        assert_eq!(c.graph_stats().computes, 1, "exactly one kNN");
+        assert_eq!(c.graph_len(), 1);
     }
 
     #[test]
@@ -365,17 +640,21 @@ mod tests {
             let in_compute = in_compute.clone();
             let release = release.clone();
             std::thread::spawn(move || {
-                c.get_or_compute(&key(7), || {
-                    // Announce we are computing (pending entry is live).
-                    *in_compute.0.lock().unwrap() = true;
-                    in_compute.1.notify_all();
-                    // Block until the waiter is in the cache too.
-                    let mut go = release.0.lock().unwrap();
-                    while !*go {
-                        go = release.1.wait(go).unwrap();
-                    }
-                    Ok(p(7.0))
-                })
+                c.get_or_compute(
+                    &key(7),
+                    || Ok(graph(4, 2)),
+                    |_| {
+                        // Announce we are computing (pending entry live).
+                        *in_compute.0.lock().unwrap() = true;
+                        in_compute.1.notify_all();
+                        // Block until the waiter is in the cache too.
+                        let mut go = release.0.lock().unwrap();
+                        while !*go {
+                            go = release.1.wait(go).unwrap();
+                        }
+                        Ok(p(7.0))
+                    },
+                )
                 .unwrap()
             })
         };
@@ -399,17 +678,21 @@ mod tests {
                     release.1.notify_all();
                 });
                 let out = c
-                    .get_or_compute(&key(7), || panic!("waiter must never compute"))
+                    .get_or_compute(
+                        &key(7),
+                        || panic!("waiter must never compute a graph"),
+                        |_| panic!("waiter must never compute P"),
+                    )
                     .unwrap();
                 releaser.join().unwrap();
                 out
             })
         };
-        let (pl, lead_hit) = leader.join().unwrap();
-        let (pw, wait_hit) = waiter.join().unwrap();
-        assert!(!lead_hit, "leader missed");
-        assert!(wait_hit, "waiter coalesced into a hit");
-        assert!(Arc::ptr_eq(&pl, &pw));
+        let lead = leader.join().unwrap();
+        let wait = waiter.join().unwrap();
+        assert_eq!(lead.p_source, Source::Computed, "leader computed");
+        assert_eq!(wait.p_source, Source::Memory, "waiter coalesced into a hit");
+        assert!(Arc::ptr_eq(&lead.p, &wait.p));
         assert_eq!(c.computes(), 1, "exactly one computation ran");
         assert_eq!(c.stats(), (1, 1));
         assert_eq!(c.len(), 1);
@@ -418,14 +701,20 @@ mod tests {
     #[test]
     fn failed_leader_lets_a_waiter_take_over() {
         let c = Arc::new(SimilarityCache::new(4));
-        let failed = c.get_or_compute(&key(3), || anyhow::bail!("knn exploded"));
+        let failed = c.get_or_compute(&key(3), || anyhow::bail!("knn exploded"), |_| p_ok(3.0));
         assert!(failed.is_err());
         assert_eq!(c.len(), 0, "failed computation leaves no entry");
         // The key is free again: the next caller leads and succeeds.
-        let (got, hit) = c.get_or_compute(&key(3), || Ok(p(3.0))).unwrap();
-        assert!(!hit);
-        assert_eq!(got.perplexity, 3.0);
-        assert_eq!(c.computes(), 2);
+        let got = c.get_or_compute(&key(3), || Ok(graph(4, 2)), |_| p_ok(3.0)).unwrap();
+        assert_eq!(got.p_source, Source::Computed);
+        assert_eq!(got.p.perplexity, 3.0);
+        assert_eq!(c.computes(), 2, "both attempts started a P computation");
+        // The graph level cleaned up its failed pending entry too.
+        assert_eq!(c.graph_len(), 1, "only the successful graph remains");
+    }
+
+    fn p_ok(tag: f32) -> anyhow::Result<Arc<SparseP>> {
+        Ok(p(tag))
     }
 
     #[test]
@@ -433,17 +722,94 @@ mod tests {
         let c = SimilarityCache::new(1);
         // Manually wedge a pending entry, then flood with ready inserts.
         let pending = Arc::new(Pending {
-            state: Mutex::new(PendingState::Computing),
+            state: Mutex::new(PendingState::<SparseP>::Computing),
             cv: Condvar::new(),
         });
-        c.map.lock().unwrap().insert(key(9), Slot::Pending(pending));
+        c.p_level.map.lock().unwrap().insert(key(9), Slot::Pending(pending));
         c.insert(key(1), p(1.0));
         c.insert(key(2), p(2.0));
-        let map = c.map.lock().unwrap();
+        let map = c.p_level.map.lock().unwrap();
         assert!(
             matches!(map.get(&key(9)), Some(Slot::Pending(_))),
             "in-flight entry must never be evicted"
         );
         assert_eq!(map.len(), 2, "one ready + the pending");
+    }
+
+    #[test]
+    fn disk_store_survives_a_cache_restart() {
+        let dir = tmp_dir("restart");
+        let first = SimilarityCache::with_disk(2, &dir);
+        let a = first.get_or_compute(&key(5), || Ok(graph(4, 2)), |_| p_ok(5.0)).unwrap();
+        assert_eq!(a.p_source, Source::Computed);
+
+        // "Restart": a fresh cache over the same directory.
+        let second = SimilarityCache::with_disk(2, &dir);
+        let b = second
+            .get_or_compute(
+                &key(5),
+                || panic!("graph must come from disk, not recompute"),
+                |_| panic!("P must come from disk, not recompute"),
+            )
+            .unwrap();
+        assert_eq!(b.p_source, Source::Disk, "restart serves from the store");
+        assert!(b.p_source.is_hit());
+        assert_eq!(b.p.perplexity, 5.0);
+        assert_eq!(second.computes(), 0);
+        assert_eq!(second.graph_stats().computes, 0, "zero recomputed kNN graphs");
+        assert_eq!(second.p_stats().disk_hits, 1);
+
+        // A new perplexity over the same data only rebuilds P: the
+        // *graph* comes from disk.
+        let k2 = SimKey { graph: gkey(5), perplexity_bits: 12.0f32.to_bits() };
+        let c2 = second
+            .get_or_compute(&k2, || panic!("graph is on disk"), |_| p_ok(12.0))
+            .unwrap();
+        assert_eq!(c2.p_source, Source::Computed);
+        assert_eq!(c2.graph_source, Some(Source::Disk));
+        assert_eq!(second.graph_stats().computes, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_disk_entries_degrade_to_recomputation() {
+        let dir = tmp_dir("corrupt");
+        {
+            let c = SimilarityCache::with_disk(2, &dir);
+            c.get_or_compute(&key(6), || Ok(graph(4, 2)), |_| p_ok(6.0)).unwrap();
+        }
+        // Scribble over every record.
+        for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+            std::fs::write(entry.path(), b"corrupted beyond recognition").unwrap();
+        }
+        let c = SimilarityCache::with_disk(2, &dir);
+        let got = c.get_or_compute(&key(6), || Ok(graph(4, 2)), |_| p_ok(6.5)).unwrap();
+        assert_eq!(got.p_source, Source::Computed, "corruption is a miss, not garbage");
+        assert_eq!(got.p.perplexity, 6.5);
+        assert_eq!(c.p_stats().disk_hits, 0);
+        // The recomputation healed the store.
+        let c2 = SimilarityCache::with_disk(2, &dir);
+        let healed = c2.get_or_compute(&key(6), || Ok(graph(4, 2)), |_| p_ok(7.0)).unwrap();
+        assert_eq!(healed.p_source, Source::Disk);
+        assert_eq!(healed.p.perplexity, 6.5, "healed record serves the recomputed value");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_does_not_lose_persisted_entries() {
+        // Memory capacity 1 with three keys: evicted entries come back
+        // from disk, not from recomputation.
+        let dir = tmp_dir("evict");
+        let c = SimilarityCache::with_disk(1, &dir);
+        for fp in 1..=3u64 {
+            c.get_or_compute(&key(fp), || Ok(graph(4, 2)), |_| p_ok(fp as f32)).unwrap();
+        }
+        assert_eq!(c.len(), 1, "memory stayed bounded");
+        let back = c
+            .get_or_compute(&key(1), || panic!("on disk"), |_| panic!("on disk"))
+            .unwrap();
+        assert_eq!(back.p_source, Source::Disk);
+        assert_eq!(back.p.perplexity, 1.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

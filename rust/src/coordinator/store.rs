@@ -1,0 +1,492 @@
+//! Durable coordinator state (ROADMAP (c)/(d)): the on-disk similarity
+//! store behind [`super::simcache::SimilarityCache`] and the checkpoint
+//! journal behind `serve --state-dir`.
+//!
+//! Both persist through one **record** framing: magic + kind + version +
+//! length + FNV-1a checksum + payload, written atomically (temp file +
+//! rename) so a crash mid-write never leaves a half-record under the
+//! final name. Reads are paranoid by construction — a record that is
+//! truncated, version-skewed, checksum-mismatched, from a different
+//! kind, or whose *echoed key* does not match the requested one (the
+//! filename is only a hash) is treated as **absent**, never trusted:
+//! the cache falls back to recomputing and the journal skips the job.
+//! Corrupt files are best-effort deleted so they cannot shadow a later
+//! healthy write.
+//!
+//! Layout under a service state dir:
+//!
+//! ```text
+//! <state-dir>/
+//!   simstore/g-<hash16>.rec   level-1: kNN graph per (fingerprint, method, k, seed)
+//!   simstore/p-<hash16>.rec   level-2: joint P per (graph key, perplexity)
+//!   jobs/job-<id>.job         journalled spec + checkpoint of a live job
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::hd::sparse::Csr;
+use crate::hd::{KnnGraph, SparseP};
+use crate::util::hash::fnv1a;
+
+use super::job::KnnMethod;
+use super::simcache::{GraphKey, SimKey};
+
+const RECORD_MAGIC: &[u8; 8] = b"GSNESTR1";
+const RECORD_VERSION: u16 = 1;
+const HEADER_LEN: usize = 8 + 1 + 2 + 8 + 8;
+
+/// Record kinds (part of the header, so a graph record renamed over a P
+/// record path is rejected rather than misparsed).
+pub const KIND_GRAPH: u8 = b'G';
+pub const KIND_P: u8 = b'P';
+pub const KIND_JOB: u8 = b'J';
+
+/// Frame and atomically write one record. The temp file carries the
+/// process id so concurrent writers (two services misconfigured onto
+/// one dir) cannot interleave; the final rename is atomic on POSIX.
+pub fn write_record(path: &Path, kind: u8, payload: &[u8]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    buf.extend_from_slice(RECORD_MAGIC);
+    buf.push(kind);
+    buf.extend_from_slice(&RECORD_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &buf)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Read and verify one record; any defect (missing, truncated, trailing
+/// bytes, bad magic/kind/version/checksum) reads as `None`, and the
+/// offending file is best-effort removed so it cannot mask later writes.
+pub fn read_record(path: &Path, kind: u8) -> Option<Vec<u8>> {
+    let bytes = std::fs::read(path).ok()?;
+    let payload = (|| {
+        if bytes.len() < HEADER_LEN || &bytes[..8] != RECORD_MAGIC || bytes[8] != kind {
+            return None;
+        }
+        if u16::from_le_bytes(bytes[9..11].try_into().unwrap()) != RECORD_VERSION {
+            return None;
+        }
+        let len = u64::from_le_bytes(bytes[11..19].try_into().unwrap()) as usize;
+        if bytes.len() != HEADER_LEN + len {
+            return None;
+        }
+        let sum = u64::from_le_bytes(bytes[19..27].try_into().unwrap());
+        let payload = &bytes[HEADER_LEN..];
+        (fnv1a(payload) == sum).then(|| payload.to_vec())
+    })();
+    if payload.is_none() {
+        let _ = std::fs::remove_file(path);
+    }
+    payload
+}
+
+/// Little-endian payload reader: every accessor returns `None` past the
+/// end, so decoders are total functions over arbitrary bytes.
+struct Rd<'a>(&'a [u8]);
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.0.len() < n {
+            return None;
+        }
+        let (head, tail) = self.0.split_at(n);
+        self.0 = tail;
+        Some(head)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Option<f32> {
+        Some(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u32s(&mut self, n: usize) -> Option<Vec<u32>> {
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn f32s(&mut self, n: usize) -> Option<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn u64s(&mut self, n: usize) -> Option<Vec<u64>> {
+        let raw = self.take(n.checked_mul(8)?)?;
+        Some(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn done(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+fn encode_graph_key(key: &GraphKey, out: &mut Vec<u8>) {
+    out.extend_from_slice(&key.fingerprint.to_le_bytes());
+    out.push(key.method.tag());
+    out.extend_from_slice(&(key.k as u64).to_le_bytes());
+    out.extend_from_slice(&key.seed.to_le_bytes());
+}
+
+fn decode_graph_key(rd: &mut Rd) -> Option<GraphKey> {
+    let fingerprint = rd.u64()?;
+    let method = KnnMethod::from_tag(rd.u8()?)?;
+    let k = rd.u64()? as usize;
+    let seed = rd.u64()?;
+    Some(GraphKey { fingerprint, method, k, seed })
+}
+
+fn encode_sim_key(key: &SimKey, out: &mut Vec<u8>) {
+    encode_graph_key(&key.graph, out);
+    out.extend_from_slice(&key.perplexity_bits.to_le_bytes());
+}
+
+fn decode_sim_key(rd: &mut Rd) -> Option<SimKey> {
+    let graph = decode_graph_key(rd)?;
+    let perplexity_bits = rd.u32()?;
+    Some(SimKey { graph, perplexity_bits })
+}
+
+fn key_file(dir: &Path, prefix: &str, key_bytes: &[u8]) -> PathBuf {
+    dir.join(format!("{prefix}-{:016x}.rec", fnv1a(key_bytes)))
+}
+
+/// The on-disk half of the two-level similarity store: level-1 kNN-graph
+/// records and level-2 joint-P records, keyed by a filename hash with the
+/// full key echoed (and verified) inside the payload. Writes are
+/// advisory — an unwritable dir degrades to an in-memory-only cache with
+/// a one-line warning, never an error on the job path.
+pub struct SimStore {
+    dir: PathBuf,
+}
+
+impl SimStore {
+    /// Open (creating) the store directory.
+    pub fn open(dir: &Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Self { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn graph_path(&self, key: &GraphKey) -> PathBuf {
+        let mut kb = Vec::with_capacity(25);
+        encode_graph_key(key, &mut kb);
+        key_file(&self.dir, "g", &kb)
+    }
+
+    fn p_path(&self, key: &SimKey) -> PathBuf {
+        let mut kb = Vec::with_capacity(29);
+        encode_sim_key(key, &mut kb);
+        key_file(&self.dir, "p", &kb)
+    }
+
+    pub fn store_graph(&self, key: &GraphKey, g: &KnnGraph) {
+        let mut payload = Vec::with_capacity(41 + 8 * g.idx.len());
+        encode_graph_key(key, &mut payload);
+        payload.extend_from_slice(&(g.n as u64).to_le_bytes());
+        payload.extend_from_slice(&(g.k as u64).to_le_bytes());
+        for &i in &g.idx {
+            payload.extend_from_slice(&i.to_le_bytes());
+        }
+        for &d in &g.d2 {
+            payload.extend_from_slice(&d.to_le_bytes());
+        }
+        if let Err(e) = write_record(&self.graph_path(key), KIND_GRAPH, &payload) {
+            eprintln!("warning: sim store graph write failed ({e}); continuing without");
+        }
+    }
+
+    pub fn load_graph(&self, key: &GraphKey) -> Option<KnnGraph> {
+        let payload = read_record(&self.graph_path(key), KIND_GRAPH)?;
+        let mut rd = Rd(&payload);
+        if decode_graph_key(&mut rd)? != *key {
+            return None; // filename-hash collision with another key
+        }
+        let n = rd.u64()? as usize;
+        let k = rd.u64()? as usize;
+        let len = n.checked_mul(k)?;
+        let idx = rd.u32s(len)?;
+        let d2 = rd.f32s(len)?;
+        if !rd.done() || idx.iter().any(|&i| i as usize >= n) {
+            return None;
+        }
+        Some(KnnGraph { n, k, idx, d2 })
+    }
+
+    pub fn store_p(&self, key: &SimKey, p: &SparseP) {
+        let csr = &p.csr;
+        let mut payload =
+            Vec::with_capacity(64 + 8 * csr.row_ptr.len() + 8 * csr.val.len());
+        encode_sim_key(key, &mut payload);
+        payload.extend_from_slice(&p.perplexity.to_le_bytes());
+        payload.extend_from_slice(&(csr.n_rows as u64).to_le_bytes());
+        payload.extend_from_slice(&(csr.n_cols as u64).to_le_bytes());
+        payload.extend_from_slice(&(csr.nnz() as u64).to_le_bytes());
+        for &r in &csr.row_ptr {
+            payload.extend_from_slice(&(r as u64).to_le_bytes());
+        }
+        for &c in &csr.col {
+            payload.extend_from_slice(&c.to_le_bytes());
+        }
+        for &v in &csr.val {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        if let Err(e) = write_record(&self.p_path(key), KIND_P, &payload) {
+            eprintln!("warning: sim store P write failed ({e}); continuing without");
+        }
+    }
+
+    pub fn load_p(&self, key: &SimKey) -> Option<SparseP> {
+        let payload = read_record(&self.p_path(key), KIND_P)?;
+        let mut rd = Rd(&payload);
+        if decode_sim_key(&mut rd)? != *key {
+            return None;
+        }
+        let perplexity = rd.f32()?;
+        let n_rows = rd.u64()? as usize;
+        let n_cols = rd.u64()? as usize;
+        let nnz = rd.u64()? as usize;
+        let row_ptr: Vec<usize> =
+            rd.u64s(n_rows.checked_add(1)?)?.into_iter().map(|v| v as usize).collect();
+        let col = rd.u32s(nnz)?;
+        let val = rd.f32s(nnz)?;
+        // Structural validation: monotone row_ptr bounded by nnz, and
+        // column indices inside the matrix.
+        let monotone = row_ptr.windows(2).all(|w| w[0] <= w[1]);
+        if !rd.done()
+            || !monotone
+            || row_ptr.first() != Some(&0)
+            || row_ptr.last() != Some(&nnz)
+            || col.iter().any(|&c| c as usize >= n_cols)
+        {
+            return None;
+        }
+        Some(SparseP { csr: Csr { n_rows, n_cols, row_ptr, col, val }, perplexity })
+    }
+}
+
+/// The checkpoint journal: one record per live job, rewritten in place
+/// at the configured interval. Payload is `[id][spec-json][checkpoint
+/// bytes]` — everything `serve --state-dir` needs to re-admit the job as
+/// resumable after a restart.
+pub struct JobJournal {
+    dir: PathBuf,
+}
+
+/// One re-admittable journal entry.
+pub struct JournalEntry {
+    pub id: u64,
+    /// The job spec as protocol-shaped JSON (current session params at
+    /// journal time, so TCP `update`s survive the restart too).
+    pub spec_json: String,
+    /// Serialised [`crate::embed::Checkpoint`].
+    pub checkpoint: Vec<u8>,
+}
+
+impl JobJournal {
+    pub fn open(dir: &Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Self { dir: dir.to_path_buf() })
+    }
+
+    fn path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("job-{id}.job"))
+    }
+
+    /// Journal (or re-journal) one job. Advisory like the sim store.
+    pub fn write(&self, id: u64, spec_json: &str, checkpoint: &[u8]) {
+        let spec = spec_json.as_bytes();
+        let mut payload = Vec::with_capacity(24 + spec.len() + checkpoint.len());
+        payload.extend_from_slice(&id.to_le_bytes());
+        payload.extend_from_slice(&(spec.len() as u64).to_le_bytes());
+        payload.extend_from_slice(spec);
+        payload.extend_from_slice(checkpoint);
+        if let Err(e) = write_record(&self.path(id), KIND_JOB, &payload) {
+            eprintln!("warning: checkpoint journal write failed for job {id} ({e})");
+        }
+    }
+
+    /// Drop a finished (or failed) job's journal entry.
+    pub fn remove(&self, id: u64) {
+        let _ = std::fs::remove_file(self.path(id));
+    }
+
+    /// Every readable journal entry, sorted by id. Corrupt entries are
+    /// skipped (and removed by [`read_record`]); an id that disagrees
+    /// with its payload is skipped too.
+    pub fn read_all(&self) -> Vec<JournalEntry> {
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("job") {
+                continue;
+            }
+            let Some(payload) = read_record(&path, KIND_JOB) else {
+                continue;
+            };
+            let parsed = (|| {
+                let mut rd = Rd(&payload);
+                let id = rd.u64()?;
+                let spec_len = rd.u64()? as usize;
+                let spec_json = String::from_utf8(rd.take(spec_len)?.to_vec()).ok()?;
+                let checkpoint = rd.0.to_vec();
+                Some(JournalEntry { id, spec_json, checkpoint })
+            })();
+            if let Some(e) = parsed {
+                out.push(e);
+            }
+        }
+        out.sort_by_key(|e| e.id);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gsne-store-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn graph_key() -> GraphKey {
+        GraphKey { fingerprint: 0xfeed, method: KnnMethod::Brute, k: 3, seed: 7 }
+    }
+
+    fn sim_key() -> SimKey {
+        SimKey { graph: graph_key(), perplexity_bits: 8.5f32.to_bits() }
+    }
+
+    fn graph() -> KnnGraph {
+        KnnGraph {
+            n: 4,
+            k: 3,
+            idx: vec![1, 2, 3, 0, 2, 3, 0, 1, 3, 0, 1, 2],
+            d2: (0..12).map(|i| i as f32 * 0.5).collect(),
+        }
+    }
+
+    fn sparse_p() -> SparseP {
+        SparseP {
+            csr: Csr::from_rows(2, 2, 2, vec![0, 1, 1, 0], vec![0.1, 0.4, 0.3, 0.2]),
+            perplexity: 8.5,
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_and_rejection() {
+        let dir = tmp_dir("record");
+        let path = dir.join("x.rec");
+        write_record(&path, KIND_GRAPH, b"hello payload").unwrap();
+        assert_eq!(read_record(&path, KIND_GRAPH).unwrap(), b"hello payload");
+
+        // Wrong kind is rejected (and the file removed).
+        write_record(&path, KIND_GRAPH, b"hello payload").unwrap();
+        assert!(read_record(&path, KIND_P).is_none());
+        assert!(!path.exists(), "defective reads clear the file");
+
+        // Flipped payload byte → checksum mismatch.
+        write_record(&path, KIND_GRAPH, b"hello payload").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        *bytes.last_mut().unwrap() ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_record(&path, KIND_GRAPH).is_none());
+
+        // Truncation.
+        write_record(&path, KIND_GRAPH, b"hello payload").unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(read_record(&path, KIND_GRAPH).is_none());
+
+        // Version skew.
+        write_record(&path, KIND_GRAPH, b"hello payload").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[9] = 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_record(&path, KIND_GRAPH).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn graph_and_p_records_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let store = SimStore::open(&dir).unwrap();
+        assert!(store.load_graph(&graph_key()).is_none(), "empty store misses");
+
+        store.store_graph(&graph_key(), &graph());
+        let g = store.load_graph(&graph_key()).expect("graph persisted");
+        assert_eq!(g.idx, graph().idx);
+        assert_eq!(g.d2, graph().d2);
+
+        store.store_p(&sim_key(), &sparse_p());
+        let p = store.load_p(&sim_key()).expect("P persisted");
+        assert_eq!(p.csr, sparse_p().csr);
+        assert_eq!(p.perplexity, 8.5);
+
+        // A different key misses even though records exist.
+        let mut other = graph_key();
+        other.k = 4;
+        assert!(store.load_graph(&other).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_store_entries_read_as_misses() {
+        let dir = tmp_dir("corrupt");
+        let store = SimStore::open(&dir).unwrap();
+        store.store_p(&sim_key(), &sparse_p());
+        // Scribble over every record in the dir.
+        for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+            std::fs::write(entry.path(), b"not a record at all").unwrap();
+        }
+        assert!(store.load_p(&sim_key()).is_none(), "corruption is a miss, not a panic");
+        // And the next write/read cycle is healthy again.
+        store.store_p(&sim_key(), &sparse_p());
+        assert!(store.load_p(&sim_key()).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn structurally_invalid_payloads_are_rejected() {
+        let dir = tmp_dir("structure");
+        let store = SimStore::open(&dir).unwrap();
+        // A graph whose neighbour indices exceed n: valid record framing,
+        // invalid content — must not be served.
+        let mut bad = graph();
+        bad.idx[0] = 99;
+        store.store_graph(&graph_key(), &bad);
+        assert!(store.load_graph(&graph_key()).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_roundtrip_skips_corruption() {
+        let dir = tmp_dir("journal");
+        let j = JobJournal::open(&dir).unwrap();
+        j.write(3, r#"{"dataset":"gaussians"}"#, b"ckpt-bytes-3");
+        j.write(1, r#"{"dataset":"mnist"}"#, b"ckpt-bytes-1");
+        j.write(2, r#"{"dataset":"mnist"}"#, b"ckpt-bytes-2");
+        j.remove(2);
+        // Corrupt job 3's record on disk.
+        std::fs::write(dir.join("job-3.job"), b"garbage").unwrap();
+        let all = j.read_all();
+        assert_eq!(all.len(), 1, "one live, one removed, one corrupt");
+        assert_eq!(all[0].id, 1);
+        assert_eq!(all[0].spec_json, r#"{"dataset":"mnist"}"#);
+        assert_eq!(all[0].checkpoint, b"ckpt-bytes-1");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -17,6 +17,16 @@
 //! many such sessions over a small worker pool. [`Engine::run`] survives
 //! as a thin convenience loop over a session ([`run_session`]), so batch
 //! callers and benches are unchanged.
+//!
+//! The checkpoint byte codec ([`Checkpoint::to_bytes`] /
+//! [`Checkpoint::from_bytes`]) is the durability currency of the whole
+//! system: the TCP protocol frames it in base64 (`checkpoint` /
+//! `submit.resume_from`), the service journal persists it per running
+//! job, and `coordinator::store` wraps it in checksummed records. Its
+//! tensors are engine-agnostic; engine-specific extras (the gpgpu
+//! grid-policy hysteresis, [`GridCheckpoint`]) ride in a versioned
+//! extension block, so restores are bit-identical on the device path
+//! too and legacy (v1) blobs stay readable.
 
 use std::sync::Arc;
 
@@ -105,7 +115,12 @@ pub enum Control {
 /// engine and hand off to a precise one.
 ///
 /// For the device engine the vectors are the *padded* bucket tensors
-/// (restore validates the length either way).
+/// (restore validates the length either way), and `grid` carries the
+/// adaptive-resolution policy's hysteresis state so a restored device
+/// session replays **bit-identically** — without it the restored session
+/// re-derives its grid from the positions alone and can sit on the other
+/// side of a hysteresis band, changing the field approximation for the
+/// next few iterations. CPU engines leave `grid` as `None`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     /// Engine that produced the checkpoint (informational).
@@ -117,15 +132,43 @@ pub struct Checkpoint {
     pub y: Vec<f32>,
     pub vel: Vec<f32>,
     pub gains: Vec<f32>,
+    /// Device-engine grid-policy state (see [`GridCheckpoint`]).
+    pub grid: Option<GridCheckpoint>,
 }
 
-const CHECKPOINT_MAGIC: &[u8; 8] = b"GSNECKP1";
+/// The gpgpu engine's adaptive-grid hysteresis state, serialised with
+/// the checkpoint (ROADMAP item (f)): everything `GridPolicy` + the
+/// session's diameter tracking need to continue exactly where the
+/// checkpointed session stopped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridCheckpoint {
+    /// Embedding diameter as the *device* reported it after the last
+    /// step (recomputing it host-side from `y` can differ in the last
+    /// ulp, which is enough to flip a grid decision).
+    pub diameter: f32,
+    /// The grid the hysteresis policy is currently latched on.
+    pub current: Option<usize>,
+    /// Grid used by the last executed step (switch accounting).
+    pub last_grid: usize,
+    /// Switches since begin/warm-start (observability counter).
+    pub grid_switches: usize,
+}
+
+/// v1: engine/iter/elapsed + the three state tensors.
+const CHECKPOINT_MAGIC_V1: &[u8; 8] = b"GSNECKP1";
+/// v2 appends a length-prefixed extension block (grid-policy state).
+const CHECKPOINT_MAGIC_V2: &[u8; 8] = b"GSNECKP2";
+
+/// Extension-block tag for [`GridCheckpoint`].
+const EXT_GRID: u8 = 1;
 
 impl Checkpoint {
-    /// Compact binary encoding (little-endian; see `from_bytes`).
+    /// Compact binary encoding (little-endian; see `from_bytes`): magic,
+    /// engine name, iter, elapsed, the three f32 tensors, then a
+    /// length-prefixed extension block (empty for CPU engines).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(64 + 12 * self.y.len());
-        out.extend_from_slice(CHECKPOINT_MAGIC);
+        let mut out = Vec::with_capacity(96 + 12 * self.y.len());
+        out.extend_from_slice(CHECKPOINT_MAGIC_V2);
         let name = self.engine.as_bytes();
         out.extend_from_slice(&(name.len() as u64).to_le_bytes());
         out.extend_from_slice(name);
@@ -135,10 +178,22 @@ impl Checkpoint {
         for v in self.y.iter().chain(&self.vel).chain(&self.gains) {
             out.extend_from_slice(&v.to_le_bytes());
         }
+        let mut ext = Vec::new();
+        if let Some(g) = &self.grid {
+            ext.push(EXT_GRID);
+            ext.extend_from_slice(&g.diameter.to_le_bytes());
+            ext.extend_from_slice(&(g.current.map_or(0, |c| c as u64)).to_le_bytes());
+            ext.extend_from_slice(&(g.last_grid as u64).to_le_bytes());
+            ext.extend_from_slice(&(g.grid_switches as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(ext.len() as u64).to_le_bytes());
+        out.extend_from_slice(&ext);
         out
     }
 
     /// Inverse of [`Self::to_bytes`]; validates magic and lengths.
+    /// Accepts both the current (v2) and the legacy v1 framing (v1 blobs
+    /// simply carry no extension block, so `grid` restores as `None`).
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
         struct Cur<'a>(&'a [u8]);
         impl<'a> Cur<'a> {
@@ -151,9 +206,14 @@ impl Checkpoint {
             fn u64(&mut self) -> anyhow::Result<u64> {
                 Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
             }
+            fn f32(&mut self) -> anyhow::Result<f32> {
+                Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+            }
         }
         let mut c = Cur(bytes);
-        anyhow::ensure!(c.take(8)? == CHECKPOINT_MAGIC, "not a gpgpu-sne checkpoint");
+        let magic = c.take(8)?;
+        let v2 = magic == CHECKPOINT_MAGIC_V2;
+        anyhow::ensure!(v2 || magic == CHECKPOINT_MAGIC_V1, "not a gpgpu-sne checkpoint");
         let name_len = c.u64()? as usize;
         anyhow::ensure!(name_len <= 256, "implausible engine-name length {name_len}");
         let engine = String::from_utf8(c.take(name_len)?.to_vec())?;
@@ -178,7 +238,26 @@ impl Checkpoint {
         f32s(&mut y)?;
         f32s(&mut vel)?;
         f32s(&mut gains)?;
-        Ok(Self { engine, iter, elapsed_s, y, vel, gains })
+        let grid = if v2 {
+            let ext_len = c.u64()? as usize;
+            let mut ext = Cur(c.take(ext_len)?);
+            if ext_len == 0 {
+                None
+            } else {
+                anyhow::ensure!(ext.take(1)?[0] == EXT_GRID, "unknown checkpoint extension");
+                let diameter = ext.f32()?;
+                let current = match ext.u64()? as usize {
+                    0 => None,
+                    g => Some(g),
+                };
+                let last_grid = ext.u64()? as usize;
+                let grid_switches = ext.u64()? as usize;
+                Some(GridCheckpoint { diameter, current, last_grid, grid_switches })
+            }
+        } else {
+            None
+        };
+        Ok(Self { engine, iter, elapsed_s, y, vel, gains, grid })
     }
 }
 
@@ -239,6 +318,38 @@ pub trait Engine: Send {
     /// Start a stepwise optimisation session over `p`. The session owns
     /// its state and scratch; the engine can begin further independent
     /// sessions.
+    ///
+    /// # Quickstart
+    ///
+    /// Dataset → kNN → P → session; step it, checkpoint it, restore the
+    /// checkpoint into a fresh session and get the same positions back:
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use gpgpu_sne::embed::{self, Checkpoint, OptParams};
+    /// use gpgpu_sne::hd::{backend, perplexity};
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let data = gpgpu_sne::data::by_name("gaussians", 80, 1)?;
+    /// let knn = backend::by_name("brute")?.knn(&data, 15, 1);
+    /// let p = Arc::new(perplexity::joint_p(&knn, 5.0));
+    ///
+    /// let params = OptParams { iters: 20, exaggeration_iters: 5, ..Default::default() };
+    /// let mut engine = embed::by_name("bh-0.5", None)?;
+    /// let mut session = engine.begin(p.clone(), &params)?;
+    /// while session.iter() < 10 {
+    ///     session.step()?;
+    /// }
+    ///
+    /// // Serialise the optimiser state, restore it elsewhere, resume.
+    /// let blob = session.checkpoint().to_bytes();
+    /// let mut resumed = engine.begin(p, &params)?;
+    /// resumed.restore(&Checkpoint::from_bytes(&blob)?)?;
+    /// assert_eq!(resumed.iter(), 10);
+    /// assert_eq!(resumed.positions(), session.positions());
+    /// # Ok(())
+    /// # }
+    /// ```
     fn begin(
         &mut self,
         p: Arc<SparseP>,
@@ -612,6 +723,7 @@ impl EmbeddingSession for GdSession {
             y: self.state.y.clone(),
             vel: self.state.vel.clone(),
             gains: self.state.gains.clone(),
+            grid: None,
         }
     }
 
@@ -723,6 +835,7 @@ mod tests {
             y: (0..2 * n).map(|_| rng.gauss_f32(0.0, 3.0)).collect(),
             vel: (0..2 * n).map(|_| rng.gauss_f32(0.0, 0.3)).collect(),
             gains: (0..2 * n).map(|_| rng.gauss_f32(1.0, 0.1)).collect(),
+            grid: None,
         };
         let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
         assert_eq!(back, ck);
@@ -731,6 +844,54 @@ mod tests {
         let mut bytes = ck.to_bytes();
         bytes.truncate(bytes.len() - 3);
         assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn checkpoint_grid_extension_roundtrips() {
+        // Device checkpoints carry the grid-policy hysteresis state
+        // (ROADMAP (f)); the extension must round-trip bit-exactly,
+        // including the "no grid chosen yet" case.
+        for current in [None, Some(128usize)] {
+            let ck = Checkpoint {
+                engine: "gpgpu".into(),
+                iter: 7,
+                elapsed_s: 0.25,
+                y: vec![1.0, -2.0],
+                vel: vec![0.5, 0.5],
+                gains: vec![1.0, 1.0],
+                grid: Some(GridCheckpoint {
+                    diameter: 17.25,
+                    current,
+                    last_grid: 128,
+                    grid_switches: 3,
+                }),
+            };
+            let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back, ck);
+        }
+    }
+
+    #[test]
+    fn legacy_v1_checkpoints_still_decode() {
+        // A v1 blob (pre grid-extension framing) restores with
+        // `grid: None` — durable journals written by older builds must
+        // not become unreadable.
+        let ck = Checkpoint {
+            engine: "exact".into(),
+            iter: 9,
+            elapsed_s: 1.5,
+            y: vec![0.25, -0.5, 1.0, 2.0],
+            vel: vec![0.0; 4],
+            gains: vec![1.0; 4],
+            grid: None,
+        };
+        // Hand-assemble the v1 framing: v2 minus the extension block,
+        // with the old magic.
+        let v2 = ck.to_bytes();
+        let mut v1 = v2[..v2.len() - 8].to_vec(); // drop the empty ext block
+        v1[..8].copy_from_slice(b"GSNECKP1");
+        let back = Checkpoint::from_bytes(&v1).unwrap();
+        assert_eq!(back, ck);
     }
 
     #[test]

@@ -12,7 +12,9 @@ use std::sync::Arc;
 
 use anyhow::Context;
 
-use super::common::{Checkpoint, EmbeddingSession, Engine, GdState, IterStats, OptParams};
+use super::common::{
+    Checkpoint, EmbeddingSession, Engine, GdState, GridCheckpoint, IterStats, OptParams,
+};
 use crate::hd::SparseP;
 use crate::runtime::{Runtime, StaticArgs, StepState};
 
@@ -74,6 +76,14 @@ impl GridPolicy {
 
     pub fn current(&self) -> Option<usize> {
         self.current
+    }
+
+    /// Restore the hysteresis latch from a checkpoint. A grid that is
+    /// not in this policy's variant set (checkpoint taken against a
+    /// different artifact build) is dropped — the policy then re-chooses
+    /// freshly, which is the legacy (pre-serialisation) behaviour.
+    pub fn set_current(&mut self, grid: Option<usize>) {
+        self.current = grid.filter(|g| self.grids.contains(g));
     }
 }
 
@@ -275,10 +285,11 @@ impl EmbeddingSession for GpgpuSession {
         Ok(())
     }
 
-    /// Checkpoints carry the *padded* bucket tensors. The grid policy's
-    /// hysteresis state is intentionally not serialised: a restored
-    /// session re-chooses its grid from the restored diameter, which only
-    /// affects the approximation level of the next few fields.
+    /// Checkpoints carry the *padded* bucket tensors plus the grid
+    /// policy's hysteresis state ([`GridCheckpoint`]), so a restored
+    /// device session replays bit-identically: it latches onto the same
+    /// grid (and the same device-reported diameter) the checkpointed
+    /// session would have used for its next step.
     fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             engine: "gpgpu".to_string(),
@@ -287,6 +298,12 @@ impl EmbeddingSession for GpgpuSession {
             y: self.state.y.clone(),
             vel: self.state.vel.clone(),
             gains: self.state.gains.clone(),
+            grid: Some(GridCheckpoint {
+                diameter: self.diameter,
+                current: self.policy.current(),
+                last_grid: self.last_grid,
+                grid_switches: self.grid_switches,
+            }),
         }
     }
 
@@ -316,7 +333,26 @@ impl EmbeddingSession for GpgpuSession {
                 ck.y.len()
             );
         }
-        self.diameter = diameter_of(&self.state.y, self.n);
+        match &ck.grid {
+            Some(g) => {
+                // Bit-identical resume: re-latch the hysteresis state and
+                // keep the device-reported diameter (host recomputation
+                // can differ in the last ulp — enough to flip a grid
+                // decision near a band boundary).
+                self.diameter = g.diameter.max(1e-3);
+                self.policy.set_current(g.current);
+                self.last_grid = g.last_grid;
+                self.grid_switches = g.grid_switches;
+            }
+            None => {
+                // CPU-engine or legacy checkpoint: derive the diameter
+                // from the positions and let the policy re-choose.
+                self.diameter = diameter_of(&self.state.y, self.n);
+                self.policy.set_current(None);
+                self.last_grid = 0;
+                self.grid_switches = 0;
+            }
+        }
         self.iter = ck.iter;
         self.elapsed_s = ck.elapsed_s;
         self.last_stats = None;
@@ -360,5 +396,30 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(p.choose(20.0), g0);
         }
+    }
+
+    #[test]
+    fn restored_hysteresis_state_reproduces_the_policy_trajectory() {
+        // The scenario that made ROADMAP (f) necessary: mid-run the
+        // policy is latched on a grid inside a hysteresis band. A fresh
+        // policy fed the same diameter chooses differently — only the
+        // serialised latch reproduces the original trajectory.
+        let mut live = GridPolicy::new(0.5, vec![32, 64, 128]);
+        assert_eq!(live.choose(30.0), 64);
+        assert_eq!(live.choose(15.9), 32, "want 31.8, drift 50%: switches down");
+        assert_eq!(live.choose(16.2), 32, "want 32.4, drift 1.25% < 10%: stays latched");
+
+        // checkpoint() would capture current = Some(32) here.
+        let mut restored = GridPolicy::new(0.5, vec![32, 64, 128]);
+        restored.set_current(live.current());
+        assert_eq!(restored.choose(16.2), 32, "restored latch holds the band");
+
+        let mut fresh = GridPolicy::new(0.5, vec![32, 64, 128]);
+        assert_eq!(fresh.choose(16.2), 64, "without the latch the choice flips");
+
+        // A latch from a foreign artifact set is dropped, not trusted.
+        let mut skewed = GridPolicy::new(0.5, vec![32, 64, 128]);
+        skewed.set_current(Some(96));
+        assert_eq!(skewed.current(), None);
     }
 }

@@ -25,7 +25,8 @@ pub mod quadtree;
 pub mod tsnecuda;
 
 pub use common::{
-    run_session, Checkpoint, Control, EmbeddingSession, Engine, GdSession, IterStats, OptParams,
+    run_session, Checkpoint, Control, EmbeddingSession, Engine, GdSession, GridCheckpoint,
+    IterStats, OptParams,
 };
 
 use crate::hd::SparseP;

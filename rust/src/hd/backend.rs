@@ -7,6 +7,19 @@
 //! drift test iterate). Backends may carry tuning state (hence
 //! `&mut self`), and all of them score candidates through the blocked
 //! distance kernels in [`super::blocked`].
+//!
+//! ```
+//! use gpgpu_sne::hd::backend;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let data = gpgpu_sne::data::by_name("gaussians", 60, 1)?;
+//! let exact = backend::by_name("brute")?.knn(&data, 5, 0);
+//! let approx = backend::by_name("kdforest")?.knn(&data, 5, 0);
+//! assert_eq!(exact.k, 5);
+//! assert!(approx.recall_against(&exact) > 0.5);
+//! # Ok(())
+//! # }
+//! ```
 
 use super::bruteforce;
 use super::dataset::Dataset;

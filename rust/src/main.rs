@@ -44,8 +44,11 @@ fn print_help() {
                   --auto-stop-window 30 [--auto-stop-eps 1e-5]\n\
                   --out embedding.csv --image embedding.pgm\n\
          serve    --addr 127.0.0.1:7878 --max-concurrent 2\n\
+                  --state-dir state/ --journal-every 50\n\
                   (cooperatively scheduled sessions; TCP commands incl.\n\
-                   pause/resume/update — see coordinator/protocol.rs)\n\
+                   pause/resume/update/checkpoint, resumable submits —\n\
+                   see docs/PROTOCOL.md; --state-dir makes jobs and the\n\
+                   similarity store survive restarts)\n\
          info     (artifact + platform report)\n\
          datasets (Table 1)\n\n\
          Run `make artifacts` first to enable the gpgpu engine."
@@ -130,7 +133,13 @@ fn cmd_embed(args: &Args) -> anyhow::Result<()> {
         fmt_secs(res.timings.perplexity_s),
         fmt_secs(res.timings.optimize_s),
         fmt_secs(res.timings.similarities_s()),
-        if res.timings.sim_cache_hit { " (cache hit)" } else { "" },
+        if res.timings.sim_cache_hit {
+            " (cache hit)"
+        } else if res.timings.knn_cache_hit {
+            " (knn graph from cache)"
+        } else {
+            ""
+        },
     );
     if let Some(path) = out {
         let n = res.embedding.len() / 2;
@@ -153,13 +162,30 @@ fn cmd_embed(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let addr = args.str("addr", "127.0.0.1:7878", "bind address");
     let maxc = args.get("max-concurrent", 2usize, "concurrent optimisations");
+    let state_dir = args.opt_str(
+        "state-dir",
+        "durable state directory: checkpoint journal + on-disk similarity \
+         store; restarts re-admit interrupted jobs as resumable",
+    );
+    let journal_every =
+        args.get("journal-every", 50usize, "journal running jobs every N iterations");
     args.finish_help("Serve the progressive embedding service over TCP");
     let rt = load_runtime();
     println!(
-        "serve: runtime={}, protocol: one JSON object per line (see coordinator/protocol.rs)",
+        "serve: runtime={}, protocol: one JSON object per line (see docs/PROTOCOL.md)",
         rt.as_ref().map(|r| r.platform()).unwrap_or_else(|| "none (CPU engines only)".into())
     );
-    let svc = Arc::new(gpgpu_sne::coordinator::EmbeddingService::new(rt, maxc));
+    match &state_dir {
+        Some(dir) => println!("durable state: {dir} (journal every {journal_every} iters)"),
+        None => println!("durable state: off (pass --state-dir to survive restarts)"),
+    }
+    let cfg = gpgpu_sne::coordinator::ServiceConfig {
+        max_concurrent: maxc,
+        state_dir: state_dir.map(std::path::PathBuf::from),
+        journal_every,
+        ..Default::default()
+    };
+    let svc = Arc::new(gpgpu_sne::coordinator::EmbeddingService::with_config(rt, cfg));
     gpgpu_sne::coordinator::protocol::serve(svc, &addr, |a| println!("listening on {a}"))
 }
 

@@ -1,0 +1,108 @@
+//! Minimal standard base64 (RFC 4648, `+/` alphabet, `=` padding) — the
+//! framing the TCP protocol uses to carry checkpoint blobs inside JSON
+//! lines (`checkpoint` response, `submit.resume_from`). No crates.io
+//! codec is available offline, and the protocol only needs encode /
+//! strict decode of byte blobs, so this stays deliberately tiny.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes as standard padded base64.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let triple = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(triple >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(triple >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(triple >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 { ALPHABET[triple as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+#[inline]
+fn decode_char(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some((c - b'A') as u32),
+        b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+        b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Strict decode of standard padded base64: rejects whitespace, bad
+/// lengths, interior `=` and trailing garbage (a checkpoint blob either
+/// decodes exactly or the request is an error).
+pub fn decode(s: &str) -> anyhow::Result<Vec<u8>> {
+    let b = s.as_bytes();
+    anyhow::ensure!(b.len() % 4 == 0, "base64 length {} is not a multiple of 4", b.len());
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    for (ci, chunk) in b.chunks(4).enumerate() {
+        let last = ci + 1 == b.len() / 4;
+        let pad = chunk.iter().rev().take_while(|&&c| c == b'=').count();
+        anyhow::ensure!(pad <= 2 && (pad == 0 || last), "bad base64 padding");
+        let mut triple = 0u32;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if i >= 4 - pad {
+                0
+            } else {
+                decode_char(c)
+                    .ok_or_else(|| anyhow::anyhow!("bad base64 character '{}'", c as char))?
+            };
+            triple = (triple << 6) | v;
+        }
+        out.push((triple >> 16) as u8);
+        if pad < 2 {
+            out.push((triple >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(triple as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // RFC 4648 §10 test vectors.
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(1021).collect();
+        assert_eq!(decode(&encode(&bytes)).unwrap(), bytes);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode("Zg=").is_err(), "bad length");
+        assert!(decode("Zg!=").is_err(), "bad character");
+        assert!(decode("Z===").is_err(), "over-padding");
+        assert!(decode("Zg==Zg==").is_err(), "padding before the final chunk");
+        assert!(decode("Zm9v\n").is_err(), "whitespace is not tolerated");
+    }
+}

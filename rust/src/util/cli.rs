@@ -2,7 +2,21 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional
 //! arguments, with typed accessors, defaults, and an auto-generated
-//! usage string. Used by the main binary, every example and every bench.
+//! usage string ([`Args::finish_help`] prints every accessor called so
+//! far when `--help` was passed). Used by the main binary, every example
+//! and every bench.
+//!
+//! ```
+//! use gpgpu_sne::util::cli::Args;
+//!
+//! let argv = ["serve", "--addr", "0.0.0.0:7878", "--journal-every=25", "--verbose"];
+//! let args = Args::parse("gpgpu-sne".into(), argv.iter().map(|s| s.to_string()).collect());
+//! assert_eq!(args.positional, vec!["serve"]);
+//! assert_eq!(args.str("addr", "127.0.0.1:7878", "bind address"), "0.0.0.0:7878");
+//! assert_eq!(args.get("journal-every", 50usize, "journal cadence"), 25);
+//! assert!(args.flag("verbose", "chatty output"));
+//! assert_eq!(args.opt_str("state-dir", "durable state"), None);
+//! ```
 
 use std::collections::BTreeMap;
 

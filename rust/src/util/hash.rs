@@ -1,0 +1,29 @@
+//! Small non-cryptographic hashes shared across the crate.
+
+/// Byte-wise FNV-1a. Used for store-record checksums and filename
+/// hashes (`coordinator::store`) and property-test name salting
+/// (`util::prop`). `Dataset::fingerprint` deliberately uses a
+/// *word*-wise FNV variant instead (one multiply per f32, not per
+/// byte — it runs over every dataset value) and must not be unified
+/// with this one: the two produce different hashes by design.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,9 +1,11 @@
 //! In-repo substrates for crates that are unavailable offline
-//! (DESIGN.md S21–S26): PRNG, thread pool, CLI parsing, JSON,
+//! (DESIGN.md S21–S26): PRNG, thread pool, CLI parsing, JSON, base64,
 //! property-testing, bench statistics, and figure emitters.
 
+pub mod b64;
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod image;
 pub mod json;
 pub mod parallel;

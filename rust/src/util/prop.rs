@@ -173,13 +173,7 @@ pub fn check2<A: Clone + std::fmt::Debug + 'static, B: Clone + std::fmt::Debug +
 }
 
 fn hash_name(name: &str) -> u64 {
-    // FNV-1a.
-    let mut h = 0xcbf29ce484222325u64;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::util::hash::fnv1a(name.as_bytes())
 }
 
 #[cfg(test)]

@@ -20,6 +20,8 @@ fn spec(dataset: &str, n: usize, engine: &str, iters: usize) -> JobSpec {
         snapshot_every: 25,
         auto_stop: None,
         seed: 2,
+        y0: None,
+        resume_from: None,
     }
 }
 

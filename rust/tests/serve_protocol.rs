@@ -215,3 +215,77 @@ fn malformed_lines_keep_the_connection_alive() {
     let v = c.call(r#"{"cmd":"list"}"#);
     assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
 }
+
+#[test]
+fn checkpoint_and_resume_over_tcp() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+    let v = c.call(
+        r#"{"cmd":"submit","dataset":"gaussians","n":300,"engine":"bh-0.5","iters":100000,"perplexity":10,"knn":"brute"}"#,
+    );
+    let id = v.num_field("job").unwrap() as u64;
+    // Wait until the scheduler is stepping it, then snapshot its state.
+    loop {
+        let v = c.call(&format!(r#"{{"cmd":"status","job":{id}}}"#));
+        if v.str_field("phase").unwrap_or("").starts_with("optimizing") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let v = c.call(&format!(r#"{{"cmd":"checkpoint","job":{id}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    assert_eq!(v.str_field("engine"), Some("bh-0.5"), "{v}");
+    let iter = v.num_field("iter").unwrap() as usize;
+    assert!(iter > 0, "{v}");
+    let blob = v.str_field("checkpoint").unwrap().to_string();
+    assert!(!blob.is_empty());
+    c.call(&format!(r#"{{"cmd":"stop","job":{id}}}"#));
+    c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+
+    // Resume the blob in a fresh job with a slightly longer horizon:
+    // it continues from `iter` instead of restarting.
+    let horizon = iter + 7;
+    let v = c.call(&format!(
+        r#"{{"cmd":"submit","dataset":"gaussians","n":300,"engine":"bh-0.5","iters":{horizon},"perplexity":10,"knn":"brute","resume_from":"{blob}"}}"#
+    ));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    let rid = v.num_field("job").unwrap() as u64;
+    let v = c.call(&format!(r#"{{"cmd":"wait","job":{rid}}}"#));
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    assert_eq!(v.num_field("iters").unwrap() as usize, horizon, "{v}");
+    assert_eq!(v.get("stopped_early"), Some(&Json::Bool(false)), "{v}");
+    // The repeat submit also hit the similarity store.
+    assert_eq!(v.get("sim_cache_hit"), Some(&Json::Bool(true)), "{v}");
+
+    // A garbage blob is rejected at submit time.
+    let v = c.call(
+        r#"{"cmd":"submit","dataset":"gaussians","n":300,"engine":"bh-0.5","iters":10,"perplexity":10,"knn":"brute","resume_from":"AAAA"}"#,
+    );
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v}");
+}
+
+#[test]
+fn stats_reports_both_store_levels() {
+    let addr = start_server();
+    let mut c = Client::connect(addr);
+    let submit = r#"{"cmd":"submit","dataset":"gaussians","n":100,"engine":"bh-0.5","iters":10,"perplexity":8,"knn":"brute"}"#;
+    let id = c.call(submit).num_field("job").unwrap() as u64;
+    c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+    let v = c.call(r#"{"cmd":"stats"}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    for field in [
+        "sim_cache_hits",
+        "sim_cache_misses",
+        "sim_cache_computes",
+        "sim_cache_entries",
+        "sim_cache_disk_hits",
+        "knn_cache_hits",
+        "knn_cache_computes",
+        "knn_cache_entries",
+        "knn_cache_disk_hits",
+    ] {
+        assert!(v.num_field(field).is_some(), "stats lost `{field}`: {v}");
+    }
+    assert_eq!(v.num_field("knn_cache_computes").unwrap() as u64, 1, "{v}");
+    assert_eq!(v.num_field("sim_cache_entries").unwrap() as u64, 1, "{v}");
+}
