@@ -7,9 +7,11 @@
 //! Besides the human-readable tables/CSVs this emits `BENCH_micro.json`
 //! (at the *workspace* root, where it is committed): per-engine ns/iter
 //! at fixed (N, G), the field-stage head-to-head at N=50 000, G=256, the
-//! FFT-core complex-vs-real pipeline ratio, and the similarities section
+//! FFT-core complex-vs-real pipeline ratio, the similarities section
 //! (blocked vs scalar brute kNN at N=10k/D=128, fused vs reference P
-//! build), so the perf trajectory is machine-trackable across PRs.
+//! build), and the observability section (instrumentation primitives +
+//! the <1% session-step overhead gate), so the perf trajectory is
+//! machine-trackable across PRs.
 //!
 //!     cargo bench --bench micro_hotpath [-- --quick]
 
@@ -477,6 +479,125 @@ fn main() -> anyhow::Result<()> {
                 ("iters", Json::Num(bench_iters as f64)),
                 ("fused_loop_ns_per_iter", Json::Num(fused_ns)),
                 ("session_ns_per_iter", Json::Num(session_ns)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+            ]),
+        ));
+    }
+
+    // --- Observability overhead (ARCHITECTURE.md §Observability): the
+    // primitive costs (counter add, histogram record, span begin+end
+    // into the per-thread trace ring), then the acceptance point — the
+    // same session step loop as above with hot-path instrumentation
+    // (span emission + per-phase engine timing) off vs on. Budget: <1%
+    // per step, with a 5 µs absolute floor so timer noise on tiny
+    // quick-mode steps cannot fail the gate.
+    {
+        use gpgpu_sne::hd::sparse::Csr;
+        use gpgpu_sne::hd::SparseP;
+        use gpgpu_sne::obs;
+
+        let it = if quick { 2 } else { 4 };
+        let ops = if quick { 200_000u64 } else { 1_000_000 };
+        let reg = obs::Registry::new();
+        let c = reg.counter("bench.events");
+        let h = reg.histogram("bench.lat_ns");
+        let counter_t = measure(1, it.max(3), || {
+            for _ in 0..ops {
+                c.inc();
+            }
+        })
+        .min();
+        let counter_ns = counter_t * 1e9 / ops as f64;
+        let hist_t = measure(1, it.max(3), || {
+            for i in 0..ops {
+                h.record(i);
+            }
+        })
+        .min();
+        let hist_ns = hist_t * 1e9 / ops as f64;
+        // A job id no real job can collide with, so `trace` snapshots in
+        // concurrent use of the same process stay clean.
+        let job = 0xb0b0_0b50u64;
+        let spans = ops / 8;
+        let span_t = measure(1, it.max(3), || {
+            for i in 0..spans {
+                obs::span_begin(obs::Span::EngineStep, job, i);
+                obs::span_end(obs::Span::EngineStep, job, i);
+            }
+        })
+        .min();
+        let span_ns = span_t * 1e9 / spans as f64;
+
+        let sn = if quick { 2000usize } else { 10_000 };
+        let sk = 8usize;
+        let mut col = Vec::with_capacity(sn * sk);
+        let mut val = Vec::with_capacity(sn * sk);
+        for i in 0..sn {
+            for j in 1..=sk {
+                col.push(((i + j) % sn) as u32);
+                val.push(1.0 / (sn * sk) as f32);
+            }
+        }
+        let p = SparseP { csr: Csr::from_rows(sn, sn, sk, col, val), perplexity: sk as f32 };
+        let bench_iters = 30usize;
+        let opt = gpgpu_sne::embed::OptParams {
+            iters: bench_iters,
+            exaggeration_iters: 10,
+            seed: 3,
+            ..Default::default()
+        };
+        // Identical code shape both times — the only delta is the obs
+        // switch, exactly what `serve` toggles. The span per step mirrors
+        // what the scheduler emits around session.step().
+        let run = |on: bool| {
+            obs::set_enabled(on);
+            let st = measure(1, it.max(3), || {
+                let mut engine = gpgpu_sne::embed::by_name("bh-0.5", None).unwrap();
+                let mut session = engine.begin(Arc::new(p.clone()), &opt).unwrap();
+                let mut i = 0u64;
+                while !session.is_done() {
+                    let _step = obs::span(obs::Span::EngineStep, job, i);
+                    let _ = session.step().unwrap();
+                    i += 1;
+                }
+            })
+            .min();
+            st * 1e9 / bench_iters as f64
+        };
+        let off_ns = run(false);
+        let on_ns = run(true);
+        obs::set_enabled(true);
+        let overhead_pct = (on_ns - off_ns) / off_ns * 100.0;
+        let mut rep = Report::new(
+            &format!("observability overhead @ N={sn} (bh-0.5, {bench_iters} iters)"),
+            &["cost", "overhead"],
+        );
+        rep.row("counter.inc", vec![format!("{counter_ns:.1}ns"), "-".into()]);
+        rep.row("histogram.record", vec![format!("{hist_ns:.1}ns"), "-".into()]);
+        rep.row("span begin+end", vec![format!("{span_ns:.0}ns"), "-".into()]);
+        rep.row("session step, obs off", vec![format!("{off_ns:.0}ns/iter"), "-".into()]);
+        rep.row(
+            "session step, obs on",
+            vec![format!("{on_ns:.0}ns/iter"), format!("{overhead_pct:+.2}%")],
+        );
+        rep.print();
+        rep.write_csv("micro_obs.csv")?;
+        assert!(
+            overhead_pct < 1.0 || (on_ns - off_ns) < 5_000.0,
+            "instrumentation overhead {overhead_pct:.2}% ({:.0}ns/iter) blows the <1% budget",
+            on_ns - off_ns
+        );
+        json_sections.push((
+            "obs",
+            Json::obj(vec![
+                ("n", Json::Num(sn as f64)),
+                ("engine", Json::Str("bh-0.5".into())),
+                ("iters", Json::Num(bench_iters as f64)),
+                ("counter_inc_ns", Json::Num(counter_ns)),
+                ("histogram_record_ns", Json::Num(hist_ns)),
+                ("span_pair_ns", Json::Num(span_ns)),
+                ("step_obs_off_ns_per_iter", Json::Num(off_ns)),
+                ("step_obs_on_ns_per_iter", Json::Num(on_ns)),
                 ("overhead_pct", Json::Num(overhead_pct)),
             ]),
         ));

@@ -231,6 +231,10 @@ pub struct Snapshot {
     pub elapsed_s: f64,
     /// `(n, 2)` row-major positions (shared, cheap to clone).
     pub positions: std::sync::Arc<Vec<f32>>,
+    /// Publish timestamp on the [`crate::obs::now_ns`] monotonic epoch;
+    /// subscribers subtract it from `now_ns()` to measure delivery lag
+    /// (the `snapshot.deliver_lag_ns` histogram).
+    pub published_ns: u64,
 }
 
 #[cfg(test)]

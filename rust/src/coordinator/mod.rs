@@ -29,6 +29,16 @@
 //! repeat submits from disk instead of recomputing kNN graphs.
 //! `checkpoint`/`resume_from`/`y0` expose the same machinery to TCP
 //! clients. See `docs/ARCHITECTURE.md` for the full lifecycle.
+//!
+//! Every serving layer is instrumented through [`crate::obs`]: the
+//! scheduler records quantum-duration/step histograms, queue depth,
+//! budget overruns and park→resume latency into a service-local
+//! registry; the similarity cache counts per-level
+//! hits/misses/coalesces/evictions; the store counts I/O bytes and
+//! latency; snapshot publishing tracks fanout time, skipped publishes
+//! and delivery lag. The `metrics` protocol command (and
+//! `serve --metrics-dump`) merges all of it into one JSON snapshot, and
+//! `trace` exposes the span-event ring buffers per job.
 
 pub mod job;
 pub mod pipeline;

@@ -22,6 +22,8 @@ use crate::data;
 use crate::embed::{self, EmbeddingSession};
 use crate::hd::{backend, perplexity, Dataset, KnnGraph, SparseP};
 use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::timer::fmt_secs;
 
 use super::job::{AutoStop, JobPhase, JobSpec, KnnMethod, Snapshot};
 use super::progress::JobState;
@@ -55,6 +57,43 @@ impl StageTimings {
     /// The paper's "similarities" row: kNN + perplexity/P.
     pub fn similarities_s(&self) -> f64 {
         self.knn_s + self.perplexity_s
+    }
+
+    /// The one serialisation of a timing breakdown: every surface that
+    /// reports stage timings (the CLI's end-of-run line, the protocol's
+    /// `wait` and `status` responses) goes through this, so a new stage
+    /// field cannot silently drift out of one of them.
+    pub fn to_json_fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("dataset_s", Json::Num(self.dataset_s)),
+            ("knn_s", Json::Num(self.knn_s)),
+            ("perplexity_s", Json::Num(self.perplexity_s)),
+            ("optimize_s", Json::Num(self.optimize_s)),
+            ("similarities_s", Json::Num(self.similarities_s())),
+            ("total_s", Json::Num(self.total())),
+            ("sim_cache_hit", Json::Bool(self.sim_cache_hit)),
+            ("knn_cache_hit", Json::Bool(self.knn_cache_hit)),
+        ]
+    }
+
+    /// Human rendering of [`Self::to_json_fields`] for the CLI: seconds
+    /// fields formatted with [`fmt_secs`], cache-hit booleans appended
+    /// as annotations.
+    pub fn human_summary(&self) -> String {
+        let mut parts = Vec::new();
+        let mut notes = Vec::new();
+        for (name, v) in self.to_json_fields() {
+            match v {
+                Json::Num(s) => {
+                    parts.push(format!("{} {}", name.trim_end_matches("_s"), fmt_secs(s)))
+                }
+                Json::Bool(true) => notes.push(name.trim_end_matches("_hit").replace('_', " ")),
+                _ => {}
+            }
+        }
+        let notes =
+            if notes.is_empty() { String::new() } else { format!(" ({} hit)", notes.join(", ")) };
+        format!("{}{notes}", parts.join(" | "))
     }
 }
 
@@ -292,6 +331,7 @@ pub fn optimize(
                 kl_est: stats.kl_est,
                 elapsed_s: stats.elapsed_s,
                 positions: Arc::new(session.positions().to_vec()),
+                published_ns: crate::obs::now_ns(),
             });
         }
         if state.stop_requested() {
@@ -327,6 +367,26 @@ mod tests {
             y0: None,
             resume_from: None,
         }
+    }
+
+    #[test]
+    fn stage_timings_serialise_through_one_helper() {
+        let t = StageTimings {
+            dataset_s: 0.5,
+            knn_s: 1.0,
+            perplexity_s: 0.25,
+            optimize_s: 2.0,
+            sim_cache_hit: false,
+            knn_cache_hit: true,
+        };
+        let j = Json::obj(t.to_json_fields());
+        assert_eq!(j.num_field("total_s"), Some(3.75));
+        assert_eq!(j.num_field("similarities_s"), Some(1.25));
+        assert_eq!(j.get("sim_cache_hit"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("knn_cache_hit"), Some(&Json::Bool(true)));
+        let s = t.human_summary();
+        assert!(s.contains("optimize 2.00s"), "{s}");
+        assert!(s.ends_with("(knn cache hit)"), "{s}");
     }
 
     #[test]

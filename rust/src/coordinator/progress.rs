@@ -3,9 +3,32 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::obs;
 
 use super::job::{JobPhase, ParamUpdate, Snapshot};
+
+/// `snapshot.publish_skipped` — sends that early-returned because nobody
+/// was subscribed. The sole production `Broadcast` carries snapshots,
+/// hence the metric's name.
+fn publish_skipped() -> &'static Arc<obs::Counter> {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("snapshot.publish_skipped"))
+}
+
+/// `snapshot.subscribers_dropped` — dead receivers pruned during a send.
+fn subscribers_dropped() -> &'static Arc<obs::Counter> {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("snapshot.subscribers_dropped"))
+}
+
+/// `snapshot.fanout_ns` — how long one publish spends cloning into
+/// subscriber channels.
+fn fanout_ns() -> &'static Arc<obs::Histogram> {
+    static H: OnceLock<Arc<obs::Histogram>> = OnceLock::new();
+    H.get_or_init(|| obs::registry().histogram("snapshot.fanout_ns"))
+}
 
 /// Clone-fanout broadcast channel: every subscriber gets every message
 /// sent after it subscribed. Dead subscribers are pruned on send.
@@ -28,7 +51,17 @@ impl<T: Clone> Broadcast<T> {
 
     pub fn send(&self, msg: T) {
         let mut subs = self.subs.lock().unwrap();
+        if subs.is_empty() {
+            // Don't clone the message (snapshot position buffers are
+            // Arc-shared but the wrapper still costs) for nobody.
+            publish_skipped().inc();
+            return;
+        }
+        let before = subs.len();
+        let t0 = obs::now_ns();
         subs.retain(|s| s.send(msg.clone()).is_ok());
+        fanout_ns().record(obs::now_ns().saturating_sub(t0));
+        subscribers_dropped().add((before - subs.len()) as u64);
     }
 
     pub fn subscriber_count(&self) -> usize {
@@ -179,6 +212,7 @@ mod tests {
             kl_est: 1.0,
             elapsed_s: 0.1,
             positions: Arc::new(vec![0.0, 0.0]),
+            published_ns: obs::now_ns(),
         });
         assert_eq!(js.latest_snapshot().unwrap().iter, 3);
     }

@@ -8,7 +8,8 @@
 //! The short version:
 //!
 //! ```text
-//! submit status snapshot checkpoint pause resume update stop wait list stats quit
+//! submit status snapshot checkpoint pause resume update stop wait list
+//! stats metrics trace quit
 //! ```
 //!
 //! The service behind these commands is the cooperative scheduler of
@@ -21,9 +22,10 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::embed::{Checkpoint, OptParams};
+use crate::obs;
 use crate::util::b64;
 use crate::util::json::{self, Json};
 
@@ -46,6 +48,8 @@ pub enum Cmd {
     Wait,
     List,
     Stats,
+    Metrics,
+    Trace,
     Quit,
 }
 
@@ -62,6 +66,8 @@ impl Cmd {
         Cmd::Wait,
         Cmd::List,
         Cmd::Stats,
+        Cmd::Metrics,
+        Cmd::Trace,
         Cmd::Quit,
     ];
 
@@ -79,6 +85,8 @@ impl Cmd {
             Cmd::Wait => "wait",
             Cmd::List => "list",
             Cmd::Stats => "stats",
+            Cmd::Metrics => "metrics",
+            Cmd::Trace => "trace",
             Cmd::Quit => "quit",
         }
     }
@@ -215,6 +223,14 @@ pub fn update_from_json(v: &Json) -> ParamUpdate {
     }
 }
 
+/// `snapshot.deliver_lag_ns` — age of a snapshot when a client fetched
+/// it (publish timestamp vs. read time). The CLI's streaming printer
+/// records into the same global histogram.
+fn deliver_lag_ns() -> &'static Arc<obs::Histogram> {
+    static H: OnceLock<Arc<obs::Histogram>> = OnceLock::new();
+    H.get_or_init(|| obs::registry().histogram("snapshot.deliver_lag_ns"))
+}
+
 fn ok_fields(fields: Vec<(&str, Json)>) -> String {
     let mut all = vec![("ok", Json::Bool(true))];
     all.extend(fields);
@@ -267,6 +283,7 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
             match svc.latest_snapshot(id) {
                 None => (err_msg("no snapshot yet"), true),
                 Some(s) => {
+                    deliver_lag_ns().record(obs::now_ns().saturating_sub(s.published_ns));
                     let pos = Json::Arr(s.positions.iter().map(|&p| Json::Num(p as f64)).collect());
                     (
                         ok_fields(vec![
@@ -334,21 +351,16 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
         Cmd::Wait => {
             let id = v.num_field("job").unwrap_or(0.0) as u64;
             match svc.wait(id) {
-                Ok(res) => (
-                    ok_fields(vec![
+                Ok(res) => {
+                    let mut fields = vec![
                         ("job", Json::Num(id as f64)),
                         ("iters", Json::Num(res.iters_run as f64)),
                         ("kl", Json::Num(res.kl_est)),
                         ("stopped_early", Json::Bool(res.stopped_early)),
-                        ("knn_s", Json::Num(res.timings.knn_s)),
-                        ("perplexity_s", Json::Num(res.timings.perplexity_s)),
-                        ("sim_cache_hit", Json::Bool(res.timings.sim_cache_hit)),
-                        ("knn_cache_hit", Json::Bool(res.timings.knn_cache_hit)),
-                        ("optimize_s", Json::Num(res.timings.optimize_s)),
-                        ("total_s", Json::Num(res.timings.total())),
-                    ]),
-                    true,
-                ),
+                    ];
+                    fields.extend(res.timings.to_json_fields());
+                    (ok_fields(fields), true)
+                }
                 Err(e) => (err_msg(&format!("{e:#}")), true),
             }
         }
@@ -384,6 +396,19 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                     .collect(),
             );
             (ok_fields(vec![("jobs", jobs)]), true)
+        }
+        Cmd::Metrics => (ok_fields(vec![("metrics", svc.metrics_json())]), true),
+        Cmd::Trace => {
+            let job = v.num_field("job").map(|j| j as u64);
+            let last = v.num_field("last").unwrap_or(128.0).max(1.0) as usize;
+            let events = obs::trace::snapshot(job, last);
+            (
+                ok_fields(vec![
+                    ("count", Json::Num(events.len() as f64)),
+                    ("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+                ]),
+                true,
+            )
         }
         Cmd::Quit => (ok_fields(vec![("bye", Json::Bool(true))]), false),
     }
@@ -748,6 +773,44 @@ mod tests {
         assert_eq!(back.params.exaggeration_iters, spec.params.exaggeration_iters);
         assert_eq!(back.params.init_std, spec.params.init_std);
         assert_eq!(back.params.seed, spec.params.seed);
+    }
+
+    #[test]
+    fn metrics_and_trace_commands_report_live_jobs() {
+        let s = svc();
+        let (resp, _) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":80,"engine":"bh-0.5","iters":25,"perplexity":8,"knn":"brute"}"#,
+        );
+        let id = json::parse(&resp).unwrap().num_field("job").unwrap() as u64;
+        handle_line(&s, &format!(r#"{{"cmd":"wait","job":{id}}}"#));
+
+        let (resp, _) = handle_line(&s, r#"{"cmd":"metrics"}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let m = v.get("metrics").unwrap();
+        let hist = m.get("service").unwrap().get("histograms").unwrap();
+        assert!(
+            hist.get("scheduler.quantum_ns").unwrap().num_field("count").unwrap() >= 1.0,
+            "{resp}"
+        );
+        assert!(m.get("sim_cache").unwrap().num_field("p_computes").unwrap() >= 1.0, "{resp}");
+        let jobs = m.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 1, "{resp}");
+        assert_eq!(jobs[0].num_field("job"), Some(id as f64));
+        assert!(jobs[0].num_field("steps").unwrap() >= 25.0, "{resp}");
+
+        let (resp, _) = handle_line(&s, &format!(r#"{{"cmd":"trace","job":{id},"last":64}}"#));
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let events = v.get("events").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty(), "trace must carry this job's spans");
+        assert!(events.len() <= 64);
+        assert!(events.iter().all(|e| e.num_field("job") == Some(id as f64)));
+        assert!(
+            events.iter().any(|e| e.str_field("span") == Some("scheduler.quantum")),
+            "{resp}"
+        );
     }
 
     #[test]

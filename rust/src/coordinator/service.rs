@@ -29,9 +29,11 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::embed::{Checkpoint, EmbeddingSession};
+use crate::embed::{Checkpoint, EmbeddingSession, IterStats};
+use crate::obs;
 use crate::runtime::Runtime;
-use crate::util::json;
+use crate::util::json::{self, Json};
+use crate::util::timer::Stopwatch;
 
 use super::job::{JobPhase, JobSpec, ParamUpdate, Snapshot};
 use super::pipeline::{self, AutoStopTracker, JobResult, StageTimings};
@@ -75,6 +77,10 @@ pub struct ServiceConfig {
     pub journal_every: usize,
     /// Ready entries kept per similarity-store level.
     pub sim_cache_capacity: usize,
+    /// Per-thread trace-ring capacity, in span events (`serve
+    /// --trace-ring`). Applied process-wide at construction; threads
+    /// that already emitted events keep their existing rings.
+    pub trace_ring: usize,
 }
 
 impl Default for ServiceConfig {
@@ -84,6 +90,7 @@ impl Default for ServiceConfig {
             state_dir: None,
             journal_every: 50,
             sim_cache_capacity: SIM_CACHE_CAPACITY,
+            trace_ring: obs::trace::DEFAULT_RING_CAPACITY,
         }
     }
 }
@@ -101,9 +108,13 @@ struct JobTask {
     iters_run: usize,
     last_kl: f64,
     /// When the last snapshot was published (idle-throttling).
-    last_snapshot: Option<std::time::Instant>,
+    last_snapshot: Option<Stopwatch>,
     /// Iteration count at the last journal write (durable services).
     last_journal_iter: usize,
+    /// Running while the task sits parked after a pause; read at the
+    /// first post-resume slice (the `scheduler.park_resume_ns` metric
+    /// and the `scheduler.park` trace span).
+    parked: Option<Stopwatch>,
 }
 
 /// Rendezvous for `checkpoint` requests: a client flags `pending`, the
@@ -115,9 +126,67 @@ struct CkptSlot {
     ready: Option<Checkpoint>,
 }
 
+/// Scheduler metrics: cached handles into a **service-local**
+/// [`obs::Registry`]. Tests run services in parallel, so the scheduler
+/// cannot share the process-global registry without mixing counts; the
+/// `metrics` protocol command merges this registry with the global one.
+struct SchedMetrics {
+    registry: Arc<obs::Registry>,
+    /// `scheduler.queue_depth` — ready-queue length after each push/pop.
+    queue_depth: Arc<obs::Gauge>,
+    /// `scheduler.quantum_ns` — wall time of every step quantum, vs.
+    /// the [`QUANTUM_MS`] budget.
+    quantum_ns: Arc<obs::Histogram>,
+    /// `scheduler.quantum_steps` — steps run per quantum.
+    quantum_steps: Arc<obs::Histogram>,
+    /// `scheduler.quantum_overruns` — quanta that ran ≥ 2× the budget.
+    /// The loop checks the clock only between steps, so finishing a
+    /// little past [`QUANTUM_MS`] is by design; an overrun means one
+    /// non-preemptible step ate the whole slice.
+    overruns: Arc<obs::Counter>,
+    /// `scheduler.park_resume_ns` — pause-park to next-slice latency.
+    park_resume_ns: Arc<obs::Histogram>,
+    /// `engine.attr_ns` / `engine.rep_ns` / `engine.grad_ns` — per-step
+    /// phase breakdown carried on [`IterStats`] (zero samples when
+    /// [`obs::enabled`] is off or the engine's step is fused).
+    attr_ns: Arc<obs::Histogram>,
+    rep_ns: Arc<obs::Histogram>,
+    grad_ns: Arc<obs::Histogram>,
+}
+
+impl SchedMetrics {
+    fn new() -> Self {
+        let registry = Arc::new(obs::Registry::new());
+        Self {
+            queue_depth: registry.gauge("scheduler.queue_depth"),
+            quantum_ns: registry.histogram("scheduler.quantum_ns"),
+            quantum_steps: registry.histogram("scheduler.quantum_steps"),
+            overruns: registry.counter("scheduler.quantum_overruns"),
+            park_resume_ns: registry.histogram("scheduler.park_resume_ns"),
+            attr_ns: registry.histogram("engine.attr_ns"),
+            rep_ns: registry.histogram("engine.rep_ns"),
+            grad_ns: registry.histogram("engine.grad_ns"),
+            registry,
+        }
+    }
+}
+
+/// Per-job scheduling counters (relaxed atomics, written by the driving
+/// worker, read by the `metrics` command's per-job summary).
+#[derive(Default)]
+struct JobObs {
+    quanta: AtomicU64,
+    steps: AtomicU64,
+    overruns: AtomicU64,
+    attr_ns: AtomicU64,
+    rep_ns: AtomicU64,
+    grad_ns: AtomicU64,
+}
+
 struct JobEntry {
     spec: JobSpec,
     state: JobState,
+    obs: JobObs,
     /// The task, parked between quanta. `None` while a worker drives it
     /// or after the job finished.
     task: Mutex<Option<JobTask>>,
@@ -140,11 +209,14 @@ struct ServiceInner {
     /// Checkpoint journal (durable services only).
     journal: Option<JobJournal>,
     journal_every: usize,
+    metrics: SchedMetrics,
 }
 
 impl ServiceInner {
     fn enqueue(&self, id: JobId) {
-        self.queue.lock().unwrap().push_back(id);
+        let mut queue = self.queue.lock().unwrap();
+        queue.push_back(id);
+        self.metrics.queue_depth.set(queue.len() as i64);
         self.queue_cv.notify_one();
     }
 
@@ -173,10 +245,12 @@ impl ServiceInner {
             last_kl: f64::NAN,
             last_snapshot: None,
             last_journal_iter: 0,
+            parked: None,
         };
         let entry = Arc::new(JobEntry {
             spec,
             state: JobState::default(),
+            obs: JobObs::default(),
             task: Mutex::new(Some(task)),
             result: Mutex::new(None),
             done_cv: Condvar::new(),
@@ -216,6 +290,7 @@ impl EmbeddingService {
     /// before the worker pool starts, and the similarity store opens its
     /// on-disk level.
     pub fn with_config(runtime: Option<Arc<Runtime>>, cfg: ServiceConfig) -> Self {
+        obs::trace::set_ring_capacity(cfg.trace_ring);
         let (sim_cache, journal) = match &cfg.state_dir {
             Some(dir) => {
                 let cache =
@@ -244,6 +319,7 @@ impl EmbeddingService {
             sim_cache: Arc::new(sim_cache),
             journal,
             journal_every: cfg.journal_every.max(1),
+            metrics: SchedMetrics::new(),
         });
         // Re-admit interrupted jobs before any worker can race the scan.
         let mut max_id = 0u64;
@@ -318,7 +394,7 @@ impl EmbeddingService {
     /// running, or queued behind it).
     pub fn checkpoint(&self, id: JobId) -> anyhow::Result<Checkpoint> {
         let entry = self.entry(id).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let sw = Stopwatch::start();
         loop {
             anyhow::ensure!(
                 !entry.state.phase().is_terminal(),
@@ -368,7 +444,7 @@ impl EmbeddingService {
             slot.pending = false;
             drop(slot);
             anyhow::ensure!(
-                std::time::Instant::now() < deadline,
+                !sw.expired(std::time::Duration::from_secs(30)),
                 "timed out waiting for job {id}'s step boundary"
             );
         }
@@ -469,6 +545,47 @@ impl EmbeddingService {
         v.sort_by_key(|(id, _)| *id);
         v
     }
+
+    /// Merged metrics snapshot — what the TCP `metrics` command and
+    /// `serve --metrics-dump` emit. Four sections: `service` (the
+    /// scheduler's own registry: quantum histograms, queue depth,
+    /// overruns, park→resume latency, per-phase engine timings),
+    /// `global` (the process-wide registry: store I/O, snapshot
+    /// fanout), `sim_cache` (two-level hit/miss/coalesce/evict
+    /// counters), and `jobs` (a per-job scheduling summary).
+    pub fn metrics_json(&self) -> Json {
+        let cache = &self.inner.sim_cache;
+        let mut sim = cache.p_stats().to_json_fields("p");
+        sim.extend(cache.graph_stats().to_json_fields("graph"));
+        let jobs: Vec<Json> = {
+            let jobs = self.inner.jobs.lock().unwrap();
+            let mut ids: Vec<JobId> = jobs.keys().copied().collect();
+            ids.sort_unstable();
+            ids.iter()
+                .map(|id| {
+                    let e = &jobs[id];
+                    let o = &e.obs;
+                    let secs = |ns: &AtomicU64| ns.load(Ordering::Relaxed) as f64 / 1e9;
+                    Json::obj(vec![
+                        ("job", Json::Num(*id as f64)),
+                        ("phase", Json::Str(e.state.phase().label())),
+                        ("quanta", Json::Num(o.quanta.load(Ordering::Relaxed) as f64)),
+                        ("steps", Json::Num(o.steps.load(Ordering::Relaxed) as f64)),
+                        ("overruns", Json::Num(o.overruns.load(Ordering::Relaxed) as f64)),
+                        ("attr_s", Json::Num(secs(&o.attr_ns))),
+                        ("rep_s", Json::Num(secs(&o.rep_ns))),
+                        ("grad_s", Json::Num(secs(&o.grad_ns))),
+                    ])
+                })
+                .collect()
+        };
+        Json::obj(vec![
+            ("service", self.inner.metrics.registry.snapshot()),
+            ("global", obs::registry().snapshot()),
+            ("sim_cache", Json::Obj(sim)),
+            ("jobs", Json::Arr(jobs)),
+        ])
+    }
 }
 
 impl Drop for EmbeddingService {
@@ -491,6 +608,7 @@ fn worker_loop(inner: Arc<ServiceInner>) {
                     return;
                 }
                 if let Some(id) = queue.pop_front() {
+                    inner.metrics.queue_depth.set(queue.len() as i64);
                     break id;
                 }
                 queue = inner.queue_cv.wait(queue).unwrap();
@@ -523,6 +641,11 @@ fn worker_loop(inner: Arc<ServiceInner>) {
                 inner.enqueue(id);
             }
             SliceOutcome::Park => {
+                // The park span stays open (and the stopwatch running)
+                // until the first post-resume slice closes them — the
+                // span length *is* the park→resume latency.
+                task.parked = Some(Stopwatch::start());
+                obs::span_begin(obs::Span::Park, id, 0);
                 *entry.task.lock().unwrap() = Some(task);
                 // A resume/stop that raced with the park may have enqueued
                 // the id while we still held the task (that pop was
@@ -546,6 +669,12 @@ fn run_slice(
     entry: &JobEntry,
     task: &mut JobTask,
 ) -> SliceOutcome {
+    // Close out a pause-park: the time the task sat in the slot is the
+    // park→resume latency.
+    if let Some(parked) = task.parked.take() {
+        inner.metrics.park_resume_ns.record_duration(parked.elapsed());
+        obs::span_end(obs::Span::Park, id, 0);
+    }
     // Lazily run the similarity stage + session begin on first claim.
     if task.session.is_none() {
         if entry.state.stop_requested() {
@@ -556,16 +685,19 @@ fn run_slice(
             entry.state.set_phase(JobPhase::Paused { iter: 0, total });
             return SliceOutcome::Park;
         }
-        let prepared = pipeline::prepare_similarities(
-            &task.spec,
-            &entry.state,
-            Some(&inner.sim_cache),
-            &mut task.timings,
-        )
-        .and_then(|prep| {
-            let session = pipeline::begin_session(&task.spec, prep.p, inner.runtime.clone())?;
-            Ok((prep.labels, session))
-        });
+        let prepared = {
+            let _sim = obs::span(obs::Span::SimLookup, id, 0);
+            pipeline::prepare_similarities(
+                &task.spec,
+                &entry.state,
+                Some(&inner.sim_cache),
+                &mut task.timings,
+            )
+            .and_then(|prep| {
+                let session = pipeline::begin_session(&task.spec, prep.p, inner.runtime.clone())?;
+                Ok((prep.labels, session))
+            })
+        };
         match prepared {
             Ok((labels, session)) => {
                 task.labels = labels;
@@ -611,7 +743,7 @@ fn run_slice(
 
         if entry.state.pause_requested() {
             entry.state.set_phase(JobPhase::Paused { iter: *iters_run, total });
-            publish_snapshot(entry, session.as_ref(), last_snapshot, true);
+            publish_snapshot(entry, id, session.as_ref(), last_snapshot, true);
             journal_session(inner, id, spec, session.as_ref());
             *last_journal_iter = *iters_run;
             return SliceOutcome::Park;
@@ -621,21 +753,34 @@ fn run_slice(
         // (A session may already be done — e.g. an update lowered
         // `iters` below the current iteration — and falls straight
         // through to finalisation.)
-        let t = std::time::Instant::now();
+        let m = &inner.metrics;
+        let quantum_seq = entry.obs.quanta.fetch_add(1, Ordering::Relaxed);
+        let _quantum = obs::span(obs::Span::Quantum, id, quantum_seq);
+        let sw = Stopwatch::start();
         let mut auto_stopped = false;
         let mut steps = 0usize;
         while !session.is_done() {
-            match session.step() {
+            let stepped = {
+                let _step = obs::span(obs::Span::EngineStep, id, *iters_run as u64);
+                session.step()
+            };
+            match stepped {
                 Ok(stats) => {
                     *iters_run = stats.iter + 1;
                     *last_kl = stats.kl_est;
+                    if stats.attr_s > 0.0 || stats.rep_s > 0.0 || stats.grad_s > 0.0 {
+                        record_phases(m, &entry.obs, &stats);
+                    }
                     if auto.should_stop(stats.iter, stats.kl_est) {
                         auto_stopped = true;
                         break;
                     }
                 }
                 Err(e) => {
-                    timings.optimize_s += t.elapsed().as_secs_f64();
+                    timings.optimize_s += sw.elapsed_s();
+                    m.quantum_ns.record_duration(sw.elapsed());
+                    m.quantum_steps.record(steps as u64);
+                    entry.obs.steps.fetch_add(steps as u64, Ordering::Relaxed);
                     return finalize_err(inner, id, entry, format!("{e:#}"));
                 }
             }
@@ -643,11 +788,19 @@ fn run_slice(
             if entry.state.stop_requested() || entry.state.pause_requested() {
                 break;
             }
-            if steps >= MAX_QUANTUM_STEPS || t.elapsed().as_millis() as u64 >= QUANTUM_MS {
+            if steps >= MAX_QUANTUM_STEPS || sw.elapsed_ms() >= QUANTUM_MS {
                 break;
             }
         }
-        timings.optimize_s += t.elapsed().as_secs_f64();
+        let quantum = sw.elapsed();
+        timings.optimize_s += quantum.as_secs_f64();
+        m.quantum_ns.record_duration(quantum);
+        m.quantum_steps.record(steps as u64);
+        entry.obs.steps.fetch_add(steps as u64, Ordering::Relaxed);
+        if quantum.as_millis() as u64 >= 2 * QUANTUM_MS {
+            m.overruns.inc();
+            entry.obs.overruns.fetch_add(1, Ordering::Relaxed);
+        }
         // Boundary states (done/stop/pause) always publish so clients
         // see the final positions; mid-run quanta publish immediately
         // when subscribers are streaming and throttle otherwise.
@@ -655,7 +808,7 @@ fn run_slice(
             || auto_stopped
             || entry.state.stop_requested()
             || entry.state.pause_requested();
-        publish_snapshot(entry, session.as_ref(), last_snapshot, at_boundary);
+        publish_snapshot(entry, id, session.as_ref(), last_snapshot, at_boundary);
         // Durable services: journal at the configured iteration cadence
         // (pause journals unconditionally above, finalise removes).
         if *iters_run >= *last_journal_iter + inner.journal_every {
@@ -726,8 +879,9 @@ fn journal_session(
 /// (boundaries: pause, stop, done) always publishes.
 fn publish_snapshot(
     entry: &JobEntry,
+    id: JobId,
     session: &dyn EmbeddingSession,
-    last: &mut Option<std::time::Instant>,
+    last: &mut Option<Stopwatch>,
     force: bool,
 ) {
     let Some(stats) = session.last_stats() else {
@@ -740,17 +894,32 @@ fn publish_snapshot(
     // `mid_run_subscriber_streams_at_quantum_cadence`).
     let due = force
         || entry.state.snapshots.subscriber_count() > 0
-        || last.map_or(true, |t| t.elapsed().as_millis() as u64 >= IDLE_SNAPSHOT_MS);
+        || last.map_or(true, |t| t.elapsed_ms() >= IDLE_SNAPSHOT_MS);
     if !due {
         return;
     }
-    *last = Some(std::time::Instant::now());
+    *last = Some(Stopwatch::start());
+    let _span = obs::span(obs::Span::SnapshotPublish, id, stats.iter as u64);
     entry.state.publish(Snapshot {
         iter: stats.iter,
         kl_est: stats.kl_est,
         elapsed_s: stats.elapsed_s,
         positions: Arc::new(session.positions().to_vec()),
+        published_ns: obs::now_ns(),
     });
+}
+
+/// Fold one step's phase breakdown ([`IterStats::attr_s`] and friends,
+/// seconds) into the service histograms and the job's accumulators
+/// (nanoseconds).
+fn record_phases(m: &SchedMetrics, job: &JobObs, stats: &IterStats) {
+    let ns = |s: f64| (s.max(0.0) * 1e9) as u64;
+    m.attr_ns.record(ns(stats.attr_s));
+    m.rep_ns.record(ns(stats.rep_s));
+    m.grad_ns.record(ns(stats.grad_s));
+    job.attr_ns.fetch_add(ns(stats.attr_s), Ordering::Relaxed);
+    job.rep_ns.fetch_add(ns(stats.rep_s), Ordering::Relaxed);
+    job.grad_ns.fetch_add(ns(stats.grad_s), Ordering::Relaxed);
 }
 
 fn finalize(
@@ -766,7 +935,7 @@ fn finalize(
         .map(|s| s.positions().to_vec())
         .unwrap_or_default();
     if let Some(session) = task.session.as_ref() {
-        publish_snapshot(entry, session.as_ref(), &mut task.last_snapshot, true);
+        publish_snapshot(entry, id, session.as_ref(), &mut task.last_snapshot, true);
     }
     let result = JobResult {
         spec: task.spec.clone(),
@@ -921,6 +1090,10 @@ mod tests {
         assert!(!res.stopped_early, "shortened via update, not stopped");
         assert!(res.iters_run <= paused_iter.max(1) + MAX_QUANTUM_STEPS);
         assert_eq!(svc.phase(id), Some(JobPhase::Done));
+        assert!(
+            svc.inner.metrics.park_resume_ns.count() >= 1,
+            "the park→resume latency must be recorded at the first post-resume slice"
+        );
     }
 
     #[test]
@@ -1052,6 +1225,59 @@ mod tests {
         }
         assert!(svc.stop(id));
         let _ = svc.wait(id);
+    }
+
+    #[test]
+    fn scheduler_metrics_expose_fair_quanta() {
+        // One worker, one huge job racing three small ones: round-robin
+        // quanta mean the small jobs complete while the big one keeps
+        // taking slices — and the scheduler metrics must show it.
+        let svc = EmbeddingService::new(None, 1);
+        let big = svc.submit(tiny_spec(1_000_000));
+        let smalls: Vec<_> = (0..3).map(|_| svc.submit(tiny_spec(400))).collect();
+        for &id in &smalls {
+            svc.wait(id).unwrap();
+        }
+        let quanta_of = |id: JobId| svc.entry(id).unwrap().obs.quanta.load(Ordering::Relaxed);
+        // A 400-iteration job runs at most MAX_QUANTUM_STEPS steps per
+        // quantum, so finishing took each small job several quanta...
+        for &id in &smalls {
+            assert!(
+                quanta_of(id) >= (400 / MAX_QUANTUM_STEPS) as u64,
+                "job {id} finished in implausibly few quanta: {}",
+                quanta_of(id)
+            );
+        }
+        // ...and the big job kept getting slices throughout — the
+        // round-robin guarantee, now observable instead of inferred.
+        assert!(quanta_of(big) >= 2, "big job starved: {} quanta", quanta_of(big));
+        assert!(svc.stop(big));
+        svc.wait(big).unwrap();
+        // Every quantum of every job landed in the service histograms.
+        let m = &svc.inner.metrics;
+        let total: u64 = std::iter::once(big).chain(smalls.iter().copied()).map(quanta_of).sum();
+        assert_eq!(m.quantum_ns.count(), total);
+        assert_eq!(m.quantum_steps.count(), total);
+        // Sub-millisecond steps cannot legitimately blow a 2× budget;
+        // the slack is for CI scheduling hiccups.
+        assert!(
+            m.overruns.get() <= total / 2,
+            "implausible overrun count: {}/{total}",
+            m.overruns.get()
+        );
+        // The merged `metrics` snapshot carries the same numbers.
+        let mj = svc.metrics_json();
+        let hist = mj.get("service").unwrap().get("histograms").unwrap();
+        assert_eq!(
+            hist.get("scheduler.quantum_ns").unwrap().num_field("count"),
+            Some(total as f64)
+        );
+        let Some(Json::Arr(jobs)) = mj.get("jobs") else {
+            panic!("metrics_json jobs section missing");
+        };
+        assert_eq!(jobs.len(), 4);
+        assert!(jobs.iter().all(|j| j.num_field("quanta").unwrap() >= 1.0));
+        assert!(jobs.iter().all(|j| j.num_field("steps").unwrap() >= 1.0));
     }
 
     #[test]

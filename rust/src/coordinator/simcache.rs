@@ -106,16 +106,41 @@ enum Slot<V> {
     Pending(Arc<Pending<V>>),
 }
 
-/// Counter snapshot of one level: `(hits, misses, computes, disk_hits)`.
+/// Counter snapshot of one level.
 /// `hits` counts memory hits, coalesced waits *and* disk hits (the
 /// caller skipped the computation); `misses` and `computes` count
-/// actual computations started.
+/// actual computations started; `coalesced` and `evictions` break out
+/// the waiter and LRU-pressure paths for the observability surface.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct LevelStats {
     pub hits: u64,
     pub misses: u64,
     pub computes: u64,
     pub disk_hits: u64,
+    /// Subset of `hits` that were waits coalesced onto a concurrent
+    /// identical computation.
+    pub coalesced: u64,
+    /// Ready entries dropped under LRU capacity pressure.
+    pub evictions: u64,
+}
+
+impl LevelStats {
+    /// JSON object for the `metrics` protocol command, fields prefixed
+    /// (e.g. `p_hits`, `graph_evictions`).
+    pub fn to_json_fields(&self, prefix: &str) -> Vec<(String, crate::util::json::Json)> {
+        use crate::util::json::Json;
+        [
+            ("hits", self.hits),
+            ("misses", self.misses),
+            ("computes", self.computes),
+            ("disk_hits", self.disk_hits),
+            ("coalesced", self.coalesced),
+            ("evictions", self.evictions),
+        ]
+        .into_iter()
+        .map(|(k, v)| (format!("{prefix}_{k}"), Json::Num(v as f64)))
+        .collect()
+    }
 }
 
 /// Bounded LRU map with in-flight coalescing — the machinery shared by
@@ -131,6 +156,8 @@ struct CoalescingLru<K, V> {
     /// waiters and disk loads do not count — that is the point).
     computes: AtomicU64,
     disk_hits: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
@@ -143,6 +170,8 @@ impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
             misses: AtomicU64::new(0),
             computes: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -151,8 +180,9 @@ impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
     }
 
     /// Evict least-recently-used *ready* entries down to capacity
-    /// (pending entries are in flight and never evicted).
-    fn evict_over_capacity(map: &mut HashMap<K, Slot<V>>, capacity: usize) {
+    /// (pending entries are in flight and never evicted). Counted in
+    /// `LevelStats::evictions`.
+    fn evict_over_capacity(&self, map: &mut HashMap<K, Slot<V>>) {
         loop {
             let ready = map
                 .iter()
@@ -161,11 +191,12 @@ impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
                     Slot::Pending(_) => None,
                 })
                 .collect::<Vec<_>>();
-            if ready.len() <= capacity {
+            if ready.len() <= self.capacity {
                 return;
             }
             let oldest = ready.iter().min_by_key(|(_, t)| *t).map(|(k, _)| *k).unwrap();
             map.remove(&oldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -194,7 +225,7 @@ impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
         let tick = self.next_tick();
         let mut map = self.map.lock().unwrap();
         map.insert(key, Slot::Ready { v, last_used: tick });
-        Self::evict_over_capacity(&mut map, self.capacity);
+        self.evict_over_capacity(&mut map);
     }
 
     /// The coalescing entry point: returns the value and its [`Source`].
@@ -293,7 +324,7 @@ impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
                             {
                                 let mut map = self.map.lock().unwrap();
                                 map.insert(*key, Slot::Ready { v: v.clone(), last_used: tick });
-                                Self::evict_over_capacity(&mut map, self.capacity);
+                                self.evict_over_capacity(&mut map);
                             }
                             *pending.state.lock().unwrap() = PendingState::Ready(v.clone());
                             pending.cv.notify_all();
@@ -323,6 +354,7 @@ impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
                     if let Some(v) = outcome {
                         // Coalesced: the leader's work served us.
                         self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.coalesced.fetch_add(1, Ordering::Relaxed);
                         return Ok((v, Source::Memory));
                     }
                     // Leader failed — loop: retry as a potential leader.
@@ -340,6 +372,8 @@ impl<K: Eq + Hash + Copy, V> CoalescingLru<K, V> {
             misses: self.misses.load(Ordering::Relaxed),
             computes: self.computes.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 
@@ -576,6 +610,7 @@ mod tests {
         assert!(c.get(&key(1)).is_some());
         assert!(c.get(&key(2)).is_none(), "LRU entry must be evicted");
         assert!(c.get(&key(3)).is_some());
+        assert_eq!(c.p_stats().evictions, 1, "capacity pressure is counted");
     }
 
     #[test]
@@ -695,6 +730,7 @@ mod tests {
         assert!(Arc::ptr_eq(&lead.p, &wait.p));
         assert_eq!(c.computes(), 1, "exactly one computation ran");
         assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.p_stats().coalesced, 1, "the wait is broken out for observability");
         assert_eq!(c.len(), 1);
     }
 

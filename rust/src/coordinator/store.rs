@@ -23,13 +23,41 @@
 //! ```
 
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
 
 use crate::hd::sparse::Csr;
 use crate::hd::{KnnGraph, SparseP};
+use crate::obs;
 use crate::util::hash::fnv1a;
+use crate::util::timer::Stopwatch;
 
 use super::job::KnnMethod;
 use super::simcache::{GraphKey, SimKey};
+
+/// Record-I/O metrics, in the process-wide registry (the record
+/// functions are free functions — there is no service handle in scope):
+/// `store.{read,write}_bytes` counters plus `store.{read,write}_ns`
+/// latency histograms. Reads that come back absent/corrupt still count
+/// their latency (the probe cost is real) but add no bytes.
+struct IoMetrics {
+    read_bytes: Arc<obs::Counter>,
+    write_bytes: Arc<obs::Counter>,
+    read_ns: Arc<obs::Histogram>,
+    write_ns: Arc<obs::Histogram>,
+}
+
+fn io_metrics() -> &'static IoMetrics {
+    static M: OnceLock<IoMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = obs::registry();
+        IoMetrics {
+            read_bytes: r.counter("store.read_bytes"),
+            write_bytes: r.counter("store.write_bytes"),
+            read_ns: r.histogram("store.read_ns"),
+            write_ns: r.histogram("store.write_ns"),
+        }
+    })
+}
 
 const RECORD_MAGIC: &[u8; 8] = b"GSNESTR1";
 const RECORD_VERSION: u16 = 1;
@@ -45,6 +73,8 @@ pub const KIND_JOB: u8 = b'J';
 /// process id so concurrent writers (two services misconfigured onto
 /// one dir) cannot interleave; the final rename is atomic on POSIX.
 pub fn write_record(path: &Path, kind: u8, payload: &[u8]) -> std::io::Result<()> {
+    let _span = obs::span(obs::Span::StoreWrite, 0, 0);
+    let sw = Stopwatch::start();
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     buf.extend_from_slice(RECORD_MAGIC);
     buf.push(kind);
@@ -54,14 +84,28 @@ pub fn write_record(path: &Path, kind: u8, payload: &[u8]) -> std::io::Result<()
     buf.extend_from_slice(payload);
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
     std::fs::write(&tmp, &buf)?;
-    std::fs::rename(&tmp, path)
+    let out = std::fs::rename(&tmp, path);
+    let m = io_metrics();
+    m.write_ns.record_duration(sw.elapsed());
+    if out.is_ok() {
+        m.write_bytes.add(buf.len() as u64);
+    }
+    out
 }
 
 /// Read and verify one record; any defect (missing, truncated, trailing
 /// bytes, bad magic/kind/version/checksum) reads as `None`, and the
 /// offending file is best-effort removed so it cannot mask later writes.
 pub fn read_record(path: &Path, kind: u8) -> Option<Vec<u8>> {
-    let bytes = std::fs::read(path).ok()?;
+    let _span = obs::span(obs::Span::StoreRead, 0, 0);
+    let sw = Stopwatch::start();
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(_) => {
+            io_metrics().read_ns.record_duration(sw.elapsed());
+            return None;
+        }
+    };
     let payload = (|| {
         if bytes.len() < HEADER_LEN || &bytes[..8] != RECORD_MAGIC || bytes[8] != kind {
             return None;
@@ -80,6 +124,9 @@ pub fn read_record(path: &Path, kind: u8) -> Option<Vec<u8>> {
     if payload.is_none() {
         let _ = std::fs::remove_file(path);
     }
+    let m = io_metrics();
+    m.read_ns.record_duration(sw.elapsed());
+    m.read_bytes.add(payload.as_ref().map_or(0, |p| p.len() as u64));
     payload
 }
 

@@ -97,6 +97,16 @@ pub struct IterStats {
     /// Embedding diameter (bbox max side).
     pub diameter: f32,
     pub elapsed_s: f64,
+    /// This step's attractive-force pass, seconds. Phase timings are
+    /// 0.0 when [`crate::obs::enabled`] is off, or when the engine's
+    /// step is fused (the device path cannot split phases).
+    pub attr_s: f64,
+    /// This step's repulsive-field pass (splat·conv·gather or
+    /// tree/exact equivalent), seconds.
+    pub rep_s: f64,
+    /// This step's fused gradient update (gains + momentum + apply),
+    /// seconds.
+    pub grad_s: f64,
 }
 
 /// Observer verdict: keep optimising or stop early (the A-tSNE
@@ -656,11 +666,18 @@ impl EmbeddingSession for GdSession {
             "session complete at iter {} (extend via set_params)",
             self.iter
         );
+        // Per-phase splits are read at most twice more per step than the
+        // uninstrumented path (two extra `Instant::now()` calls) and only
+        // when observability is on — the `obs` section of micro_hotpath
+        // holds the whole delta under 1% of a step.
+        let obs_on = crate::obs::enabled();
         let t = std::time::Instant::now();
         let iter = self.iter;
         let ex = self.params.exaggeration_at(iter);
         let (kl_pairs, p_sum) = super::attractive_forces(&self.p, &self.state.y, &mut self.attr);
+        let t_attr = if obs_on { t.elapsed().as_secs_f64() } else { 0.0 };
         let z = self.repulsion.compute(&self.state.y, &mut self.rep).max(1e-12);
+        let t_rep = if obs_on { t.elapsed().as_secs_f64() } else { 0.0 };
         let inv_z = (1.0 / z) as f32;
         let bbox = self
             .state
@@ -674,13 +691,17 @@ impl EmbeddingSession for GdSession {
                 true,
             )
             .expect("bbox tracked");
-        self.elapsed_s += t.elapsed().as_secs_f64();
+        let step_s = t.elapsed().as_secs_f64();
+        self.elapsed_s += step_s;
         let stats = IterStats {
             iter,
             kl_est: kl_pairs + p_sum * z.ln(),
             z,
             diameter: (bbox[2] - bbox[0]).max(bbox[3] - bbox[1]),
             elapsed_s: self.elapsed_s,
+            attr_s: t_attr,
+            rep_s: if obs_on { t_rep - t_attr } else { 0.0 },
+            grad_s: if obs_on { step_s - t_rep } else { 0.0 },
         };
         self.iter += 1;
         self.last_stats = Some(stats);

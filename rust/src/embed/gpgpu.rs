@@ -242,6 +242,11 @@ impl EmbeddingSession for GpgpuSession {
             z: out.zhat as f64,
             diameter: self.diameter,
             elapsed_s: self.elapsed_s,
+            // The device step is one fused executable — the per-phase
+            // split is not observable from the host.
+            attr_s: 0.0,
+            rep_s: 0.0,
+            grad_s: 0.0,
         };
         self.iter += 1;
         self.last_stats = Some(stats);

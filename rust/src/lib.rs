@@ -22,9 +22,11 @@
 //!   `FieldBackend` trait), the optimisers (exact t-SNE, Barnes-Hut,
 //!   simulated t-SNE-CUDA, field engines — all exposed as stepwise
 //!   `embed::EmbeddingSession`s: pause/resume/warm-start/checkpoint),
-//!   metrics, and the progressive embedding *service*: a cooperative
-//!   scheduler time-slicing sessions across workers, with the paper's
-//!   adaptive field-resolution policy.
+//!   metrics, the observability substrate (`obs/`: lock-free span
+//!   tracing + a metrics registry, surfaced over the protocol's
+//!   `metrics`/`trace` commands), and the progressive embedding
+//!   *service*: a cooperative scheduler time-slicing sessions across
+//!   workers, with the paper's adaptive field-resolution policy.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! binary is self-contained.
@@ -35,6 +37,7 @@ pub mod embed;
 pub mod field;
 pub mod hd;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod util;
 

@@ -45,10 +45,11 @@ fn print_help() {
                   --out embedding.csv --image embedding.pgm\n\
          serve    --addr 127.0.0.1:7878 --max-concurrent 2\n\
                   --state-dir state/ --journal-every 50\n\
+                  --metrics-dump metrics.json --trace-ring 4096\n\
                   (cooperatively scheduled sessions; TCP commands incl.\n\
-                   pause/resume/update/checkpoint, resumable submits —\n\
-                   see docs/PROTOCOL.md; --state-dir makes jobs and the\n\
-                   similarity store survive restarts)\n\
+                   pause/resume/update/checkpoint/metrics/trace, resumable\n\
+                   submits — see docs/PROTOCOL.md; --state-dir makes jobs\n\
+                   and the similarity store survive restarts)\n\
          info     (artifact + platform report)\n\
          datasets (Table 1)\n\n\
          Run `make artifacts` first to enable the gpgpu engine."
@@ -116,7 +117,9 @@ fn cmd_embed(args: &Args) -> anyhow::Result<()> {
     // Progress printer thread.
     let rx = state.snapshots.subscribe();
     let printer = std::thread::spawn(move || {
+        let lag = gpgpu_sne::obs::registry().histogram("snapshot.deliver_lag_ns");
         for s in rx {
+            lag.record(gpgpu_sne::obs::now_ns().saturating_sub(s.published_ns));
             eprintln!("  iter {:>5}  KL≈{:.4}  t={}", s.iter, s.kl_est, fmt_secs(s.elapsed_s));
         }
     });
@@ -125,21 +128,10 @@ fn cmd_embed(args: &Args) -> anyhow::Result<()> {
     let _ = printer.join();
 
     println!(
-        "done: {} iters, KL≈{:.4}; stages: data {} | knn {} | perplexity {} | optimize {} | similarities {}{}",
+        "done: {} iters, KL≈{:.4}; stages: {}",
         res.iters_run,
         res.kl_est,
-        fmt_secs(res.timings.dataset_s),
-        fmt_secs(res.timings.knn_s),
-        fmt_secs(res.timings.perplexity_s),
-        fmt_secs(res.timings.optimize_s),
-        fmt_secs(res.timings.similarities_s()),
-        if res.timings.sim_cache_hit {
-            " (cache hit)"
-        } else if res.timings.knn_cache_hit {
-            " (knn graph from cache)"
-        } else {
-            ""
-        },
+        res.timings.human_summary(),
     );
     if let Some(path) = out {
         let n = res.embedding.len() / 2;
@@ -169,6 +161,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     let journal_every =
         args.get("journal-every", 50usize, "journal running jobs every N iterations");
+    let metrics_dump =
+        args.opt_str("metrics-dump", "write a JSON metrics snapshot to this path every 5 s");
+    let trace_ring = args.get(
+        "trace-ring",
+        gpgpu_sne::obs::trace::DEFAULT_RING_CAPACITY,
+        "per-thread trace-ring capacity, in span events",
+    );
     args.finish_help("Serve the progressive embedding service over TCP");
     let rt = load_runtime();
     println!(
@@ -183,9 +182,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         max_concurrent: maxc,
         state_dir: state_dir.map(std::path::PathBuf::from),
         journal_every,
+        trace_ring,
         ..Default::default()
     };
     let svc = Arc::new(gpgpu_sne::coordinator::EmbeddingService::with_config(rt, cfg));
+    if let Some(path) = metrics_dump {
+        println!("metrics dump: {path} (every 5 s; same shape as the `metrics` command)");
+        let svc = svc.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            if let Err(e) = std::fs::write(&path, format!("{}\n", svc.metrics_json())) {
+                eprintln!("warning: metrics dump to {path} failed: {e}");
+                return;
+            }
+        });
+    }
     gpgpu_sne::coordinator::protocol::serve(svc, &addr, |a| println!("listening on {a}"))
 }
 

@@ -1,0 +1,282 @@
+//! Metrics registry: named counters, gauges and log-bucketed
+//! histograms, registered once and updated via relaxed atomics.
+//!
+//! Registration (`Registry::counter` etc.) takes a lock and may
+//! allocate; it happens once per call site (cache the returned `Arc`,
+//! or park it in a `OnceLock` from free functions). Updates are single
+//! `fetch_add`s. Snapshots ([`Registry::snapshot`]) serialise every
+//! registered metric to [`Json`] — counters and gauges as numbers,
+//! histograms as `{count, sum, p50, p95, p99}` — which is exactly what
+//! the protocol's `metrics` command and `serve --metrics-dump` emit.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depths, active workers).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of power-of-two buckets — covers the full `u64` range.
+const BUCKETS: usize = 64;
+
+/// Log-bucketed histogram over `u64` samples (by convention durations
+/// in nanoseconds, names suffixed `_ns`).
+///
+/// Bucket 0 holds the value 0; bucket `b ≥ 1` holds `[2^(b-1), 2^b)`.
+/// Recording is two relaxed `fetch_add`s plus a `leading_zeros`;
+/// quantile estimates return the geometric midpoint of the covering
+/// bucket, so they are accurate to within a factor of 2 — plenty for
+/// "did the quantum blow its 25 ms budget" questions.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    /// Representative value for a bucket: the geometric midpoint of its
+    /// `[2^(b-1), 2^b)` range.
+    fn bucket_mid(b: usize) -> u64 {
+        match b {
+            0 => 0,
+            1 => 1,
+            b => 3u64 << (b - 2),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Estimated `q`-quantile (`0.0 ..= 1.0`) of everything recorded so
+    /// far; 0 when empty. Accurate to within 2× (bucket resolution).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_mid(b);
+            }
+        }
+        Self::bucket_mid(BUCKETS - 1)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum", Json::Num(self.sum() as f64)),
+            ("p50", Json::Num(self.quantile(0.50) as f64)),
+            ("p95", Json::Num(self.quantile(0.95) as f64)),
+            ("p99", Json::Num(self.quantile(0.99) as f64)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// A named set of metrics. One process-wide instance ([`registry`])
+/// serves free-function call sites; subsystems that want isolation
+/// (the scheduler, tests) own their own.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-register: the same name always returns the same handle.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Serialise every registered metric, sorted by name.
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters =
+            g.counters.iter().map(|(k, c)| (k.clone(), Json::Num(c.get() as f64))).collect();
+        let gauges = g.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(v.get() as f64))).collect();
+        let hists = g.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        Json::Obj(vec![
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("histograms".to_string(), Json::Obj(hists)),
+        ])
+    }
+}
+
+/// The process-wide registry: store I/O and snapshot-fanout metrics
+/// live here (their call sites are free functions with no service
+/// handle in scope).
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_resolution() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram reads 0");
+        for _ in 0..90 {
+            h.record(1_000); // bucket [512, 1024)
+        }
+        for _ in 0..10 {
+            h.record(1_000_000); // bucket [2^19, 2^20)
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        assert!((512..1024).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((524_288..2_097_152).contains(&p99), "p99={p99}");
+        assert!(h.quantile(1.0) >= p99);
+    }
+
+    #[test]
+    fn registry_returns_stable_handles_and_snapshots() {
+        let r = Registry::new();
+        let a = r.counter("x.events");
+        let b = r.counter("x.events");
+        a.inc();
+        assert_eq!(b.get(), 1, "same name, same counter");
+        r.gauge("x.depth").set(3);
+        r.histogram("x.lat_ns").record(100);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("counters").unwrap().num_field("x.events"), Some(1.0));
+        assert_eq!(snap.get("gauges").unwrap().num_field("x.depth"), Some(3.0));
+        let h = snap.get("histograms").unwrap().get("x.lat_ns").unwrap();
+        assert_eq!(h.num_field("count"), Some(1.0));
+        assert_eq!(h.num_field("sum"), Some(100.0));
+    }
+}

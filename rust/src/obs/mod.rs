@@ -1,0 +1,52 @@
+//! Observability substrate: low-overhead tracing + a metrics registry.
+//!
+//! The coordinator serves checkpointed, time-sliced, cached jobs
+//! (`coordinator/`); this module makes that machinery visible without
+//! perturbing it. Two primitives:
+//!
+//! * [`trace`] — per-thread lock-free ring buffers of span events
+//!   (`span_begin`/`span_end` with a span kind, job id and quantum
+//!   sequence number). Emitting an event is a handful of atomic stores
+//!   into a pre-allocated ring; draining ([`trace::snapshot`]) walks
+//!   every thread's ring seqlock-style and merges. No allocation on the
+//!   hot path — rings are allocated once per thread, on first use.
+//! * [`metrics`] — named counters, gauges and log-bucketed histograms
+//!   (p50/p95/p99), registered once in a [`metrics::Registry`] and
+//!   updated via relaxed atomics thereafter.
+//!
+//! Metric naming scheme: `<subsystem>.<quantity>[_<unit>]`, e.g.
+//! `scheduler.quantum_ns`, `store.write_bytes`, `snapshot.publish_skipped`.
+//! Duration histograms always record **nanoseconds** and carry the
+//! `_ns` suffix; byte counters carry `_bytes`. The process-wide
+//! registry ([`metrics::registry`]) holds metrics owned by free
+//! functions (store I/O, snapshot fanout); the scheduler keeps its own
+//! per-service `Registry` so tests observe an isolated instance — both
+//! are merged by the `metrics` protocol command.
+//!
+//! The whole subsystem sits behind one global switch
+//! ([`set_enabled`]): when off, span emission and the engines' per-phase
+//! step timing short-circuit to nothing. The overhead budget with
+//! everything on is <1% of a `session_step`, enforced by the `obs`
+//! section of `benches/micro_hotpath.rs`.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
+pub use trace::{now_ns, span, span_begin, span_end, Span, SpanEvent, SpanGuard, SpanKind};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Master switch for hot-path instrumentation (tracing + per-phase
+/// engine timings). Metrics that live on cold paths (store I/O, cache
+/// registration) stay on regardless — they cost nothing measurable.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is hot-path instrumentation on? One relaxed load.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}

@@ -1,0 +1,359 @@
+//! Structured tracing: per-thread lock-free ring buffers of span
+//! events.
+//!
+//! Every instrumented thread owns a fixed-size ring (allocated once, on
+//! the thread's first event — never on the steady-state hot path).
+//! Emitting an event packs it into four `u64` words and stores them
+//! into the next slot under a per-slot seqlock stamp; no locks, no
+//! allocation, a handful of atomic stores. Draining
+//! ([`snapshot`]) walks every ring, skips slots that are mid-overwrite
+//! (odd or changed stamp), merges and time-orders what remains — a
+//! *best-effort* consistent view, which is the right trade for a trace
+//! buffer: the writer never waits for the reader.
+//!
+//! Span identity is the closed [`Span`] enum (adding an instrumentation
+//! point = adding a variant), so events carry a byte, not a string.
+//! Timestamps are nanoseconds on a process-wide monotonic epoch
+//! ([`now_ns`]); `job` is the numeric job id (0 = no job context, e.g.
+//! store I/O on the admission path) and `seq` is the scheduler's
+//! quantum sequence number (or the iteration for step spans).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default per-thread ring capacity, in events (`serve --trace-ring`
+/// overrides via [`set_ring_capacity`]).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// What a span event describes. Closed set: one byte on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Span {
+    /// One scheduler quantum of a job (`coordinator::service`).
+    Quantum,
+    /// A job parked by `pause` — begin at park, end at first
+    /// post-resume slice, so the span length *is* the park→resume
+    /// latency.
+    Park,
+    /// One engine iteration driven by the scheduler.
+    EngineStep,
+    /// Snapshot fanout to subscribers.
+    SnapshotPublish,
+    /// Similarity-stage lookup (cache + compute) for a job.
+    SimLookup,
+    /// Durable-store record read.
+    StoreRead,
+    /// Durable-store record write.
+    StoreWrite,
+}
+
+impl Span {
+    pub fn name(self) -> &'static str {
+        match self {
+            Span::Quantum => "scheduler.quantum",
+            Span::Park => "scheduler.park",
+            Span::EngineStep => "engine.step",
+            Span::SnapshotPublish => "snapshot.publish",
+            Span::SimLookup => "simcache.lookup",
+            Span::StoreRead => "store.read",
+            Span::StoreWrite => "store.write",
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            Span::Quantum => 0,
+            Span::Park => 1,
+            Span::EngineStep => 2,
+            Span::SnapshotPublish => 3,
+            Span::SimLookup => 4,
+            Span::StoreRead => 5,
+            Span::StoreWrite => 6,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Span> {
+        Some(match v {
+            0 => Span::Quantum,
+            1 => Span::Park,
+            2 => Span::EngineStep,
+            3 => Span::SnapshotPublish,
+            4 => Span::SimLookup,
+            5 => Span::StoreRead,
+            6 => Span::StoreWrite,
+            _ => return None,
+        })
+    }
+}
+
+/// Begin/end marker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Begin,
+    End,
+}
+
+/// One trace event.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub span: Span,
+    /// Numeric job id; 0 when there is no job context.
+    pub job: u64,
+    /// Quantum sequence number (step spans: the iteration).
+    pub seq: u64,
+    /// Nanoseconds on the process trace epoch ([`now_ns`]).
+    pub t_ns: u64,
+}
+
+impl SpanEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("span", Json::Str(self.span.name().to_string())),
+            (
+                "kind",
+                Json::Str(match self.kind {
+                    SpanKind::Begin => "begin".to_string(),
+                    SpanKind::End => "end".to_string(),
+                }),
+            ),
+            ("job", Json::Num(self.job as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("t_ns", Json::Num(self.t_ns as f64)),
+        ])
+    }
+}
+
+fn epoch() -> &'static Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    E.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (first observability use).
+/// Monotonic across threads — safe to subtract for lags.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// One ring slot: a seqlock stamp plus the packed event. The stamp is
+/// `2k+1` while the k-th write is in flight and `2k+2` once complete
+/// (0 = never written); readers discard odd or changed stamps.
+struct Slot {
+    stamp: AtomicU64,
+    w0: AtomicU64,
+    w1: AtomicU64,
+    w2: AtomicU64,
+    w3: AtomicU64,
+}
+
+/// A single-writer ring of span events. The writer is the owning
+/// thread; readers are whoever drains ([`snapshot`]).
+struct Ring {
+    slots: Box<[Slot]>,
+    /// Number of events ever pushed (writer-owned).
+    head: AtomicU64,
+}
+
+impl Ring {
+    fn with_capacity(n: usize) -> Ring {
+        let n = n.max(16);
+        let slots = (0..n)
+            .map(|_| Slot {
+                stamp: AtomicU64::new(0),
+                w0: AtomicU64::new(0),
+                w1: AtomicU64::new(0),
+                w2: AtomicU64::new(0),
+                w3: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring { slots, head: AtomicU64::new(0) }
+    }
+
+    fn push(&self, e: SpanEvent) {
+        let k = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(k % self.slots.len() as u64) as usize];
+        slot.stamp.store(2 * k + 1, Ordering::SeqCst);
+        let kind = match e.kind {
+            SpanKind::Begin => 0u64,
+            SpanKind::End => 1u64,
+        };
+        slot.w0.store(kind | (e.span.as_u8() as u64) << 8, Ordering::Relaxed);
+        slot.w1.store(e.job, Ordering::Relaxed);
+        slot.w2.store(e.seq, Ordering::Relaxed);
+        slot.w3.store(e.t_ns, Ordering::Relaxed);
+        slot.stamp.store(2 * k + 2, Ordering::SeqCst);
+        self.head.store(k + 1, Ordering::Release);
+    }
+
+    /// Every consistently-readable event in the ring, unordered.
+    fn read_all(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let a = slot.stamp.load(Ordering::SeqCst);
+            if a == 0 || a % 2 == 1 {
+                continue; // empty or mid-write
+            }
+            let w0 = slot.w0.load(Ordering::Relaxed);
+            let w1 = slot.w1.load(Ordering::Relaxed);
+            let w2 = slot.w2.load(Ordering::Relaxed);
+            let w3 = slot.w3.load(Ordering::Relaxed);
+            if slot.stamp.load(Ordering::SeqCst) != a {
+                continue; // overwritten while reading
+            }
+            let Some(span) = Span::from_u8((w0 >> 8) as u8) else { continue };
+            let kind = if w0 & 0xff == 0 { SpanKind::Begin } else { SpanKind::End };
+            out.push(SpanEvent { kind, span, job: w1, seq: w2, t_ns: w3 });
+        }
+        out
+    }
+}
+
+struct Shared {
+    rings: Mutex<Vec<Arc<Ring>>>,
+    capacity: AtomicUsize,
+}
+
+fn shared() -> &'static Shared {
+    static S: OnceLock<Shared> = OnceLock::new();
+    S.get_or_init(|| Shared {
+        rings: Mutex::new(Vec::new()),
+        capacity: AtomicUsize::new(DEFAULT_RING_CAPACITY),
+    })
+}
+
+thread_local! {
+    static RING: Arc<Ring> = {
+        let s = shared();
+        let ring = Arc::new(Ring::with_capacity(s.capacity.load(Ordering::Relaxed)));
+        s.rings.lock().unwrap().push(ring.clone());
+        ring
+    };
+}
+
+/// Size rings created *after* this call (existing rings keep their
+/// capacity — threads allocate on first event). `serve --trace-ring`
+/// calls this before spawning workers.
+pub fn set_ring_capacity(n: usize) {
+    shared().capacity.store(n.max(16), Ordering::Relaxed);
+}
+
+fn emit(kind: SpanKind, span: Span, job: u64, seq: u64) {
+    if !super::enabled() {
+        return;
+    }
+    let e = SpanEvent { kind, span, job, seq, t_ns: now_ns() };
+    let _ = RING.try_with(|r| r.push(e));
+}
+
+pub fn span_begin(span: Span, job: u64, seq: u64) {
+    emit(SpanKind::Begin, span, job, seq);
+}
+
+pub fn span_end(span: Span, job: u64, seq: u64) {
+    emit(SpanKind::End, span, job, seq);
+}
+
+/// RAII span: begin now, end on drop.
+pub struct SpanGuard {
+    span: Span,
+    job: u64,
+    seq: u64,
+}
+
+pub fn span(span: Span, job: u64, seq: u64) -> SpanGuard {
+    span_begin(span, job, seq);
+    SpanGuard { span, job, seq }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        span_end(self.span, self.job, self.seq);
+    }
+}
+
+/// Merge every thread's ring: events for `job` (or all jobs when
+/// `None`), time-ordered, truncated to the newest `last_n`.
+pub fn snapshot(job: Option<u64>, last_n: usize) -> Vec<SpanEvent> {
+    let rings: Vec<Arc<Ring>> = shared().rings.lock().unwrap().clone();
+    let mut evs: Vec<SpanEvent> = rings
+        .iter()
+        .flat_map(|r| r.read_all())
+        .filter(|e| job.map_or(true, |j| e.job == j))
+        .collect();
+    evs.sort_by_key(|e| e.t_ns);
+    if evs.len() > last_n {
+        evs.drain(..evs.len() - last_n);
+    }
+    evs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_roundtrips_events() {
+        let r = Ring::with_capacity(32);
+        for i in 0..5u64 {
+            r.push(SpanEvent {
+                kind: SpanKind::Begin,
+                span: Span::Quantum,
+                job: 7,
+                seq: i,
+                t_ns: 100 + i,
+            });
+        }
+        let mut evs = r.read_all();
+        evs.sort_by_key(|e| e.seq);
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[4].seq, 4);
+        assert_eq!(evs[0].job, 7);
+        assert_eq!(evs[0].span, Span::Quantum);
+        assert_eq!(evs[0].kind, SpanKind::Begin);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let r = Ring::with_capacity(16);
+        for i in 0..50u64 {
+            r.push(SpanEvent { kind: SpanKind::End, span: Span::Park, job: 1, seq: i, t_ns: i });
+        }
+        let evs = r.read_all();
+        assert_eq!(evs.len(), 16);
+        assert!(evs.iter().all(|e| e.seq >= 34), "only the newest survive");
+    }
+
+    #[test]
+    fn spans_reach_the_global_snapshot() {
+        // A job id no other test uses, so parallel tests can't interfere.
+        let job = 0xdead_beef_0001;
+        {
+            let _g = span(Span::EngineStep, job, 3);
+        }
+        let evs = snapshot(Some(job), 100);
+        assert_eq!(evs.len(), 2, "begin + end");
+        assert_eq!(evs[0].kind, SpanKind::Begin);
+        assert_eq!(evs[1].kind, SpanKind::End);
+        assert!(evs[0].t_ns <= evs[1].t_ns, "time-ordered");
+        assert_eq!(evs[1].seq, 3);
+
+        // last_n truncation keeps the tail.
+        let one = snapshot(Some(job), 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].kind, SpanKind::End);
+    }
+
+    #[test]
+    fn event_json_shape() {
+        let e =
+            SpanEvent { kind: SpanKind::Begin, span: Span::StoreWrite, job: 2, seq: 9, t_ns: 11 };
+        let j = e.to_json();
+        assert_eq!(j.str_field("span"), Some("store.write"));
+        assert_eq!(j.str_field("kind"), Some("begin"));
+        assert_eq!(j.num_field("job"), Some(2.0));
+        assert_eq!(j.num_field("seq"), Some(9.0));
+    }
+}

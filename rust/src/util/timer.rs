@@ -1,7 +1,7 @@
 //! Wall-clock timing helpers used across benches, examples and the
 //! coordinator's progress reporting.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A simple scoped timer.
 pub struct Timer {
@@ -19,6 +19,66 @@ impl Timer {
 
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_s() * 1e3
+    }
+}
+
+/// A monotonic stopwatch with lap support — the one timing primitive
+/// behind the scheduler's quantum accounting (`coordinator::service`)
+/// and the observability instrumentation, replacing ad-hoc
+/// `Instant` pairs.
+///
+/// * `elapsed*` reads time since the last [`Stopwatch::restart`] (or
+///   construction) without disturbing the lap marker — budget checks
+///   ("has this quantum used its 25 ms?") poll it freely.
+/// * [`Stopwatch::lap`] returns the time since the previous lap (or
+///   start) and advances the lap marker — per-segment splits.
+/// * [`Stopwatch::expired`] is the deadline idiom: `sw.expired(budget)`
+///   replaces `Instant::now() >= start + budget`.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+    last_lap: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Self { start: now, last_lap: now }
+    }
+
+    /// Time since start (or the last [`Self::restart`]).
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Whole milliseconds since start — the scheduler's budget-check
+    /// granularity.
+    pub fn elapsed_ms(&self) -> u64 {
+        self.elapsed().as_millis() as u64
+    }
+
+    /// Time since the previous lap (or start); advances the lap marker.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last_lap;
+        self.last_lap = now;
+        d
+    }
+
+    /// Reset both the start and the lap marker to now.
+    pub fn restart(&mut self) {
+        let now = Instant::now();
+        self.start = now;
+        self.last_lap = now;
+    }
+
+    /// Has at least `budget` elapsed since start?
+    pub fn expired(&self, budget: Duration) -> bool {
+        self.elapsed() >= budget
     }
 }
 
@@ -50,5 +110,29 @@ mod tests {
         let t = Timer::start();
         std::thread::sleep(std::time::Duration::from_millis(2));
         assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn stopwatch_laps_partition_elapsed() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let a = sw.lap();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = sw.lap();
+        assert!(a >= Duration::from_millis(1));
+        assert!(b >= Duration::from_millis(1));
+        // Laps split the total: their sum cannot exceed elapsed.
+        assert!(a + b <= sw.elapsed() + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn stopwatch_restart_and_deadline() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.expired(Duration::from_millis(1)));
+        assert!(!sw.expired(Duration::from_secs(3600)));
+        sw.restart();
+        assert!(sw.elapsed_ms() < 3600 * 1000);
+        assert!(!sw.expired(Duration::from_secs(3600)));
     }
 }
