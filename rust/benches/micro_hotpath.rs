@@ -9,9 +9,10 @@
 //! at fixed (N, G), the field-stage head-to-head at N=50 000, G=256, the
 //! FFT-core complex-vs-real pipeline ratio, the similarities section
 //! (blocked vs scalar brute kNN at N=10k/D=128, fused vs reference P
-//! build), and the observability section (instrumentation primitives +
-//! the <1% session-step overhead gate), so the perf trajectory is
-//! machine-trackable across PRs.
+//! build), the observability section (instrumentation primitives + the
+//! <1% session-step overhead gate), and the fault-injection section
+//! (disabled `fire()` pinned under 1 ns/check), so the perf trajectory
+//! is machine-trackable across PRs.
 //!
 //!     cargo bench --bench micro_hotpath [-- --quick]
 
@@ -599,6 +600,64 @@ fn main() -> anyhow::Result<()> {
                 ("step_obs_off_ns_per_iter", Json::Num(off_ns)),
                 ("step_obs_on_ns_per_iter", Json::Num(on_ns)),
                 ("overhead_pct", Json::Num(overhead_pct)),
+            ]),
+        ));
+    }
+
+    // --- Fault-injection check cost (ARCHITECTURE.md §Failure domains):
+    // `faultinject::fire` sits on the engine step, store write, and
+    // connection paths, so its disabled fast path — one relaxed atomic
+    // load — must stay under 1 ns/check. Also reported (informational):
+    // the enabled-but-unarmed slow path a chaos run pays on points it
+    // did not arm.
+    {
+        use gpgpu_sne::coordinator::faultinject;
+
+        let it = if quick { 3 } else { 5 };
+        let ops = if quick { 2_000_000u64 } else { 10_000_000 };
+        faultinject::disarm_all();
+        let disabled_t = measure(1, it, || {
+            let mut fired = 0u64;
+            for _ in 0..ops {
+                fired += faultinject::fire(faultinject::TEST_POINT) as u64;
+            }
+            // The registry is process-global state the optimiser cannot
+            // see through, but keep the result live regardless.
+            assert_eq!(std::hint::black_box(fired), 0);
+        })
+        .min();
+        let disabled_ns = disabled_t * 1e9 / ops as f64;
+        // Arm an unrelated point: the probed point takes the enabled
+        // slow path (registry lookup) but never fires.
+        let _armed = faultinject::guard("net.stall=once").expect("valid spec");
+        let unarmed_ops = ops / 10;
+        let unarmed_t = measure(1, it, || {
+            let mut fired = 0u64;
+            for _ in 0..unarmed_ops {
+                fired += faultinject::fire(faultinject::TEST_POINT) as u64;
+            }
+            assert_eq!(std::hint::black_box(fired), 0);
+        })
+        .min();
+        let unarmed_ns = unarmed_t * 1e9 / unarmed_ops as f64;
+        drop(_armed);
+        let mut rep = Report::new("fault-injection check cost", &["ns/check"]);
+        rep.row("fire(), disabled (production)", vec![format!("{disabled_ns:.3}")]);
+        rep.row("fire(), enabled + unarmed point", vec![format!("{unarmed_ns:.2}")]);
+        rep.print();
+        rep.write_csv("micro_faultinject.csv")?;
+        assert!(
+            disabled_ns < 1.0,
+            "disabled fault check costs {disabled_ns:.3}ns — the zero-overhead contract \
+             (<1ns/check) is broken"
+        );
+        json_sections.push((
+            "faultinject",
+            Json::obj(vec![
+                ("checks", Json::Num(ops as f64)),
+                ("disabled_ns_per_check", Json::Num(disabled_ns)),
+                ("enabled_unarmed_ns_per_check", Json::Num(unarmed_ns)),
+                ("budget_ns", Json::Num(1.0)),
             ]),
         ));
     }

@@ -1,0 +1,379 @@
+//! Fault-injection substrate: named fault points compiled into the
+//! serving stack, free when disarmed.
+//!
+//! A *fault point* is a named site where a provoked failure can be
+//! injected — a store write that errors, an engine step that panics, a
+//! connection handler that stalls. Call sites ask [`fire`] whether the
+//! fault should trigger *now*; with nothing armed that is one relaxed
+//! atomic load and a predicted branch (the same discipline as
+//! [`crate::obs::set_enabled`], pinned <1 ns by the `faultinject`
+//! section of `benches/micro_hotpath.rs`), so the points stay compiled
+//! into release builds and chaos tests exercise the exact binary that
+//! serves traffic.
+//!
+//! Points are armed with a [`Trigger`] — one-shot, every-Nth check, or
+//! per-check probability from a private seeded xorshift (deterministic
+//! chaos runs) — either programmatically ([`arm`], [`arm_spec`]), from
+//! the CLI (`serve --fault <spec>`), or over the wire (the `fault`
+//! protocol command), so chaos harnesses drive the real TCP surface.
+//!
+//! Spec grammar (comma-separated):
+//!
+//! ```text
+//! point=once            fire on the first check, then never again
+//! point=every:N         fire on every Nth check (N >= 1)
+//! point=prob:P[@SEED]   fire each check with probability P in [0,1]
+//! ```
+//!
+//! The registry is process-global (chaos tests own their process);
+//! scoped test use goes through [`guard`], which disarms everything on
+//! drop.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Store write fails with a transient I/O error (exercises retry).
+pub const STORE_WRITE: &str = "store.write";
+/// Simulated kill between the tmp-file write and the atomic rename:
+/// the tmp file is left behind and the destination never appears.
+pub const STORE_WRITE_CRASH: &str = "store.write_crash";
+/// Store read sees a corrupted record (checksum flips on the way in).
+pub const STORE_READ_CORRUPT: &str = "store.read_corrupt";
+/// Journal append fails with a transient I/O error.
+pub const JOURNAL_APPEND: &str = "journal.append";
+/// The engine step panics mid-quantum (exercises worker catch_unwind).
+pub const ENGINE_STEP_PANIC: &str = "engine.step_panic";
+/// The connection handler stalls before responding.
+pub const NET_STALL: &str = "net.stall";
+/// A snapshot subscriber consumes slowly (exercises drop-oldest/evict).
+pub const SNAPSHOT_SLOW_SUBSCRIBER: &str = "snapshot.slow_subscriber";
+/// Reserved for faultinject's own unit tests; wired nowhere.
+pub const TEST_POINT: &str = "test.point";
+
+/// Every known fault point. Arming an unknown name is an error, so a
+/// typoed chaos spec fails loudly instead of silently testing nothing.
+pub const POINTS: &[&str] = &[
+    STORE_WRITE,
+    STORE_WRITE_CRASH,
+    STORE_READ_CORRUPT,
+    JOURNAL_APPEND,
+    ENGINE_STEP_PANIC,
+    NET_STALL,
+    SNAPSHOT_SLOW_SUBSCRIBER,
+    TEST_POINT,
+];
+
+/// Master switch: false ⇒ every [`fire`] is one relaxed load + branch.
+/// Flipped true by [`arm`]/[`arm_spec`], false when the last point is
+/// disarmed — callers never manage it directly.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// True if any fault point is armed (the fast-path gate [`fire`] reads).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// When an armed fault point fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// Fire on the first check, then never again.
+    Once,
+    /// Fire on every `n`th check (`n >= 1`; `every:1` fires always).
+    EveryNth(u64),
+    /// Fire each check with probability `p` from a private seeded rng.
+    Prob(f64),
+}
+
+impl std::fmt::Display for Trigger {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Trigger::Once => write!(f, "once"),
+            Trigger::EveryNth(n) => write!(f, "every:{n}"),
+            Trigger::Prob(p) => write!(f, "prob:{p}"),
+        }
+    }
+}
+
+struct Armed {
+    trigger: Trigger,
+    rng: u64,
+    checks: u64,
+    fired: u64,
+}
+
+/// One armed point's counters, as reported by the `fault` command.
+pub struct PointStatus {
+    pub point: &'static str,
+    pub trigger: String,
+    pub checks: u64,
+    pub fired: u64,
+}
+
+fn registry() -> &'static Mutex<HashMap<&'static str, Armed>> {
+    static REG: OnceLock<Mutex<HashMap<&'static str, Armed>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn canonical(point: &str) -> Result<&'static str, String> {
+    POINTS
+        .iter()
+        .find(|&&p| p == point)
+        .copied()
+        .ok_or_else(|| format!("unknown fault point '{}' (known: {})", point, POINTS.join(", ")))
+}
+
+/// Should the fault at `point` trigger now? The serving hot paths call
+/// this unconditionally; with nothing armed it is one relaxed load.
+#[inline]
+pub fn fire(point: &'static str) -> bool {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_slow(point)
+}
+
+#[cold]
+#[inline(never)]
+fn fire_slow(point: &str) -> bool {
+    let mut reg = registry().lock().unwrap();
+    let Some(armed) = reg.get_mut(point) else {
+        return false;
+    };
+    armed.checks += 1;
+    let hit = match armed.trigger {
+        Trigger::Once => armed.fired == 0,
+        Trigger::EveryNth(n) => armed.checks % n.max(1) == 0,
+        Trigger::Prob(p) => {
+            armed.rng = xorshift(armed.rng);
+            ((armed.rng >> 11) as f64 / (1u64 << 53) as f64) < p
+        }
+    };
+    if hit {
+        armed.fired += 1;
+    }
+    hit
+}
+
+fn xorshift(mut s: u64) -> u64 {
+    s ^= s << 13;
+    s ^= s >> 7;
+    s ^= s << 17;
+    s
+}
+
+/// Arm `point` with `trigger`. `seed` feeds the [`Trigger::Prob`] rng
+/// (0 ⇒ a fixed default, still deterministic). Re-arming replaces the
+/// trigger and resets the counters. Flips the global switch on.
+pub fn arm(point: &str, trigger: Trigger, seed: u64) -> Result<(), String> {
+    let canon = canonical(point)?;
+    if let Trigger::Prob(p) = trigger {
+        if !(0.0..=1.0).contains(&p) || !p.is_finite() {
+            return Err(format!("probability {p} outside [0, 1]"));
+        }
+    }
+    if let Trigger::EveryNth(0) = trigger {
+        return Err("every:N needs N >= 1".to_string());
+    }
+    let rng = if seed == 0 { 0x9e37_79b9_7f4a_7c15 } else { seed };
+    let armed = Armed { trigger, rng, checks: 0, fired: 0 };
+    registry().lock().unwrap().insert(canon, armed);
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Arm a comma-separated spec, e.g.
+/// `store.write=every:3,engine.step_panic=prob:0.05@42`. Atomic per
+/// part: earlier parts of a spec that fails mid-way stay armed.
+pub fn arm_spec(spec: &str) -> Result<(), String> {
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (point, trig) = part
+            .split_once('=')
+            .ok_or_else(|| format!("bad fault spec '{part}': expected point=trigger"))?;
+        let (trigger, seed) = parse_trigger(trig.trim())?;
+        arm(point.trim(), trigger, seed)?;
+    }
+    Ok(())
+}
+
+fn parse_trigger(s: &str) -> Result<(Trigger, u64), String> {
+    if s == "once" {
+        return Ok((Trigger::Once, 0));
+    }
+    if let Some(n) = s.strip_prefix("every:") {
+        let n: u64 = n.parse().map_err(|_| format!("bad every-nth count '{n}'"))?;
+        if n == 0 {
+            return Err("every:N needs N >= 1".to_string());
+        }
+        return Ok((Trigger::EveryNth(n), 0));
+    }
+    if let Some(rest) = s.strip_prefix("prob:") {
+        let (p_str, seed) = match rest.split_once('@') {
+            Some((p, s)) => (p, s.parse::<u64>().map_err(|_| format!("bad seed '{s}'"))?),
+            None => (rest, 0),
+        };
+        let p: f64 = p_str.parse().map_err(|_| format!("bad probability '{p_str}'"))?;
+        return Ok((Trigger::Prob(p), seed));
+    }
+    Err(format!("bad trigger '{s}': expected once | every:N | prob:P[@SEED]"))
+}
+
+/// Disarm one point. Returns whether it was armed; flips the global
+/// switch off when the registry empties.
+pub fn disarm(point: &str) -> bool {
+    let mut reg = registry().lock().unwrap();
+    let was = reg.remove(point).is_some();
+    if reg.is_empty() {
+        ENABLED.store(false, Ordering::Relaxed);
+    }
+    was
+}
+
+/// Disarm everything and switch the fast-path gate off.
+pub fn disarm_all() {
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Counters for every armed point, sorted by name.
+pub fn status() -> Vec<PointStatus> {
+    let reg = registry().lock().unwrap();
+    let mut out: Vec<PointStatus> = reg
+        .iter()
+        .map(|(point, a)| PointStatus {
+            point,
+            trigger: a.trigger.to_string(),
+            checks: a.checks,
+            fired: a.fired,
+        })
+        .collect();
+    out.sort_by(|a, b| a.point.cmp(b.point));
+    out
+}
+
+/// Arms `spec` and returns a guard that disarms *everything* on drop —
+/// scoped fault windows for tests.
+pub fn guard(spec: &str) -> Result<FaultGuard, String> {
+    arm_spec(spec)?;
+    Ok(FaultGuard)
+}
+
+/// Disarms all fault points when dropped. See [`guard`].
+pub struct FaultGuard;
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        disarm_all();
+    }
+}
+
+/// Serialises unit tests that touch the process-global registry — this
+/// module's own plus the protocol layer's `fault`-command tests, which
+/// share one process under `cargo test`. Integration-test binaries run
+/// in their own processes and don't need it.
+#[cfg(test)]
+pub(crate) fn test_registry_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and `cargo test` threads run in
+    // parallel, so every test here serialises on one lock and touches
+    // only TEST_POINT (wired nowhere in the serving stack).
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_registry_lock()
+    }
+
+    #[test]
+    fn disarmed_point_never_fires() {
+        let _l = lock();
+        disarm_all();
+        assert!(!enabled());
+        assert!(!fire(TEST_POINT));
+    }
+
+    #[test]
+    fn once_fires_exactly_once() {
+        let _l = lock();
+        let _g = guard("test.point=once").unwrap();
+        assert!(enabled());
+        assert!(fire(TEST_POINT));
+        assert!(!fire(TEST_POINT));
+        assert!(!fire(TEST_POINT));
+        let st = status();
+        assert_eq!(st.len(), 1);
+        assert_eq!((st[0].checks, st[0].fired), (3, 1));
+    }
+
+    #[test]
+    fn every_nth_fires_on_the_nth_check() {
+        let _l = lock();
+        let _g = guard("test.point=every:3").unwrap();
+        let fires: Vec<bool> = (0..9).map(|_| fire(TEST_POINT)).collect();
+        assert_eq!(
+            fires,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+    }
+
+    #[test]
+    fn prob_is_deterministic_in_its_seed_and_roughly_calibrated() {
+        let _l = lock();
+        let run = |seed: u64| -> Vec<bool> {
+            let _g = guard(&format!("test.point=prob:0.25@{seed}")).unwrap();
+            (0..4000).map(|_| fire(TEST_POINT)).collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "same seed must replay identically");
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!(
+            (600..=1400).contains(&hits),
+            "p=0.25 over 4000 checks fired {hits} times"
+        );
+    }
+
+    #[test]
+    fn rearming_resets_counters_and_guard_disarms() {
+        let _l = lock();
+        {
+            let _g = guard("test.point=every:1").unwrap();
+            assert!(fire(TEST_POINT));
+            arm(TEST_POINT, Trigger::Once, 0).unwrap();
+            assert_eq!(status()[0].checks, 0);
+            assert!(fire(TEST_POINT));
+        }
+        assert!(!enabled());
+        assert!(status().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_loud_errors() {
+        let _l = lock();
+        disarm_all();
+        assert!(arm_spec("nosuch.point=once").is_err());
+        assert!(arm_spec("test.point").is_err());
+        assert!(arm_spec("test.point=every:0").is_err());
+        assert!(arm_spec("test.point=prob:1.5").is_err());
+        assert!(arm_spec("test.point=prob:x").is_err());
+        assert!(arm_spec("test.point=sometimes").is_err());
+        assert!(!enabled(), "failed arms must not flip the switch");
+    }
+
+    #[test]
+    fn multi_point_spec_arms_every_part() {
+        let _l = lock();
+        let _g = guard("test.point=prob:1@3, test.point=every:2").unwrap();
+        // Later parts replace earlier arms of the same point.
+        let st = status();
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].trigger, "every:2");
+        assert!(!fire(TEST_POINT));
+        assert!(fire(TEST_POINT));
+    }
+}

@@ -39,7 +39,25 @@
 //! and delivery lag. The `metrics` protocol command (and
 //! `serve --metrics-dump`) merges all of it into one JSON snapshot, and
 //! `trace` exposes the span-event ring buffers per job.
+//!
+//! The stack is **hardened** and testable under provoked failure:
+//! [`faultinject`] compiles named fault points (store errors, simulated
+//! crash-in-rename, engine-step panics, connection stalls, slow
+//! subscribers) into the serving paths at <1 ns disarmed cost, armed
+//! over the wire (`fault`) or at startup (`serve --fault`). The layers
+//! degrade instead of dying: the protocol front end bounds request
+//! size, applies per-connection timeouts and sheds connections over a
+//! cap; admission sheds `submit` with a retriable error over a queue
+//! cap; the store retries transient I/O with backoff and then falls
+//! back to memory-only operation (an `obs` gauge flips); snapshot
+//! fanout bounds per-subscriber queues with drop-oldest backpressure
+//! and evicts subscribers that stay slow; and `shutdown` (or SIGTERM)
+//! drains gracefully — stop admitting, checkpoint + journal every live
+//! session at a step boundary, exit — so a restart resumes
+//! bit-identically. `tests/chaos.rs` drives all of it concurrently
+//! over the real protocol.
 
+pub mod faultinject;
 pub mod job;
 pub mod pipeline;
 pub mod progress;
@@ -53,6 +71,6 @@ pub use pipeline::{
     begin_session, prepare_similarities, run_pipeline, run_pipeline_cached, AutoStopTracker,
     JobResult, PreparedJob, StageTimings,
 };
-pub use service::{EmbeddingService, JobId, ServiceConfig};
+pub use service::{EmbeddingService, JobId, ServiceConfig, SubmitError};
 pub use simcache::{GraphKey, LevelStats, SimKey, SimilarityCache, Source};
 pub use store::{JobJournal, SimStore};

@@ -1,13 +1,31 @@
-//! Progress broadcast substrate (no tokio): a multi-subscriber channel
-//! over `std::sync::mpsc`, plus the shared job status cell.
+//! Progress broadcast substrate (no tokio): a bounded multi-subscriber
+//! channel, plus the shared job status cell.
+//!
+//! Each subscriber owns a **bounded queue** ([`SUB_QUEUE_CAP`]): a
+//! publish into a full queue drops that subscriber's *oldest* pending
+//! message (a live view wants the newest frame, not a complete replay),
+//! and a subscriber that stays full for [`EVICT_AFTER_LAGGING`]
+//! consecutive publishes is **evicted** — its receiver disconnects, and
+//! the publisher stops paying to clone for it. A stalled TCP viewer can
+//! therefore cost at most a fixed amount of memory and fanout time,
+//! never an unbounded queue. Drops and evictions are counted in
+//! `snapshot.dropped_oldest` / `snapshot.subscribers_evicted`.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::mpsc::{RecvError, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::obs;
 
 use super::job::{JobPhase, ParamUpdate, Snapshot};
+
+/// Pending messages a subscriber may buffer before drop-oldest kicks in.
+pub const SUB_QUEUE_CAP: usize = 8;
+
+/// Consecutive full-queue publishes before a subscriber is evicted.
+pub const EVICT_AFTER_LAGGING: u64 = 32;
 
 /// `snapshot.publish_skipped` — sends that early-returned because nobody
 /// was subscribed. The sole production `Broadcast` carries snapshots,
@@ -30,23 +48,182 @@ fn fanout_ns() -> &'static Arc<obs::Histogram> {
     H.get_or_init(|| obs::registry().histogram("snapshot.fanout_ns"))
 }
 
+/// `snapshot.dropped_oldest` — messages displaced from a full subscriber
+/// queue by a newer publish (drop-oldest backpressure).
+fn dropped_oldest() -> &'static Arc<obs::Counter> {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("snapshot.dropped_oldest"))
+}
+
+/// `snapshot.subscribers_evicted` — subscribers disconnected for staying
+/// full [`EVICT_AFTER_LAGGING`] publishes in a row.
+fn subscribers_evicted() -> &'static Arc<obs::Counter> {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("snapshot.subscribers_evicted"))
+}
+
+struct SubQueue<T> {
+    buf: VecDeque<T>,
+    /// Consecutive publishes that found the queue full.
+    lagging: u64,
+    /// Receiver side dropped; prune on the next send.
+    closed: bool,
+    /// Sender side gone (broadcast dropped, or this subscriber evicted);
+    /// drained receives report disconnection.
+    disconnected: bool,
+}
+
+struct SubShared<T> {
+    q: Mutex<SubQueue<T>>,
+    cv: Condvar,
+}
+
+impl<T> SubShared<T> {
+    fn lock(&self) -> std::sync::MutexGuard<'_, SubQueue<T>> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// The receiving half of one [`Broadcast`] subscription: a bounded
+/// queue with `std::sync::mpsc`-shaped blocking accessors.
+pub struct Subscription<T> {
+    shared: Arc<SubShared<T>>,
+}
+
+impl<T> Subscription<T> {
+    /// Block until a message arrives or the sender disconnects (job
+    /// broadcast dropped, or this subscriber evicted as too slow).
+    pub fn recv(&self) -> Result<T, RecvError> {
+        // `snapshot.slow_subscriber`: stall this receiver before it
+        // drains, so its bounded queue fills and the drop-oldest /
+        // eviction machinery runs under the chaos harness.
+        if super::faultinject::fire(super::faultinject::SNAPSHOT_SLOW_SUBSCRIBER) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let mut q = self.shared.lock();
+        loop {
+            if let Some(v) = q.buf.pop_front() {
+                return Ok(v);
+            }
+            if q.disconnected {
+                return Err(RecvError);
+            }
+            q = self.shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// [`Self::recv`] with a deadline.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        // Same `snapshot.slow_subscriber` stall as [`Self::recv`].
+        if super::faultinject::fire(super::faultinject::SNAPSHOT_SLOW_SUBSCRIBER) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let deadline = Instant::now() + timeout;
+        let mut q = self.shared.lock();
+        loop {
+            if let Some(v) = q.buf.pop_front() {
+                return Ok(v);
+            }
+            if q.disconnected {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(q, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            q = guard;
+        }
+    }
+
+    /// Pop without blocking.
+    pub fn try_recv(&self) -> Option<T> {
+        self.shared.lock().buf.pop_front()
+    }
+
+    /// Drain everything currently queued without blocking.
+    pub fn try_iter(&self) -> std::vec::IntoIter<T> {
+        let mut q = self.shared.lock();
+        q.buf.drain(..).collect::<Vec<T>>().into_iter()
+    }
+
+    /// True once the publisher evicted this subscriber for lagging.
+    pub fn evicted(&self) -> bool {
+        let q = self.shared.lock();
+        q.disconnected && !q.closed
+    }
+}
+
+impl<T> Drop for Subscription<T> {
+    fn drop(&mut self) {
+        self.shared.lock().closed = true;
+    }
+}
+
+/// Blocking iterator: yields until the sender disconnects (mirrors
+/// `mpsc::Receiver`'s `IntoIterator`, so `for s in rx` keeps working).
+pub struct SubscriptionIter<T>(Subscription<T>);
+
+impl<T> Iterator for SubscriptionIter<T> {
+    type Item = T;
+    fn next(&mut self) -> Option<T> {
+        self.0.recv().ok()
+    }
+}
+
+impl<T> IntoIterator for Subscription<T> {
+    type Item = T;
+    type IntoIter = SubscriptionIter<T>;
+    fn into_iter(self) -> SubscriptionIter<T> {
+        SubscriptionIter(self)
+    }
+}
+
 /// Clone-fanout broadcast channel: every subscriber gets every message
-/// sent after it subscribed. Dead subscribers are pruned on send.
+/// sent after it subscribed, through a bounded per-subscriber queue
+/// (capacity [`SUB_QUEUE_CAP`], drop-oldest when full, eviction after
+/// [`EVICT_AFTER_LAGGING`] consecutive full publishes). Dead
+/// subscribers are pruned on send; dropping the broadcast disconnects
+/// every receiver.
 pub struct Broadcast<T: Clone> {
-    subs: Mutex<Vec<Sender<T>>>,
+    subs: Mutex<Vec<Arc<SubShared<T>>>>,
+    capacity: usize,
+    evict_after: u64,
 }
 
 impl<T: Clone> Default for Broadcast<T> {
     fn default() -> Self {
-        Self { subs: Mutex::new(Vec::new()) }
+        Self::bounded(SUB_QUEUE_CAP, EVICT_AFTER_LAGGING)
     }
 }
 
 impl<T: Clone> Broadcast<T> {
-    pub fn subscribe(&self) -> Receiver<T> {
-        let (tx, rx) = channel();
-        self.subs.lock().unwrap().push(tx);
-        rx
+    /// A broadcast with explicit backpressure knobs (tests use tiny
+    /// queues; production goes through `default()`).
+    pub fn bounded(capacity: usize, evict_after: u64) -> Self {
+        Self {
+            subs: Mutex::new(Vec::new()),
+            capacity: capacity.max(1),
+            evict_after: evict_after.max(1),
+        }
+    }
+
+    pub fn subscribe(&self) -> Subscription<T> {
+        let shared = Arc::new(SubShared {
+            q: Mutex::new(SubQueue {
+                buf: VecDeque::with_capacity(self.capacity),
+                lagging: 0,
+                closed: false,
+                disconnected: false,
+            }),
+            cv: Condvar::new(),
+        });
+        self.subs.lock().unwrap().push(shared.clone());
+        Subscription { shared }
     }
 
     pub fn send(&self, msg: T) {
@@ -57,15 +234,53 @@ impl<T: Clone> Broadcast<T> {
             publish_skipped().inc();
             return;
         }
-        let before = subs.len();
         let t0 = obs::now_ns();
-        subs.retain(|s| s.send(msg.clone()).is_ok());
+        let (mut dead, mut evicted, mut displaced) = (0u64, 0u64, 0u64);
+        subs.retain(|s| {
+            let mut q = s.lock();
+            if q.closed {
+                dead += 1;
+                return false;
+            }
+            if q.buf.len() >= self.capacity {
+                q.lagging += 1;
+                if q.lagging >= self.evict_after {
+                    // Still full after evict_after chances to drain:
+                    // disconnect it rather than keep paying the clone.
+                    q.disconnected = true;
+                    s.cv.notify_all();
+                    evicted += 1;
+                    return false;
+                }
+                q.buf.pop_front();
+                displaced += 1;
+            } else {
+                q.lagging = 0;
+            }
+            q.buf.push_back(msg.clone());
+            s.cv.notify_all();
+            true
+        });
         fanout_ns().record(obs::now_ns().saturating_sub(t0));
-        subscribers_dropped().add((before - subs.len()) as u64);
+        subscribers_dropped().add(dead);
+        subscribers_evicted().add(evicted);
+        dropped_oldest().add(displaced);
     }
 
     pub fn subscriber_count(&self) -> usize {
         self.subs.lock().unwrap().len()
+    }
+}
+
+impl<T: Clone> Drop for Broadcast<T> {
+    fn drop(&mut self) {
+        // Wake every receiver with a disconnect, mirroring what dropping
+        // all `mpsc` senders does.
+        let subs = self.subs.lock().unwrap_or_else(|e| e.into_inner());
+        for s in subs.iter() {
+            s.lock().disconnected = true;
+            s.cv.notify_all();
+        }
     }
 }
 
@@ -177,6 +392,55 @@ mod tests {
         b.send(1);
         assert_eq!(b.subscriber_count(), 1);
         assert_eq!(r2.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn full_subscriber_queue_drops_oldest() {
+        let b: Broadcast<u32> = Broadcast::bounded(3, 1000);
+        let rx = b.subscribe();
+        for i in 0..10 {
+            b.send(i);
+        }
+        // Capacity 3: only the newest three survive, oldest first.
+        let got: Vec<u32> = rx.try_iter().collect();
+        assert_eq!(got, vec![7, 8, 9]);
+        assert!(!rx.evicted());
+    }
+
+    #[test]
+    fn chronically_full_subscriber_is_evicted() {
+        let b: Broadcast<u32> = Broadcast::bounded(2, 4);
+        let slow = b.subscribe();
+        let fast = b.subscribe();
+        let mut fast_got = Vec::new();
+        for i in 0..10 {
+            b.send(i);
+            fast_got.extend(fast.try_iter());
+        }
+        assert_eq!(b.subscriber_count(), 1, "slow subscriber evicted, fast retained");
+        assert!(slow.evicted());
+        assert_eq!(slow.recv_timeout(Duration::from_secs(1)), Err(RecvTimeoutError::Disconnected));
+        assert_eq!(fast_got, (0..10).collect::<Vec<u32>>(), "fast subscriber saw everything");
+        // A lagging-but-recovering subscriber is NOT evicted: the counter
+        // resets whenever a publish finds room.
+        let choppy = b.subscribe();
+        for i in 0..100 {
+            b.send(i);
+            if i % 3 == 0 {
+                let _ = choppy.try_iter();
+            }
+        }
+        assert!(!choppy.evicted());
+    }
+
+    #[test]
+    fn dropping_the_broadcast_disconnects_receivers() {
+        let b: Broadcast<u32> = Broadcast::default();
+        let rx = b.subscribe();
+        b.send(5);
+        drop(b);
+        assert_eq!(rx.recv(), Ok(5), "queued messages drain first");
+        assert_eq!(rx.recv(), Err(RecvError));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!
 //! ```text
 //! submit status snapshot checkpoint pause resume update stop wait list
-//! stats metrics trace quit
+//! stats metrics trace fault shutdown quit
 //! ```
 //!
 //! The service behind these commands is the cooperative scheduler of
@@ -19,18 +19,56 @@
 //! accepts `resume_from` (such a blob) and/or `y0` (a client-supplied
 //! layout), which together with `serve --state-dir` journaling makes
 //! jobs durable across service restarts.
+//!
+//! The front end is **hardened** (docs/PROTOCOL.md "Failure
+//! semantics"): request lines are read through a bounded framed reader
+//! (over [`MAX_REQUEST_BYTES`] ⇒ a structured `request_too_large`
+//! error and the connection closes, never unbounded buffering),
+//! connections carry read/write timeouts, `serve` sheds accepts over a
+//! connection cap with a retriable `server_busy` error, `submit` sheds
+//! through the service's admission control (`queue_full` / `draining`),
+//! `fault` arms the [`super::faultinject`] registry over the wire, and
+//! `shutdown` drains the scheduler — park + journal every live session
+//! — before the accept loop exits.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
+use std::time::Duration;
 
 use crate::embed::{Checkpoint, OptParams};
 use crate::obs;
 use crate::util::b64;
 use crate::util::json::{self, Json};
 
+use super::faultinject;
 use super::job::{AutoStop, JobSpec, ParamUpdate};
-use super::service::EmbeddingService;
+use super::service::{EmbeddingService, SubmitError};
+
+/// Hard cap on one request line. A line-oriented protocol must bound
+/// what it buffers before parsing — without this, a client (or a fuzzer
+/// stuck without newlines) grows the server's memory without limit.
+/// 64 MiB comfortably fits the largest legitimate request (a `submit`
+/// carrying a 100k-point `y0` plus a checkpoint blob).
+pub const MAX_REQUEST_BYTES: usize = 64 << 20;
+
+/// Per-connection socket timeouts. The read timeout bounds how long an
+/// idle or wedged client may pin a connection slot (the server is not
+/// reading while it executes a command, so slow *commands* are
+/// unaffected); the write timeout bounds a client that stops draining
+/// responses.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(120);
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Accept-time connection cap for [`serve`]. Connections past the cap
+/// get one `server_busy` error line and are closed.
+pub const MAX_CONNECTIONS: usize = 256;
+
+/// How long one `net.stall` fault holds a connection before the request
+/// is handled — long enough for the chaos harness to overlap stalled
+/// and healthy clients, short enough to stay well inside the timeouts.
+const STALL_MS: u64 = 250;
 
 /// The protocol's command set. `ALL` and `name()` are the single source
 /// of truth the dispatcher, the usage error and the `docs/PROTOCOL.md`
@@ -50,6 +88,8 @@ pub enum Cmd {
     Stats,
     Metrics,
     Trace,
+    Fault,
+    Shutdown,
     Quit,
 }
 
@@ -68,6 +108,8 @@ impl Cmd {
         Cmd::Stats,
         Cmd::Metrics,
         Cmd::Trace,
+        Cmd::Fault,
+        Cmd::Shutdown,
         Cmd::Quit,
     ];
 
@@ -87,6 +129,8 @@ impl Cmd {
             Cmd::Stats => "stats",
             Cmd::Metrics => "metrics",
             Cmd::Trace => "trace",
+            Cmd::Fault => "fault",
+            Cmd::Shutdown => "shutdown",
             Cmd::Quit => "quit",
         }
     }
@@ -103,6 +147,10 @@ pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
         spec.dataset = d.to_string();
     }
     if let Some(n) = v.num_field("n") {
+        // Bound the allocation-driving fields up front: a huge or
+        // non-finite `n` must be a structured submit error, not an
+        // admitted job that OOMs a worker.
+        anyhow::ensure!(n.is_finite() && (0.0..=1e8).contains(&n), "n out of range: {n}");
         spec.n = n as usize;
     }
     if let Some(e) = v.str_field("engine") {
@@ -116,6 +164,7 @@ pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
     }
     let mut params = OptParams::default();
     if let Some(i) = v.num_field("iters") {
+        anyhow::ensure!(i.is_finite() && (0.0..=1e9).contains(&i), "iters out of range: {i}");
         params.iters = i as usize;
     }
     if let Some(e) = v.num_field("eta") {
@@ -241,6 +290,38 @@ fn err_msg(msg: &str) -> String {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]).to_string()
 }
 
+/// Structured error with a machine-readable `code` and a `retriable`
+/// hint — the shedding/overload responses (`queue_full`, `draining`,
+/// `server_busy`, `request_too_large`) where a client must distinguish
+/// "back off and retry" from "your request is broken".
+fn err_code(code: &str, retriable: bool, msg: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.into())),
+        ("code", Json::Str(code.into())),
+        ("retriable", Json::Bool(retriable)),
+    ])
+    .to_string()
+}
+
+/// `net.connections_open` — live connections (gauge).
+fn conns_open() -> &'static Arc<obs::Gauge> {
+    static G: OnceLock<Arc<obs::Gauge>> = OnceLock::new();
+    G.get_or_init(|| obs::registry().gauge("net.connections_open"))
+}
+
+/// `net.connections_shed` — accepts refused at the connection cap.
+fn conns_shed() -> &'static Arc<obs::Counter> {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("net.connections_shed"))
+}
+
+/// `net.requests_too_large` — request lines that blew [`MAX_REQUEST_BYTES`].
+fn requests_too_large() -> &'static Arc<obs::Counter> {
+    static C: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+    C.get_or_init(|| obs::registry().counter("net.requests_too_large"))
+}
+
 /// Handle one request line; returns (response line, keep_going).
 pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
     let v = match json::parse(line.trim()) {
@@ -253,10 +334,18 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
     };
     match cmd {
         Cmd::Submit => match spec_from_json(&v) {
-            Ok(spec) => {
-                let id = svc.submit(spec);
-                (ok_fields(vec![("job", Json::Num(id as f64))]), true)
-            }
+            // TCP submits go through admission control; in-process
+            // callers (CLI, journal re-admission) use the infallible
+            // `submit` directly.
+            Ok(spec) => match svc.try_submit(spec) {
+                Ok(id) => (ok_fields(vec![("job", Json::Num(id as f64))]), true),
+                Err(e @ SubmitError::QueueFull { .. }) => {
+                    (err_code("queue_full", true, &e.to_string()), true)
+                }
+                Err(e @ SubmitError::Draining) => {
+                    (err_code("draining", true, &e.to_string()), true)
+                }
+            },
             Err(e) => (err_msg(&format!("{e:#}")), true),
         },
         Cmd::Status => {
@@ -410,46 +499,211 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
                 true,
             )
         }
+        Cmd::Fault => {
+            // `clear` first, then `spec`: `{"clear":true,"spec":...}` is
+            // replace-all. Either way the response reports live status.
+            if v.get("clear") == Some(&Json::Bool(true)) {
+                faultinject::disarm_all();
+            }
+            if let Some(spec) = v.str_field("spec") {
+                if let Err(e) = faultinject::arm_spec(spec) {
+                    return (err_msg(&format!("bad fault spec: {e}")), true);
+                }
+            }
+            let points = Json::Arr(
+                faultinject::status()
+                    .into_iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("point", Json::Str(p.point.into())),
+                            ("trigger", Json::Str(p.trigger)),
+                            ("checks", Json::Num(p.checks as f64)),
+                            ("fired", Json::Num(p.fired as f64)),
+                        ])
+                    })
+                    .collect(),
+            );
+            (
+                ok_fields(vec![
+                    ("enabled", Json::Bool(faultinject::enabled())),
+                    ("points", points),
+                ]),
+                true,
+            )
+        }
+        Cmd::Shutdown => {
+            // Drain runs inline on this connection's thread: the
+            // response is the handshake's completion — once the client
+            // reads it, every live job is parked + journalled (or the
+            // timeout expired) and admission is off for good.
+            let t = v.num_field("timeout_s").unwrap_or(30.0);
+            let t = if t.is_finite() { t.clamp(0.0, 600.0) } else { 30.0 };
+            let parked = svc.drain(Duration::from_secs_f64(t));
+            (
+                ok_fields(vec![
+                    ("draining", Json::Bool(true)),
+                    ("parked_jobs", Json::Num(parked as f64)),
+                ]),
+                false,
+            )
+        }
         Cmd::Quit => (ok_fields(vec![("bye", Json::Bool(true))]), false),
     }
 }
 
-fn handle_client(svc: Arc<EmbeddingService>, stream: TcpStream) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let reader = BufReader::new(match stream.try_clone() {
+/// Outcome of one bounded framed read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LineRead {
+    /// One complete line is in the buffer (newline stripped).
+    Line,
+    /// Clean end of stream with nothing buffered.
+    Eof,
+    /// The line exceeded the cap; whatever arrived was discarded, not
+    /// buffered.
+    TooLarge,
+}
+
+/// Read one `\n`-terminated line into `out`, never holding more than
+/// `max` bytes. The replacement for `BufRead::lines()` on the request
+/// path: `lines()` buffers an entire line before returning it, so a
+/// newline-free stream grows the allocation without bound.
+fn read_bounded_line<R: BufRead>(
+    r: &mut R,
+    out: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    out.clear();
+    loop {
+        let avail = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if avail.is_empty() {
+            // EOF: a final unterminated line still counts.
+            return Ok(if out.is_empty() { LineRead::Eof } else { LineRead::Line });
+        }
+        if let Some(pos) = avail.iter().position(|&b| b == b'\n') {
+            if out.len() + pos > max {
+                r.consume(pos + 1);
+                return Ok(LineRead::TooLarge);
+            }
+            out.extend_from_slice(&avail[..pos]);
+            r.consume(pos + 1);
+            return Ok(LineRead::Line);
+        }
+        let take = avail.len();
+        if out.len() + take > max {
+            r.consume(take);
+            return Ok(LineRead::TooLarge);
+        }
+        out.extend_from_slice(avail);
+        r.consume(take);
+    }
+}
+
+fn handle_client(svc: Arc<EmbeddingService>, stream: TcpStream, local: std::net::SocketAddr) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (resp, keep) = handle_line(&svc, &line);
-        if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
-            break;
-        }
-        if !keep {
-            break;
+    let mut buf = Vec::new();
+    loop {
+        match read_bounded_line(&mut reader, &mut buf, MAX_REQUEST_BYTES) {
+            // Timeouts surface here as WouldBlock/TimedOut: close.
+            Err(_) | Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLarge) => {
+                requests_too_large().inc();
+                let resp = err_code(
+                    "request_too_large",
+                    false,
+                    &format!("request exceeds {MAX_REQUEST_BYTES} bytes; closing connection"),
+                );
+                let _ = writer.write_all(resp.as_bytes());
+                let _ = writer.write_all(b"\n");
+                break;
+            }
+            Ok(LineRead::Line) => {
+                let line = String::from_utf8_lossy(&buf);
+                if line.trim().is_empty() {
+                    continue;
+                }
+                // `net.stall`: hold the connection mid-request the way a
+                // wedged client or network would, so the chaos harness
+                // overlaps stalled and healthy traffic.
+                if faultinject::fire(faultinject::NET_STALL) {
+                    std::thread::sleep(Duration::from_millis(STALL_MS));
+                }
+                let (resp, keep) = handle_line(&svc, &line);
+                if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+                if !keep {
+                    break;
+                }
+            }
         }
     }
-    let _ = peer;
+    // A `shutdown` handled on this connection leaves the accept loop
+    // blocked in `accept`; poke it so `serve` observes the drain and
+    // exits. (Harmless no-op once the listener is gone.)
+    if svc.is_draining() {
+        let _ = TcpStream::connect(local);
+    }
 }
 
-/// Serve forever on `addr` (e.g. `127.0.0.1:7878`). Returns the bound
-/// address via callback (so callers/tests can bind port 0).
+/// Serve on `addr` (e.g. `127.0.0.1:7878`) until drained. Returns the
+/// bound address via callback (so callers/tests can bind port 0).
 pub fn serve(
     svc: Arc<EmbeddingService>,
     addr: &str,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
+    serve_with(svc, addr, MAX_CONNECTIONS, on_bound)
+}
+
+/// [`serve`] with an explicit connection cap. Accepts past the cap are
+/// shed at accept time with one retriable `server_busy` error line —
+/// bounded thread count, no silently growing backlog. The loop exits
+/// once the service is draining (the `shutdown` command, or SIGTERM via
+/// `EmbeddingService::drain` plus a wake-up connection).
+pub fn serve_with(
+    svc: Arc<EmbeddingService>,
+    addr: &str,
+    max_connections: usize,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
-    on_bound(listener.local_addr()?);
+    let local = listener.local_addr()?;
+    on_bound(local);
+    let live = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
+        if svc.is_draining() {
+            break;
+        }
         let Ok(stream) = stream else { continue };
+        if live.load(Ordering::SeqCst) >= max_connections.max(1) {
+            conns_shed().inc();
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(WRITE_TIMEOUT));
+            let resp = err_code("server_busy", true, "connection cap reached; retry later");
+            let _ = s.write_all(resp.as_bytes());
+            let _ = s.write_all(b"\n");
+            continue;
+        }
+        live.fetch_add(1, Ordering::SeqCst);
+        conns_open().add(1);
         let svc = svc.clone();
-        std::thread::spawn(move || handle_client(svc, stream));
+        let live = live.clone();
+        std::thread::spawn(move || {
+            handle_client(svc, stream, local);
+            live.fetch_sub(1, Ordering::SeqCst);
+            conns_open().add(-1);
+        });
     }
     Ok(())
 }
@@ -811,6 +1065,155 @@ mod tests {
             events.iter().any(|e| e.str_field("span") == Some("scheduler.quantum")),
             "{resp}"
         );
+    }
+
+    #[test]
+    fn bounded_reader_frames_and_caps_lines() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+        // Plain framing: lines come through intact, newline stripped,
+        // final unterminated line included, then EOF.
+        let mut r = BufReader::new(Cursor::new(b"hello\nworld\ntail".to_vec()));
+        assert_eq!(read_bounded_line(&mut r, &mut buf, 16).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"hello");
+        assert_eq!(read_bounded_line(&mut r, &mut buf, 16).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"world");
+        assert_eq!(read_bounded_line(&mut r, &mut buf, 16).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"tail");
+        assert_eq!(read_bounded_line(&mut r, &mut buf, 16).unwrap(), LineRead::Eof);
+        // A newline-free flood never accumulates past the cap.
+        let mut r = BufReader::new(Cursor::new(vec![b'x'; 1 << 16]));
+        assert_eq!(read_bounded_line(&mut r, &mut buf, 16).unwrap(), LineRead::TooLarge);
+        // An oversized but newline-terminated line resyncs: the next
+        // line still parses (handle_client closes anyway, but the
+        // reader itself must not corrupt the frame boundary).
+        let mut big = vec![b'y'; 64];
+        big.extend_from_slice(b"\nok\n");
+        let mut r = BufReader::new(Cursor::new(big));
+        assert_eq!(read_bounded_line(&mut r, &mut buf, 16).unwrap(), LineRead::TooLarge);
+        assert_eq!(read_bounded_line(&mut r, &mut buf, 16).unwrap(), LineRead::Line);
+        assert_eq!(buf, b"ok");
+    }
+
+    #[test]
+    fn every_command_survives_malformed_input() {
+        let s = svc();
+        // Garbage with no usable cmd: always a structured error line.
+        for line in [
+            "not json",
+            "{",
+            "[1,2,3]",
+            "\"submit\"",
+            "null",
+            r#"{"cmd":42}"#,
+            r#"{"cmd":null}"#,
+            r#"{"cmd":""}"#,
+            r#"{"cmd":["submit"]}"#,
+            r#"{"cmd":"submit" "cmd":"oops"}"#,
+        ] {
+            let (resp, keep) = handle_line(&s, line);
+            let v = json::parse(&resp)
+                .unwrap_or_else(|e| panic!("{line} -> unparseable response {resp}: {e}"));
+            assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{line} -> {resp}");
+            assert!(keep, "{line}");
+        }
+        // Every command with missing, wrong-typed, negative and huge
+        // fields: a parseable response, never a panic, never a hang.
+        // (`submit` and `shutdown` mutate service state — separately
+        // below.)
+        for cmd in Cmd::ALL {
+            if matches!(cmd, Cmd::Submit | Cmd::Shutdown) {
+                continue;
+            }
+            for args in [
+                "",
+                r#","job":"twelve""#,
+                r#","job":-1"#,
+                r#","job":1e308"#,
+                r#","job":{"nested":true},"last":"many","spec":42,"clear":"yes""#,
+            ] {
+                let line = format!(r#"{{"cmd":"{}"{args}}}"#, cmd.name());
+                let (resp, keep) = handle_line(&s, &line);
+                let v = json::parse(&resp)
+                    .unwrap_or_else(|e| panic!("{line} -> unparseable response {resp}: {e}"));
+                assert!(v.get("ok").is_some(), "{line} -> {resp}");
+                assert_eq!(keep, *cmd != Cmd::Quit, "{line}");
+            }
+        }
+        // Submit with hostile payloads: structured errors at submit
+        // time — nothing is admitted that could wreck a worker.
+        for line in [
+            r#"{"cmd":"submit","n":1e300}"#,
+            r#"{"cmd":"submit","n":-7}"#,
+            r#"{"cmd":"submit","iters":-3}"#,
+            r#"{"cmd":"submit","iters":1e307}"#,
+            r#"{"cmd":"submit","knn":"quantum"}"#,
+            r#"{"cmd":"submit","y0":{"x":1}}"#,
+            r#"{"cmd":"submit","resume_from":"!!!"}"#,
+        ] {
+            let (resp, keep) = handle_line(&s, line);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{line} -> {resp}");
+            assert!(keep, "{line}");
+        }
+        assert!(s.list().is_empty(), "malformed input must not admit jobs");
+        // Shutdown clamps absurd timeouts and drains an idle service
+        // cleanly (fresh instance: draining is sticky).
+        let s2 = svc();
+        for line in
+            [r#"{"cmd":"shutdown","timeout_s":-5}"#, r#"{"cmd":"shutdown","timeout_s":"soon"}"#]
+        {
+            let (resp, keep) = handle_line(&s2, line);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{line} -> {resp}");
+            assert_eq!(v.num_field("parked_jobs"), Some(0.0), "{resp}");
+            assert!(!keep, "{line}");
+        }
+    }
+
+    #[test]
+    fn fault_command_arms_reports_and_clears() {
+        // Touches only the reserved test point, serialised with the
+        // faultinject unit tests, so parallel tests in this process
+        // never see an armed real fault.
+        let _l = faultinject::test_registry_lock();
+        faultinject::disarm_all();
+        let (resp, keep) = handle_line(&svc(), r#"{"cmd":"fault","spec":"test.point=every:2"}"#);
+        assert!(keep);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(v.get("enabled"), Some(&Json::Bool(true)), "{resp}");
+        let points = v.get("points").unwrap().as_arr().unwrap();
+        assert!(
+            points.iter().any(|p| p.str_field("point") == Some("test.point")
+                && p.str_field("trigger") == Some("every:2")),
+            "{resp}"
+        );
+        // Unknown point / bad trigger: loud error, nothing armed extra.
+        let (resp, _) = handle_line(&svc(), r#"{"cmd":"fault","spec":"store.wrte=once"}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{resp}");
+        // Clear: registry empties, switch drops.
+        let (resp, _) = handle_line(&svc(), r#"{"cmd":"fault","clear":true}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert!(v.get("points").unwrap().as_arr().unwrap().is_empty(), "{resp}");
+    }
+
+    #[test]
+    fn submit_sheds_while_draining() {
+        let s = svc();
+        let (resp, _) = handle_line(&s, r#"{"cmd":"shutdown","timeout_s":1}"#);
+        assert_eq!(json::parse(&resp).unwrap().get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (resp, keep) = handle_line(
+            &s,
+            r#"{"cmd":"submit","dataset":"gaussians","n":60,"engine":"bh-0.5","iters":5,"perplexity":6,"knn":"brute"}"#,
+        );
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{resp}");
+        assert_eq!(v.str_field("code"), Some("draining"), "{resp}");
+        assert_eq!(v.get("retriable"), Some(&Json::Bool(true)), "{resp}");
+        assert!(keep);
     }
 
     #[test]

@@ -22,6 +22,16 @@
 //! similarity store persists to disk, and a restarted service re-admits
 //! every journalled job as *resumable* — it continues from its last
 //! checkpoint instead of being lost, under the same job id.
+//!
+//! The service **degrades before it dies**: [`EmbeddingService::try_submit`]
+//! sheds work with a retriable error once the ready queue passes
+//! [`ServiceConfig::max_queue_depth`] (or while draining), and
+//! [`EmbeddingService::drain`] implements graceful shutdown — stop
+//! admitting, park + journal every live session at its next step
+//! boundary through the ordinary pause machinery, stop the workers — so
+//! a restart resumes every job bit-identically. A worker that panics
+//! mid-step (including via the `engine.step_panic` fault point) fails
+//! only its own job.
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::AssertUnwindSafe;
@@ -35,9 +45,10 @@ use crate::runtime::Runtime;
 use crate::util::json::{self, Json};
 use crate::util::timer::Stopwatch;
 
+use super::faultinject;
 use super::job::{JobPhase, JobSpec, ParamUpdate, Snapshot};
 use super::pipeline::{self, AutoStopTracker, JobResult, StageTimings};
-use super::progress::JobState;
+use super::progress::{JobState, Subscription};
 use super::simcache::SimilarityCache;
 use super::store::JobJournal;
 
@@ -61,7 +72,35 @@ const MAX_QUANTUM_STEPS: usize = 64;
 /// pause/finalise boundaries) always get an immediate publish.
 const IDLE_SNAPSHOT_MS: u64 = 100;
 
+/// Default admission cap: ready-queue depth beyond which
+/// [`EmbeddingService::try_submit`] sheds new work.
+const MAX_QUEUE_DEPTH: usize = 256;
+
 pub type JobId = u64;
+
+/// Why [`EmbeddingService::try_submit`] shed a job. Both variants are
+/// *retriable states of the service*, not properties of the job — the
+/// client should back off and resubmit (or find another instance).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The ready queue is at [`ServiceConfig::max_queue_depth`].
+    QueueFull { depth: usize, cap: usize },
+    /// The service is drain-shutting-down and admits nothing new.
+    Draining,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth, cap } => {
+                write!(f, "ready queue full ({depth} >= cap {cap}); retry later")
+            }
+            SubmitError::Draining => write!(f, "service is draining for shutdown; retry elsewhere"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Service-construction knobs (see [`EmbeddingService::with_config`]).
 #[derive(Debug, Clone)]
@@ -81,6 +120,10 @@ pub struct ServiceConfig {
     /// --trace-ring`). Applied process-wide at construction; threads
     /// that already emitted events keep their existing rings.
     pub trace_ring: usize,
+    /// Admission cap: [`EmbeddingService::try_submit`] sheds with a
+    /// retriable [`SubmitError::QueueFull`] once the ready queue holds
+    /// this many jobs (clamped to ≥ 1).
+    pub max_queue_depth: usize,
 }
 
 impl Default for ServiceConfig {
@@ -91,6 +134,7 @@ impl Default for ServiceConfig {
             journal_every: 50,
             sim_cache_capacity: SIM_CACHE_CAPACITY,
             trace_ring: obs::trace::DEFAULT_RING_CAPACITY,
+            max_queue_depth: MAX_QUEUE_DEPTH,
         }
     }
 }
@@ -146,6 +190,11 @@ struct SchedMetrics {
     overruns: Arc<obs::Counter>,
     /// `scheduler.park_resume_ns` — pause-park to next-slice latency.
     park_resume_ns: Arc<obs::Histogram>,
+    /// `scheduler.submits_shed` — submits rejected by admission control
+    /// (queue at cap, or draining).
+    submits_shed: Arc<obs::Counter>,
+    /// `scheduler.draining` — 1 once drain shutdown began.
+    draining_gauge: Arc<obs::Gauge>,
     /// `engine.attr_ns` / `engine.rep_ns` / `engine.grad_ns` — per-step
     /// phase breakdown carried on [`IterStats`] (zero samples when
     /// [`obs::enabled`] is off or the engine's step is fused).
@@ -163,6 +212,8 @@ impl SchedMetrics {
             quantum_steps: registry.histogram("scheduler.quantum_steps"),
             overruns: registry.counter("scheduler.quantum_overruns"),
             park_resume_ns: registry.histogram("scheduler.park_resume_ns"),
+            submits_shed: registry.counter("scheduler.submits_shed"),
+            draining_gauge: registry.gauge("scheduler.draining"),
             attr_ns: registry.histogram("engine.attr_ns"),
             rep_ns: registry.histogram("engine.rep_ns"),
             grad_ns: registry.histogram("engine.grad_ns"),
@@ -205,6 +256,11 @@ struct ServiceInner {
     queue: Mutex<VecDeque<JobId>>,
     queue_cv: Condvar,
     shutdown: AtomicBool,
+    /// Drain shutdown in progress: admission sheds, workers keep running
+    /// until every live session is parked + journalled.
+    draining: AtomicBool,
+    /// Admission cap for [`EmbeddingService::try_submit`].
+    max_queue_depth: usize,
     sim_cache: Arc<SimilarityCache>,
     /// Checkpoint journal (durable services only).
     journal: Option<JobJournal>,
@@ -316,6 +372,8 @@ impl EmbeddingService {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            max_queue_depth: cfg.max_queue_depth.max(1),
             sim_cache: Arc::new(sim_cache),
             journal,
             journal_every: cfg.journal_every.max(1),
@@ -377,11 +435,83 @@ impl EmbeddingService {
         self.inner.journal.is_some()
     }
 
-    /// Submit a job; returns immediately with its id.
+    /// Submit a job; returns immediately with its id. In-process
+    /// callers (CLI, tests) bypass admission control — use
+    /// [`Self::try_submit`] on serving paths that must shed load.
     pub fn submit(&self, spec: JobSpec) -> JobId {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         self.inner.admit(id, spec);
         id
+    }
+
+    /// [`Self::submit`] behind admission control: sheds with a
+    /// retriable [`SubmitError`] when the ready queue is at
+    /// [`ServiceConfig::max_queue_depth`] or the service is draining.
+    /// The TCP `submit` command routes through here.
+    pub fn try_submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        if self.inner.draining.load(Ordering::SeqCst) {
+            self.inner.metrics.submits_shed.inc();
+            return Err(SubmitError::Draining);
+        }
+        let depth = self.inner.queue.lock().unwrap().len();
+        if depth >= self.inner.max_queue_depth {
+            self.inner.metrics.submits_shed.inc();
+            return Err(SubmitError::QueueFull { depth, cap: self.inner.max_queue_depth });
+        }
+        Ok(self.submit(spec))
+    }
+
+    /// Graceful drain shutdown (the TCP `shutdown` command and the
+    /// SIGTERM handler): stop admitting, ask every live job to park at
+    /// its next step boundary — parking journals the session, exactly
+    /// like a user `pause` — wait (bounded by `timeout`) for the parks,
+    /// then stop the worker pool. Returns the number of live jobs left
+    /// parked (each re-admittable: a restarted service resumes them
+    /// bit-identically from their journalled checkpoints). A job stuck
+    /// in a non-preemptible stage past the timeout still restarts from
+    /// its admission-time journal record.
+    pub fn drain(&self, timeout: std::time::Duration) -> usize {
+        self.inner.draining.store(true, Ordering::SeqCst);
+        self.inner.metrics.draining_gauge.set(1);
+        let ids: Vec<JobId> = self.inner.jobs.lock().unwrap().keys().copied().collect();
+        for id in &ids {
+            if let Some(e) = self.entry(*id) {
+                if !e.state.phase().is_terminal() {
+                    e.state.request_pause();
+                }
+            }
+        }
+        let sw = Stopwatch::start();
+        loop {
+            let undrained = ids
+                .iter()
+                .filter(|&&id| match self.entry(id) {
+                    // Parked (task slot occupied) or terminal = drained;
+                    // a task a worker still drives = not yet.
+                    Some(e) => {
+                        !e.state.phase().is_terminal() && e.task.lock().unwrap().is_none()
+                    }
+                    None => false,
+                })
+                .count();
+            if undrained == 0 || sw.expired(timeout) {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        ids.iter()
+            .filter(|&&id| self.phase(id).is_some_and(|p| !p.is_terminal()))
+            .count()
+    }
+
+    /// True once [`Self::drain`] has begun.
+    pub fn is_draining(&self) -> bool {
+        self.inner.draining.load(Ordering::SeqCst)
     }
 
     /// Snapshot the job's full optimiser state (the TCP `checkpoint`
@@ -466,8 +596,10 @@ impl EmbeddingService {
         self.entry(id).and_then(|e| e.state.latest_snapshot())
     }
 
-    /// Subscribe to a job's snapshot stream.
-    pub fn subscribe(&self, id: JobId) -> Option<std::sync::mpsc::Receiver<Snapshot>> {
+    /// Subscribe to a job's snapshot stream (bounded queue: drop-oldest
+    /// under backpressure, eviction if chronically slow — see
+    /// [`super::progress::Broadcast`]).
+    pub fn subscribe(&self, id: JobId) -> Option<Subscription<Snapshot>> {
         self.entry(id).map(|e| e.state.snapshots.subscribe())
     }
 
@@ -762,6 +894,11 @@ fn run_slice(
         while !session.is_done() {
             let stepped = {
                 let _step = obs::span(obs::Span::EngineStep, id, *iters_run as u64);
+                if faultinject::fire(faultinject::ENGINE_STEP_PANIC) {
+                    // Escapes run_slice on purpose: the worker's
+                    // catch_unwind must contain it to this job.
+                    panic!("injected engine step panic (faultinject)");
+                }
                 session.step()
             };
             match stepped {
@@ -1278,6 +1415,83 @@ mod tests {
         assert_eq!(jobs.len(), 4);
         assert!(jobs.iter().all(|j| j.num_field("quanta").unwrap() >= 1.0));
         assert!(jobs.iter().all(|j| j.num_field("steps").unwrap() >= 1.0));
+    }
+
+    #[test]
+    fn admission_control_sheds_over_the_queue_cap() {
+        let cfg = ServiceConfig { max_concurrent: 1, max_queue_depth: 1, ..Default::default() };
+        let svc = EmbeddingService::with_config(None, cfg);
+        // Three long jobs on one worker: at most one is ever claimed, so
+        // the ready queue holds at least two — permanently over the cap.
+        let ids: Vec<_> = (0..3).map(|_| svc.submit(tiny_spec(100_000))).collect();
+        match svc.try_submit(tiny_spec(10)) {
+            Err(SubmitError::QueueFull { depth, cap }) => {
+                assert_eq!(cap, 1);
+                assert!(depth >= 1);
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert!(svc.inner.metrics.submits_shed.get() >= 1);
+        for &id in &ids {
+            assert!(svc.stop(id));
+        }
+        for &id in &ids {
+            let _ = svc.wait(id);
+        }
+    }
+
+    #[test]
+    fn drain_parks_and_journals_live_jobs() {
+        let dir = std::env::temp_dir().join(format!("gsne-svc-drain-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = || ServiceConfig {
+            max_concurrent: 2,
+            state_dir: Some(dir.clone()),
+            // Huge cadence: only a pause/park (or drain) can journal a
+            // checkpoint, so the assertion below pins drain's journal.
+            journal_every: 1_000_000,
+            ..Default::default()
+        };
+        let (id, parked_iter) = {
+            let svc = EmbeddingService::with_config(None, cfg());
+            let id = svc.submit(tiny_spec(1_000_000));
+            let rx = svc.subscribe(id).unwrap();
+            let _ = rx.recv().expect("job is stepping");
+            let live = svc.drain(std::time::Duration::from_secs(30));
+            assert_eq!(live, 1, "one live session drained");
+            assert!(svc.is_draining());
+            let Some(JobPhase::Paused { iter, .. }) = svc.phase(id) else {
+                panic!("drained job must be parked, got {:?}", svc.phase(id));
+            };
+            assert!(iter > 0, "drained mid-run");
+            // Draining admits nothing new.
+            assert_eq!(svc.try_submit(tiny_spec(10)), Err(SubmitError::Draining));
+            // The park journalled a real checkpoint (not just the
+            // admission-time spec record).
+            let entries = svc.inner.journal.as_ref().unwrap().read_all();
+            assert_eq!(entries.len(), 1);
+            assert!(!entries[0].checkpoint.is_empty(), "drain must journal session state");
+            (id, iter)
+        };
+        // Restart: the drained job resumes from its parked iteration.
+        let svc = EmbeddingService::with_config(None, cfg());
+        assert!(svc.phase(id).is_some_and(|p| !p.is_terminal()), "re-admitted");
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !matches!(svc.phase(id), Some(JobPhase::Optimizing { .. })) {
+            assert!(std::time::Instant::now() < deadline, "resumed job never ran");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(svc.update(
+            id,
+            ParamUpdate { iters: Some(parked_iter + 100), ..Default::default() }
+        ));
+        let res = svc.wait(id).unwrap();
+        assert!(
+            res.iters_run >= parked_iter,
+            "resumed from the drained checkpoint: {} vs {parked_iter}",
+            res.iters_run
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -13,6 +13,18 @@
 //! Corrupt files are best-effort deleted so they cannot shadow a later
 //! healthy write.
 //!
+//! Writes are **advisory and self-healing**: a failed write is retried
+//! a bounded number of times with exponential backoff (transient
+//! hiccups), and a write that still fails flips the store or journal
+//! into **memory-only degraded mode** — further writes are skipped, the
+//! `store.degraded` / `journal.degraded` gauge goes to 1, and serving
+//! continues; a sick disk never takes down the job path. Opening a
+//! store/journal reaps orphaned `*.tmp.*` files left by a process
+//! killed between the tmp write and the rename. The failure paths are
+//! testable on demand through [`super::faultinject`]'s `store.write`,
+//! `store.write_crash`, `store.read_corrupt` and `journal.append`
+//! points.
+//!
 //! Layout under a service state dir:
 //!
 //! ```text
@@ -23,7 +35,9 @@
 //! ```
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, OnceLock};
+use std::time::Duration;
 
 use crate::hd::sparse::Csr;
 use crate::hd::{KnnGraph, SparseP};
@@ -31,8 +45,14 @@ use crate::obs;
 use crate::util::hash::fnv1a;
 use crate::util::timer::Stopwatch;
 
+use super::faultinject;
 use super::job::KnnMethod;
 use super::simcache::{GraphKey, SimKey};
+
+/// Attempts per advisory write before the owner degrades to
+/// memory-only: first try + two retries, backing off 2 ms then 8 ms.
+const WRITE_ATTEMPTS: u32 = 3;
+const RETRY_BACKOFF: Duration = Duration::from_millis(2);
 
 /// Record-I/O metrics, in the process-wide registry (the record
 /// functions are free functions — there is no service handle in scope):
@@ -44,6 +64,9 @@ struct IoMetrics {
     write_bytes: Arc<obs::Counter>,
     read_ns: Arc<obs::Histogram>,
     write_ns: Arc<obs::Histogram>,
+    write_retries: Arc<obs::Counter>,
+    store_degraded: Arc<obs::Gauge>,
+    journal_degraded: Arc<obs::Gauge>,
 }
 
 fn io_metrics() -> &'static IoMetrics {
@@ -55,6 +78,9 @@ fn io_metrics() -> &'static IoMetrics {
             write_bytes: r.counter("store.write_bytes"),
             read_ns: r.histogram("store.read_ns"),
             write_ns: r.histogram("store.write_ns"),
+            write_retries: r.counter("store.write_retries"),
+            store_degraded: r.gauge("store.degraded"),
+            journal_degraded: r.gauge("journal.degraded"),
         }
     })
 }
@@ -74,6 +100,11 @@ pub const KIND_JOB: u8 = b'J';
 /// one dir) cannot interleave; the final rename is atomic on POSIX.
 pub fn write_record(path: &Path, kind: u8, payload: &[u8]) -> std::io::Result<()> {
     let _span = obs::span(obs::Span::StoreWrite, 0, 0);
+    let point =
+        if kind == KIND_JOB { faultinject::JOURNAL_APPEND } else { faultinject::STORE_WRITE };
+    if faultinject::fire(point) {
+        return Err(std::io::Error::new(std::io::ErrorKind::Other, "injected store write fault"));
+    }
     let sw = Stopwatch::start();
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     buf.extend_from_slice(RECORD_MAGIC);
@@ -84,6 +115,12 @@ pub fn write_record(path: &Path, kind: u8, payload: &[u8]) -> std::io::Result<()
     buf.extend_from_slice(payload);
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
     std::fs::write(&tmp, &buf)?;
+    if faultinject::fire(faultinject::STORE_WRITE_CRASH) {
+        // Simulated kill between the tmp write and the rename: the tmp
+        // file stays behind, the destination never appears, and — like a
+        // real crash — the caller never learns anything went wrong.
+        return Ok(());
+    }
     let out = std::fs::rename(&tmp, path);
     let m = io_metrics();
     m.write_ns.record_duration(sw.elapsed());
@@ -99,13 +136,20 @@ pub fn write_record(path: &Path, kind: u8, payload: &[u8]) -> std::io::Result<()
 pub fn read_record(path: &Path, kind: u8) -> Option<Vec<u8>> {
     let _span = obs::span(obs::Span::StoreRead, 0, 0);
     let sw = Stopwatch::start();
-    let bytes = match std::fs::read(path) {
+    let mut bytes = match std::fs::read(path) {
         Ok(b) => b,
         Err(_) => {
             io_metrics().read_ns.record_duration(sw.elapsed());
             return None;
         }
     };
+    if faultinject::fire(faultinject::STORE_READ_CORRUPT) {
+        // Injected bit rot: flip the last payload byte so the checksum
+        // check fires and the defect path (miss + file removal) runs.
+        if let Some(b) = bytes.last_mut() {
+            *b ^= 0xff;
+        }
+    }
     let payload = (|| {
         if bytes.len() < HEADER_LEN || &bytes[..8] != RECORD_MAGIC || bytes[8] != kind {
             return None;
@@ -128,6 +172,52 @@ pub fn read_record(path: &Path, kind: u8) -> Option<Vec<u8>> {
     m.read_ns.record_duration(sw.elapsed());
     m.read_bytes.add(payload.as_ref().map_or(0, |p| p.len() as u64));
     payload
+}
+
+/// [`write_record`] with bounded retry: transient failures back off
+/// exponentially ([`RETRY_BACKOFF`], ×4 per attempt) for up to
+/// [`WRITE_ATTEMPTS`] tries. Retries are counted in
+/// `store.write_retries`; the final error is returned for the caller's
+/// degrade decision.
+fn write_record_with_retry(path: &Path, kind: u8, payload: &[u8]) -> std::io::Result<()> {
+    let mut delay = RETRY_BACKOFF;
+    let mut attempt = 0;
+    loop {
+        match write_record(path, kind, payload) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                attempt += 1;
+                if attempt >= WRITE_ATTEMPTS {
+                    return Err(e);
+                }
+                io_metrics().write_retries.inc();
+                std::thread::sleep(delay);
+                delay *= 4;
+            }
+        }
+    }
+}
+
+/// Remove orphaned temp files (`<name>.tmp.<pid>`) left by a process
+/// killed between [`write_record`]'s tmp write and its rename. Called
+/// when a store or journal directory is opened; returns the reap count.
+/// A concurrent writer's in-flight tmp could be reaped here in theory —
+/// its rename then fails transiently, which the retry path absorbs.
+fn reap_tmp_files(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut reaped = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else {
+            continue;
+        };
+        if name.contains(".tmp.") && std::fs::remove_file(entry.path()).is_ok() {
+            reaped += 1;
+        }
+    }
+    reaped
 }
 
 /// Little-endian payload reader: every accessor returns `None` past the
@@ -205,21 +295,49 @@ fn key_file(dir: &Path, prefix: &str, key_bytes: &[u8]) -> PathBuf {
 /// The on-disk half of the two-level similarity store: level-1 kNN-graph
 /// records and level-2 joint-P records, keyed by a filename hash with the
 /// full key echoed (and verified) inside the payload. Writes are
-/// advisory — an unwritable dir degrades to an in-memory-only cache with
-/// a one-line warning, never an error on the job path.
+/// advisory — they retry with backoff on transient errors, and a write
+/// that keeps failing flips the store into memory-only degraded mode
+/// (`store.degraded` gauge = 1, further writes skipped) with a one-line
+/// warning, never an error on the job path.
 pub struct SimStore {
     dir: PathBuf,
+    degraded: AtomicBool,
 }
 
 impl SimStore {
-    /// Open (creating) the store directory.
+    /// Open (creating) the store directory, reaping any `*.tmp.*`
+    /// orphans a crashed writer left behind.
     pub fn open(dir: &Path) -> std::io::Result<Self> {
         std::fs::create_dir_all(dir)?;
-        Ok(Self { dir: dir.to_path_buf() })
+        let reaped = reap_tmp_files(dir);
+        if reaped > 0 {
+            eprintln!("sim store: reaped {reaped} orphaned tmp file(s) in {}", dir.display());
+        }
+        Ok(Self { dir: dir.to_path_buf(), degraded: AtomicBool::new(false) })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// True once a write has exhausted its retries and the store went
+    /// memory-only (sticky until the process restarts).
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    fn write_advisory(&self, path: &Path, kind: u8, payload: &[u8], what: &str) {
+        if self.degraded() {
+            return;
+        }
+        if let Err(e) = write_record_with_retry(path, kind, payload) {
+            self.degraded.store(true, Ordering::Relaxed);
+            io_metrics().store_degraded.set(1);
+            eprintln!(
+                "warning: sim store {what} write failed after retries ({e}); \
+                 degrading to memory-only"
+            );
+        }
     }
 
     fn graph_path(&self, key: &GraphKey) -> PathBuf {
@@ -245,9 +363,7 @@ impl SimStore {
         for &d in &g.d2 {
             payload.extend_from_slice(&d.to_le_bytes());
         }
-        if let Err(e) = write_record(&self.graph_path(key), KIND_GRAPH, &payload) {
-            eprintln!("warning: sim store graph write failed ({e}); continuing without");
-        }
+        self.write_advisory(&self.graph_path(key), KIND_GRAPH, &payload, "graph");
     }
 
     pub fn load_graph(&self, key: &GraphKey) -> Option<KnnGraph> {
@@ -285,9 +401,7 @@ impl SimStore {
         for &v in &csr.val {
             payload.extend_from_slice(&v.to_le_bytes());
         }
-        if let Err(e) = write_record(&self.p_path(key), KIND_P, &payload) {
-            eprintln!("warning: sim store P write failed ({e}); continuing without");
-        }
+        self.write_advisory(&self.p_path(key), KIND_P, &payload, "P");
     }
 
     pub fn load_p(&self, key: &SimKey) -> Option<SparseP> {
@@ -325,6 +439,7 @@ impl SimStore {
 /// resumable after a restart.
 pub struct JobJournal {
     dir: PathBuf,
+    degraded: AtomicBool,
 }
 
 /// One re-admittable journal entry.
@@ -338,25 +453,47 @@ pub struct JournalEntry {
 }
 
 impl JobJournal {
+    /// Open (creating) the journal directory, reaping `*.tmp.*` orphans.
     pub fn open(dir: &Path) -> std::io::Result<Self> {
         std::fs::create_dir_all(dir)?;
-        Ok(Self { dir: dir.to_path_buf() })
+        let reaped = reap_tmp_files(dir);
+        if reaped > 0 {
+            eprintln!("journal: reaped {reaped} orphaned tmp file(s) in {}", dir.display());
+        }
+        Ok(Self { dir: dir.to_path_buf(), degraded: AtomicBool::new(false) })
     }
 
     fn path(&self, id: u64) -> PathBuf {
         self.dir.join(format!("job-{id}.job"))
     }
 
-    /// Journal (or re-journal) one job. Advisory like the sim store.
+    /// True once an append has exhausted its retries and journalling
+    /// went memory-only (sticky until the process restarts).
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Journal (or re-journal) one job. Advisory like the sim store:
+    /// retried with backoff, then degraded to memory-only (the
+    /// `journal.degraded` gauge flips to 1 and jobs simply lose
+    /// restart durability — they keep running).
     pub fn write(&self, id: u64, spec_json: &str, checkpoint: &[u8]) {
+        if self.degraded() {
+            return;
+        }
         let spec = spec_json.as_bytes();
         let mut payload = Vec::with_capacity(24 + spec.len() + checkpoint.len());
         payload.extend_from_slice(&id.to_le_bytes());
         payload.extend_from_slice(&(spec.len() as u64).to_le_bytes());
         payload.extend_from_slice(spec);
         payload.extend_from_slice(checkpoint);
-        if let Err(e) = write_record(&self.path(id), KIND_JOB, &payload) {
-            eprintln!("warning: checkpoint journal write failed for job {id} ({e})");
+        if let Err(e) = write_record_with_retry(&self.path(id), KIND_JOB, &payload) {
+            self.degraded.store(true, Ordering::Relaxed);
+            io_metrics().journal_degraded.set(1);
+            eprintln!(
+                "warning: checkpoint journal write failed for job {id} after retries ({e}); \
+                 degrading to memory-only"
+            );
         }
     }
 
@@ -516,6 +653,55 @@ mod tests {
         bad.idx[0] = 99;
         store.store_graph(&graph_key(), &bad);
         assert!(store.load_graph(&graph_key()).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unwritable_store_degrades_to_memory_only() {
+        let dir = tmp_dir("degrade");
+        let store = SimStore::open(&dir).unwrap();
+        assert!(!store.degraded());
+        // Yank the directory out from under the store: every write
+        // attempt now fails, retries exhaust, and the store goes
+        // memory-only instead of erroring the job path.
+        std::fs::remove_dir_all(&dir).unwrap();
+        store.store_graph(&graph_key(), &graph());
+        assert!(store.degraded(), "exhausted retries must flip degraded mode");
+        // Degraded writes are skipped outright — no panic, no error.
+        store.store_p(&sim_key(), &sparse_p());
+        assert!(store.load_p(&sim_key()).is_none());
+    }
+
+    #[test]
+    fn unwritable_journal_degrades_to_memory_only() {
+        let dir = tmp_dir("journal-degrade");
+        let j = JobJournal::open(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        j.write(1, r#"{"dataset":"gaussians"}"#, b"ckpt");
+        assert!(j.degraded());
+        j.write(2, r#"{"dataset":"gaussians"}"#, b"ckpt");
+        assert!(j.read_all().is_empty());
+    }
+
+    #[test]
+    fn open_reaps_orphaned_tmp_files() {
+        let dir = tmp_dir("reap");
+        {
+            let store = SimStore::open(&dir).unwrap();
+            store.store_graph(&graph_key(), &graph());
+        }
+        // Plant orphans shaped like a crashed writer's leftovers.
+        std::fs::write(dir.join("g-0123456789abcdef.tmp.9999"), b"half a record").unwrap();
+        std::fs::write(dir.join("p-fedcba9876543210.tmp.1"), b"").unwrap();
+        let store = SimStore::open(&dir).unwrap();
+        let leftover: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter_map(|e| e.file_name().to_str().map(String::from))
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftover.is_empty(), "orphaned tmp files must be reaped, got {leftover:?}");
+        assert!(store.load_graph(&graph_key()).is_some(), "healthy records survive the reap");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

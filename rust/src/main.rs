@@ -7,6 +7,7 @@
 //!   info      show artifact / runtime / dataset information
 //!   datasets  list the evaluation datasets (Table 1)
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use gpgpu_sne::coordinator::{job::AutoStop, progress::JobState, run_pipeline, JobSpec};
@@ -46,14 +47,40 @@ fn print_help() {
          serve    --addr 127.0.0.1:7878 --max-concurrent 2\n\
                   --state-dir state/ --journal-every 50\n\
                   --metrics-dump metrics.json --trace-ring 4096\n\
+                  --max-queue-depth 256 --fault point=trigger[,...]\n\
                   (cooperatively scheduled sessions; TCP commands incl.\n\
-                   pause/resume/update/checkpoint/metrics/trace, resumable\n\
-                   submits — see docs/PROTOCOL.md; --state-dir makes jobs\n\
-                   and the similarity store survive restarts)\n\
+                   pause/resume/update/checkpoint/metrics/trace/fault,\n\
+                   resumable submits — see docs/PROTOCOL.md; --state-dir\n\
+                   makes jobs and the similarity store survive restarts;\n\
+                   `shutdown` or SIGTERM drains gracefully)\n\
          info     (artifact + platform report)\n\
          datasets (Table 1)\n\n\
          Run `make artifacts` first to enable the gpgpu engine."
     );
+}
+
+/// Set by the SIGTERM handler, polled by the drain watcher in
+/// [`cmd_serve`]. A signal handler may only do async-signal-safe work,
+/// so it flips this flag and nothing else.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_term(_sig: i32) {
+    TERM.store(true, Ordering::SeqCst);
+}
+
+/// Install [`on_term`] for SIGTERM through libc's `signal(2)`, declared
+/// directly — the build stays offline and crate-free.
+fn install_sigterm_handler() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+        }
+    }
 }
 
 fn load_runtime() -> Option<Arc<Runtime>> {
@@ -168,6 +195,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         gpgpu_sne::obs::trace::DEFAULT_RING_CAPACITY,
         "per-thread trace-ring capacity, in span events",
     );
+    let max_queue = args.get(
+        "max-queue-depth",
+        gpgpu_sne::coordinator::ServiceConfig::default().max_queue_depth,
+        "admission cap: shed submits once the ready queue holds this many jobs",
+    );
+    let fault = args.opt_str(
+        "fault",
+        "arm fault points at startup, e.g. store.write=prob:0.1@7,net.stall=every:5 \
+         (see docs/PROTOCOL.md `fault`)",
+    );
     args.finish_help("Serve the progressive embedding service over TCP");
     let rt = load_runtime();
     println!(
@@ -183,9 +220,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         state_dir: state_dir.map(std::path::PathBuf::from),
         journal_every,
         trace_ring,
+        max_queue_depth: max_queue,
         ..Default::default()
     };
     let svc = Arc::new(gpgpu_sne::coordinator::EmbeddingService::with_config(rt, cfg));
+    if let Some(spec) = fault {
+        gpgpu_sne::coordinator::faultinject::arm_spec(&spec)
+            .map_err(|e| anyhow::anyhow!("--fault: {e}"))?;
+        println!("fault points armed: {spec}");
+    }
     if let Some(path) = metrics_dump {
         println!("metrics dump: {path} (every 5 s; same shape as the `metrics` command)");
         let svc = svc.clone();
@@ -197,7 +240,32 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
         });
     }
-    gpgpu_sne::coordinator::protocol::serve(svc, &addr, |a| println!("listening on {a}"))
+    // SIGTERM = the same graceful drain as the `shutdown` command:
+    // stop admitting, park + journal every live session at its next
+    // step boundary, then wake the accept loop so `serve` returns and
+    // a restart (same --state-dir) resumes every job bit-identically.
+    install_sigterm_handler();
+    let bound: Arc<std::sync::Mutex<Option<std::net::SocketAddr>>> = Arc::default();
+    {
+        let svc = svc.clone();
+        let bound = bound.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            if TERM.load(Ordering::SeqCst) {
+                eprintln!("SIGTERM: draining (parking + journalling live jobs)");
+                let parked = svc.drain(std::time::Duration::from_secs(30));
+                eprintln!("drained: {parked} job(s) parked, resumable on restart");
+                if let Some(addr) = *bound.lock().unwrap() {
+                    let _ = std::net::TcpStream::connect(addr);
+                }
+                return;
+            }
+        });
+    }
+    gpgpu_sne::coordinator::protocol::serve(svc, &addr, |a| {
+        *bound.lock().unwrap() = Some(a);
+        println!("listening on {a}");
+    })
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {

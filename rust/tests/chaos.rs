@@ -1,0 +1,455 @@
+//! Chaos harness: drive a real `serve` instance over TCP with
+//! concurrent submit / meddle / garbage / subscriber clients while
+//! fault points fire, and pin the hardened stack's contract —
+//! **no hangs** (every client call bounded by a read timeout, every
+//! thread joined under a deadline), **no lost jobs** (every admitted id
+//! reaches a terminal state and stays visible), **no escaped panics**
+//! (an injected engine panic fails one job, never the service), and
+//! **bit-identical survivors** (a drain shutdown journals every live
+//! session; a restart resumes them to the same embedding an
+//! uninterrupted run produces).
+//!
+//! The fault registry is process-global, so every test that arms or
+//! depends on disarmed faults serialises on one lock. Integration
+//! binaries run one process per file — the lock is local to this file.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use gpgpu_sne::coordinator::progress::JobState;
+use gpgpu_sne::coordinator::store::JobJournal;
+use gpgpu_sne::coordinator::{
+    faultinject, protocol, run_pipeline, EmbeddingService, JobSpec, KnnMethod, ServiceConfig,
+};
+use gpgpu_sne::embed::OptParams;
+use gpgpu_sne::util::json::{self, Json};
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    let guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // A previous (possibly panicked) test must not leak armed faults.
+    faultinject::disarm_all();
+    guard
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gsne-chaos-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Bind an ephemeral port and serve `svc` on a background thread.
+fn start_server(
+    svc: Arc<EmbeddingService>,
+    max_conns: usize,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = protocol::serve_with(svc, "127.0.0.1:0", max_conns, move |addr| {
+            let _ = tx.send(addr);
+        });
+    });
+    let addr = rx.recv_timeout(Duration::from_secs(10)).expect("server bind");
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        // The no-hang contract: every read is bounded. A server that
+        // stops responding fails the test instead of wedging it.
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        Self { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("response within the read timeout");
+        json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response '{line}': {e}"))
+    }
+}
+
+fn submit_line(n: usize, iters: usize, seed: u64) -> String {
+    format!(
+        r#"{{"cmd":"submit","dataset":"gaussians","n":{n},"engine":"bh-0.5","iters":{iters},"perplexity":8,"knn":"brute","seed":{seed},"snapshot_every":1}}"#
+    )
+}
+
+/// The in-process twin of [`submit_line`] — field-for-field what
+/// `spec_from_json` builds, so reference runs are comparable.
+fn submit_spec(n: usize, iters: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        dataset: "gaussians".into(),
+        n,
+        engine: "bh-0.5".into(),
+        perplexity: 8.0,
+        knn: KnnMethod::Brute,
+        params: OptParams { iters, seed, ..Default::default() },
+        snapshot_every: 1,
+        auto_stop: None,
+        seed,
+        y0: None,
+        resume_from: None,
+    }
+}
+
+#[test]
+fn protocol_storm_survives_faults() {
+    let _l = lock();
+    let svc = Arc::new(EmbeddingService::with_config(
+        None,
+        ServiceConfig { max_concurrent: 2, ..Default::default() },
+    ));
+    let (addr, server) = start_server(svc.clone(), 64);
+
+    // Arm the chaos over the wire, exactly as an operator would:
+    // connection stalls, periodic engine panics, a slow snapshot
+    // subscriber. (Store faults get their own deterministic tests.)
+    let mut admin = Client::connect(addr);
+    let v = admin.call(
+        r#"{"cmd":"fault","spec":"net.stall=every:5,engine.step_panic=every:150,snapshot.slow_subscriber=every:3"}"#,
+    );
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+
+    // One long-running job with an in-process slow subscriber, so the
+    // bounded-fanout path (drop-oldest, lagging, eviction) runs hot
+    // while the storm rages.
+    let long_id = admin.call(&submit_line(120, 5000, 99)).num_field("job").unwrap() as u64;
+    let subscriber = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            let rx = loop {
+                if let Some(rx) = svc.subscribe(long_id) {
+                    break rx;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            };
+            let mut seen = 0u64;
+            loop {
+                match rx.recv_timeout(Duration::from_millis(500)) {
+                    Ok(_) => seen += 1,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if svc.phase(long_id).map_or(true, |p| p.is_terminal()) {
+                            break;
+                        }
+                    }
+                }
+            }
+            seen
+        })
+    };
+
+    // Submit fleet: 3 clients × 4 jobs, all waited to a terminal state.
+    let mut submitters = Vec::new();
+    for t in 0..3u64 {
+        submitters.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let mut ids = Vec::new();
+            for j in 0..4u64 {
+                let v = c.call(&submit_line(80, 40, 1000 + t * 10 + j));
+                assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+                ids.push(v.num_field("job").unwrap() as u64);
+            }
+            ids.into_iter()
+                .map(|id| {
+                    let v = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+                    // ok:false = the job failed (e.g. injected panic):
+                    // a terminal, *accounted* outcome — not a lost job.
+                    let failed = v.get("ok") == Some(&Json::Bool(false));
+                    if failed {
+                        assert!(v.str_field("error").is_some(), "{v}");
+                    }
+                    (id, failed)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+
+    // Garbage client: hostile lines never panic the dispatcher and the
+    // connection stays usable throughout.
+    let garbage = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        for line in [
+            "not json",
+            "[]",
+            r#"{"cmd":"frobnicate"}"#,
+            r#"{"cmd":"status","job":"x"}"#,
+            r#"{"cmd":"submit","n":1e300}"#,
+            r#"{"cmd":"update","job":0}"#,
+            r#"{"cmd":"fault","spec":"no.such.point=once"}"#,
+        ]
+        .iter()
+        .cycle()
+        .take(40)
+        {
+            let v = c.call(line);
+            assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{line} -> {v}");
+        }
+        let v = c.call(r#"{"cmd":"list"}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    });
+
+    // Meddler: checkpoint / pause+resume / stop whatever is running.
+    let meddler = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        for round in 0..50usize {
+            let v = c.call(r#"{"cmd":"list"}"#);
+            let jobs = v.get("jobs").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default();
+            if let Some(job) = jobs.get(round % jobs.len().max(1)) {
+                let id = job.num_field("job").unwrap_or(0.0) as u64;
+                match round % 4 {
+                    0 => {
+                        c.call(&format!(r#"{{"cmd":"checkpoint","job":{id}}}"#));
+                    }
+                    1 => {
+                        // Always paired, so no job is left parked.
+                        c.call(&format!(r#"{{"cmd":"pause","job":{id}}}"#));
+                        c.call(&format!(r#"{{"cmd":"resume","job":{id}}}"#));
+                    }
+                    2 => {
+                        c.call(&format!(r#"{{"cmd":"status","job":{id}}}"#));
+                    }
+                    _ => {
+                        // The "kill" client: stopped jobs are a terminal,
+                        // accounted outcome for whoever waits on them.
+                        c.call(&format!(r#"{{"cmd":"stop","job":{id}}}"#));
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    });
+
+    // Join everything under the no-hang contract (the per-call read
+    // timeouts bound each thread; a panic inside any of them fails the
+    // test here).
+    let mut outcomes = Vec::new();
+    for s in submitters {
+        outcomes.extend(s.join().expect("submitter thread survives the storm"));
+    }
+    garbage.join().expect("garbage client survives");
+    meddler.join().expect("meddler survives");
+
+    // End the long job, then the subscriber must terminate too.
+    admin.call(&format!(r#"{{"cmd":"stop","job":{long_id}}}"#));
+    admin.call(&format!(r#"{{"cmd":"wait","job":{long_id}}}"#));
+    subscriber.join().expect("subscriber loop terminates");
+
+    // No lost jobs: every admitted id is still visible and terminal.
+    assert_eq!(outcomes.len(), 12);
+    let listed = svc.list();
+    for (id, _) in &outcomes {
+        let phase = listed.iter().find(|(lid, _)| lid == id).map(|(_, p)| p.clone());
+        let phase = phase.unwrap_or_else(|| panic!("job {id} vanished from list"));
+        assert!(phase.is_terminal(), "job {id} not terminal after wait: {phase:?}");
+    }
+    // No escaped panics: injected step panics may have failed *some*
+    // jobs, but the service kept serving every other one (all twelve
+    // reached wait, the server thread is still alive).
+    let failed = outcomes.iter().filter(|(_, f)| *f).count();
+    assert!(failed < outcomes.len(), "every job failed — faults escaped containment");
+
+    // Clear faults over the wire, then drain: idle service, clean exit.
+    let v = admin.call(r#"{"cmd":"fault","clear":true}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    let v = admin.call(r#"{"cmd":"shutdown","timeout_s":30}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    assert_eq!(v.num_field("parked_jobs"), Some(0.0), "{v}");
+    server.join().expect("accept loop exits after shutdown");
+    faultinject::disarm_all();
+}
+
+#[test]
+fn drain_shutdown_then_restart_resumes_bit_identically() {
+    let _l = lock();
+    let dir = tmp_dir("drain");
+    // Journal cadence too large to ever fire: the only checkpoints the
+    // journal can carry are the ones the drain parks write.
+    let cfg = || ServiceConfig {
+        max_concurrent: 2,
+        state_dir: Some(dir.clone()),
+        journal_every: 1_000_000,
+        ..Default::default()
+    };
+
+    // Uninterrupted references for both survivors.
+    let ref_a = run_pipeline(&submit_spec(600, 400, 5), None, &JobState::default()).unwrap();
+    let ref_b = run_pipeline(&submit_spec(600, 400, 6), None, &JobState::default()).unwrap();
+
+    let svc = Arc::new(EmbeddingService::with_config(None, cfg()));
+    let (addr, server) = start_server(svc.clone(), 64);
+    let mut c = Client::connect(addr);
+    let a = c.call(&submit_line(600, 400, 5)).num_field("job").unwrap() as u64;
+    let b = c.call(&submit_line(600, 400, 6)).num_field("job").unwrap() as u64;
+
+    // Let both jobs run some real iterations before pulling the plug.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for id in [a, b] {
+        while svc.latest_snapshot(id).map(|s| s.iter).unwrap_or(0) < 20 {
+            assert!(Instant::now() < deadline, "job {id} never started stepping");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    // The drain handshake over the wire: both live jobs parked +
+    // journalled by the time the response arrives; accept loop exits.
+    let v = c.call(r#"{"cmd":"shutdown","timeout_s":60}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    assert_eq!(v.num_field("parked_jobs"), Some(2.0), "{v}");
+    server.join().expect("accept loop exits after drain");
+    assert!(svc.is_draining());
+    drop(c);
+    drop(svc);
+
+    // Restart over the same state dir: both jobs re-admitted under
+    // their original ids, resumed from their drain-park checkpoints,
+    // and — determinism end to end — bit-identical to uninterrupted.
+    let svc = EmbeddingService::with_config(None, cfg());
+    let res_a = svc.wait(a).expect("job a resumes");
+    let res_b = svc.wait(b).expect("job b resumes");
+    assert_eq!(res_a.iters_run, 400);
+    assert_eq!(res_b.iters_run, 400);
+    assert_eq!(res_a.embedding, ref_a.embedding, "job a diverged across drain/restart");
+    assert_eq!(res_b.embedding, ref_b.embedding, "job b diverged across drain/restart");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_between_tmp_write_and_rename_is_a_clean_miss() {
+    let _l = lock();
+    let dir = tmp_dir("crash");
+    let journal = JobJournal::open(&dir).unwrap();
+    journal.write(1, r#"{"n":80}"#, b"ckpt-one");
+    assert_eq!(journal.read_all().len(), 1);
+
+    // Crash injected between the tmp write and the rename — the caller
+    // (like a killed process) never learns. The record must be
+    // invisible: next read is a clean miss, not garbage.
+    {
+        let _g = faultinject::guard("store.write_crash=once").unwrap();
+        journal.write(2, r#"{"n":90}"#, b"ckpt-two");
+    }
+    let entries = journal.read_all();
+    assert_eq!(entries.len(), 1, "half-written record must not surface");
+    assert_eq!(entries[0].id, 1);
+    let tmps = |dir: &PathBuf| {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .count()
+    };
+    assert_eq!(tmps(&dir), 1, "the orphaned tmp file is on disk");
+
+    // Startup reaps the orphan and the surviving record is intact.
+    let journal = JobJournal::open(&dir).unwrap();
+    assert_eq!(tmps(&dir), 0, "open() reaps orphaned tmp files");
+    let entries = journal.read_all();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].checkpoint, b"ckpt-one");
+
+    // Read-side corruption: one flipped byte = checksum miss, and the
+    // poisoned file is deleted rather than ever trusted.
+    {
+        let _g = faultinject::guard("store.read_corrupt=once").unwrap();
+        assert_eq!(journal.read_all().len(), 0, "corrupt record must read as absent");
+    }
+    assert_eq!(journal.read_all().len(), 0, "corrupt record was deleted, not retried");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn oversized_request_is_rejected_and_connection_closed() {
+    // No lock: touches no fault points, no jobs.
+    let svc = Arc::new(EmbeddingService::with_config(
+        None,
+        ServiceConfig { max_concurrent: 1, ..Default::default() },
+    ));
+    let (addr, _server) = start_server(svc, 4);
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Stream just over the cap without a newline. The server must
+    // answer with a structured error and close — writes may start
+    // failing once it does, which is the point.
+    let chunk = vec![b'a'; 1 << 20];
+    for _ in 0..(protocol::MAX_REQUEST_BYTES / chunk.len() + 2) {
+        if writer.write_all(&chunk).is_err() {
+            // The server already hung up on us mid-flood — that IS the
+            // rejection taking effect.
+            break;
+        }
+    }
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        // EOF without a readable line: closed, which is the contract.
+        Ok(0) => {}
+        Ok(_) => {
+            let v = json::parse(line.trim()).expect("structured error line");
+            assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v}");
+            assert_eq!(v.str_field("code"), Some("request_too_large"), "{v}");
+            assert_eq!(v.get("retriable"), Some(&Json::Bool(false)), "{v}");
+            // And the connection is done: next read is EOF.
+            line.clear();
+            assert_eq!(reader.read_line(&mut line).unwrap_or(0), 0, "connection must close");
+        }
+        // Reset before the response could be read — still a close.
+        Err(_) => {}
+    }
+}
+
+#[test]
+fn connection_cap_sheds_with_server_busy() {
+    // No lock: touches no fault points, no jobs.
+    let svc = Arc::new(EmbeddingService::with_config(
+        None,
+        ServiceConfig { max_concurrent: 1, ..Default::default() },
+    ));
+    let (addr, _server) = start_server(svc, 1);
+
+    let mut first = Client::connect(addr);
+    let v = first.call(r#"{"cmd":"list"}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+
+    // Second connection: shed at accept time with one retriable error.
+    let shed = TcpStream::connect(addr).expect("connect");
+    shed.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut line = String::new();
+    BufReader::new(shed).read_line(&mut line).expect("shed response");
+    let v = json::parse(line.trim()).expect("structured shed line");
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v}");
+    assert_eq!(v.str_field("code"), Some("server_busy"), "{v}");
+    assert_eq!(v.get("retriable"), Some(&Json::Bool(true)), "{v}");
+
+    // Freeing the slot re-opens the door (the handler notices the
+    // close asynchronously — retry until the slot drains).
+    drop(first);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut c = Client::connect(addr);
+        let mut line = String::new();
+        c.writer.write_all(b"{\"cmd\":\"list\"}\n").unwrap();
+        c.reader.read_line(&mut line).expect("response");
+        let v = json::parse(line.trim()).unwrap();
+        if v.get("ok") == Some(&Json::Bool(true)) {
+            break;
+        }
+        assert_eq!(v.str_field("code"), Some("server_busy"), "{v}");
+        assert!(Instant::now() < deadline, "slot never freed after client close");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}

@@ -13,7 +13,7 @@ use std::path::PathBuf;
 
 use gpgpu_sne::coordinator::progress::JobState;
 use gpgpu_sne::coordinator::{
-    run_pipeline, EmbeddingService, JobPhase, JobSpec, KnnMethod, ServiceConfig,
+    run_pipeline, EmbeddingService, JobPhase, JobSpec, KnnMethod, ServiceConfig, SubmitError,
 };
 use gpgpu_sne::embed::OptParams;
 
@@ -110,6 +110,45 @@ fn killed_service_resumes_job_bit_identically() {
     // not re-run anything.
     let svc2 = durable(&dir, 10);
     assert!(svc2.phase(id).is_none(), "journal drained after completion");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drained_service_restarts_bit_identically() {
+    let dir = tmp_dir("drain");
+    const ITERS: usize = 600;
+    let reference = run_pipeline(&spec(ITERS), None, &JobState::default()).unwrap();
+
+    // Journal cadence far beyond the horizon: the only checkpoint the
+    // journal can carry is the one the drain itself writes at park.
+    let (id, parked) = {
+        let svc = durable(&dir, 1_000_000);
+        let id = svc.submit(spec(ITERS));
+        wait_until("job starts stepping", || {
+            svc.latest_snapshot(id).map(|s| s.iter >= 5).unwrap_or(false)
+        });
+        let parked = svc.drain(std::time::Duration::from_secs(60));
+        assert_eq!(parked, 1, "the one live job is parked, not dropped");
+        // Draining is sticky: admission is shut for good.
+        assert!(matches!(svc.try_submit(spec(10)), Err(SubmitError::Draining)));
+        let Some(JobPhase::Paused { iter, .. }) = svc.phase(id) else {
+            panic!("drained job must be parked mid-run, got {:?}", svc.phase(id))
+        };
+        assert!(0 < iter && iter < ITERS, "parked mid-run at iter {iter}");
+        (id, parked)
+        // svc dropped: the graceful half of a drain+exit.
+    };
+    assert_eq!(parked, 1);
+
+    // Restart over the same state dir: the drain-parked checkpoint is
+    // the resume point, and the result matches an uninterrupted run.
+    let svc = durable(&dir, 1_000_000);
+    let res = svc.wait(id).expect("drained job resumes after restart");
+    assert_eq!(res.iters_run, ITERS);
+    assert_eq!(
+        res.embedding, reference.embedding,
+        "drain shutdown + restart must be bit-identical to an uninterrupted run"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
