@@ -10,9 +10,11 @@
 //! FFT-core complex-vs-real pipeline ratio, the similarities section
 //! (blocked vs scalar brute kNN at N=10k/D=128, fused vs reference P
 //! build), the observability section (instrumentation primitives + the
-//! <1% session-step overhead gate), and the fault-injection section
-//! (disabled `fire()` pinned under 1 ns/check), so the perf trajectory
-//! is machine-trackable across PRs.
+//! <1% session-step overhead gate), the fault-injection section
+//! (disabled `fire()` pinned under 1 ns/check), and the simd section
+//! (per-kernel scalar-vs-dispatched-tier timings for the five ported
+//! hot loops plus the forced-scalar fieldfft iteration), so the perf
+//! trajectory is machine-trackable across PRs.
 //!
 //!     cargo bench --bench micro_hotpath [-- --quick]
 
@@ -658,6 +660,231 @@ fn main() -> anyhow::Result<()> {
                 ("disabled_ns_per_check", Json::Num(disabled_ns)),
                 ("enabled_unarmed_ns_per_check", Json::Num(unarmed_ns)),
                 ("budget_ns", Json::Num(1.0)),
+            ]),
+        ));
+    }
+
+    // --- SIMD dispatch (ARCHITECTURE.md §SIMD): the five ported hot
+    // loops, scalar tier vs the resolved tier — kernel-level through
+    // `Kernels::for_tier` (no global flip) — plus the end-to-end
+    // fieldfft iteration under forced-scalar vs auto dispatch
+    // (`set_tier` is process-global; this bench is single-threaded
+    // between measures, so the flip is safe).
+    {
+        use gpgpu_sne::util::simd::{self, GdArgs, Kernels, Tier};
+
+        let active = simd::active_tier();
+        let tiers = [Kernels::for_tier(Tier::Scalar), Kernels::for_tier(active)];
+        let it = if quick { 3 } else { 6 };
+        // (name, scalar_ns, simd_ns) per kernel workload.
+        let mut entries: Vec<(&str, f64, f64)> = Vec::new();
+
+        // Blocked-kNN panel kernels at the production depth D=128: the
+        // quad-row dot4 `scan_candidates` runs, and the single-row dot.
+        {
+            let d = 128usize;
+            let rows = 512usize;
+            let mut rng = Rng::new(41);
+            let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let mut quad = [0.0f64; 2];
+            let mut single = [0.0f64; 2];
+            for (ti, k) in tiers.iter().enumerate() {
+                quad[ti] = measure(1, it, || {
+                    let mut s = 0.0f32;
+                    for r in (0..rows).step_by(4) {
+                        let o = r * d;
+                        let v = (k.dot4)(
+                            &q,
+                            &x[o..o + d],
+                            &x[o + d..o + 2 * d],
+                            &x[o + 2 * d..o + 3 * d],
+                            &x[o + 3 * d..o + 4 * d],
+                        );
+                        s += (v[0] + v[1]) + (v[2] + v[3]);
+                    }
+                    std::hint::black_box(s);
+                })
+                .min()
+                    * 1e9
+                    / rows as f64;
+                single[ti] = measure(1, it, || {
+                    let mut s = 0.0f32;
+                    for r in 0..rows {
+                        s += (k.dot)(&q, &x[r * d..(r + 1) * d]);
+                    }
+                    std::hint::black_box(s);
+                })
+                .min()
+                    * 1e9
+                    / rows as f64;
+            }
+            entries.push(("knn_panel_dot4", quad[0], quad[1]));
+            entries.push(("knn_dot", single[0], single[1]));
+        }
+
+        // One radix-2 stage group at the production FFT width.
+        {
+            let half = 2048usize;
+            let mut rng = Rng::new(42);
+            let mut ra: Vec<f32> = (0..half).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let mut ia: Vec<f32> = (0..half).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let mut rb = ra.clone();
+            let mut ib = ia.clone();
+            let wr: Vec<f32> = (0..half).map(|k| (k as f32 / half as f32).cos()).collect();
+            let wi: Vec<f32> = (0..half).map(|k| -(k as f32 / half as f32).sin()).collect();
+            let mut times = [0.0f64; 2];
+            for (ti, k) in tiers.iter().enumerate() {
+                times[ti] = measure(1, it, || {
+                    for inverse in [false, true] {
+                        (k.butterflies)(&mut ra, &mut ia, &mut rb, &mut ib, &wr, &wi, inverse);
+                    }
+                })
+                .min()
+                    * 1e9
+                    / 2.0;
+            }
+            entries.push(("fft_butterfly", times[0], times[1]));
+        }
+
+        // Cubic-Lagrange 4×4 deposit (one splat per point).
+        {
+            let grid = 256usize;
+            let points = 4096usize;
+            let mut out = vec![0.0f32; grid * grid];
+            let mut rng = Rng::new(43);
+            let bases: Vec<usize> = (0..points)
+                .map(|_| {
+                    let r = (rng.gauss_f32(0.0, 1.0).abs() * 97.0) as usize % (grid - 4);
+                    let c = (rng.gauss_f32(0.0, 1.0).abs() * 89.0) as usize % (grid - 4);
+                    r * grid + c
+                })
+                .collect();
+            let wu = [0.1f32, 0.4, 0.4, 0.1];
+            let wv = [0.2f32, 0.3, 0.3, 0.2];
+            let mut times = [0.0f64; 2];
+            for (ti, k) in tiers.iter().enumerate() {
+                times[ti] = measure(1, it, || {
+                    for &b in &bases {
+                        (k.deposit4x4)(&mut out, b, grid, &wu, &wv);
+                    }
+                })
+                .min()
+                    * 1e9
+                    / points as f64;
+            }
+            entries.push(("splat_deposit", times[0], times[1]));
+        }
+
+        // Cauchy field-row accumulation (one point across a G=256 row).
+        {
+            let grid = 256usize;
+            let points = 512usize;
+            let px: Vec<f32> = (0..grid).map(|c| c as f32 * 0.1).collect();
+            let mut s = vec![0.0f32; grid];
+            let mut vx = vec![0.0f32; grid];
+            let mut vy = vec![0.0f32; grid];
+            let mut times = [0.0f64; 2];
+            for (ti, k) in tiers.iter().enumerate() {
+                times[ti] = measure(1, it, || {
+                    for i in 0..points {
+                        let yx = i as f32 * 0.03;
+                        (k.cauchy_row)(&px, 1.5, yx, yx * 0.5, &mut s, &mut vx, &mut vy);
+                    }
+                })
+                .min()
+                    * 1e9
+                    / points as f64;
+            }
+            entries.push(("gather_row", times[0], times[1]));
+        }
+
+        // Fused GD update over one STEP_CHUNK-sized slab.
+        {
+            let m = 2 * 2048usize;
+            let mut rng = Rng::new(44);
+            let mut ygd: Vec<f32> = (0..m).map(|_| rng.gauss_f32(0.0, 5.0)).collect();
+            let mut vgd: Vec<f32> = (0..m).map(|_| rng.gauss_f32(0.0, 0.5)).collect();
+            let mut ggd = vec![1.0f32; m];
+            let attr_gd: Vec<f32> = (0..m).map(|_| rng.gauss_f32(0.0, 0.1)).collect();
+            let rep_gd: Vec<f32> = (0..m).map(|_| rng.gauss_f32(0.0, 5.0)).collect();
+            let mut times = [0.0f64; 2];
+            for (ti, k) in tiers.iter().enumerate() {
+                times[ti] = measure(1, it, || {
+                    let part = (k.gd_update)(GdArgs {
+                        y: &mut ygd,
+                        vel: &mut vgd,
+                        gains: &mut ggd,
+                        attr: &attr_gd,
+                        rep: &rep_gd,
+                        exaggeration: 4.0,
+                        inv_z: 0.25,
+                        eta: 200.0,
+                        momentum: 0.5,
+                        track_bbox: true,
+                    });
+                    std::hint::black_box(part.sx);
+                })
+                .min()
+                    * 1e9
+                    / (m / 2) as f64;
+            }
+            entries.push(("gd_fused_per_point", times[0], times[1]));
+        }
+
+        // End-to-end fieldfft iteration: forced-scalar vs auto dispatch
+        // (the ISSUE 8 acceptance point for the field stage).
+        {
+            let nff = if quick { 4000usize } else { 16_000 };
+            let grid = 256usize;
+            let yff = random_points(nff, 33, 15.0);
+            let (origin, pixel) = grid_placement([-60.0, -60.0, 60.0, 60.0], grid);
+            let placement = Placement { origin, pixel };
+            let mut backend = FftBackend::new();
+            simd::set_tier(Some(Tier::Scalar));
+            let scalar_t = measure(1, it.max(3), || {
+                let _ = backend.compute(&yff, placement, grid);
+            })
+            .min();
+            simd::set_tier(None);
+            let auto_t = measure(1, it.max(3), || {
+                let _ = backend.compute(&yff, placement, grid);
+            })
+            .min();
+            entries.push(("fieldfft_iter", scalar_t * 1e9, auto_t * 1e9));
+        }
+        simd::set_tier(None);
+
+        let mut rep = Report::new(
+            &format!("simd kernels (tier '{}' vs scalar)", active.name()),
+            &["scalar", "simd", "speedup"],
+        );
+        let mut kernel_rows: Vec<Json> = Vec::new();
+        for &(name, scalar_ns, simd_ns) in &entries {
+            let speedup = scalar_ns / simd_ns;
+            rep.row(
+                name,
+                vec![
+                    format!("{scalar_ns:.1}ns"),
+                    format!("{simd_ns:.1}ns"),
+                    format!("{speedup:.2}x"),
+                ],
+            );
+            kernel_rows.push(Json::obj(vec![
+                ("name", Json::Str(name.into())),
+                ("scalar_ns", Json::Num(scalar_ns)),
+                ("simd_ns", Json::Num(simd_ns)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+        rep.print();
+        rep.write_csv("micro_simd.csv")?;
+        json_sections.push((
+            "simd",
+            Json::obj(vec![
+                ("tier", Json::Str(active.name().into())),
+                ("detected", Json::Str(simd::detected_tier().name().into())),
+                ("kernels", Json::Arr(kernel_rows)),
             ]),
         ));
     }

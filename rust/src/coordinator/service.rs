@@ -347,6 +347,12 @@ impl EmbeddingService {
     /// on-disk level.
     pub fn with_config(runtime: Option<Arc<Runtime>>, cfg: ServiceConfig) -> Self {
         obs::trace::set_ring_capacity(cfg.trace_ring);
+        // Resolve the SIMD dispatch tier up front (first use would do it
+        // lazily anyway) and pin it in the global registry so `metrics`
+        // consumers see which kernels this process is serving with.
+        obs::registry()
+            .gauge("simd.tier_id")
+            .set(crate::util::simd::active_tier() as i64);
         let (sim_cache, journal) = match &cfg.state_dir {
             Some(dir) => {
                 let cache =
@@ -679,12 +685,14 @@ impl EmbeddingService {
     }
 
     /// Merged metrics snapshot — what the TCP `metrics` command and
-    /// `serve --metrics-dump` emit. Four sections: `service` (the
+    /// `serve --metrics-dump` emit. Five sections: `service` (the
     /// scheduler's own registry: quantum histograms, queue depth,
     /// overruns, park→resume latency, per-phase engine timings),
     /// `global` (the process-wide registry: store I/O, snapshot
     /// fanout), `sim_cache` (two-level hit/miss/coalesce/evict
-    /// counters), and `jobs` (a per-job scheduling summary).
+    /// counters), `jobs` (a per-job scheduling summary), and `simd`
+    /// (the resolved CPU-feature dispatch tier, see
+    /// [`crate::util::simd`]).
     pub fn metrics_json(&self) -> Json {
         let cache = &self.inner.sim_cache;
         let mut sim = cache.p_stats().to_json_fields("p");
@@ -716,6 +724,7 @@ impl EmbeddingService {
             ("global", obs::registry().snapshot()),
             ("sim_cache", Json::Obj(sim)),
             ("jobs", Json::Arr(jobs)),
+            ("simd", crate::util::simd::status_json()),
         ])
     }
 }

@@ -33,6 +33,7 @@ use std::sync::Arc;
 use crate::hd::SparseP;
 use crate::util::parallel::{self, SyncSlice};
 use crate::util::rng::Rng;
+use crate::util::simd::{self, GdArgs, GdPartial};
 
 /// Optimisation hyperparameters (HDI defaults, §6 of the paper).
 #[derive(Debug, Clone)]
@@ -414,33 +415,14 @@ pub struct GdState {
     pub gains: Vec<f32>,
 }
 
-pub const GAIN_ADD: f32 = 0.2;
-pub const GAIN_MUL: f32 = 0.8;
-pub const GAIN_MIN: f32 = 0.01;
+// The van der Maaten gain constants live beside the SIMD gradient
+// kernel that consumes them; re-exported here for the historical paths.
+pub use crate::util::simd::{GAIN_ADD, GAIN_MIN, GAIN_MUL};
 
 /// Points per task of the fused step pass. Partials are indexed by
 /// chunk, not by thread, so the reduction is deterministic regardless
 /// of scheduling.
 const STEP_CHUNK: usize = 2048;
-
-/// Per-chunk partial of the fused step: coordinate sums (f64, for the
-/// recentre mean) and a bounding box.
-#[derive(Clone)]
-struct StepPartial {
-    sx: f64,
-    sy: f64,
-    bbox: [f32; 4],
-}
-
-impl StepPartial {
-    fn identity() -> Self {
-        Self {
-            sx: 0.0,
-            sy: 0.0,
-            bbox: [f32::INFINITY, f32::INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY],
-        }
-    }
-}
 
 impl GdState {
     /// Random Gaussian initialisation (deterministic in seed).
@@ -456,7 +438,9 @@ impl GdState {
     /// bounding box — one threaded pass over the points plus an
     /// O(chunks) combine and a threaded mean-subtract, replacing four
     /// serial O(N) sweeps. Arithmetic per element is identical to
-    /// [`Self::apply_gradient`] + [`Self::recenter`].
+    /// [`Self::apply_gradient`] + [`Self::recenter`]; the per-chunk pair
+    /// update runs through the dispatched `gd_update` SIMD kernel, which
+    /// is bitwise-identical across tiers (see [`crate::util::simd`]).
     ///
     /// Returns the post-recentre bbox when `track_bbox` (observers need
     /// the diameter); headless runs pass `false` and skip the min/max
@@ -474,9 +458,10 @@ impl GdState {
         let n = self.n;
         debug_assert!(attr.len() >= 2 * n && rep.len() >= 2 * n);
         let nchunks = n.div_ceil(STEP_CHUNK).max(1);
+        let kern = simd::kernels().gd_update;
         // n/STEP_CHUNK slots of 24 B — a per-call allocation three orders
         // of magnitude under the pass it fronts, not worth carrying state.
-        let mut partials = vec![StepPartial::identity(); nchunks];
+        let mut partials = vec![GdPartial::identity(); nchunks];
         {
             let parts = SyncSlice::new(&mut partials);
             let ys = SyncSlice::new(&mut self.y);
@@ -484,38 +469,30 @@ impl GdState {
             let gains = SyncSlice::new(&mut self.gains);
             parallel::par_chunks(n, STEP_CHUNK, |range| {
                 let ci = range.start / STEP_CHUNK;
-                let mut acc = StepPartial::identity();
-                for i in range {
-                    for d in 0..2 {
-                        let idx = 2 * i + d;
-                        let g = 4.0 * (exaggeration * attr[idx] - rep[idx] * inv_z);
-                        unsafe {
-                            let vel = vels.get_mut(idx);
-                            let gain = gains.get_mut(idx);
-                            let same = g * *vel > 0.0;
-                            let raw = if same { *gain * GAIN_MUL } else { *gain + GAIN_ADD };
-                            let ng = raw.max(GAIN_MIN);
-                            *gain = ng;
-                            *vel = momentum * *vel - eta * ng * g;
-                            *ys.get_mut(idx) += *vel;
-                        }
-                    }
-                    let (x, yv) = unsafe { (*ys.get_mut(2 * i), *ys.get_mut(2 * i + 1)) };
-                    acc.sx += x as f64;
-                    acc.sy += yv as f64;
-                    if track_bbox {
-                        acc.bbox[0] = acc.bbox[0].min(x);
-                        acc.bbox[1] = acc.bbox[1].min(yv);
-                        acc.bbox[2] = acc.bbox[2].max(x);
-                        acc.bbox[3] = acc.bbox[3].max(yv);
-                    }
-                }
+                let lo = 2 * range.start;
+                let len = 2 * (range.end - range.start);
+                // SAFETY: chunk ranges are disjoint, so each worker owns
+                // its slice of the three state tensors and its partial.
+                let part = unsafe {
+                    kern(GdArgs {
+                        y: ys.slice_mut(lo, len),
+                        vel: vels.slice_mut(lo, len),
+                        gains: gains.slice_mut(lo, len),
+                        attr: &attr[lo..lo + len],
+                        rep: &rep[lo..lo + len],
+                        exaggeration,
+                        inv_z,
+                        eta,
+                        momentum,
+                        track_bbox,
+                    })
+                };
                 unsafe {
-                    *parts.get_mut(ci) = acc;
+                    *parts.get_mut(ci) = part;
                 }
             });
         }
-        let mut total = StepPartial::identity();
+        let mut total = GdPartial::identity();
         for p in &partials {
             total.sx += p.sx;
             total.sy += p.sy;

@@ -48,33 +48,47 @@
 //! kernel spectra) pay nothing for it.
 
 use crate::util::parallel::{self, SyncSlice};
+use crate::util::simd;
 
-/// An FFT plan for one power-of-two size: the twiddle half-table
-/// `tw[k] = e^{-2πik/n}`, `k < n/2`, plus the bit-reversal index table
-/// (both computed once — `run` is called O(m) times per 2-D transform).
+/// An FFT plan for one power-of-two size: per-stage twiddle tables plus
+/// the bit-reversal index table (both computed once — `run` is called
+/// O(m) times per 2-D transform).
+///
+/// Twiddles are stored *per stage, contiguously*: the stage with
+/// half-length `h` keeps its `h` factors `e^{-πik/h}`, `k < h`, at flat
+/// offset `h − 1` (total `n − 1` entries). The classic shared half-table
+/// would be walked at stride `n/len`, which defeats vector loads; the
+/// per-stage layout makes every butterfly group a unit-stride stream for
+/// the dispatched SIMD kernel (`util::simd`), and costs the same n
+/// floats overall. The f64 angle evaluation is unchanged, so the stored
+/// factors are bit-identical to the seed's.
 pub struct Fft {
     n: usize,
-    tw_re: Vec<f32>,
-    tw_im: Vec<f32>,
+    stw_re: Vec<f32>,
+    stw_im: Vec<f32>,
     rev: Vec<u32>,
 }
 
 impl Fft {
     pub fn new(n: usize) -> Self {
         assert!(n.is_power_of_two() && n >= 2, "radix-2 FFT needs a power-of-two size, got {n}");
-        let mut tw_re = Vec::with_capacity(n / 2);
-        let mut tw_im = Vec::with_capacity(n / 2);
-        for k in 0..n / 2 {
-            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-            tw_re.push(ang.cos() as f32);
-            tw_im.push(ang.sin() as f32);
+        let mut stw_re = Vec::with_capacity(n - 1);
+        let mut stw_im = Vec::with_capacity(n - 1);
+        let mut h = 1usize;
+        while h <= n / 2 {
+            for k in 0..h {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / (2 * h) as f64;
+                stw_re.push(ang.cos() as f32);
+                stw_im.push(ang.sin() as f32);
+            }
+            h <<= 1;
         }
         // rev[i] = bit-reverse of i over log2(n) bits.
         let mut rev = vec![0u32; n];
         for i in 1..n {
             rev[i] = (rev[i >> 1] >> 1) | if i & 1 == 1 { (n >> 1) as u32 } else { 0 };
         }
-        Self { n, tw_re, tw_im, rev }
+        Self { n, stw_re, stw_im, rev }
     }
 
     pub fn len(&self) -> usize {
@@ -118,23 +132,25 @@ impl Fft {
                 im.swap(i, j);
             }
         }
-        // Butterfly stages.
+        // Butterfly stages: stage with half-length `half` reads its
+        // contiguous twiddle run at offset `half − 1`. Long stages go
+        // through the dispatched kernel; short ones (half < 8, where one
+        // indirect call per 2–8 elements would dominate) inline the
+        // scalar reference directly — same arithmetic, no dispatch.
+        let bf = simd::kernels().butterflies;
         let mut len = 2usize;
         while len <= n {
             let half = len / 2;
-            let stride = n / len;
+            let off = half - 1;
+            let wr = &self.stw_re[off..off + half];
+            let wi = &self.stw_im[off..off + half];
             for start in (0..n).step_by(len) {
-                for k in 0..half {
-                    let wi_raw = self.tw_im[k * stride];
-                    let (wr, wi) = (self.tw_re[k * stride], if inverse { -wi_raw } else { wi_raw });
-                    let a = start + k;
-                    let b = a + half;
-                    let vr = re[b] * wr - im[b] * wi;
-                    let vi = re[b] * wi + im[b] * wr;
-                    re[b] = re[a] - vr;
-                    im[b] = im[a] - vi;
-                    re[a] += vr;
-                    im[a] += vi;
+                let (ra, rb) = re[start..start + len].split_at_mut(half);
+                let (ia, ib) = im[start..start + len].split_at_mut(half);
+                if half < 8 {
+                    simd::butterflies_scalar(ra, ia, rb, ib, wr, wi, inverse);
+                } else {
+                    bf(ra, ia, rb, ib, wr, wi, inverse);
                 }
             }
             len <<= 1;
@@ -192,17 +208,40 @@ pub fn transpose(a: &mut [f32], m: usize) {
 /// `cols×rows` one: `dst[c·rows + r] = src[r·cols + c]`. Tiled so the
 /// strided stream stays within `TILE` cache lines per block, threaded
 /// over column bands (each band writes a disjoint contiguous dst slab).
+/// Inside a tile the bulk moves through the dispatched 4×4 in-register
+/// transpose kernel (pure data movement — no numerics); ragged edges
+/// fall back to the element walk.
 pub fn transpose_into(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
     debug_assert!(src.len() >= rows * cols);
     debug_assert!(dst.len() >= rows * cols);
+    let t4 = simd::kernels().transpose4x4;
     let out = SyncSlice::new(dst);
     parallel::par_chunks(cols, TILE, |cband| {
         for r0 in (0..rows).step_by(TILE) {
             let r1 = (r0 + TILE).min(rows);
-            for c in cband.clone() {
-                for r in r0..r1 {
+            let mut c = cband.start;
+            while c + 4 <= cband.end {
+                let mut r = r0;
+                while r + 4 <= r1 {
+                    // SAFETY: bands own disjoint dst column slabs and
+                    // the 4×4 span stays inside this band's columns.
+                    let d = unsafe { out.slice_mut(c * rows + r, 3 * rows + 4) };
+                    t4(&src[r * cols + c..], cols, d, rows);
+                    r += 4;
+                }
+                for rr in r..r1 {
+                    for cc in c..c + 4 {
+                        unsafe {
+                            *out.get_mut(cc * rows + rr) = src[rr * cols + cc];
+                        }
+                    }
+                }
+                c += 4;
+            }
+            for cc in c..cband.end {
+                for rr in r0..r1 {
                     unsafe {
-                        *out.get_mut(c * rows + r) = src[r * cols + c];
+                        *out.get_mut(cc * rows + rr) = src[rr * cols + cc];
                     }
                 }
             }

@@ -7,36 +7,35 @@
 //! engine's workhorse and the reference point for the ablation benches.
 
 use super::{FieldBackend, FieldTexture, Placement};
-use crate::util::parallel;
+use crate::util::{parallel, simd};
 
 /// Evaluate the fields exactly at every pixel centre (Eq. 10/11).
-/// Threaded over pixel rows.
+/// Threaded over pixel rows; within a row the per-point Cauchy
+/// accumulation runs through the dispatched SIMD row kernel. Each pixel
+/// still sums points in ascending `i`, so the result is bitwise
+/// identical to the historical per-pixel loop on every tier.
 pub fn compute_fields(y: &[f32], origin: [f32; 2], pixel: f32, grid: usize) -> Vec<f32> {
     let n = y.len() / 2;
     let mut tex = vec![0.0f32; 3 * grid * grid];
     let plane = grid * grid;
+    let px: Vec<f32> = (0..grid).map(|c| origin[0] + (c as f32 + 0.5) * pixel).collect();
+    let row_kernel = simd::kernels().cauchy_row;
     {
         let slots = parallel::SyncSlice::new(&mut tex);
         parallel::par_chunks(grid, 4, |rows| {
             for r in rows {
                 let py = origin[1] + (r as f32 + 0.5) * pixel;
-                for c in 0..grid {
-                    let px = origin[0] + (c as f32 + 0.5) * pixel;
-                    let (mut s, mut vx, mut vy) = (0.0f32, 0.0f32, 0.0f32);
-                    for i in 0..n {
-                        let dx = y[2 * i] - px;
-                        let dy = y[2 * i + 1] - py;
-                        let t = 1.0 / (1.0 + dx * dx + dy * dy);
-                        s += t;
-                        let t2 = t * t;
-                        vx += t2 * dx;
-                        vy += t2 * dy;
-                    }
-                    unsafe {
-                        *slots.get_mut(r * grid + c) = s;
-                        *slots.get_mut(plane + r * grid + c) = vx;
-                        *slots.get_mut(2 * plane + r * grid + c) = vy;
-                    }
+                // SAFETY: each row `r` is claimed by exactly one worker;
+                // the three planes' row slices are disjoint.
+                let (s, vx, vy) = unsafe {
+                    (
+                        slots.slice_mut(r * grid, grid),
+                        slots.slice_mut(plane + r * grid, grid),
+                        slots.slice_mut(2 * plane + r * grid, grid),
+                    )
+                };
+                for i in 0..n {
+                    row_kernel(&px, py, y[2 * i], y[2 * i + 1], s, vx, vy);
                 }
             }
         });

@@ -78,6 +78,7 @@ pub fn splat_cubic(
     out: &mut [f32],
 ) {
     assert!(grid >= 4 && stride >= grid && out.len() >= stride * grid);
+    let deposit = crate::util::simd::kernels().deposit4x4;
     let n = y.len() / 2;
     let lim = grid as f32 - 1.000001;
     for i in 0..n {
@@ -87,12 +88,9 @@ pub fn splat_cubic(
         let i0 = (v.floor() as isize).clamp(1, grid as isize - 3) as usize;
         let wu = lagrange4(u - j0 as f32);
         let wv = lagrange4(v - i0 as f32);
-        for (a, &wva) in wv.iter().enumerate() {
-            let row = (i0 - 1 + a) * stride + (j0 - 1);
-            for (b, &wub) in wu.iter().enumerate() {
-                out[row + b] += wva * wub;
-            }
-        }
+        // Stencil base is the top-left of the 4×4 footprint; the clamps
+        // above guarantee it stays inside the `stride × grid` buffer.
+        deposit(out, (i0 - 1) * stride + (j0 - 1), stride, &wu, &wv);
     }
 }
 

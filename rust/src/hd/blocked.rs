@@ -28,9 +28,17 @@
 //! f32 rounding (≲1e-6 relative), far below neighbour-distance gaps on
 //! real data; `bruteforce::knn_scalar_reference` is kept as the
 //! equivalence oracle for tests and benches.
+//!
+//! The arithmetic itself lives in [`crate::util::simd`]: `dot`, the
+//! four-candidate `dot4` and the panel rank-1 update are dispatched
+//! kernels (scalar / SSE4.1 / AVX2, selected at runtime), and every tier
+//! is bit-identical to the scalar reference — including the tails, so a
+//! candidate scored by the quad micro-kernel and the same candidate
+//! scored by the remainder path can no longer drift apart.
 
 use super::knn::{KBest, KnnGraph};
 use crate::util::parallel;
+use crate::util::simd;
 
 /// Query rows per worker chunk (one KBest per live query row).
 pub const Q_BLOCK: usize = 32;
@@ -38,46 +46,17 @@ pub const Q_BLOCK: usize = 32;
 /// and one panel row (512 B) stay L1-resident.
 pub const B_BLOCK: usize = 128;
 
-/// Plain dot product, 4-wide unrolled so LLVM vectorises it.
+/// Plain dot product through the active SIMD tier (bit-identical across
+/// tiers; see `util::simd`).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = 4 * c;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
-    }
-    s
-}
-
-/// Dot products of one query against four candidate rows at once: four
-/// independent accumulator chains over a single streamed read of `q`.
-#[inline]
-fn dot4(q: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
-    let d = q.len();
-    let mut s = [0.0f32; 4];
-    for t in 0..d {
-        let qv = q[t];
-        s[0] += qv * b0[t];
-        s[1] += qv * b1[t];
-        s[2] += qv * b2[t];
-        s[3] += qv * b3[t];
-    }
-    s
+    (simd::kernels().dot)(a, b)
 }
 
 /// Squared norm of every row of a row-major `(n, d)` matrix (parallel).
 pub fn row_sq_norms(x: &[f32], n: usize, d: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), n * d);
+    let kern = simd::kernels();
     let mut out = vec![0.0f32; n];
     {
         let slots = parallel::SyncSlice::new(&mut out);
@@ -85,7 +64,7 @@ pub fn row_sq_norms(x: &[f32], n: usize, d: usize) -> Vec<f32> {
             for i in range {
                 let row = &x[i * d..(i + 1) * d];
                 unsafe {
-                    *slots.get_mut(i) = dot(row, row);
+                    *slots.get_mut(i) = (kern.dot)(row, row);
                 }
             }
         });
@@ -105,12 +84,13 @@ pub fn scan_candidates(
     cand: &[u32],
     kb: &mut KBest,
 ) {
+    let kern = simd::kernels();
     let quads = cand.len() / 4;
     for c in 0..quads {
         let ids = &cand[4 * c..4 * c + 4];
         let (i0, i1, i2, i3) =
             (ids[0] as usize, ids[1] as usize, ids[2] as usize, ids[3] as usize);
-        let s = dot4(
+        let s = (kern.dot4)(
             q,
             &x[i0 * d..(i0 + 1) * d],
             &x[i1 * d..(i1 + 1) * d],
@@ -126,7 +106,7 @@ pub fn scan_candidates(
     }
     for &id in &cand[4 * quads..] {
         let i = id as usize;
-        let d2 = (q_norm + norms[i] - 2.0 * dot(q, &x[i * d..(i + 1) * d])).max(0.0);
+        let d2 = (q_norm + norms[i] - 2.0 * (kern.dot)(q, &x[i * d..(i + 1) * d])).max(0.0);
         if d2 < kb.bound() {
             kb.push(d2, id);
         }
@@ -197,6 +177,7 @@ pub fn knn_blocked(
 ) -> KnnGraph {
     let (base_n, d) = (base.n, base.d);
     let npan = PackedBase::panels(base_n);
+    let kern = simd::kernels();
     let mut g = KnnGraph::new(q_n, k);
     {
         let rows = parallel::SyncSlice::new(&mut g.idx);
@@ -215,9 +196,7 @@ pub fn knn_blocked(
                     acc.fill(0.0);
                     for (t, &qv) in q.iter().enumerate() {
                         let row = &panel[t * B_BLOCK..(t + 1) * B_BLOCK];
-                        for (a, &b) in acc.iter_mut().zip(row.iter()) {
-                            *a += qv * b;
-                        }
+                        (kern.rank1_update)(&mut acc, row, qv);
                     }
                     let qn = q_norms[i];
                     for (bj, &s) in acc.iter().enumerate().take(blen) {

@@ -11,4 +11,5 @@ pub mod json;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod timer;

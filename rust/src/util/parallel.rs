@@ -99,6 +99,18 @@ impl<'a, T> SyncSlice<'a, T> {
         debug_assert!(i < self.len);
         &mut *self.ptr.add(i)
     }
+
+    /// Contiguous sub-slice `[start, start + len)` — the chunk-kernel
+    /// variant of [`Self::get_mut`] (the SIMD kernels take whole chunks,
+    /// not single elements).
+    ///
+    /// # Safety
+    /// Ranges handed to concurrent workers must be disjoint.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
 }
 
 /// Parallel reduce: fold chunks locally, combine the partials.

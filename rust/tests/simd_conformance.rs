@@ -1,0 +1,280 @@
+//! SIMD dispatch conformance (ARCHITECTURE.md §SIMD): every vector
+//! tier must reproduce the scalar reference kernels **bit-for-bit** —
+//! across random sizes (including non-lane-multiple tails), subnormals
+//! and signed zeros — and the full engines must produce the same
+//! embedding under forced-scalar dispatch as under auto. This is the
+//! contract that makes `PALLAS_SIMD` a pure performance switch and
+//! keeps checkpoint replay exact across machines with different vector
+//! units.
+
+use std::sync::Mutex;
+
+use gpgpu_sne::embed::{self, OptParams};
+use gpgpu_sne::hd::{bruteforce, perplexity, Dataset};
+use gpgpu_sne::util::prop::{self, usize_in};
+use gpgpu_sne::util::rng::Rng;
+use gpgpu_sne::util::simd::{self, GdArgs, Kernels, Tier};
+
+/// The supported vector tiers (beyond scalar) on this machine. Empty on
+/// targets with no vector kernels — the properties then just pin the
+/// scalar kernels against themselves, which keeps the suite portable.
+fn vector_tiers() -> Vec<&'static Kernels> {
+    Tier::ALL
+        .iter()
+        .copied()
+        .filter(|&t| t != Tier::Scalar && simd::supported(t))
+        .map(Kernels::for_tier)
+        .collect()
+}
+
+/// Deterministic test vector: Gaussian values with special values
+/// (signed zeros, subnormals) sprinkled at fixed offsets so every
+/// workload exercises the edge cases the determinism contract names.
+fn test_vec(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+    let mut v: Vec<f32> = (0..len).map(|_| rng.gauss_f32(0.0, 2.0)).collect();
+    for (i, x) in v.iter_mut().enumerate() {
+        match i % 11 {
+            3 => *x = 0.0,
+            5 => *x = -0.0,
+            7 => *x = 1.0e-41,  // positive subnormal
+            9 => *x = -7.5e-42, // negative subnormal
+            _ => {}
+        }
+    }
+    v
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn dot_and_dot4_match_scalar_bitwise() {
+    // Also the ISSUE 8 tail-handling pin: dot4's lanes must equal dot on
+    // the same rows bit-for-bit on EVERY tier, so quad-scored and
+    // tail-scored candidates in scan_candidates cannot drift.
+    prop::check("simd dot/dot4 vs scalar", &usize_in(0, 133), |&d| {
+        let q = test_vec(d, d as u64 + 1);
+        let b: Vec<Vec<f32>> = (0..4u64).map(|j| test_vec(d, 100 + j + d as u64)).collect();
+        let scalar = Kernels::for_tier(Tier::Scalar);
+        let want: Vec<u32> = b.iter().map(|bj| (scalar.dot)(&q, bj).to_bits()).collect();
+        for k in std::iter::once(scalar).chain(vector_tiers()) {
+            for (j, bj) in b.iter().enumerate() {
+                if (k.dot)(&q, bj).to_bits() != want[j] {
+                    return Err(format!("dot: tier {} row {j} d={d}", k.tier.name()));
+                }
+            }
+            let quad = (k.dot4)(&q, &b[0], &b[1], &b[2], &b[3]);
+            for (j, v) in quad.iter().enumerate() {
+                if v.to_bits() != want[j] {
+                    return Err(format!("dot4 lane {j} != dot: tier {} d={d}", k.tier.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rank1_update_matches_scalar_bitwise() {
+    prop::check("simd rank1_update vs scalar", &usize_in(0, 133), |&n| {
+        let row = test_vec(n, 7 + n as u64);
+        let acc0 = test_vec(n, 900 + n as u64);
+        let qv = -1.75f32;
+        let mut want = acc0.clone();
+        (Kernels::for_tier(Tier::Scalar).rank1_update)(&mut want, &row, qv);
+        for k in vector_tiers() {
+            let mut got = acc0.clone();
+            (k.rank1_update)(&mut got, &row, qv);
+            if bits(&got) != bits(&want) {
+                return Err(format!("tier {} n={n}", k.tier.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn butterflies_match_scalar_bitwise() {
+    prop::check("simd butterflies vs scalar", &usize_in(0, 67), |&half| {
+        let wr = test_vec(half, 1 + half as u64);
+        let wi = test_vec(half, 2 + half as u64);
+        for inverse in [false, true] {
+            let run = |k: &Kernels| {
+                let mut ra = test_vec(half, 3 + half as u64);
+                let mut ia = test_vec(half, 4 + half as u64);
+                let mut rb = test_vec(half, 5 + half as u64);
+                let mut ib = test_vec(half, 6 + half as u64);
+                (k.butterflies)(&mut ra, &mut ia, &mut rb, &mut ib, &wr, &wi, inverse);
+                [bits(&ra), bits(&ia), bits(&rb), bits(&ib)]
+            };
+            let want = run(Kernels::for_tier(Tier::Scalar));
+            for k in vector_tiers() {
+                if run(k) != want {
+                    return Err(format!(
+                        "tier {} half={half} inverse={inverse}",
+                        k.tier.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transpose4x4_matches_scalar() {
+    prop::check2("simd transpose4x4", &usize_in(4, 13), &usize_in(4, 13), |&ss, &ds| {
+        let src = test_vec(3 * ss + 4, ss as u64);
+        let mut want = vec![0.0f32; 3 * ds + 4];
+        (Kernels::for_tier(Tier::Scalar).transpose4x4)(&src, ss, &mut want, ds);
+        for k in vector_tiers() {
+            let mut got = vec![0.0f32; 3 * ds + 4];
+            (k.transpose4x4)(&src, ss, &mut got, ds);
+            if bits(&got) != bits(&want) {
+                return Err(format!("tier {} ss={ss} ds={ds}", k.tier.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deposit4x4_matches_scalar_bitwise() {
+    prop::check("simd deposit4x4 vs scalar", &usize_in(4, 40), |&stride| {
+        let base = stride / 3;
+        let size = base + 3 * stride + 4 + 5;
+        let out0 = test_vec(size, stride as u64);
+        let wu: [f32; 4] = test_vec(4, 11 + stride as u64).try_into().unwrap();
+        let wv: [f32; 4] = test_vec(4, 12 + stride as u64).try_into().unwrap();
+        let mut want = out0.clone();
+        (Kernels::for_tier(Tier::Scalar).deposit4x4)(&mut want, base, stride, &wu, &wv);
+        for k in vector_tiers() {
+            let mut got = out0.clone();
+            (k.deposit4x4)(&mut got, base, stride, &wu, &wv);
+            if bits(&got) != bits(&want) {
+                return Err(format!("tier {} stride={stride}", k.tier.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cauchy_row_matches_scalar_bitwise() {
+    prop::check("simd cauchy_row vs scalar", &usize_in(0, 133), |&g| {
+        let px = test_vec(g, 3 + g as u64);
+        let run = |k: &Kernels| {
+            let mut s = test_vec(g, 21 + g as u64);
+            let mut vx = test_vec(g, 22 + g as u64);
+            let mut vy = test_vec(g, 23 + g as u64);
+            (k.cauchy_row)(&px, 0.7, -1.3, 2.1, &mut s, &mut vx, &mut vy);
+            [bits(&s), bits(&vx), bits(&vy)]
+        };
+        let want = run(Kernels::for_tier(Tier::Scalar));
+        for k in vector_tiers() {
+            if run(k) != want {
+                return Err(format!("tier {} g={g}", k.tier.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gd_update_matches_scalar_bitwise() {
+    prop::check("simd gd_update vs scalar", &usize_in(0, 67), |&pairs| {
+        let m = 2 * pairs;
+        for track_bbox in [false, true] {
+            let run = |k: &Kernels| {
+                let mut y = test_vec(m, 31 + m as u64);
+                let mut vel = test_vec(m, 32 + m as u64);
+                let mut gains = test_vec(m, 33 + m as u64);
+                let attr = test_vec(m, 34 + m as u64);
+                let rep = test_vec(m, 35 + m as u64);
+                let part = (k.gd_update)(GdArgs {
+                    y: &mut y,
+                    vel: &mut vel,
+                    gains: &mut gains,
+                    attr: &attr,
+                    rep: &rep,
+                    exaggeration: 4.0,
+                    inv_z: 0.25,
+                    eta: 180.0,
+                    momentum: 0.6,
+                    track_bbox,
+                });
+                (
+                    bits(&y),
+                    bits(&vel),
+                    bits(&gains),
+                    part.sx.to_bits(),
+                    part.sy.to_bits(),
+                    part.bbox.map(f32::to_bits),
+                )
+            };
+            let want = run(Kernels::for_tier(Tier::Scalar));
+            for k in vector_tiers() {
+                if run(k) != want {
+                    return Err(format!(
+                        "tier {} pairs={pairs} track_bbox={track_bbox}",
+                        k.tier.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine-level golden runs. `set_tier` is process-global, so every test
+// that flips it serialises on this lock (libtest runs tests on threads).
+// ---------------------------------------------------------------------
+
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn brute_knn_graph_identical_across_tiers() {
+    let _guard = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (n, d, k) = (300usize, 48usize, 12usize);
+    let mut rng = Rng::new(77);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let ds = Dataset::new("simd-conf", n, d, x, vec![]);
+    simd::set_tier(Some(Tier::Scalar));
+    let g_scalar = bruteforce::knn(&ds, k);
+    simd::set_tier(None);
+    let g_auto = bruteforce::knn(&ds, k);
+    assert_eq!(g_scalar.idx, g_auto.idx, "neighbour sets must not depend on the simd tier");
+    assert_eq!(bits(&g_scalar.d2), bits(&g_auto.d2), "panel distances must be bit-identical");
+    assert_eq!(g_auto.recall_against(&g_scalar), 1.0);
+}
+
+fn golden_embedding(engine: &str, tier: Option<Tier>) -> Vec<f32> {
+    simd::set_tier(tier);
+    let data = gpgpu_sne::data::by_name("gaussians", 400, 5).unwrap();
+    let g = bruteforce::knn(&data, 15);
+    let p = perplexity::joint_p(&g, 5.0);
+    let prm = OptParams { iters: 150, exaggeration_iters: 50, seed: 11, ..Default::default() };
+    embed::by_name(engine, None).unwrap().run(&p, &prm, None).unwrap()
+}
+
+#[test]
+fn engines_match_forced_scalar_vs_auto_dispatch() {
+    // The ISSUE 8 golden run: a BH session and a fieldfft session under
+    // forced-scalar vs auto dispatch. The acceptance criterion is ≤1e-5
+    // embedding divergence; the kernels are built bit-identical, so we
+    // assert that too (strictly stronger, and what keeps checkpoint
+    // replay tier-independent).
+    let _guard = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for engine in ["bh-0.5", "fieldfft"] {
+        let ys = golden_embedding(engine, Some(Tier::Scalar));
+        let ya = golden_embedding(engine, None);
+        simd::set_tier(None);
+        let max_dev =
+            ys.iter().zip(&ya).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_dev <= 1e-5, "{engine}: scalar vs auto diverged by {max_dev}");
+        assert_eq!(bits(&ys), bits(&ya), "{engine}: tiers must be bit-identical");
+    }
+}
