@@ -11,10 +11,12 @@
 //! (blocked vs scalar brute kNN at N=10k/D=128, fused vs reference P
 //! build), the observability section (instrumentation primitives + the
 //! <1% session-step overhead gate), the fault-injection section
-//! (disabled `fire()` pinned under 1 ns/check), and the simd section
-//! (per-kernel scalar-vs-dispatched-tier timings for the five ported
-//! hot loops plus the forced-scalar fieldfft iteration), so the perf
-//! trajectory is machine-trackable across PRs.
+//! (disabled `fire()` pinned under 1 ns/check), the simd section
+//! (per-kernel scalar-vs-dispatched-tier timings for the six ported
+//! hot loops plus the forced-scalar fieldfft iteration), and the
+//! cluster section (HRW placement decision cost by fleet size, pinned
+//! under 1 µs/lookup), so the perf trajectory is machine-trackable
+//! across PRs.
 //!
 //!     cargo bench --bench micro_hotpath [-- --quick]
 
@@ -664,7 +666,7 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
-    // --- SIMD dispatch (ARCHITECTURE.md §SIMD): the five ported hot
+    // --- SIMD dispatch (ARCHITECTURE.md §SIMD): the six ported hot
     // loops, scalar tier vs the resolved tier — kernel-level through
     // `Kernels::for_tier` (no global flip) — plus the end-to-end
     // fieldfft iteration under forced-scalar vs auto dispatch
@@ -830,6 +832,50 @@ fn main() -> anyhow::Result<()> {
                     / (m / 2) as f64;
             }
             entries.push(("gd_fused_per_point", times[0], times[1]));
+        }
+
+        // Fused three-channel spectral multiply over one par_chunks slab
+        // (the ISSUE 9 port: the FFT backend's per-iteration hot pass).
+        {
+            use gpgpu_sne::util::simd::SpectralArgs;
+            let ns = 1usize << 15;
+            let mut rng = Rng::new(45);
+            let mut gen = |scale: f32| -> Vec<f32> {
+                (0..ns).map(|_| rng.gauss_f32(0.0, scale)).collect()
+            };
+            let (ks_re, ks_im) = (gen(1.0), gen(1.0));
+            let (kx_re, kx_im) = (gen(0.5), gen(0.5));
+            let (ky_re, ky_im) = (gen(0.5), gen(0.5));
+            let mut sre = gen(2.0);
+            let mut sim = gen(2.0);
+            let mut xre = vec![0.0f32; ns];
+            let mut xim = vec![0.0f32; ns];
+            let mut yre = vec![0.0f32; ns];
+            let mut yim = vec![0.0f32; ns];
+            let mut times = [0.0f64; 2];
+            for (ti, k) in tiers.iter().enumerate() {
+                times[ti] = measure(1, it, || {
+                    (k.spectral_mul)(SpectralArgs {
+                        sre: &mut sre,
+                        sim: &mut sim,
+                        xre: &mut xre,
+                        xim: &mut xim,
+                        yre: &mut yre,
+                        yim: &mut yim,
+                        ks_re: &ks_re,
+                        ks_im: &ks_im,
+                        kx_re: &kx_re,
+                        kx_im: &kx_im,
+                        ky_re: &ky_re,
+                        ky_im: &ky_im,
+                    });
+                    std::hint::black_box(sre[0]);
+                })
+                .min()
+                    * 1e9
+                    / ns as f64;
+            }
+            entries.push(("spectral_mul_per_entry", times[0], times[1]));
         }
 
         // End-to-end fieldfft iteration: forced-scalar vs auto dispatch
@@ -1003,6 +1049,72 @@ fn main() -> anyhow::Result<()> {
                 ("read_ms", Json::Num(rd_t * 1e3)),
                 ("write_mb_s", Json::Num((graph_mb + p_mb) / wr_t)),
                 ("read_mb_s", Json::Num((graph_mb + p_mb) / rd_t)),
+            ]),
+        ));
+    }
+
+    // --- Cluster routing (ARCHITECTURE.md §Cluster topology): the HRW
+    // placement decision sits on every routed submit and every failover
+    // re-admission, so it must stay negligible next to the RPC it
+    // fronts. Full `owner_of` lookups (lock + scan + addr clone — the
+    // real submit-path shape) at three fleet sizes, plus the raw score
+    // primitive.
+    {
+        use gpgpu_sne::cluster::{hrw_score, Membership};
+
+        let it = if quick { 3 } else { 6 };
+        let lookups = if quick { 50_000u64 } else { 200_000 };
+        let mut rep =
+            Report::new("cluster routing (HRW placement decision)", &["ns/lookup"]);
+        let mut size_rows: Vec<Json> = Vec::new();
+        let mut worst_ns = 0.0f64;
+        for &k in &[2usize, 8, 32] {
+            let m = Membership::default();
+            for w in 0..k {
+                m.register(&format!("10.0.0.{w}:79{w:02}"));
+            }
+            let t = measure(1, it, || {
+                let mut acc = 0u64;
+                for key in 0..lookups {
+                    let (owner, _) =
+                        m.owner_of(key.wrapping_mul(0x9e37_79b9_7f4a_7c15)).unwrap();
+                    acc ^= owner;
+                }
+                std::hint::black_box(acc);
+            })
+            .min();
+            let ns = t * 1e9 / lookups as f64;
+            worst_ns = worst_ns.max(ns);
+            rep.row(&format!("owner_of, {k} workers"), vec![format!("{ns:.1}")]);
+            size_rows.push(Json::obj(vec![
+                ("workers", Json::Num(k as f64)),
+                ("owner_of_ns", Json::Num(ns)),
+            ]));
+        }
+        let score_ops = lookups * 4;
+        let st = measure(1, it, || {
+            let mut acc = 0u64;
+            for i in 0..score_ops {
+                acc ^= hrw_score(i, 0x1234_5678_9abc_def0);
+            }
+            std::hint::black_box(acc);
+        })
+        .min();
+        let score_ns = st * 1e9 / score_ops as f64;
+        rep.row("hrw_score primitive", vec![format!("{score_ns:.2}")]);
+        rep.print();
+        rep.write_csv("micro_cluster.csv")?;
+        assert!(
+            worst_ns < 1_000.0,
+            "HRW placement costs {worst_ns:.0}ns/lookup — the routing decision must \
+             stay <1µs next to the proxied RPC"
+        );
+        json_sections.push((
+            "cluster",
+            Json::obj(vec![
+                ("hrw_score_ns", Json::Num(score_ns)),
+                ("placements", Json::Arr(size_rows)),
+                ("budget_ns", Json::Num(1_000.0)),
             ]),
         ));
     }

@@ -1,0 +1,308 @@
+//! Cluster membership and rendezvous (HRW) ownership.
+//!
+//! The router keeps one [`Membership`] table: every worker it has been
+//! told about (`router --workers`) or that announced itself (`hello`),
+//! with a liveness state driven by the heartbeat loop. Ownership of a
+//! dataset fingerprint is decided by **highest-random-weight** (HRW /
+//! rendezvous) hashing: each worker's score for a key is a 64-bit mix
+//! of the key with a per-worker salt, and the alive worker with the
+//! maximum score owns the key. The properties the router relies on:
+//!
+//! * **Stability** — adding or removing one worker only remaps the keys
+//!   that worker owned (≈ 1/K of the keyspace), so every other shard's
+//!   two-level similarity store stays hot.
+//! * **Determinism** — the salt is a pure function of the worker's
+//!   address, so any router instance (or a test) computes the same
+//!   owner for the same membership set. No coordination state to lose.
+//! * **No ring to rebalance** — unlike consistent-hash rings there are
+//!   no virtual nodes or token ranges; the score is recomputed per
+//!   decision (a few ns, pinned by the `cluster` section of
+//!   `benches/micro_hotpath.rs`).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Stable worker identifier, assigned at registration (1-based).
+pub type WorkerId = u64;
+
+/// Liveness as seen by the router's heartbeat loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Responding to heartbeats; eligible to own keys.
+    Up,
+    /// Being drained (`shutdown` with a `worker` field): keeps serving
+    /// its live jobs while they migrate off, but owns no new keys.
+    Draining,
+    /// Missed heartbeats past the timeout; its jobs fail over.
+    Dead,
+}
+
+impl WorkerState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkerState::Up => "up",
+            WorkerState::Draining => "draining",
+            WorkerState::Dead => "dead",
+        }
+    }
+}
+
+/// One registered worker.
+#[derive(Clone, Debug)]
+pub struct WorkerInfo {
+    pub id: WorkerId,
+    pub addr: String,
+    pub state: WorkerState,
+    /// Last successful heartbeat (or registration).
+    pub last_seen: Instant,
+    /// HRW salt — FNV-1a of the address, fixed at registration.
+    salt: u64,
+}
+
+/// The membership table. All methods take `&self`; a single mutex
+/// guards the vector (membership changes are rare and the table is
+/// small — scans beat any fancier structure here).
+#[derive(Default)]
+pub struct Membership {
+    workers: Mutex<Vec<WorkerInfo>>,
+}
+
+/// splitmix64 finalizer: a full-avalanche 64-bit mix.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z ^= z >> 33;
+    z = z.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    z ^= z >> 33;
+    z = z.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    z ^= z >> 33;
+    z
+}
+
+/// FNV-1a over a byte string (the worker-address salt).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The HRW score of `key` on a worker with `salt`. Public so the bench
+/// can pin the per-decision cost.
+#[inline]
+pub fn hrw_score(key: u64, salt: u64) -> u64 {
+    mix(key ^ mix(salt))
+}
+
+impl Membership {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a worker by address, or refresh an existing one (same
+    /// address ⇒ same id; a dead worker that re-announces comes back
+    /// `Up`). Returns the worker's id.
+    pub fn register(&self, addr: &str) -> WorkerId {
+        let mut g = self.workers.lock().unwrap();
+        if let Some(w) = g.iter_mut().find(|w| w.addr == addr) {
+            w.state = WorkerState::Up;
+            w.last_seen = Instant::now();
+            return w.id;
+        }
+        let id = g.len() as WorkerId + 1;
+        g.push(WorkerInfo {
+            id,
+            addr: addr.to_string(),
+            state: WorkerState::Up,
+            last_seen: Instant::now(),
+            salt: fnv1a(addr.as_bytes()),
+        });
+        id
+    }
+
+    /// Record a successful heartbeat.
+    pub fn refresh(&self, id: WorkerId) {
+        let mut g = self.workers.lock().unwrap();
+        if let Some(w) = g.iter_mut().find(|w| w.id == id) {
+            w.last_seen = Instant::now();
+            if w.state == WorkerState::Dead {
+                w.state = WorkerState::Up;
+            }
+        }
+    }
+
+    pub fn mark_dead(&self, id: WorkerId) {
+        self.set_state(id, WorkerState::Dead);
+    }
+
+    pub fn mark_draining(&self, id: WorkerId) {
+        self.set_state(id, WorkerState::Draining);
+    }
+
+    fn set_state(&self, id: WorkerId, state: WorkerState) {
+        let mut g = self.workers.lock().unwrap();
+        if let Some(w) = g.iter_mut().find(|w| w.id == id) {
+            w.state = state;
+        }
+    }
+
+    /// Expire workers whose last heartbeat is older than `timeout`.
+    /// Returns the ids that *newly* transitioned to `Dead` (the
+    /// router's failover trigger).
+    pub fn expire(&self, timeout: Duration) -> Vec<WorkerId> {
+        let mut g = self.workers.lock().unwrap();
+        let mut newly_dead = Vec::new();
+        for w in g.iter_mut() {
+            if w.state != WorkerState::Dead && w.last_seen.elapsed() > timeout {
+                w.state = WorkerState::Dead;
+                newly_dead.push(w.id);
+            }
+        }
+        newly_dead
+    }
+
+    /// The HRW owner of `key` among `Up` workers: `(id, addr)` of the
+    /// maximum-score worker, ties broken by id (lowest wins) so the
+    /// decision is total even for colliding scores.
+    pub fn owner_of(&self, key: u64) -> Option<(WorkerId, String)> {
+        let g = self.workers.lock().unwrap();
+        g.iter()
+            .filter(|w| w.state == WorkerState::Up)
+            .max_by(|a, b| {
+                hrw_score(key, a.salt).cmp(&hrw_score(key, b.salt)).then(b.id.cmp(&a.id))
+            })
+            .map(|w| (w.id, w.addr.clone()))
+    }
+
+    /// Like [`owner_of`](Self::owner_of) but excluding one worker — the
+    /// migration target chooser ("anywhere but where it is now").
+    pub fn owner_of_excluding(&self, key: u64, not: WorkerId) -> Option<(WorkerId, String)> {
+        let g = self.workers.lock().unwrap();
+        g.iter()
+            .filter(|w| w.state == WorkerState::Up && w.id != not)
+            .max_by(|a, b| {
+                hrw_score(key, a.salt).cmp(&hrw_score(key, b.salt)).then(b.id.cmp(&a.id))
+            })
+            .map(|w| (w.id, w.addr.clone()))
+    }
+
+    pub fn addr_of(&self, id: WorkerId) -> Option<String> {
+        let g = self.workers.lock().unwrap();
+        g.iter().find(|w| w.id == id).map(|w| w.addr.clone())
+    }
+
+    pub fn state_of(&self, id: WorkerId) -> Option<WorkerState> {
+        let g = self.workers.lock().unwrap();
+        g.iter().find(|w| w.id == id).map(|w| w.state)
+    }
+
+    /// Snapshot of every registered worker.
+    pub fn snapshot(&self) -> Vec<WorkerInfo> {
+        self.workers.lock().unwrap().clone()
+    }
+
+    /// Ids + addresses of every non-`Dead` worker (heartbeat targets).
+    pub fn probe_targets(&self) -> Vec<(WorkerId, String)> {
+        let g = self.workers.lock().unwrap();
+        g.iter()
+            .filter(|w| w.state != WorkerState::Dead)
+            .map(|w| (w.id, w.addr.clone()))
+            .collect()
+    }
+
+    /// Number of `Up` workers.
+    pub fn up_count(&self) -> usize {
+        self.workers.lock().unwrap().iter().filter(|w| w.state == WorkerState::Up).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn members(addrs: &[&str]) -> Membership {
+        let m = Membership::new();
+        for a in addrs {
+            m.register(a);
+        }
+        m
+    }
+
+    #[test]
+    fn register_is_idempotent_by_addr() {
+        let m = Membership::new();
+        let a = m.register("127.0.0.1:7001");
+        let b = m.register("127.0.0.1:7002");
+        assert_ne!(a, b);
+        assert_eq!(m.register("127.0.0.1:7001"), a);
+        assert_eq!(m.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn dead_worker_reanimates_on_register() {
+        let m = members(&["127.0.0.1:7001"]);
+        m.mark_dead(1);
+        assert_eq!(m.state_of(1), Some(WorkerState::Dead));
+        assert_eq!(m.register("127.0.0.1:7001"), 1);
+        assert_eq!(m.state_of(1), Some(WorkerState::Up));
+    }
+
+    #[test]
+    fn hrw_is_deterministic_and_sticky() {
+        let m = members(&["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"]);
+        for key in [0u64, 1, 42, 0xdead_beef, u64::MAX] {
+            let a = m.owner_of(key);
+            let b = m.owner_of(key);
+            assert_eq!(a, b, "owner of {key:#x} must be stable");
+        }
+    }
+
+    #[test]
+    fn hrw_spreads_keys_across_workers() {
+        let m = members(&["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"]);
+        let mut counts = [0usize; 3];
+        for key in 0..3000u64 {
+            let (id, _) = m.owner_of(mix(key)).unwrap();
+            counts[(id - 1) as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 500, "worker {} owns only {c}/3000 keys — HRW is skewed", i + 1);
+        }
+    }
+
+    #[test]
+    fn removing_a_worker_only_remaps_its_keys() {
+        let m = members(&["127.0.0.1:7001", "127.0.0.1:7002", "127.0.0.1:7003"]);
+        let keys: Vec<u64> = (0..2000u64).map(mix).collect();
+        let before: Vec<_> = keys.iter().map(|&k| m.owner_of(k).unwrap().0).collect();
+        m.mark_dead(2);
+        for (i, &k) in keys.iter().enumerate() {
+            let after = m.owner_of(k).unwrap().0;
+            if before[i] != 2 {
+                assert_eq!(after, before[i], "key {k:#x} moved off a surviving worker");
+            } else {
+                assert_ne!(after, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn draining_workers_own_nothing_new() {
+        let m = members(&["127.0.0.1:7001", "127.0.0.1:7002"]);
+        m.mark_draining(1);
+        for key in 0..100u64 {
+            assert_eq!(m.owner_of(mix(key)).unwrap().0, 2);
+        }
+    }
+
+    #[test]
+    fn expire_reports_each_death_once() {
+        let m = members(&["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert!(m.expire(Duration::from_secs(60)).is_empty());
+        let newly = m.expire(Duration::from_nanos(0));
+        assert_eq!(newly.len(), 2);
+        assert!(m.expire(Duration::from_nanos(0)).is_empty(), "already dead: not re-reported");
+        assert_eq!(m.owner_of(7), None, "no alive workers, no owner");
+    }
+}

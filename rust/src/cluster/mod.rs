@@ -1,0 +1,27 @@
+//! Sharded multi-node coordinator (`pallas router`): fingerprint
+//! routing, live session migration, journal-replicated failover.
+//!
+//! One router process fronts N independent `serve` workers over the
+//! existing line-oriented TCP protocol (`docs/PROTOCOL.md`). The split:
+//!
+//! * [`membership`] — who the workers are, whether they are alive, and
+//!   which one owns a dataset fingerprint (rendezvous/HRW hashing, so
+//!   adding or losing a shard only remaps that shard's keys and every
+//!   other shard's two-level similarity store stays hot).
+//! * [`router`] — the serving process: routes `submit` by fingerprint,
+//!   proxies job-scoped commands with id rewriting, replicates worker
+//!   checkpoints into its own journal each heartbeat, migrates live
+//!   sessions (`migrate`, drain-on-shutdown), and fails jobs over from
+//!   dead workers bit-identically (checkpoint replay is deterministic,
+//!   pinned by `tests/cluster.rs`).
+//!
+//! Workers need no cluster awareness at all: the router speaks plain
+//! client commands at them, and `serve --router <addr>` merely makes a
+//! worker announce itself (`hello`) so deployment stays one flag.
+//! `docs/ARCHITECTURE.md` ("Cluster topology") has the full picture.
+
+pub mod membership;
+pub mod router;
+
+pub use membership::{hrw_score, Membership, WorkerId, WorkerInfo, WorkerState};
+pub use router::{rpc, Router, RouterConfig};

@@ -1,0 +1,1139 @@
+//! The `pallas router`: a sharded multi-node front end over N `serve`
+//! workers, speaking the same one-JSON-object-per-line TCP protocol.
+//!
+//! **Routing.** A `submit` is parsed through the exact worker code path
+//! ([`protocol::spec_from_json`]), the dataset's content fingerprint is
+//! computed (and cached per `(dataset, n, seed)`), and rendezvous
+//! hashing ([`super::membership`]) picks the owning worker — the same
+//! fingerprint always lands on the same shard while membership is
+//! stable, so each shard's two-level similarity store stays hot and
+//! repeat submits of a dataset hit that shard's caches. Job-scoped
+//! commands (`status`, `pause`, `checkpoint`, …) are proxied to the
+//! owner with the job id rewritten both ways: clients hold one
+//! router-assigned id for the job's whole life, across migrations and
+//! failovers.
+//!
+//! **Replication.** Each heartbeat round, the router pulls a
+//! `checkpoint` from every running job and journals it (spec + blob)
+//! into its own state dir through the worker-side
+//! [`JobJournal`] machinery — the router holds a warm copy of every
+//! job's resumable state without workers knowing about each other.
+//!
+//! **Migration.** `migrate` moves a live job: checkpoint at the source,
+//! stop it there, re-submit on the target with `resume_from`. The
+//! checkpoint codec replays bit-identically (pinned since the
+//! durability PRs), so a migrated job finishes with exactly the
+//! positions an uninterrupted run produces. `shutdown` with a `worker`
+//! field drains a shard by migrating every job off before the worker
+//! itself is shut down.
+//!
+//! **Failover.** Workers that miss heartbeats past the timeout are
+//! declared dead; their non-terminal jobs are re-submitted on the
+//! surviving HRW owner from the last replicated checkpoint (or from
+//! scratch — both replay bit-identically, a fresh run is just the
+//! empty-checkpoint case). Routes that cannot be placed (no survivors)
+//! retry every round. The heartbeat probe and the replication pull are
+//! fault-injectable ([`faultinject::CLUSTER_HEARTBEAT_DROP`],
+//! [`faultinject::CLUSTER_REPLICATE_FAIL`]) so the chaos suite can
+//! drive split-brain-ish scenarios deterministically.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::faultinject;
+use crate::coordinator::protocol::{
+    self, err_code, err_msg, ok_fields, spec_from_json, spec_to_json, Cmd, LineRead,
+};
+use crate::coordinator::{JobJournal, JobSpec};
+use crate::data;
+use crate::obs::{self, Counter, Gauge, Histogram, Registry};
+use crate::util::json::{self, Json};
+use crate::util::b64;
+
+use super::membership::{Membership, WorkerId, WorkerState};
+
+/// Router tuning knobs.
+pub struct RouterConfig {
+    /// Heartbeat cadence. `None` disables the background loop — tests
+    /// and benches drive [`Router::heartbeat_once`] by hand for
+    /// deterministic failure schedules.
+    pub heartbeat_interval: Option<Duration>,
+    /// A worker whose last successful heartbeat is older than this is
+    /// declared dead and its jobs fail over.
+    pub heartbeat_timeout: Duration,
+    /// Per-RPC connect/read/write timeout for proxied calls.
+    pub rpc_timeout: Duration,
+    /// Journal replicated checkpoints here (`<dir>/cluster-journal`).
+    /// `None` keeps replicas in memory only.
+    pub state_dir: Option<PathBuf>,
+    /// Give up a `wait` proxy after this long (a wait must not hold a
+    /// router connection thread forever when a job is unplaceable).
+    pub wait_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            heartbeat_interval: Some(Duration::from_millis(1000)),
+            heartbeat_timeout: Duration::from_millis(3000),
+            rpc_timeout: Duration::from_secs(10),
+            state_dir: None,
+            wait_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// One routed job: where it lives now plus everything needed to move
+/// or revive it (spec, fingerprint, last replicated checkpoint).
+struct RouteEntry {
+    worker: WorkerId,
+    /// The job's id *on the worker* (each worker numbers independently).
+    worker_job: u64,
+    spec: JobSpec,
+    /// `spec_to_json` line — the journal payload, parsed back through
+    /// the identical submit path on re-admission.
+    spec_line: String,
+    fingerprint: u64,
+    /// Last replicated checkpoint blob (empty until one is pulled).
+    last_ckpt: Vec<u8>,
+    replicated_iter: u64,
+    terminal: bool,
+    /// Set while a `migrate` is in flight; `wait` polls and the
+    /// replication pass skip the route until it settles.
+    migrating: bool,
+}
+
+/// One JSON-per-line RPC to a worker: connect, send, read one bounded
+/// response line. Public for `serve --router` announcements, the
+/// cluster tests and the `cluster` bench section.
+pub fn rpc(addr: &str, line: &str, timeout: Duration) -> anyhow::Result<Json> {
+    let sa: SocketAddr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("unresolvable address '{addr}'"))?;
+    let stream = TcpStream::connect_timeout(&sa, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut w = stream.try_clone()?;
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    let mut r = BufReader::new(stream);
+    let mut buf = Vec::new();
+    match protocol::read_bounded_line(&mut r, &mut buf, protocol::MAX_REQUEST_BYTES)? {
+        LineRead::Line => {}
+        LineRead::Eof => anyhow::bail!("worker {addr} closed the connection without replying"),
+        LineRead::TooLarge => anyhow::bail!("worker {addr} response exceeded the frame bound"),
+    }
+    let text = std::str::from_utf8(&buf)?;
+    json::parse(text).map_err(|e| anyhow::anyhow!("bad response from {addr}: {e}"))
+}
+
+fn is_ok(v: &Json) -> bool {
+    v.get("ok") == Some(&Json::Bool(true))
+}
+
+/// Rebuild a forwardable `submit` line from a parsed spec, re-attaching
+/// `resume_from` (which [`spec_to_json`] deliberately never emits — the
+/// journal carries checkpoints out of band, but the wire must not).
+fn submit_line(spec: &JobSpec, resume_b64: Option<&str>) -> String {
+    let Json::Obj(mut fields) = spec_to_json(spec) else { unreachable!("spec_to_json is an obj") };
+    fields.insert(0, ("cmd".to_string(), Json::Str("submit".into())));
+    if let Some(b) = resume_b64 {
+        fields.push(("resume_from".to_string(), Json::Str(b.into())));
+    }
+    Json::Obj(fields).to_string()
+}
+
+/// The router: membership + routing table + replication journal.
+pub struct Router {
+    cfg: RouterConfig,
+    pub membership: Membership,
+    routes: Mutex<HashMap<u64, RouteEntry>>,
+    next_job: AtomicU64,
+    journal: Option<JobJournal>,
+    /// Fingerprint cache: computing one regenerates the dataset
+    /// (O(N·D)), so amortise it per `(dataset, n, seed)`.
+    fingerprints: Mutex<HashMap<(String, usize, u64), u64>>,
+    draining: AtomicBool,
+    metrics: Registry,
+    migrations: Arc<Counter>,
+    failovers: Arc<Counter>,
+    heartbeats_missed: Arc<Counter>,
+    replicated: Arc<Counter>,
+    workers_up: Arc<Gauge>,
+    route_ns: Arc<Histogram>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        let journal = cfg.state_dir.as_ref().and_then(|dir| {
+            let dir = dir.join("cluster-journal");
+            match JobJournal::open(&dir) {
+                Ok(j) => Some(j),
+                Err(e) => {
+                    eprintln!(
+                        "warning: cluster journal at {} unusable ({e}); replicas stay in memory",
+                        dir.display()
+                    );
+                    None
+                }
+            }
+        });
+        let metrics = Registry::new();
+        let migrations = metrics.counter("cluster.migrations");
+        let failovers = metrics.counter("cluster.failovers");
+        let heartbeats_missed = metrics.counter("cluster.heartbeats_missed");
+        let replicated = metrics.counter("cluster.checkpoints_replicated");
+        let workers_up = metrics.gauge("cluster.workers_up");
+        let route_ns = metrics.histogram("cluster.route_ns");
+        Self {
+            cfg,
+            membership: Membership::new(),
+            routes: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(1),
+            journal,
+            fingerprints: Mutex::new(HashMap::new()),
+            draining: AtomicBool::new(false),
+            metrics,
+            migrations,
+            failovers,
+            heartbeats_missed,
+            replicated,
+            workers_up,
+            route_ns,
+        }
+    }
+
+    /// Register a worker (CLI `--workers` or a `hello`).
+    pub fn register_worker(&self, addr: &str) -> WorkerId {
+        let id = self.membership.register(addr);
+        self.update_gauges();
+        id
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Dataset fingerprint for a spec, cached per `(dataset, n, seed)`.
+    fn fingerprint_of(&self, spec: &JobSpec) -> anyhow::Result<u64> {
+        let key = (spec.dataset.clone(), spec.n, spec.seed);
+        if let Some(&fp) = self.fingerprints.lock().unwrap().get(&key) {
+            return Ok(fp);
+        }
+        let fp = data::by_name(&spec.dataset, spec.n, spec.seed)?.fingerprint();
+        self.fingerprints.lock().unwrap().insert(key, fp);
+        Ok(fp)
+    }
+
+    fn journal_write(&self, id: u64, spec_line: &str, ckpt: &[u8]) {
+        if let Some(j) = &self.journal {
+            j.write(id, spec_line, ckpt);
+        }
+    }
+
+    fn journal_remove(&self, id: u64) {
+        if let Some(j) = &self.journal {
+            j.remove(id);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Command handlers
+    // ------------------------------------------------------------------
+
+    /// Handle one request line; returns (response line, keep_going).
+    /// Mirrors [`protocol::handle_line`] for the router plane.
+    pub fn handle_line(&self, line: &str) -> (String, bool) {
+        let v = match json::parse(line.trim()) {
+            Ok(v) => v,
+            Err(e) => return (err_msg(&format!("bad json: {e}")), true),
+        };
+        let name = v.str_field("cmd").unwrap_or("");
+        let Some(cmd) = Cmd::parse(name) else {
+            return (err_msg(&format!("unknown cmd '{name}'")), true);
+        };
+        match cmd {
+            Cmd::Submit => (self.handle_submit(&v), true),
+            Cmd::Wait => (self.handle_wait(&v), true),
+            Cmd::Status
+            | Cmd::Snapshot
+            | Cmd::Checkpoint
+            | Cmd::Pause
+            | Cmd::Resume
+            | Cmd::Update
+            | Cmd::Stop => (self.proxy_job_cmd(&v, cmd), true),
+            Cmd::Trace if v.num_field("job").is_some() => (self.proxy_job_cmd(&v, cmd), true),
+            Cmd::Trace => {
+                let last = v.num_field("last").unwrap_or(128.0).max(1.0) as usize;
+                let events = obs::trace::snapshot(None, last);
+                (
+                    ok_fields(vec![
+                        ("count", Json::Num(events.len() as f64)),
+                        ("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+                    ]),
+                    true,
+                )
+            }
+            Cmd::Stats => (self.handle_stats(&v), true),
+            Cmd::List => (self.handle_list(), true),
+            Cmd::Metrics => (ok_fields(vec![("metrics", self.metrics_json())]), true),
+            Cmd::Fault => (handle_fault(&v), true),
+            Cmd::Migrate => (self.handle_migrate(&v), true),
+            Cmd::ClusterStats => (self.handle_cluster_stats(), true),
+            Cmd::Hello => (self.handle_hello(&v), true),
+            Cmd::Shutdown => self.handle_shutdown(&v),
+            Cmd::Quit => (ok_fields(vec![("bye", Json::Bool(true))]), false),
+        }
+    }
+
+    fn handle_submit(&self, v: &Json) -> String {
+        if self.is_draining() {
+            return err_code("draining", true, "router is draining");
+        }
+        let spec = match spec_from_json(v) {
+            Ok(s) => s,
+            Err(e) => return err_msg(&format!("bad submit: {e:#}")),
+        };
+        let fp = match self.fingerprint_of(&spec) {
+            Ok(f) => f,
+            Err(e) => return err_msg(&format!("bad submit: {e:#}")),
+        };
+        let t0 = Instant::now();
+        let Some((wid, addr)) = self.membership.owner_of(fp) else {
+            return err_code("no_workers", true, "no alive workers to route to");
+        };
+        self.route_ns.record(t0.elapsed().as_nanos() as u64);
+        let resume_b64 = v.str_field("resume_from").map(str::to_string);
+        let line = submit_line(&spec, resume_b64.as_deref());
+        let resp = match rpc(&addr, &line, self.cfg.rpc_timeout) {
+            Ok(r) => r,
+            Err(e) => {
+                return err_code("worker_unavailable", true, &format!("worker {wid} ({addr}): {e:#}"))
+            }
+        };
+        if !is_ok(&resp) {
+            // Pass the worker's structured error (queue_full, …) through.
+            return resp.to_string();
+        }
+        let Some(worker_job) = resp.num_field("job").map(|j| j as u64) else {
+            return err_msg("worker accepted the submit but returned no job id");
+        };
+        let id = self.next_job.fetch_add(1, Ordering::SeqCst);
+        let spec_line = spec_to_json(&spec).to_string();
+        let ckpt = resume_b64.as_deref().and_then(|b| b64::decode(b).ok()).unwrap_or_default();
+        self.journal_write(id, &spec_line, &ckpt);
+        self.routes.lock().unwrap().insert(
+            id,
+            RouteEntry {
+                worker: wid,
+                worker_job,
+                spec,
+                spec_line,
+                fingerprint: fp,
+                last_ckpt: ckpt,
+                replicated_iter: 0,
+                terminal: false,
+                migrating: false,
+            },
+        );
+        self.update_gauges();
+        ok_fields(vec![
+            ("job", Json::Num(id as f64)),
+            ("worker", Json::Num(wid as f64)),
+            ("fingerprint", Json::Str(format!("{fp:016x}"))),
+        ])
+    }
+
+    /// Current (worker, worker_job, terminal, migrating) for a routed job.
+    fn route_of(&self, id: u64) -> Option<(WorkerId, u64, bool, bool)> {
+        let g = self.routes.lock().unwrap();
+        g.get(&id).map(|r| (r.worker, r.worker_job, r.terminal, r.migrating))
+    }
+
+    /// Proxy a job-scoped command to the owning worker, rewriting the
+    /// job id in both directions.
+    fn proxy_job_cmd(&self, v: &Json, cmd: Cmd) -> String {
+        let Some(id) = v.num_field("job").map(|j| j as u64) else {
+            return err_msg(&format!("'{}' requires a job id", cmd.name()));
+        };
+        let Some((wid, worker_job, _, _)) = self.route_of(id) else {
+            return err_msg("unknown job");
+        };
+        let Some(addr) = self.membership.addr_of(wid) else {
+            return err_msg("unknown job");
+        };
+        let Json::Obj(fields) = v else { return err_msg("request is not an object") };
+        let mut fields = fields.clone();
+        for (k, val) in fields.iter_mut() {
+            if k == "job" {
+                *val = Json::Num(worker_job as f64);
+            }
+        }
+        let line = Json::Obj(fields).to_string();
+        let mut resp = match rpc(&addr, &line, self.cfg.rpc_timeout) {
+            Ok(r) => r,
+            Err(e) => {
+                return err_code("worker_unavailable", true, &format!("worker {wid} ({addr}): {e:#}"))
+            }
+        };
+        if is_ok(&resp) {
+            match cmd {
+                // A client-driven checkpoint doubles as a replication
+                // pull — stash the blob so a failover resumes from it.
+                Cmd::Checkpoint => {
+                    let iter = resp.num_field("iter").unwrap_or(0.0) as u64;
+                    if let Some(b) = resp.str_field("checkpoint") {
+                        if let Ok(bytes) = b64::decode(b) {
+                            self.stash_replica(id, bytes, iter);
+                        }
+                    }
+                }
+                Cmd::Stop => self.mark_terminal(id),
+                _ => {}
+            }
+        }
+        if let Json::Obj(fields) = &mut resp {
+            for (k, val) in fields.iter_mut() {
+                if k == "job" {
+                    *val = Json::Num(id as f64);
+                }
+            }
+        }
+        resp.to_string()
+    }
+
+    fn stash_replica(&self, id: u64, bytes: Vec<u8>, iter: u64) {
+        let mut g = self.routes.lock().unwrap();
+        if let Some(r) = g.get_mut(&id) {
+            if iter >= r.replicated_iter {
+                r.last_ckpt = bytes;
+                r.replicated_iter = iter;
+                let (spec_line, ckpt) = (r.spec_line.clone(), r.last_ckpt.clone());
+                drop(g);
+                self.replicated.inc();
+                self.journal_write(id, &spec_line, &ckpt);
+            }
+        }
+    }
+
+    fn mark_terminal(&self, id: u64) {
+        let mut g = self.routes.lock().unwrap();
+        if let Some(r) = g.get_mut(&id) {
+            r.terminal = true;
+        }
+        drop(g);
+        self.journal_remove(id);
+        self.update_gauges();
+    }
+
+    /// `wait` must not park a router thread in a blocking worker-side
+    /// `wait` — the job can migrate or fail over mid-wait, and a
+    /// blocked proxy would pin it to the old worker. Poll `status`
+    /// (re-resolving the route each round, so failovers redirect us)
+    /// until the job is terminal, then issue one instant `wait` for the
+    /// result.
+    fn handle_wait(&self, v: &Json) -> String {
+        let Some(id) = v.num_field("job").map(|j| j as u64) else {
+            return err_msg("'wait' requires a job id");
+        };
+        let deadline = Instant::now() + self.cfg.wait_timeout;
+        loop {
+            if Instant::now() > deadline {
+                return err_code("wait_timeout", true, "job did not reach a terminal state in time");
+            }
+            let Some((wid, worker_job, _, migrating)) = self.route_of(id) else {
+                return err_msg("unknown job");
+            };
+            if migrating {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            let Some(addr) = self.membership.addr_of(wid) else {
+                return err_msg("unknown job");
+            };
+            let status = rpc(
+                &addr,
+                &format!(r#"{{"cmd":"status","job":{worker_job}}}"#),
+                self.cfg.rpc_timeout,
+            );
+            match status {
+                Ok(st) if is_ok(&st) => {
+                    if st.get("terminal") == Some(&Json::Bool(true)) {
+                        let wline = format!(r#"{{"cmd":"wait","job":{worker_job}}}"#);
+                        if let Ok(mut resp) = rpc(&addr, &wline, self.cfg.rpc_timeout) {
+                            if is_ok(&resp) {
+                                self.mark_terminal(id);
+                            }
+                            if let Json::Obj(fields) = &mut resp {
+                                for (k, val) in fields.iter_mut() {
+                                    if k == "job" {
+                                        *val = Json::Num(id as f64);
+                                    }
+                                }
+                            }
+                            return resp.to_string();
+                        }
+                        // Worker died between status and wait; the
+                        // heartbeat loop will fail the job over — retry.
+                    }
+                }
+                // `ok:false` (job unknown right after a failover
+                // re-submit) or an unreachable worker: both settle once
+                // the heartbeat loop has re-routed; keep polling.
+                _ => {}
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Sum a worker-plane `stats` response across every alive shard
+    /// (every field is a monotonic count, so the sum is meaningful);
+    /// pass `{"worker": id}` to read one shard.
+    fn handle_stats(&self, v: &Json) -> String {
+        let targets: Vec<(WorkerId, String)> = match v.num_field("worker") {
+            Some(w) => {
+                let wid = w as u64;
+                match self.membership.addr_of(wid) {
+                    Some(a) => vec![(wid, a)],
+                    None => return err_msg("unknown worker"),
+                }
+            }
+            None => self
+                .membership
+                .snapshot()
+                .into_iter()
+                .filter(|w| w.state == WorkerState::Up)
+                .map(|w| (w.id, w.addr))
+                .collect(),
+        };
+        let mut sums: Vec<(String, f64)> = Vec::new();
+        let mut polled = 0usize;
+        for (_, addr) in &targets {
+            let Ok(resp) = rpc(addr, r#"{"cmd":"stats"}"#, self.cfg.rpc_timeout) else {
+                continue;
+            };
+            if !is_ok(&resp) {
+                continue;
+            }
+            polled += 1;
+            if let Json::Obj(fields) = &resp {
+                for (k, val) in fields {
+                    let (Some(n), true) = (val.as_f64(), k != "ok") else { continue };
+                    match sums.iter_mut().find(|(name, _)| name == k) {
+                        Some((_, s)) => *s += n,
+                        None => sums.push((k.clone(), n)),
+                    }
+                }
+            }
+        }
+        let mut fields: Vec<(&str, Json)> =
+            sums.iter().map(|(k, s)| (k.as_str(), Json::Num(*s))).collect();
+        let polled_json = Json::Num(polled as f64);
+        fields.push(("workers_polled", polled_json));
+        ok_fields(fields)
+    }
+
+    /// The router's `list`: every routed job with its placement. Phase
+    /// lives on the workers; `status` (proxied) reports it per job.
+    fn handle_list(&self) -> String {
+        let g = self.routes.lock().unwrap();
+        let mut ids: Vec<u64> = g.keys().copied().collect();
+        ids.sort_unstable();
+        let jobs = Json::Arr(
+            ids.iter()
+                .map(|id| {
+                    let r = &g[id];
+                    Json::obj(vec![
+                        ("job", Json::Num(*id as f64)),
+                        ("worker", Json::Num(r.worker as f64)),
+                        ("worker_job", Json::Num(r.worker_job as f64)),
+                        ("terminal", Json::Bool(r.terminal)),
+                    ])
+                })
+                .collect(),
+        );
+        ok_fields(vec![("jobs", jobs)])
+    }
+
+    fn handle_hello(&self, v: &Json) -> String {
+        let Some(addr) = v.str_field("addr") else {
+            return err_msg("'hello' requires the worker's addr");
+        };
+        let id = self.register_worker(addr);
+        ok_fields(vec![("worker", Json::Num(id as f64))])
+    }
+
+    /// Live migration: checkpoint at the source, stop it there, resume
+    /// on the target. Optional `"to": <worker id>` pins the target;
+    /// otherwise the best alive worker *other than the source* takes it.
+    fn handle_migrate(&self, v: &Json) -> String {
+        let Some(id) = v.num_field("job").map(|j| j as u64) else {
+            return err_msg("'migrate' requires a job id");
+        };
+        // Claim the route for migration under the lock.
+        let (src, src_job, fp) = {
+            let mut g = self.routes.lock().unwrap();
+            let Some(r) = g.get_mut(&id) else { return err_msg("unknown job") };
+            if r.terminal {
+                return err_msg("job is terminal; nothing to migrate");
+            }
+            if r.migrating {
+                return err_msg("job is already migrating");
+            }
+            r.migrating = true;
+            (r.worker, r.worker_job, r.fingerprint)
+        };
+        let res = self.migrate_route(id, src, src_job, fp, v.num_field("to").map(|t| t as u64));
+        {
+            let mut g = self.routes.lock().unwrap();
+            if let Some(r) = g.get_mut(&id) {
+                r.migrating = false;
+            }
+        }
+        match res {
+            Ok((to, resumed_iter)) => {
+                self.migrations.inc();
+                self.update_gauges();
+                ok_fields(vec![
+                    ("job", Json::Num(id as f64)),
+                    ("from", Json::Num(src as f64)),
+                    ("to", Json::Num(to as f64)),
+                    ("resumed_iter", Json::Num(resumed_iter as f64)),
+                ])
+            }
+            Err(e) => err_msg(&format!("migrate failed: {e:#}")),
+        }
+    }
+
+    fn migrate_route(
+        &self,
+        id: u64,
+        src: WorkerId,
+        src_job: u64,
+        fp: u64,
+        to: Option<WorkerId>,
+    ) -> anyhow::Result<(WorkerId, u64)> {
+        let (dst, dst_addr) = match to {
+            Some(wid) => {
+                anyhow::ensure!(wid != src, "job is already on worker {wid}");
+                let addr = self
+                    .membership
+                    .addr_of(wid)
+                    .ok_or_else(|| anyhow::anyhow!("unknown target worker {wid}"))?;
+                anyhow::ensure!(
+                    self.membership.state_of(wid) == Some(WorkerState::Up),
+                    "target worker {wid} is not up"
+                );
+                (wid, addr)
+            }
+            None => self
+                .membership
+                .owner_of_excluding(fp, src)
+                .ok_or_else(|| anyhow::anyhow!("no alternative alive worker"))?,
+        };
+        // Fresh checkpoint from the source; fall back to the last
+        // replicated one (or a from-scratch resubmit — bit-identical
+        // either way, the checkpoint only skips already-replayed work).
+        let src_addr = self.membership.addr_of(src);
+        let fresh = src_addr.as_ref().and_then(|a| {
+            let line = format!(r#"{{"cmd":"checkpoint","job":{src_job}}}"#);
+            let r = rpc(a, &line, self.cfg.rpc_timeout).ok()?;
+            if !is_ok(&r) {
+                return None;
+            }
+            let bytes = b64::decode(r.str_field("checkpoint")?).ok()?;
+            Some((bytes, r.num_field("iter").unwrap_or(0.0) as u64))
+        });
+        if let Some(a) = &src_addr {
+            // Stop the source copy; best effort — a dead source is
+            // exactly the failover case and needs no stopping.
+            let _ = rpc(a, &format!(r#"{{"cmd":"stop","job":{src_job}}}"#), self.cfg.rpc_timeout);
+        }
+        let (ckpt, iter) = match fresh {
+            Some(f) => f,
+            None => {
+                let g = self.routes.lock().unwrap();
+                let r = g.get(&id).ok_or_else(|| anyhow::anyhow!("route vanished"))?;
+                (r.last_ckpt.clone(), r.replicated_iter)
+            }
+        };
+        let resume = (!ckpt.is_empty()).then(|| b64::encode(&ckpt));
+        let (spec, spec_line) = {
+            let g = self.routes.lock().unwrap();
+            let r = g.get(&id).ok_or_else(|| anyhow::anyhow!("route vanished"))?;
+            (r.spec.clone(), r.spec_line.clone())
+        };
+        let line = submit_line(&spec, resume.as_deref());
+        let resp = rpc(&dst_addr, &line, self.cfg.rpc_timeout)?;
+        anyhow::ensure!(is_ok(&resp), "target worker {dst} rejected the resume: {resp}");
+        let new_job = resp
+            .num_field("job")
+            .map(|j| j as u64)
+            .ok_or_else(|| anyhow::anyhow!("target returned no job id"))?;
+        {
+            let mut g = self.routes.lock().unwrap();
+            if let Some(r) = g.get_mut(&id) {
+                r.worker = dst;
+                r.worker_job = new_job;
+                r.last_ckpt = ckpt.clone();
+                r.replicated_iter = iter;
+            }
+        }
+        self.journal_write(id, &spec_line, &ckpt);
+        Ok((dst, iter))
+    }
+
+    fn handle_cluster_stats(&self) -> String {
+        let routes = self.routes.lock().unwrap();
+        let mut owned: HashMap<WorkerId, usize> = HashMap::new();
+        for r in routes.values() {
+            if !r.terminal {
+                *owned.entry(r.worker).or_default() += 1;
+            }
+        }
+        let workers = Json::Arr(
+            self.membership
+                .snapshot()
+                .into_iter()
+                .map(|w| {
+                    Json::obj(vec![
+                        ("id", Json::Num(w.id as f64)),
+                        ("addr", Json::Str(w.addr.clone())),
+                        ("state", Json::Str(w.state.label().into())),
+                        ("jobs_owned", Json::Num(*owned.get(&w.id).unwrap_or(&0) as f64)),
+                        ("age_ms", Json::Num(w.last_seen.elapsed().as_millis() as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let mut ids: Vec<u64> = routes.keys().copied().collect();
+        ids.sort_unstable();
+        let jobs = Json::Arr(
+            ids.iter()
+                .map(|id| {
+                    let r = &routes[id];
+                    Json::obj(vec![
+                        ("job", Json::Num(*id as f64)),
+                        ("worker", Json::Num(r.worker as f64)),
+                        ("worker_job", Json::Num(r.worker_job as f64)),
+                        ("fingerprint", Json::Str(format!("{:016x}", r.fingerprint))),
+                        ("terminal", Json::Bool(r.terminal)),
+                        ("replicated_iter", Json::Num(r.replicated_iter as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        drop(routes);
+        ok_fields(vec![
+            ("workers", workers),
+            ("jobs", jobs),
+            ("workers_up", Json::Num(self.membership.up_count() as f64)),
+            ("migrations", Json::Num(self.migrations.get() as f64)),
+            ("failovers", Json::Num(self.failovers.get() as f64)),
+            ("heartbeats_missed", Json::Num(self.heartbeats_missed.get() as f64)),
+        ])
+    }
+
+    /// `shutdown` with a `"worker"` field drains that shard: mark it
+    /// draining (it owns no new keys), migrate its live jobs off, then
+    /// shut the worker itself down. Bare `shutdown` stops the router —
+    /// workers are independent processes and keep serving.
+    fn handle_shutdown(&self, v: &Json) -> (String, bool) {
+        if let Some(w) = v.num_field("worker") {
+            let wid = w as u64;
+            let Some(addr) = self.membership.addr_of(wid) else {
+                return (err_msg("unknown worker"), true);
+            };
+            self.membership.mark_draining(wid);
+            let victims: Vec<(u64, u64, u64)> = {
+                let g = self.routes.lock().unwrap();
+                g.iter()
+                    .filter(|(_, r)| r.worker == wid && !r.terminal && !r.migrating)
+                    .map(|(&id, r)| (id, r.worker_job, r.fingerprint))
+                    .collect()
+            };
+            let mut moved = 0usize;
+            for (id, wjob, fp) in victims {
+                {
+                    let mut g = self.routes.lock().unwrap();
+                    match g.get_mut(&id) {
+                        Some(r) if !r.migrating && !r.terminal => r.migrating = true,
+                        _ => continue,
+                    }
+                }
+                let res = self.migrate_route(id, wid, wjob, fp, None);
+                if let Some(r) = self.routes.lock().unwrap().get_mut(&id) {
+                    r.migrating = false;
+                }
+                if res.is_ok() {
+                    self.migrations.inc();
+                    moved += 1;
+                }
+            }
+            let _ = rpc(&addr, r#"{"cmd":"shutdown"}"#, self.cfg.rpc_timeout);
+            self.membership.mark_dead(wid);
+            self.update_gauges();
+            (
+                ok_fields(vec![
+                    ("worker", Json::Num(wid as f64)),
+                    ("draining", Json::Bool(true)),
+                    ("migrated_jobs", Json::Num(moved as f64)),
+                ]),
+                true,
+            )
+        } else {
+            self.draining.store(true, Ordering::SeqCst);
+            (ok_fields(vec![("draining", Json::Bool(true))]), false)
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Heartbeat / replication / failover
+    // ------------------------------------------------------------------
+
+    /// One heartbeat round: probe every non-dead worker, replicate
+    /// checkpoints from responsive ones, expire the silent, fail over
+    /// every route stranded on a dead worker. Public so tests and the
+    /// bench drive deterministic schedules; the background loop
+    /// ([`spawn_heartbeat`](Self::spawn_heartbeat)) just calls it.
+    pub fn heartbeat_once(&self) {
+        for (wid, addr) in self.membership.probe_targets() {
+            let dropped = faultinject::fire(faultinject::CLUSTER_HEARTBEAT_DROP);
+            let alive = !dropped
+                && rpc(&addr, r#"{"cmd":"list"}"#, self.cfg.rpc_timeout)
+                    .map(|r| is_ok(&r))
+                    .unwrap_or(false);
+            if alive {
+                self.membership.refresh(wid);
+                self.replicate_worker(wid, &addr);
+            } else {
+                self.heartbeats_missed.inc();
+            }
+        }
+        let _ = self.membership.expire(self.cfg.heartbeat_timeout);
+        self.failover_dead_routes();
+        self.update_gauges();
+    }
+
+    /// Pull a checkpoint from every non-terminal job on a responsive
+    /// worker and journal it — the failover replica.
+    fn replicate_worker(&self, wid: WorkerId, addr: &str) {
+        let owned: Vec<(u64, u64)> = {
+            let g = self.routes.lock().unwrap();
+            g.iter()
+                .filter(|(_, r)| r.worker == wid && !r.terminal && !r.migrating)
+                .map(|(&id, r)| (id, r.worker_job))
+                .collect()
+        };
+        for (id, wjob) in owned {
+            let sline = format!(r#"{{"cmd":"status","job":{wjob}}}"#);
+            let Ok(st) = rpc(addr, &sline, self.cfg.rpc_timeout) else { continue };
+            if !is_ok(&st) {
+                continue;
+            }
+            if st.get("terminal") == Some(&Json::Bool(true)) {
+                self.mark_terminal(id);
+                continue;
+            }
+            if faultinject::fire(faultinject::CLUSTER_REPLICATE_FAIL) {
+                continue;
+            }
+            let cline = format!(r#"{{"cmd":"checkpoint","job":{wjob}}}"#);
+            let Ok(ck) = rpc(addr, &cline, self.cfg.rpc_timeout) else { continue };
+            if !is_ok(&ck) {
+                continue; // still in the similarity stage — nothing to replicate yet
+            }
+            let iter = ck.num_field("iter").unwrap_or(0.0) as u64;
+            if let Some(b) = ck.str_field("checkpoint") {
+                if let Ok(bytes) = b64::decode(b) {
+                    self.stash_replica(id, bytes, iter);
+                }
+            }
+        }
+    }
+
+    /// Re-admit every non-terminal route stranded on a dead worker onto
+    /// the surviving HRW owner, resuming from the replicated checkpoint
+    /// (or from scratch — bit-identical, just slower). Routes with no
+    /// surviving candidate stay put and retry next round.
+    fn failover_dead_routes(&self) {
+        let stranded: Vec<u64> = {
+            let g = self.routes.lock().unwrap();
+            g.iter()
+                .filter(|(_, r)| {
+                    !r.terminal
+                        && !r.migrating
+                        && self.membership.state_of(r.worker) == Some(WorkerState::Dead)
+                })
+                .map(|(&id, _)| id)
+                .collect()
+        };
+        for id in stranded {
+            let (spec, spec_line, fp, ckpt, iter) = {
+                let g = self.routes.lock().unwrap();
+                let Some(r) = g.get(&id) else { continue };
+                (
+                    r.spec.clone(),
+                    r.spec_line.clone(),
+                    r.fingerprint,
+                    r.last_ckpt.clone(),
+                    r.replicated_iter,
+                )
+            };
+            let Some((wid, addr)) = self.membership.owner_of(fp) else { continue };
+            let resume = (!ckpt.is_empty()).then(|| b64::encode(&ckpt));
+            let line = submit_line(&spec, resume.as_deref());
+            let Ok(resp) = rpc(&addr, &line, self.cfg.rpc_timeout) else { continue };
+            if !is_ok(&resp) {
+                continue;
+            }
+            let Some(new_job) = resp.num_field("job").map(|j| j as u64) else { continue };
+            {
+                let mut g = self.routes.lock().unwrap();
+                if let Some(r) = g.get_mut(&id) {
+                    r.worker = wid;
+                    r.worker_job = new_job;
+                }
+            }
+            self.failovers.inc();
+            self.journal_write(id, &spec_line, &ckpt);
+            eprintln!(
+                "cluster: job {id} failed over to worker {wid} ({addr}), resumed at iter {iter}"
+            );
+        }
+    }
+
+    /// Re-admit journalled jobs after a router restart. Call once the
+    /// initial worker set is registered.
+    pub fn recover(&self) -> usize {
+        let Some(j) = &self.journal else { return 0 };
+        let mut readmitted = 0usize;
+        for entry in j.read_all() {
+            let Ok(v) = json::parse(&entry.spec_json) else { continue };
+            let Ok(spec) = spec_from_json(&v) else { continue };
+            let Ok(fp) = self.fingerprint_of(&spec) else { continue };
+            let Some((wid, addr)) = self.membership.owner_of(fp) else { continue };
+            let resume = (!entry.checkpoint.is_empty()).then(|| b64::encode(&entry.checkpoint));
+            let line = submit_line(&spec, resume.as_deref());
+            let Ok(resp) = rpc(&addr, &line, self.cfg.rpc_timeout) else { continue };
+            if !is_ok(&resp) {
+                continue;
+            }
+            let Some(worker_job) = resp.num_field("job").map(|j| j as u64) else { continue };
+            // Preserve the journalled id; keep the allocator ahead of it.
+            let id = entry.id;
+            self.next_job.fetch_max(id + 1, Ordering::SeqCst);
+            self.routes.lock().unwrap().insert(
+                id,
+                RouteEntry {
+                    worker: wid,
+                    worker_job,
+                    spec_line: spec_to_json(&spec).to_string(),
+                    spec,
+                    fingerprint: fp,
+                    last_ckpt: entry.checkpoint,
+                    replicated_iter: 0,
+                    terminal: false,
+                    migrating: false,
+                },
+            );
+            readmitted += 1;
+        }
+        self.update_gauges();
+        readmitted
+    }
+
+    fn update_gauges(&self) {
+        self.workers_up.set(self.membership.up_count() as i64);
+        let mut owned: HashMap<WorkerId, i64> = HashMap::new();
+        {
+            let g = self.routes.lock().unwrap();
+            for r in g.values() {
+                if !r.terminal {
+                    *owned.entry(r.worker).or_default() += 1;
+                }
+            }
+        }
+        for w in self.membership.snapshot() {
+            self.metrics
+                .gauge(&format!("cluster.shard.{}.jobs_owned", w.id))
+                .set(*owned.get(&w.id).unwrap_or(&0));
+        }
+    }
+
+    /// Router metrics (the `metrics` command): the cluster registry
+    /// (per-shard gauges, migration/failover counters, route latency).
+    pub fn metrics_json(&self) -> Json {
+        Json::obj(vec![("cluster", self.metrics.snapshot())])
+    }
+
+    /// Start the background heartbeat loop (no-op when the config says
+    /// manual). The thread exits when the router drains.
+    pub fn spawn_heartbeat(self: &Arc<Self>) {
+        let Some(interval) = self.cfg.heartbeat_interval else { return };
+        let router = Arc::clone(self);
+        std::thread::spawn(move || {
+            while !router.is_draining() {
+                router.heartbeat_once();
+                std::thread::sleep(interval);
+            }
+        });
+    }
+
+    /// Accept loop, mirroring the worker-plane server: one thread per
+    /// connection, bounded request frames, exits once draining.
+    pub fn serve(
+        self: &Arc<Self>,
+        addr: &str,
+        on_bound: impl FnOnce(SocketAddr),
+    ) -> anyhow::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        on_bound(local);
+        for stream in listener.incoming() {
+            if self.is_draining() {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let router = Arc::clone(self);
+            std::thread::spawn(move || {
+                let _ = handle_client(&router, stream);
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The worker-plane `fault` handler, verbatim semantics: the registry
+/// is process-global, so arming `cluster.*` points over the router's
+/// own socket drives its heartbeat/replication paths.
+fn handle_fault(v: &Json) -> String {
+    if v.get("clear") == Some(&Json::Bool(true)) {
+        faultinject::disarm_all();
+    }
+    if let Some(spec) = v.str_field("spec") {
+        if let Err(e) = faultinject::arm_spec(spec) {
+            return err_msg(&format!("bad fault spec: {e}"));
+        }
+    }
+    let points = Json::Arr(
+        faultinject::status()
+            .into_iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("point", Json::Str(p.point.into())),
+                    ("trigger", Json::Str(p.trigger)),
+                    ("checks", Json::Num(p.checks as f64)),
+                    ("fired", Json::Num(p.fired as f64)),
+                ])
+            })
+            .collect(),
+    );
+    ok_fields(vec![("enabled", Json::Bool(faultinject::enabled())), ("points", points)])
+}
+
+fn handle_client(router: &Router, stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(600)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        match protocol::read_bounded_line(&mut reader, &mut buf, protocol::MAX_REQUEST_BYTES)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLarge => {
+                let resp = err_code("request_too_large", false, "request exceeds the frame bound");
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                return Ok(());
+            }
+            LineRead::Line => {}
+        }
+        let line = String::from_utf8_lossy(&buf).into_owned();
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, keep) = router.handle_line(&line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if !keep {
+            // Poke the accept loop so a bare `shutdown` unblocks it.
+            let _ = TcpStream::connect(writer.local_addr()?);
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_line_reattaches_resume_from() {
+        let spec = JobSpec::default();
+        let line = submit_line(&spec, Some("AAAA"));
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.str_field("cmd"), Some("submit"));
+        assert_eq!(v.str_field("resume_from"), Some("AAAA"));
+        let bare = json::parse(&submit_line(&spec, None)).unwrap();
+        assert!(bare.get("resume_from").is_none());
+    }
+
+    #[test]
+    fn router_with_no_workers_rejects_submits_retriably() {
+        let r = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+        let (resp, keep) =
+            r.handle_line(r#"{"cmd":"submit","dataset":"mnist","n":64,"iters":5}"#);
+        assert!(keep);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(v.str_field("code"), Some("no_workers"));
+        assert_eq!(v.get("retriable"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn worker_plane_job_cmds_need_known_jobs() {
+        let r = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+        for cmd in ["status", "pause", "resume", "stop", "checkpoint", "migrate"] {
+            let (resp, _) = r.handle_line(&format!(r#"{{"cmd":"{cmd}","job":7}}"#));
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{cmd} on unknown job must fail");
+        }
+    }
+
+    #[test]
+    fn hello_registers_and_cluster_stats_reports() {
+        let r = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+        let (resp, _) = r.handle_line(r#"{"cmd":"hello","addr":"127.0.0.1:7001"}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.num_field("worker"), Some(1.0));
+        // Same addr re-announces as the same worker.
+        let (resp, _) = r.handle_line(r#"{"cmd":"hello","addr":"127.0.0.1:7001"}"#);
+        assert_eq!(json::parse(&resp).unwrap().num_field("worker"), Some(1.0));
+        let (stats, _) = r.handle_line(r#"{"cmd":"cluster_stats"}"#);
+        let v = json::parse(&stats).unwrap();
+        assert_eq!(v.num_field("workers_up"), Some(1.0));
+        assert_eq!(v.get("workers").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+    }
+
+    #[test]
+    fn bare_shutdown_drains_the_router() {
+        let r = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+        let (resp, keep) = r.handle_line(r#"{"cmd":"shutdown"}"#);
+        assert!(!keep);
+        assert!(r.is_draining());
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("draining"), Some(&Json::Bool(true)));
+        let (resp, _) = r.handle_line(r#"{"cmd":"submit","dataset":"mnist","n":64}"#);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.str_field("code"), Some("draining"));
+    }
+}

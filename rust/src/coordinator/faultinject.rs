@@ -48,6 +48,12 @@ pub const ENGINE_STEP_PANIC: &str = "engine.step_panic";
 pub const NET_STALL: &str = "net.stall";
 /// A snapshot subscriber consumes slowly (exercises drop-oldest/evict).
 pub const SNAPSHOT_SLOW_SUBSCRIBER: &str = "snapshot.slow_subscriber";
+/// The router's heartbeat probe to one worker is dropped (the worker
+/// looks silent without actually dying — exercises failure detection).
+pub const CLUSTER_HEARTBEAT_DROP: &str = "cluster.heartbeat.drop";
+/// The router's per-heartbeat checkpoint replication pull is skipped
+/// (a failover then resumes from an older replica, or from scratch).
+pub const CLUSTER_REPLICATE_FAIL: &str = "cluster.replicate.fail";
 /// Reserved for faultinject's own unit tests; wired nowhere.
 pub const TEST_POINT: &str = "test.point";
 
@@ -61,6 +67,8 @@ pub const POINTS: &[&str] = &[
     ENGINE_STEP_PANIC,
     NET_STALL,
     SNAPSHOT_SLOW_SUBSCRIBER,
+    CLUSTER_HEARTBEAT_DROP,
+    CLUSTER_REPLICATE_FAIL,
     TEST_POINT,
 ];
 

@@ -69,6 +69,41 @@ impl std::str::FromStr for KnnMethod {
     }
 }
 
+/// Scheduling class for the step-quantum scheduler. `Interactive` jobs
+/// take quanta ahead of `Batch` work under contention (weighted
+/// round-robin in `service.rs`), so a wall of batch submissions cannot
+/// starve a user watching an embedding evolve; batch still gets a
+/// guaranteed share so it cannot starve either.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive: a user is watching. The default.
+    #[default]
+    Interactive,
+    /// Throughput work: yields to interactive under contention.
+    Batch,
+}
+
+impl Priority {
+    /// Protocol wire name (the submit `priority` field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "interactive" => Self::Interactive,
+            "batch" => Self::Batch,
+            other => anyhow::bail!("unknown priority '{other}' (interactive|batch)"),
+        })
+    }
+}
+
 /// Automatic early termination: stop when the KL estimate improved less
 /// than `rel_eps` (relatively) over the last `window` iterations.
 #[derive(Debug, Clone, Copy)]
@@ -154,6 +189,8 @@ pub struct JobSpec {
     /// Emit a snapshot every this many iterations (0 = only the final).
     pub snapshot_every: usize,
     pub auto_stop: Option<AutoStop>,
+    /// Scheduling class (protocol `priority`, default interactive).
+    pub priority: Priority,
     /// Dataset/seed salt.
     pub seed: u64,
     /// Client-supplied initial `(n, 2)` layout: the session is
@@ -176,6 +213,7 @@ impl Default for JobSpec {
             params: OptParams::default(),
             snapshot_every: 50,
             auto_stop: None,
+            priority: Priority::Interactive,
             seed: 42,
             y0: None,
             resume_from: None,
@@ -247,6 +285,17 @@ mod tests {
         assert_eq!(spec.knn_k(), 90);
         let tiny = JobSpec { perplexity: 0.5, ..Default::default() };
         assert_eq!(tiny.knn_k(), 3);
+    }
+
+    #[test]
+    fn priority_parses_and_labels() {
+        assert_eq!("interactive".parse::<Priority>().unwrap(), Priority::Interactive);
+        assert_eq!("batch".parse::<Priority>().unwrap(), Priority::Batch);
+        assert!("urgent".parse::<Priority>().is_err());
+        for p in [Priority::Interactive, Priority::Batch] {
+            assert_eq!(p.label().parse::<Priority>().unwrap(), p, "label roundtrips");
+        }
+        assert_eq!(Priority::default(), Priority::Interactive);
     }
 
     #[test]

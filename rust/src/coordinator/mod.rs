@@ -66,7 +66,7 @@ pub mod service;
 pub mod simcache;
 pub mod store;
 
-pub use job::{AutoStop, JobPhase, JobSpec, KnnMethod, ParamUpdate, Snapshot};
+pub use job::{AutoStop, JobPhase, JobSpec, KnnMethod, ParamUpdate, Priority, Snapshot};
 pub use pipeline::{
     begin_session, prepare_similarities, run_pipeline, run_pipeline_cached, AutoStopTracker,
     JobResult, PreparedJob, StageTimings,

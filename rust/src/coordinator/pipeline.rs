@@ -363,6 +363,7 @@ mod tests {
             params: OptParams { iters, exaggeration_iters: 20, ..Default::default() },
             snapshot_every: 10,
             auto_stop: None,
+            priority: Default::default(),
             seed: 3,
             y0: None,
             resume_from: None,

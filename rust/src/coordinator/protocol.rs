@@ -9,7 +9,7 @@
 //!
 //! ```text
 //! submit status snapshot checkpoint pause resume update stop wait list
-//! stats metrics trace fault shutdown quit
+//! stats metrics trace fault shutdown quit migrate cluster_stats hello
 //! ```
 //!
 //! The service behind these commands is the cooperative scheduler of
@@ -30,6 +30,13 @@
 //! `fault` arms the [`super::faultinject`] registry over the wire, and
 //! `shutdown` drains the scheduler — park + journal every live session
 //! — before the accept loop exits.
+//!
+//! The last three commands (`migrate`, `cluster_stats`, `hello`) belong
+//! to the **router plane** ([`crate::cluster`]): a `pallas router`
+//! process answers them, while a plain worker returns a structured
+//! `router_only` error pointing clients at the router. They live in
+//! [`Cmd`] anyway so the dispatcher, the usage error and the doc-drift
+//! test stay a single source of truth across both planes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -91,6 +98,15 @@ pub enum Cmd {
     Fault,
     Shutdown,
     Quit,
+    /// Router plane: move a live job to another worker
+    /// (checkpoint → stop → resume elsewhere). Workers reject it.
+    Migrate,
+    /// Router plane: membership, per-shard ownership and
+    /// failover/migration counters. Workers reject it.
+    ClusterStats,
+    /// Router plane: a worker announcing itself (`serve --router`);
+    /// doubles as the heartbeat refresh. Workers reject it.
+    Hello,
 }
 
 impl Cmd {
@@ -111,6 +127,9 @@ impl Cmd {
         Cmd::Fault,
         Cmd::Shutdown,
         Cmd::Quit,
+        Cmd::Migrate,
+        Cmd::ClusterStats,
+        Cmd::Hello,
     ];
 
     /// Wire name (the `cmd` field).
@@ -132,6 +151,9 @@ impl Cmd {
             Cmd::Fault => "fault",
             Cmd::Shutdown => "shutdown",
             Cmd::Quit => "quit",
+            Cmd::Migrate => "migrate",
+            Cmd::ClusterStats => "cluster_stats",
+            Cmd::Hello => "hello",
         }
     }
 
@@ -161,6 +183,9 @@ pub fn spec_from_json(v: &Json) -> anyhow::Result<JobSpec> {
     }
     if let Some(k) = v.str_field("knn") {
         spec.knn = k.parse()?;
+    }
+    if let Some(p) = v.str_field("priority") {
+        spec.priority = p.parse()?;
     }
     let mut params = OptParams::default();
     if let Some(i) = v.num_field("iters") {
@@ -248,6 +273,7 @@ pub fn spec_to_json(spec: &JobSpec) -> Json {
         ("init_std", Json::Num(spec.params.init_std as f64)),
         ("seed", Json::Num(spec.seed as f64)),
         ("snapshot_every", Json::Num(spec.snapshot_every as f64)),
+        ("priority", Json::Str(spec.priority.label().into())),
     ];
     if let Some(auto) = &spec.auto_stop {
         fields.push(("auto_stop_window", Json::Num(auto.window as f64)));
@@ -280,13 +306,13 @@ fn deliver_lag_ns() -> &'static Arc<obs::Histogram> {
     H.get_or_init(|| obs::registry().histogram("snapshot.deliver_lag_ns"))
 }
 
-fn ok_fields(fields: Vec<(&str, Json)>) -> String {
+pub(crate) fn ok_fields(fields: Vec<(&str, Json)>) -> String {
     let mut all = vec![("ok", Json::Bool(true))];
     all.extend(fields);
     Json::obj(all).to_string()
 }
 
-fn err_msg(msg: &str) -> String {
+pub(crate) fn err_msg(msg: &str) -> String {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]).to_string()
 }
 
@@ -294,7 +320,7 @@ fn err_msg(msg: &str) -> String {
 /// hint — the shedding/overload responses (`queue_full`, `draining`,
 /// `server_busy`, `request_too_large`) where a client must distinguish
 /// "back off and retry" from "your request is broken".
-fn err_code(code: &str, retriable: bool, msg: &str) -> String {
+pub(crate) fn err_code(code: &str, retriable: bool, msg: &str) -> String {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.into())),
@@ -548,12 +574,23 @@ pub fn handle_line(svc: &EmbeddingService, line: &str) -> (String, bool) {
             )
         }
         Cmd::Quit => (ok_fields(vec![("bye", Json::Bool(true))]), false),
+        // Router-plane commands answered by `pallas router`
+        // (`crate::cluster`), not by a worker. The structured code lets
+        // a client that connected to the wrong plane correct itself.
+        Cmd::Migrate | Cmd::ClusterStats | Cmd::Hello => (
+            err_code(
+                "router_only",
+                false,
+                &format!("'{}' is a router command; this endpoint is a worker", cmd.name()),
+            ),
+            true,
+        ),
     }
 }
 
 /// Outcome of one bounded framed read.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum LineRead {
+pub(crate) enum LineRead {
     /// One complete line is in the buffer (newline stripped).
     Line,
     /// Clean end of stream with nothing buffered.
@@ -567,7 +604,7 @@ enum LineRead {
 /// `max` bytes. The replacement for `BufRead::lines()` on the request
 /// path: `lines()` buffers an entire line before returning it, so a
 /// newline-free stream grows the allocation without bound.
-fn read_bounded_line<R: BufRead>(
+pub(crate) fn read_bounded_line<R: BufRead>(
     r: &mut R,
     out: &mut Vec<u8>,
     max: usize,
@@ -992,6 +1029,7 @@ mod tests {
             knn: "vptree".parse().unwrap(),
             snapshot_every: 7,
             auto_stop: Some(AutoStop { window: 33, rel_eps: 2.5e-4 }),
+            priority: "batch".parse().unwrap(),
             seed: 99,
             ..Default::default()
         };
@@ -1014,6 +1052,7 @@ mod tests {
         assert_eq!(back.perplexity, spec.perplexity);
         assert_eq!(back.knn, spec.knn);
         assert_eq!(back.snapshot_every, spec.snapshot_every);
+        assert_eq!(back.priority, spec.priority);
         assert_eq!(back.seed, spec.seed);
         let auto = back.auto_stop.unwrap();
         assert_eq!(auto.window, 33);
@@ -1148,6 +1187,7 @@ mod tests {
             r#"{"cmd":"submit","iters":-3}"#,
             r#"{"cmd":"submit","iters":1e307}"#,
             r#"{"cmd":"submit","knn":"quantum"}"#,
+            r#"{"cmd":"submit","priority":"urgent"}"#,
             r#"{"cmd":"submit","y0":{"x":1}}"#,
             r#"{"cmd":"submit","resume_from":"!!!"}"#,
         ] {
@@ -1230,8 +1270,11 @@ mod tests {
                 cmd.name()
             );
         }
-        // Response-field coverage: the durable-path fields are documented.
-        for field in ["resume_from", "checkpoint", "y0", "sim_cache_hit", "knn_cache_hit"] {
+        // Response-field coverage: the durable-path and scheduling-class
+        // fields are documented.
+        for field in
+            ["resume_from", "checkpoint", "y0", "sim_cache_hit", "knn_cache_hit", "priority"]
+        {
             assert!(doc.contains(field), "docs/PROTOCOL.md lost the `{field}` field");
         }
     }

@@ -4,12 +4,16 @@
 //! object behind both the CLI and the TCP server.
 //!
 //! Jobs are not threads. A submitted job becomes a [`JobTask`] — the
-//! similarity stage plus a live [`EmbeddingSession`] — and enters a FIFO
-//! ready queue. Workers pop a job, run **one quantum** (at most
-//! [`MAX_QUANTUM_STEPS`] gradient-descent steps or [`QUANTUM_MS`]
-//! milliseconds, whichever comes first), publish a live snapshot straight
-//! from the session state, and re-enqueue the job at the back — fair
-//! round-robin in step quanta, so a 100k-point job cannot starve ten
+//! similarity stage plus a live [`EmbeddingSession`] — and enters the
+//! two-class ready queue ([`ReadyQueue`]): round-robin within a
+//! [`super::job::Priority`] class, weighted between classes so
+//! `interactive` jobs take quanta ahead of `batch` work under contention
+//! (one batch pop per [`BATCH_POP_PERIOD`] while both classes wait)
+//! without ever starving batch. Workers pop a job, run **one quantum**
+//! (at most [`MAX_QUANTUM_STEPS`] gradient-descent steps or
+//! [`QUANTUM_MS`] milliseconds, whichever comes first), publish a live
+//! snapshot straight from the session state, and re-enqueue the job at
+//! the back of its class — so a 100k-point job cannot starve ten
 //! 2k-point jobs the way run-to-completion workers did. Between quanta
 //! the scheduler honours the job's control surface: `stop` finalises,
 //! `pause` parks the task (session state intact, caches warm),
@@ -46,7 +50,7 @@ use crate::util::json::{self, Json};
 use crate::util::timer::Stopwatch;
 
 use super::faultinject;
-use super::job::{JobPhase, JobSpec, ParamUpdate, Snapshot};
+use super::job::{JobPhase, JobSpec, ParamUpdate, Priority, Snapshot};
 use super::pipeline::{self, AutoStopTracker, JobResult, StageTimings};
 use super::progress::{JobState, Subscription};
 use super::simcache::SimilarityCache;
@@ -75,6 +79,54 @@ const IDLE_SNAPSHOT_MS: u64 = 100;
 /// Default admission cap: ready-queue depth beyond which
 /// [`EmbeddingService::try_submit`] sheds new work.
 const MAX_QUEUE_DEPTH: usize = 256;
+
+/// Inter-class weighting of the ready queue: while both classes have
+/// runnable jobs, one pop in this many goes to `batch`, the rest to
+/// `interactive` — a 3:1 quantum split that keeps interactive users
+/// responsive under batch load yet guarantees batch forward progress.
+const BATCH_POP_PERIOD: u64 = 4;
+
+/// The scheduler's two-class ready queue: FIFO round-robin within a
+/// [`Priority`] class, [`BATCH_POP_PERIOD`]-weighted interleave between
+/// classes under contention, plain FIFO when only one class has work.
+#[derive(Default)]
+struct ReadyQueue {
+    interactive: VecDeque<JobId>,
+    batch: VecDeque<JobId>,
+    /// Monotonic pop counter driving the weighted interleave.
+    pops: u64,
+}
+
+impl ReadyQueue {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+
+    fn push(&mut self, id: JobId, priority: Priority) {
+        match priority {
+            Priority::Interactive => self.interactive.push_back(id),
+            Priority::Batch => self.batch.push_back(id),
+        }
+    }
+
+    fn pop(&mut self) -> Option<JobId> {
+        let take_batch = match (self.interactive.is_empty(), self.batch.is_empty()) {
+            (true, _) => true,
+            (false, true) => false,
+            // Contention: the weighted interleave decides.
+            (false, false) => self.pops % BATCH_POP_PERIOD == BATCH_POP_PERIOD - 1,
+        };
+        let id = if take_batch {
+            self.batch.pop_front()
+        } else {
+            self.interactive.pop_front()
+        };
+        if id.is_some() {
+            self.pops += 1;
+        }
+        id
+    }
+}
 
 pub type JobId = u64;
 
@@ -193,6 +245,12 @@ struct SchedMetrics {
     /// `scheduler.submits_shed` — submits rejected by admission control
     /// (queue at cap, or draining).
     submits_shed: Arc<obs::Counter>,
+    /// `scheduler.quanta_interactive` / `scheduler.quanta_batch` —
+    /// quanta granted per scheduling class; under contention the ratio
+    /// tracks [`BATCH_POP_PERIOD`], the fairness-class guarantee made
+    /// observable.
+    quanta_interactive: Arc<obs::Counter>,
+    quanta_batch: Arc<obs::Counter>,
     /// `scheduler.draining` — 1 once drain shutdown began.
     draining_gauge: Arc<obs::Gauge>,
     /// `engine.attr_ns` / `engine.rep_ns` / `engine.grad_ns` — per-step
@@ -213,6 +271,8 @@ impl SchedMetrics {
             overruns: registry.counter("scheduler.quantum_overruns"),
             park_resume_ns: registry.histogram("scheduler.park_resume_ns"),
             submits_shed: registry.counter("scheduler.submits_shed"),
+            quanta_interactive: registry.counter("scheduler.quanta_interactive"),
+            quanta_batch: registry.counter("scheduler.quanta_batch"),
             draining_gauge: registry.gauge("scheduler.draining"),
             attr_ns: registry.histogram("engine.attr_ns"),
             rep_ns: registry.histogram("engine.rep_ns"),
@@ -253,7 +313,7 @@ struct JobEntry {
 struct ServiceInner {
     runtime: Option<Arc<Runtime>>,
     jobs: Mutex<HashMap<JobId, Arc<JobEntry>>>,
-    queue: Mutex<VecDeque<JobId>>,
+    queue: Mutex<ReadyQueue>,
     queue_cv: Condvar,
     shutdown: AtomicBool,
     /// Drain shutdown in progress: admission sheds, workers keep running
@@ -269,9 +329,9 @@ struct ServiceInner {
 }
 
 impl ServiceInner {
-    fn enqueue(&self, id: JobId) {
+    fn enqueue(&self, id: JobId, priority: Priority) {
         let mut queue = self.queue.lock().unwrap();
-        queue.push_back(id);
+        queue.push(id, priority);
         self.metrics.queue_depth.set(queue.len() as i64);
         self.queue_cv.notify_one();
     }
@@ -313,8 +373,9 @@ impl ServiceInner {
             ckpt: Mutex::new(CkptSlot::default()),
             ckpt_cv: Condvar::new(),
         });
+        let priority = entry.spec.priority;
         self.jobs.lock().unwrap().insert(id, entry);
-        self.enqueue(id);
+        self.enqueue(id, priority);
     }
 }
 
@@ -375,7 +436,7 @@ impl EmbeddingService {
         let inner = Arc::new(ServiceInner {
             runtime,
             jobs: Mutex::new(HashMap::new()),
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(ReadyQueue::default()),
             queue_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             draining: AtomicBool::new(false),
@@ -616,7 +677,7 @@ impl EmbeddingService {
             return false;
         };
         e.state.request_stop();
-        self.inner.enqueue(id);
+        self.inner.enqueue(id, e.spec.priority);
         true
     }
 
@@ -638,7 +699,7 @@ impl EmbeddingService {
         match self.entry(id) {
             Some(e) if !e.state.phase().is_terminal() => {
                 e.state.clear_pause();
-                self.inner.enqueue(id);
+                self.inner.enqueue(id, e.spec.priority);
                 true
             }
             _ => false,
@@ -748,7 +809,7 @@ fn worker_loop(inner: Arc<ServiceInner>) {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(id) = queue.pop_front() {
+                if let Some(id) = queue.pop() {
                     inner.metrics.queue_depth.set(queue.len() as i64);
                     break id;
                 }
@@ -779,7 +840,7 @@ fn worker_loop(inner: Arc<ServiceInner>) {
         match outcome {
             SliceOutcome::Requeue => {
                 *entry.task.lock().unwrap() = Some(task);
-                inner.enqueue(id);
+                inner.enqueue(id, entry.spec.priority);
             }
             SliceOutcome::Park => {
                 // The park span stays open (and the stopwatch running)
@@ -792,7 +853,7 @@ fn worker_loop(inner: Arc<ServiceInner>) {
                 // the id while we still held the task (that pop was
                 // skipped) — re-enqueue so the job is not stranded.
                 if !entry.state.pause_requested() || entry.state.stop_requested() {
-                    inner.enqueue(id);
+                    inner.enqueue(id, entry.spec.priority);
                 }
             }
             SliceOutcome::Finished => {
@@ -895,6 +956,10 @@ fn run_slice(
         // `iters` below the current iteration — and falls straight
         // through to finalisation.)
         let m = &inner.metrics;
+        match spec.priority {
+            Priority::Interactive => m.quanta_interactive.inc(),
+            Priority::Batch => m.quanta_batch.inc(),
+        }
         let quantum_seq = entry.obs.quanta.fetch_add(1, Ordering::Relaxed);
         let _quantum = obs::span(obs::Span::Quantum, id, quantum_seq);
         let sw = Stopwatch::start();
@@ -1131,6 +1196,7 @@ mod tests {
             params: OptParams { iters, exaggeration_iters: 10, ..Default::default() },
             snapshot_every: 5,
             auto_stop: None,
+            priority: Priority::Interactive,
             seed: 1,
             y0: None,
             resume_from: None,
@@ -1375,15 +1441,24 @@ mod tests {
 
     #[test]
     fn scheduler_metrics_expose_fair_quanta() {
-        // One worker, one huge job racing three small ones: round-robin
-        // quanta mean the small jobs complete while the big one keeps
-        // taking slices — and the scheduler metrics must show it.
+        // One worker, one huge *batch* job racing three small
+        // *interactive* ones: the weighted round-robin means the small
+        // jobs complete while the big one keeps taking its (reduced)
+        // share of slices — and the scheduler metrics must show both the
+        // fairness and the class weighting.
         let svc = EmbeddingService::new(None, 1);
-        let big = svc.submit(tiny_spec(1_000_000));
+        let mut big_spec = tiny_spec(1_000_000);
+        big_spec.priority = Priority::Batch;
+        let big = svc.submit(big_spec);
         let smalls: Vec<_> = (0..3).map(|_| svc.submit(tiny_spec(400))).collect();
         for &id in &smalls {
             svc.wait(id).unwrap();
         }
+        // Captured before stopping the big job: once the interactive
+        // jobs are done the batch class owns every pop, so the
+        // contention-window ratio is only visible now.
+        let contended_interactive = svc.inner.metrics.quanta_interactive.get();
+        let contended_batch = svc.inner.metrics.quanta_batch.get();
         let quanta_of = |id: JobId| svc.entry(id).unwrap().obs.quanta.load(Ordering::Relaxed);
         // A 400-iteration job runs at most MAX_QUANTUM_STEPS steps per
         // quantum, so finishing took each small job several quanta...
@@ -1395,8 +1470,17 @@ mod tests {
             );
         }
         // ...and the big job kept getting slices throughout — the
-        // round-robin guarantee, now observable instead of inferred.
+        // anti-starvation guarantee for batch, now observable instead of
+        // inferred.
         assert!(quanta_of(big) >= 2, "big job starved: {} quanta", quanta_of(big));
+        // The weighting held while both classes were contending: the
+        // interactive class took quanta ahead of batch (3:1 nominal;
+        // ≥ is the race-proof bound), and batch was never starved.
+        assert!(
+            contended_interactive >= contended_batch,
+            "interactive ({contended_interactive}) must lead batch ({contended_batch})"
+        );
+        assert!(contended_batch >= 1, "batch class starved under contention");
         assert!(svc.stop(big));
         svc.wait(big).unwrap();
         // Every quantum of every job landed in the service histograms.
@@ -1404,6 +1488,8 @@ mod tests {
         let total: u64 = std::iter::once(big).chain(smalls.iter().copied()).map(quanta_of).sum();
         assert_eq!(m.quantum_ns.count(), total);
         assert_eq!(m.quantum_steps.count(), total);
+        // Every quantum was attributed to exactly one scheduling class.
+        assert_eq!(m.quanta_interactive.get() + m.quanta_batch.get(), total);
         // Sub-millisecond steps cannot legitimately blow a 2× budget;
         // the slack is for CI scheduling hiccups.
         assert!(

@@ -48,6 +48,7 @@ use std::sync::Arc;
 use super::fft::{half_width, irfft2d, rfft2d, Fft};
 use super::{splat, FieldBackend, FieldTexture, Placement};
 use crate::util::parallel::{self, SyncSlice};
+use crate::util::simd::{self, SpectralArgs};
 
 /// Internal pixel target (embedding units). The Cauchy kernels have an
 /// intrinsic scale of 1 embedding unit, so an absolute target is the
@@ -337,9 +338,12 @@ impl FieldBackend for FftBackend {
         // produces all three channel products — charge and kernel spectra
         // are each read exactly once, the S product lands back in spec_*
         // (each entry is read before it is overwritten), Vx/Vy land in
-        // their own planes.
+        // their own planes. The per-chunk body dispatches to the active
+        // SIMD tier; every tier is bit-identical to the scalar reference
+        // (pinned in `tests/simd_conformance.rs`).
         {
             let (ks, kx, ky) = (&kernels.chan[0], &kernels.chan[1], &kernels.chan[2]);
+            let kern = simd::kernels();
             let sre = SyncSlice::new(spec_re);
             let sim = SyncSlice::new(spec_im);
             let xre = SyncSlice::new(vxp_re);
@@ -347,17 +351,23 @@ impl FieldBackend for FftBackend {
             let yre = SyncSlice::new(vyp_re);
             let yim = SyncSlice::new(vyp_im);
             parallel::par_chunks(ns, 1 << 15, |range| {
-                for i in range {
-                    unsafe {
-                        let cr = *sre.get_mut(i);
-                        let ci = *sim.get_mut(i);
-                        *sre.get_mut(i) = cr * ks.0[i] - ci * ks.1[i];
-                        *sim.get_mut(i) = cr * ks.1[i] + ci * ks.0[i];
-                        *xre.get_mut(i) = cr * kx.0[i] - ci * kx.1[i];
-                        *xim.get_mut(i) = cr * kx.1[i] + ci * kx.0[i];
-                        *yre.get_mut(i) = cr * ky.0[i] - ci * ky.1[i];
-                        *yim.get_mut(i) = cr * ky.1[i] + ci * ky.0[i];
-                    }
+                let (lo, len) = (range.start, range.len());
+                // SAFETY: par_chunks hands out disjoint ranges.
+                unsafe {
+                    (kern.spectral_mul)(SpectralArgs {
+                        sre: sre.slice_mut(lo, len),
+                        sim: sim.slice_mut(lo, len),
+                        xre: xre.slice_mut(lo, len),
+                        xim: xim.slice_mut(lo, len),
+                        yre: yre.slice_mut(lo, len),
+                        yim: yim.slice_mut(lo, len),
+                        ks_re: &ks.0[lo..lo + len],
+                        ks_im: &ks.1[lo..lo + len],
+                        kx_re: &kx.0[lo..lo + len],
+                        kx_im: &kx.1[lo..lo + len],
+                        ky_re: &ky.0[lo..lo + len],
+                        ky_im: &ky.1[lo..lo + len],
+                    });
                 }
             });
         }

@@ -31,6 +31,7 @@
 //! Python never runs on the request path: after `make artifacts`, the
 //! binary is self-contained.
 
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod embed;

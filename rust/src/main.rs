@@ -4,6 +4,7 @@
 //! Subcommands:
 //!   embed     run one embedding job and write the result
 //!   serve     run the progressive embedding service over TCP
+//!   router    front N serve workers: fingerprint routing, migration, failover
 //!   info      show artifact / runtime / dataset information
 //!   datasets  list the evaluation datasets (Table 1)
 
@@ -23,6 +24,7 @@ fn main() {
     let code = match cmd {
         "embed" => cmd_embed(&args),
         "serve" => cmd_serve(&args),
+        "router" => cmd_router(&args),
         "info" => cmd_info(&args),
         "datasets" => cmd_datasets(&args),
         _ => {
@@ -52,7 +54,15 @@ fn print_help() {
                    pause/resume/update/checkpoint/metrics/trace/fault,\n\
                    resumable submits — see docs/PROTOCOL.md; --state-dir\n\
                    makes jobs and the similarity store survive restarts;\n\
-                   `shutdown` or SIGTERM drains gracefully)\n\
+                   `shutdown` or SIGTERM drains gracefully;\n\
+                   --router <addr> announces this worker to a router)\n\
+         router   --addr 127.0.0.1:7979 --workers host:port[,host:port...]\n\
+                  --heartbeat-ms 1000 --heartbeat-timeout-ms 3000\n\
+                  --state-dir state/ --fault point=trigger[,...]\n\
+                  (shards submits across workers by dataset fingerprint,\n\
+                   proxies job commands, replicates checkpoints, migrates\n\
+                   live sessions, fails jobs over from dead workers —\n\
+                   see docs/PROTOCOL.md `migrate`/`cluster_stats`/`hello`)\n\
          info     (artifact + platform report)\n\
          datasets (Table 1)\n\n\
          Run `make artifacts` first to enable the gpgpu engine."
@@ -205,6 +215,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "arm fault points at startup, e.g. store.write=prob:0.1@7,net.stall=every:5 \
          (see docs/PROTOCOL.md `fault`)",
     );
+    let router = args.opt_str(
+        "router",
+        "announce this worker to a `pallas router` at this address \
+         (periodic `hello`, which doubles as registration after a router restart)",
+    );
     args.finish_help("Serve the progressive embedding service over TCP");
     let rt = load_runtime();
     println!(
@@ -262,9 +277,86 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
         });
     }
+    // Worker-side cluster membership is one outbound `hello` loop: the
+    // router learns (or re-learns, after its own restart) this worker's
+    // address; everything else — routing, replication, migration — is
+    // router-driven over the plain client protocol.
+    if let Some(router_addr) = router {
+        let bound = bound.clone();
+        std::thread::spawn(move || {
+            let mut announced = false;
+            loop {
+                let Some(addr) = *bound.lock().unwrap() else {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    continue;
+                };
+                let line = format!(r#"{{"cmd":"hello","addr":"{addr}"}}"#);
+                match gpgpu_sne::cluster::rpc(&router_addr, &line, std::time::Duration::from_secs(5)) {
+                    Ok(_) if !announced => {
+                        announced = true;
+                        eprintln!("announced to router {router_addr}");
+                    }
+                    Ok(_) => {}
+                    Err(e) if announced => {
+                        announced = false;
+                        eprintln!("warning: router {router_addr} unreachable ({e:#}); retrying");
+                    }
+                    Err(_) => {}
+                }
+                std::thread::sleep(std::time::Duration::from_secs(2));
+            }
+        });
+    }
     gpgpu_sne::coordinator::protocol::serve(svc, &addr, |a| {
         *bound.lock().unwrap() = Some(a);
         println!("listening on {a}");
+    })
+}
+
+fn cmd_router(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7979", "bind address");
+    let workers =
+        args.opt_str("workers", "comma-separated worker addresses to register at startup");
+    let hb_ms = args.get("heartbeat-ms", 1000u64, "heartbeat cadence (0 disables the loop)");
+    let hb_timeout_ms = args.get(
+        "heartbeat-timeout-ms",
+        3000u64,
+        "declare a worker dead (and fail its jobs over) after this much silence",
+    );
+    let state_dir = args.opt_str(
+        "state-dir",
+        "replicate worker checkpoints into <dir>/cluster-journal; \
+         a restarted router re-admits journalled jobs",
+    );
+    let fault = args.opt_str(
+        "fault",
+        "arm fault points at startup, e.g. cluster.heartbeat.drop=every:3 \
+         (see docs/PROTOCOL.md `fault`)",
+    );
+    args.finish_help("Route submits across serve workers by dataset fingerprint");
+    let cfg = gpgpu_sne::cluster::RouterConfig {
+        heartbeat_interval: (hb_ms > 0).then(|| std::time::Duration::from_millis(hb_ms)),
+        heartbeat_timeout: std::time::Duration::from_millis(hb_timeout_ms),
+        state_dir: state_dir.map(std::path::PathBuf::from),
+        ..Default::default()
+    };
+    let router = Arc::new(gpgpu_sne::cluster::Router::new(cfg));
+    if let Some(spec) = fault {
+        gpgpu_sne::coordinator::faultinject::arm_spec(&spec)
+            .map_err(|e| anyhow::anyhow!("--fault: {e}"))?;
+        println!("fault points armed: {spec}");
+    }
+    for w in workers.as_deref().unwrap_or("").split(',').filter(|s| !s.trim().is_empty()) {
+        let id = router.register_worker(w.trim());
+        println!("worker {id}: {}", w.trim());
+    }
+    let readmitted = router.recover();
+    if readmitted > 0 {
+        println!("re-admitted {readmitted} journalled job(s) from the cluster journal");
+    }
+    router.spawn_heartbeat();
+    router.serve(&addr, |a| {
+        println!("router listening on {a} (workers join with `serve --router {a}`)");
     })
 }
 

@@ -1,8 +1,9 @@
-//! Runtime-dispatched SIMD kernels for the five hottest loops in the
+//! Runtime-dispatched SIMD kernels for the hottest loops in the
 //! pipeline (ISSUE 8): the blocked-kNN panel kernels (`dot` / `dot4` /
 //! rank-1 update), the radix-2 FFT butterflies and the 4×4 transpose
 //! tile, the cubic-Lagrange 4×4 deposit, the Cauchy field-row
-//! accumulator, and the fused gradient-descent update.
+//! accumulator, the fused gradient-descent update, and (ISSUE 9) the
+//! fused three-channel spectral multiply of the FFT field backend.
 //!
 //! # Dispatch
 //!
@@ -242,6 +243,26 @@ impl GdPartial {
     }
 }
 
+/// Arguments of the fused spectral-multiply chunk kernel
+/// ([`crate::field::conv`]): one chunk of the charge half-spectrum
+/// (split re/im; overwritten in place by the S-channel product) plus the
+/// Vx/Vy product chunks and the matching chunks of the three cached
+/// kernel spectra. All twelve slices have the same length.
+pub struct SpectralArgs<'a> {
+    pub sre: &'a mut [f32],
+    pub sim: &'a mut [f32],
+    pub xre: &'a mut [f32],
+    pub xim: &'a mut [f32],
+    pub yre: &'a mut [f32],
+    pub yim: &'a mut [f32],
+    pub ks_re: &'a [f32],
+    pub ks_im: &'a [f32],
+    pub kx_re: &'a [f32],
+    pub kx_im: &'a [f32],
+    pub ky_re: &'a [f32],
+    pub ky_im: &'a [f32],
+}
+
 /// One tier's kernel set. All entries are plain safe `fn` pointers; the
 /// unsafe feature preconditions live behind the shims that built the
 /// table.
@@ -269,6 +290,10 @@ pub struct Kernels {
     /// Fused gradient combine + gains/momentum + position update over
     /// one chunk; returns the chunk's mean/bbox partial.
     pub gd_update: fn(GdArgs) -> GdPartial,
+    /// Fused three-channel complex spectral multiply over one chunk of
+    /// the charge half-spectrum (S product in place, Vx/Vy into their
+    /// own planes) — the FFT field backend's per-iteration hot pass.
+    pub spectral_mul: fn(SpectralArgs),
 }
 
 static SCALAR: Kernels = Kernels {
@@ -281,6 +306,7 @@ static SCALAR: Kernels = Kernels {
     deposit4x4: deposit4x4_scalar,
     cauchy_row: cauchy_row_scalar,
     gd_update: gd_update_scalar,
+    spectral_mul: spectral_mul_scalar,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -294,6 +320,7 @@ static SSE41: Kernels = Kernels {
     deposit4x4: x86::deposit4x4_sse,
     cauchy_row: x86::cauchy_row_sse,
     gd_update: x86::gd_update_sse,
+    spectral_mul: x86::spectral_mul_sse,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -309,6 +336,7 @@ static AVX2: Kernels = Kernels {
     deposit4x4: x86::deposit4x4_sse,
     cauchy_row: x86::cauchy_row_avx2,
     gd_update: x86::gd_update_avx2,
+    spectral_mul: x86::spectral_mul_avx2,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -322,6 +350,7 @@ static NEON: Kernels = Kernels {
     deposit4x4: deposit4x4_scalar,
     cauchy_row: cauchy_row_scalar,
     gd_update: gd_update_scalar,
+    spectral_mul: spectral_mul_scalar,
 };
 
 impl Kernels {
@@ -502,6 +531,33 @@ fn gd_update_scalar(mut a: GdArgs) -> GdPartial {
     out
 }
 
+/// Scalar spectral multiply over entries `[lo, hi)` — shared by the
+/// scalar kernel and the vector kernels' tails. Each complex product is
+/// `out = c · k` evaluated as `(cr·kr − ci·ki, cr·ki + ci·kr)`; the S
+/// channel reads each charge entry before overwriting it.
+fn spectral_mul_scalar_range(a: &mut SpectralArgs, lo: usize, hi: usize) {
+    for i in lo..hi {
+        let cr = a.sre[i];
+        let ci = a.sim[i];
+        a.sre[i] = cr * a.ks_re[i] - ci * a.ks_im[i];
+        a.sim[i] = cr * a.ks_im[i] + ci * a.ks_re[i];
+        a.xre[i] = cr * a.kx_re[i] - ci * a.kx_im[i];
+        a.xim[i] = cr * a.kx_im[i] + ci * a.kx_re[i];
+        a.yre[i] = cr * a.ky_re[i] - ci * a.ky_im[i];
+        a.yim[i] = cr * a.ky_im[i] + ci * a.ky_re[i];
+    }
+}
+
+fn spectral_mul_scalar(mut a: SpectralArgs) {
+    let n = a.sre.len();
+    debug_assert!(a.sim.len() == n && a.xre.len() == n && a.xim.len() == n);
+    debug_assert!(a.yre.len() == n && a.yim.len() == n);
+    debug_assert!(a.ks_re.len() == n && a.ks_im.len() == n);
+    debug_assert!(a.kx_re.len() == n && a.kx_im.len() == n);
+    debug_assert!(a.ky_re.len() == n && a.ky_im.len() == n);
+    spectral_mul_scalar_range(&mut a, 0, n);
+}
+
 // ---------------------------------------------------------------------
 // x86-64 vector kernels. Each `_impl` is a `#[target_feature]` unsafe fn
 // wrapped by a safe shim; the shims are only reachable through tables
@@ -512,7 +568,8 @@ fn gd_update_scalar(mut a: GdArgs) -> GdPartial {
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use super::{
-        butterflies_scalar_range, gd_pairs_scalar, GdArgs, GdPartial, GAIN_ADD, GAIN_MIN, GAIN_MUL,
+        butterflies_scalar_range, gd_pairs_scalar, spectral_mul_scalar_range, GdArgs, GdPartial,
+        SpectralArgs, GAIN_ADD, GAIN_MIN, GAIN_MUL,
     };
     use std::arch::x86_64::*;
 
@@ -1092,6 +1149,112 @@ mod x86 {
         }
         gd_pairs_scalar(&mut a, idx / 2, m / 2, &mut out);
         out
+    }
+
+    // ----- fused spectral multiply -----
+
+    pub fn spectral_mul_sse(a: SpectralArgs) {
+        unsafe { spectral_mul_sse_impl(a) }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn spectral_mul_sse_impl(mut a: SpectralArgs) {
+        let n = a.sre.len();
+        debug_assert!(a.sim.len() == n && a.xre.len() == n && a.xim.len() == n);
+        debug_assert!(a.yre.len() == n && a.yim.len() == n);
+        debug_assert!(a.ks_re.len() == n && a.ks_im.len() == n);
+        debug_assert!(a.kx_re.len() == n && a.kx_im.len() == n);
+        debug_assert!(a.ky_re.len() == n && a.ky_im.len() == n);
+        let blocks = n / 4;
+        for c in 0..blocks {
+            let i = 4 * c;
+            // Charge entries load before the S-channel store overwrites
+            // them — the in-place hazard the scalar reference carries.
+            let cr = _mm_loadu_ps(a.sre.as_ptr().add(i));
+            let ci = _mm_loadu_ps(a.sim.as_ptr().add(i));
+            let kr = _mm_loadu_ps(a.ks_re.as_ptr().add(i));
+            let ki = _mm_loadu_ps(a.ks_im.as_ptr().add(i));
+            _mm_storeu_ps(
+                a.sre.as_mut_ptr().add(i),
+                _mm_sub_ps(_mm_mul_ps(cr, kr), _mm_mul_ps(ci, ki)),
+            );
+            _mm_storeu_ps(
+                a.sim.as_mut_ptr().add(i),
+                _mm_add_ps(_mm_mul_ps(cr, ki), _mm_mul_ps(ci, kr)),
+            );
+            let kr = _mm_loadu_ps(a.kx_re.as_ptr().add(i));
+            let ki = _mm_loadu_ps(a.kx_im.as_ptr().add(i));
+            _mm_storeu_ps(
+                a.xre.as_mut_ptr().add(i),
+                _mm_sub_ps(_mm_mul_ps(cr, kr), _mm_mul_ps(ci, ki)),
+            );
+            _mm_storeu_ps(
+                a.xim.as_mut_ptr().add(i),
+                _mm_add_ps(_mm_mul_ps(cr, ki), _mm_mul_ps(ci, kr)),
+            );
+            let kr = _mm_loadu_ps(a.ky_re.as_ptr().add(i));
+            let ki = _mm_loadu_ps(a.ky_im.as_ptr().add(i));
+            _mm_storeu_ps(
+                a.yre.as_mut_ptr().add(i),
+                _mm_sub_ps(_mm_mul_ps(cr, kr), _mm_mul_ps(ci, ki)),
+            );
+            _mm_storeu_ps(
+                a.yim.as_mut_ptr().add(i),
+                _mm_add_ps(_mm_mul_ps(cr, ki), _mm_mul_ps(ci, kr)),
+            );
+        }
+        spectral_mul_scalar_range(&mut a, 4 * blocks, n);
+    }
+
+    pub fn spectral_mul_avx2(a: SpectralArgs) {
+        unsafe { spectral_mul_avx2_impl(a) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn spectral_mul_avx2_impl(mut a: SpectralArgs) {
+        let n = a.sre.len();
+        debug_assert!(a.sim.len() == n && a.xre.len() == n && a.xim.len() == n);
+        debug_assert!(a.yre.len() == n && a.yim.len() == n);
+        debug_assert!(a.ks_re.len() == n && a.ks_im.len() == n);
+        debug_assert!(a.kx_re.len() == n && a.kx_im.len() == n);
+        debug_assert!(a.ky_re.len() == n && a.ky_im.len() == n);
+        let blocks = n / 8;
+        for c in 0..blocks {
+            let i = 8 * c;
+            let cr = _mm256_loadu_ps(a.sre.as_ptr().add(i));
+            let ci = _mm256_loadu_ps(a.sim.as_ptr().add(i));
+            let kr = _mm256_loadu_ps(a.ks_re.as_ptr().add(i));
+            let ki = _mm256_loadu_ps(a.ks_im.as_ptr().add(i));
+            _mm256_storeu_ps(
+                a.sre.as_mut_ptr().add(i),
+                _mm256_sub_ps(_mm256_mul_ps(cr, kr), _mm256_mul_ps(ci, ki)),
+            );
+            _mm256_storeu_ps(
+                a.sim.as_mut_ptr().add(i),
+                _mm256_add_ps(_mm256_mul_ps(cr, ki), _mm256_mul_ps(ci, kr)),
+            );
+            let kr = _mm256_loadu_ps(a.kx_re.as_ptr().add(i));
+            let ki = _mm256_loadu_ps(a.kx_im.as_ptr().add(i));
+            _mm256_storeu_ps(
+                a.xre.as_mut_ptr().add(i),
+                _mm256_sub_ps(_mm256_mul_ps(cr, kr), _mm256_mul_ps(ci, ki)),
+            );
+            _mm256_storeu_ps(
+                a.xim.as_mut_ptr().add(i),
+                _mm256_add_ps(_mm256_mul_ps(cr, ki), _mm256_mul_ps(ci, kr)),
+            );
+            let kr = _mm256_loadu_ps(a.ky_re.as_ptr().add(i));
+            let ki = _mm256_loadu_ps(a.ky_im.as_ptr().add(i));
+            _mm256_storeu_ps(
+                a.yre.as_mut_ptr().add(i),
+                _mm256_sub_ps(_mm256_mul_ps(cr, kr), _mm256_mul_ps(ci, ki)),
+            );
+            _mm256_storeu_ps(
+                a.yim.as_mut_ptr().add(i),
+                _mm256_add_ps(_mm256_mul_ps(cr, ki), _mm256_mul_ps(ci, kr)),
+            );
+        }
+        spectral_mul_scalar_range(&mut a, 8 * blocks, n);
     }
 }
 

@@ -98,6 +98,7 @@ fn submit_spec(n: usize, iters: usize, seed: u64) -> JobSpec {
         params: OptParams { iters, seed, ..Default::default() },
         snapshot_every: 1,
         auto_stop: None,
+        priority: Default::default(),
         seed,
         y0: None,
         resume_from: None,
@@ -410,6 +411,113 @@ fn oversized_request_is_rejected_and_connection_closed() {
         // Reset before the response could be read — still a close.
         Err(_) => {}
     }
+}
+
+#[test]
+fn router_storm_survives_a_worker_death_and_flaky_heartbeats() {
+    let _l = lock();
+    // Two real workers behind one router, served over real TCP, with
+    // the router's own fault points armed: heartbeat probes drop with
+    // p=0.1 (failure detection must tolerate flake without spurious
+    // failovers wedging anything) and replication pulls fail with
+    // p=0.3 (failovers resume from older replicas, or from scratch).
+    let mk_worker = || {
+        let svc = Arc::new(EmbeddingService::with_config(
+            None,
+            ServiceConfig { max_concurrent: 2, ..Default::default() },
+        ));
+        let (addr, handle) = start_server(svc.clone(), 64);
+        (svc, addr, handle)
+    };
+    let (w1, a1, h1) = mk_worker();
+    let (_w2, a2, _h2) = mk_worker();
+    let router = Arc::new(gpgpu_sne::cluster::Router::new(gpgpu_sne::cluster::RouterConfig {
+        heartbeat_interval: Some(Duration::from_millis(50)),
+        heartbeat_timeout: Duration::from_millis(400),
+        ..Default::default()
+    }));
+    router.register_worker(&a1.to_string());
+    router.register_worker(&a2.to_string());
+    router.spawn_heartbeat();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let router_thread = {
+        let router = router.clone();
+        std::thread::spawn(move || {
+            let _ = router.serve("127.0.0.1:0", move |a| {
+                let _ = tx.send(a);
+            });
+        })
+    };
+    let raddr = rx.recv_timeout(Duration::from_secs(10)).expect("router bind");
+
+    let mut admin = Client::connect(raddr);
+    let v = admin
+        .call(r#"{"cmd":"fault","spec":"cluster.heartbeat.drop=prob:0.1@7,cluster.replicate.fail=prob:0.3@9"}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+
+    // Six clients storm the router: submit (retrying retriable shed or
+    // worker_unavailable errors, as a well-behaved client would), then
+    // wait. Every admitted job must reach a terminal ok — including the
+    // ones stranded on the worker we kill mid-storm.
+    let storm: Vec<_> = (0..6u64)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(raddr);
+                for j in 0..2u64 {
+                    let seed = 100 + t * 2 + j;
+                    let id = {
+                        let deadline = Instant::now() + Duration::from_secs(30);
+                        loop {
+                            let v = c.call(&submit_line(100, 200, seed));
+                            if v.get("ok") == Some(&Json::Bool(true)) {
+                                break v.num_field("job").unwrap() as u64;
+                            }
+                            assert_eq!(
+                                v.get("retriable"),
+                                Some(&Json::Bool(true)),
+                                "non-retriable submit failure: {v}"
+                            );
+                            assert!(Instant::now() < deadline, "submit never admitted: {v}");
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    };
+                    let done = c.call(&format!(r#"{{"cmd":"wait","job":{id}}}"#));
+                    assert_eq!(
+                        done.get("ok"),
+                        Some(&Json::Bool(true)),
+                        "job {id} (seed {seed}) lost in the storm: {done}"
+                    );
+                    assert_eq!(done.num_field("iters"), Some(200.0), "{done}");
+                }
+            })
+        })
+        .collect();
+
+    // Pull the plug on worker 1 while the storm rages: stop computing,
+    // close the listener — a crash as the router sees it.
+    std::thread::sleep(Duration::from_millis(300));
+    w1.drain(Duration::from_secs(30));
+    let _ = TcpStream::connect(a1);
+    h1.join().expect("worker 1 accept loop exits");
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    for t in storm {
+        assert!(Instant::now() < deadline, "storm clients wedged");
+        t.join().expect("storm client");
+    }
+
+    // The router saw the death (missed heartbeats are guaranteed by the
+    // kill, never mind the injected drops) and kept exactly one shard.
+    let stats = admin.call(r#"{"cmd":"cluster_stats"}"#);
+    assert_eq!(stats.num_field("workers_up"), Some(1.0), "{stats}");
+    assert!(stats.num_field("heartbeats_missed").unwrap() >= 1.0, "{stats}");
+
+    let v = admin.call(r#"{"cmd":"fault","clear":true}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    let v = admin.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+    router_thread.join().expect("router accept loop exits after shutdown");
+    faultinject::disarm_all();
 }
 
 #[test]

@@ -1,0 +1,409 @@
+//! Cluster integration harness: one in-process [`Router`] fronting two
+//! real `serve` workers over TCP, pinning the sharded coordinator's
+//! contract —
+//!
+//! * **sticky routing**: a dataset fingerprint always lands on the HRW
+//!   owner, so repeat submits hit that shard's similarity caches
+//!   (`sim_cache_hit=true` on the second wait);
+//! * **live migration ≡ uninterrupted**: `migrate` (checkpoint → stop →
+//!   resume elsewhere) finishes with final positions bit-identical to a
+//!   single-node run that was never touched;
+//! * **failover ≡ uninterrupted**: killing the owner of a running job
+//!   re-admits it from the replicated checkpoint on the survivor, again
+//!   bit-identically, and the same fingerprint then routes to (and
+//!   cache-hits on) the survivor.
+//!
+//! The fault registry is process-global; tests that arm faults (or
+//! depend on none being armed) serialise on one lock, and the CI
+//! `cluster` job runs this binary with `--test-threads=1`.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use gpgpu_sne::cluster::{Router, RouterConfig};
+use gpgpu_sne::coordinator::progress::JobState;
+use gpgpu_sne::coordinator::{
+    faultinject, protocol, run_pipeline, EmbeddingService, JobSpec, KnnMethod, ServiceConfig,
+};
+use gpgpu_sne::embed::OptParams;
+use gpgpu_sne::util::json::{self, Json};
+
+static CLUSTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    let guard = CLUSTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    faultinject::disarm_all();
+    guard
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gsne-cluster-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One in-process worker: a real `EmbeddingService` served over TCP.
+struct Worker {
+    svc: Arc<EmbeddingService>,
+    addr: std::net::SocketAddr,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Worker {
+    fn start() -> Self {
+        let svc = Arc::new(EmbeddingService::with_config(
+            None,
+            ServiceConfig { max_concurrent: 2, ..Default::default() },
+        ));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let svc2 = svc.clone();
+        let handle = std::thread::spawn(move || {
+            let _ = protocol::serve_with(svc2, "127.0.0.1:0", 64, move |a| {
+                let _ = tx.send(a);
+            });
+        });
+        let addr = rx.recv_timeout(Duration::from_secs(10)).expect("worker bind");
+        Worker { svc, addr, handle: Some(handle) }
+    }
+
+    /// Kill the worker: stop computing (live jobs park mid-run) and
+    /// close the listener, so heartbeats see connection-refused — from
+    /// the router's side this is indistinguishable from a crash.
+    fn kill(&mut self) {
+        self.svc.drain(Duration::from_secs(30));
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn call(router: &Router, req: &str) -> Json {
+    let (resp, _) = router.handle_line(req);
+    json::parse(&resp).unwrap_or_else(|e| panic!("bad router response '{resp}': {e}"))
+}
+
+fn assert_ok(v: &Json) {
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v}");
+}
+
+fn submit_line(n: usize, iters: usize, seed: u64) -> String {
+    format!(
+        r#"{{"cmd":"submit","dataset":"gaussians","n":{n},"engine":"bh-0.5","iters":{iters},"perplexity":8,"knn":"brute","seed":{seed},"snapshot_every":1}}"#
+    )
+}
+
+/// The in-process twin of [`submit_line`] — field-for-field what
+/// `spec_from_json` builds, so reference runs are comparable.
+fn submit_spec(n: usize, iters: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        dataset: "gaussians".into(),
+        n,
+        engine: "bh-0.5".into(),
+        perplexity: 8.0,
+        knn: KnnMethod::Brute,
+        params: OptParams { iters, seed, ..Default::default() },
+        snapshot_every: 1,
+        auto_stop: None,
+        priority: Default::default(),
+        seed,
+        y0: None,
+        resume_from: None,
+    }
+}
+
+/// Poll the router's `status` proxy until the job reports at least
+/// `min_iter` optimisation steps.
+fn wait_until_iter(router: &Router, job: u64, min_iter: u64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let v = call(router, &format!(r#"{{"cmd":"status","job":{job}}}"#));
+        if v.get("ok") == Some(&Json::Bool(true))
+            && v.num_field("iter").unwrap_or(0.0) as u64 >= min_iter
+        {
+            return;
+        }
+        assert!(Instant::now() < deadline, "job {job} never reached iter {min_iter}: {v}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The routing entry for `job` from `cluster_stats`: (worker, worker_job,
+/// replicated_iter).
+fn placement(router: &Router, job: u64) -> (u64, u64, u64) {
+    let v = call(router, r#"{"cmd":"cluster_stats"}"#);
+    let jobs = v.get("jobs").and_then(Json::as_arr).expect("jobs array");
+    let j = jobs
+        .iter()
+        .find(|j| j.num_field("job") == Some(job as f64))
+        .unwrap_or_else(|| panic!("job {job} missing from cluster_stats: {v}"));
+    (
+        j.num_field("worker").unwrap() as u64,
+        j.num_field("worker_job").unwrap() as u64,
+        j.num_field("replicated_iter").unwrap_or(0.0) as u64,
+    )
+}
+
+#[test]
+fn fingerprint_routing_is_sticky_and_matches_hrw() {
+    let _l = lock();
+    let w1 = Worker::start();
+    let w2 = Worker::start();
+    let router = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+    router.register_worker(&w1.addr.to_string());
+    router.register_worker(&w2.addr.to_string());
+
+    for seed in 0..6u64 {
+        let v = call(&router, &submit_line(80, 10, seed));
+        assert_ok(&v);
+        let worker = v.num_field("worker").unwrap() as u64;
+        // The reported owner is the HRW decision for the dataset's
+        // content fingerprint — recomputable by anyone.
+        let fp = u64::from_str_radix(v.str_field("fingerprint").unwrap(), 16).unwrap();
+        let expect = gpgpu_sne::data::by_name("gaussians", 80, seed).unwrap().fingerprint();
+        assert_eq!(fp, expect, "router fingerprint disagrees with the dataset's");
+        assert_eq!(router.membership.owner_of(fp).unwrap().0, worker);
+        // Sticky: the same spec routes to the same shard every time.
+        let v2 = call(&router, &submit_line(80, 10, seed));
+        assert_ok(&v2);
+        assert_eq!(v2.num_field("worker"), Some(worker as f64), "resubmit moved shards");
+    }
+}
+
+#[test]
+fn repeat_submit_hits_the_owning_shards_sim_cache() {
+    let _l = lock();
+    let w1 = Worker::start();
+    let w2 = Worker::start();
+    let router = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+    router.register_worker(&w1.addr.to_string());
+    router.register_worker(&w2.addr.to_string());
+
+    let v = call(&router, &submit_line(100, 20, 3));
+    assert_ok(&v);
+    let a = v.num_field("job").unwrap() as u64;
+    let first = call(&router, &format!(r#"{{"cmd":"wait","job":{a}}}"#));
+    assert_ok(&first);
+    assert_eq!(first.num_field("iters"), Some(20.0), "{first}");
+    assert_eq!(first.get("sim_cache_hit"), Some(&Json::Bool(false)), "{first}");
+
+    let v = call(&router, &submit_line(100, 20, 3));
+    assert_ok(&v);
+    let b = v.num_field("job").unwrap() as u64;
+    assert_ne!(a, b, "router ids are cluster-unique");
+    let second = call(&router, &format!(r#"{{"cmd":"wait","job":{b}}}"#));
+    assert_ok(&second);
+    assert_eq!(
+        second.get("sim_cache_hit"),
+        Some(&Json::Bool(true)),
+        "repeat submit must hit the owning shard's warm similarity cache: {second}"
+    );
+}
+
+#[test]
+fn live_migration_is_bit_identical_to_uninterrupted() {
+    let _l = lock();
+    let reference =
+        run_pipeline(&submit_spec(300, 250, 7), None, &JobState::default()).unwrap();
+
+    let workers = [Worker::start(), Worker::start()];
+    let router = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+    for w in &workers {
+        router.register_worker(&w.addr.to_string());
+    }
+
+    let v = call(&router, &submit_line(300, 250, 7));
+    assert_ok(&v);
+    let job = v.num_field("job").unwrap() as u64;
+    let src = v.num_field("worker").unwrap() as u64;
+
+    // Let it do real optimisation work before moving it.
+    wait_until_iter(&router, job, 40);
+    let m = call(&router, &format!(r#"{{"cmd":"migrate","job":{job}}}"#));
+    assert_ok(&m);
+    assert_eq!(m.num_field("from"), Some(src as f64), "{m}");
+    let dst = m.num_field("to").unwrap() as u64;
+    assert_ne!(dst, src, "migration must change shards: {m}");
+    assert!(m.num_field("resumed_iter").unwrap() >= 40.0, "{m}");
+
+    let done = call(&router, &format!(r#"{{"cmd":"wait","job":{job}}}"#));
+    assert_ok(&done);
+    assert_eq!(done.num_field("iters"), Some(250.0), "{done}");
+
+    // Bit-identical: read the final embedding straight off the target
+    // worker's service (no JSON round trip in the comparison).
+    let (owner, worker_job, _) = placement(&router, job);
+    assert_eq!(owner, dst);
+    let res = workers[(dst - 1) as usize].svc.wait(worker_job).expect("migrated job result");
+    assert_eq!(res.iters_run, 250);
+    assert_eq!(
+        res.embedding, reference.embedding,
+        "migrated run diverged from the uninterrupted reference"
+    );
+}
+
+#[test]
+fn killing_the_owner_fails_over_bit_identically_and_reroutes_its_keys() {
+    let _l = lock();
+    let reference =
+        run_pipeline(&submit_spec(300, 300, 11), None, &JobState::default()).unwrap();
+
+    let dir = tmp_dir("failover");
+    let mut workers = [Worker::start(), Worker::start()];
+    let router = Arc::new(Router::new(RouterConfig {
+        heartbeat_interval: None, // driven by the test for determinism
+        heartbeat_timeout: Duration::from_millis(250),
+        state_dir: Some(dir.clone()),
+        ..Default::default()
+    }));
+    for w in &workers {
+        router.register_worker(&w.addr.to_string());
+    }
+
+    let v = call(&router, &submit_line(300, 300, 11));
+    assert_ok(&v);
+    let job = v.num_field("job").unwrap() as u64;
+    let owner = v.num_field("worker").unwrap() as u64;
+    let survivor = if owner == 1 { 2u64 } else { 1u64 };
+
+    // Heartbeat until the router holds a replicated checkpoint (the
+    // failover replica) for the running job.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        router.heartbeat_once();
+        let (_, _, replicated) = placement(&router, job);
+        if replicated >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no checkpoint replicated");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Kill the owner mid-run, then keep heartbeating (as the background
+    // loop would) until the router declares it dead and re-admits the
+    // job on the survivor.
+    workers[(owner - 1) as usize].kill();
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = {
+        let (router, stop) = (router.clone(), stop.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                router.heartbeat_once();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+
+    let done = call(&router, &format!(r#"{{"cmd":"wait","job":{job}}}"#));
+    assert_ok(&done);
+    assert_eq!(done.num_field("iters"), Some(300.0), "{done}");
+
+    let (new_owner, worker_job, _) = placement(&router, job);
+    assert_eq!(new_owner, survivor, "job must land on the survivor");
+    let res = workers[(survivor - 1) as usize].svc.wait(worker_job).expect("failover result");
+    assert_eq!(
+        res.embedding, reference.embedding,
+        "failed-over run diverged from the uninterrupted reference"
+    );
+
+    // The dead shard's keys now route to the survivor, whose caches the
+    // failover replay just warmed: a repeat submit cache-hits there.
+    let v = call(&router, &submit_line(300, 300, 11));
+    assert_ok(&v);
+    assert_eq!(v.num_field("worker"), Some(survivor as f64), "{v}");
+    let again = v.num_field("job").unwrap() as u64;
+    let rerun = call(&router, &format!(r#"{{"cmd":"wait","job":{again}}}"#));
+    assert_ok(&rerun);
+    assert_eq!(
+        rerun.get("sim_cache_hit"),
+        Some(&Json::Bool(true)),
+        "post-failover repeat submit must hit the survivor's warm cache: {rerun}"
+    );
+
+    stop.store(true, Ordering::SeqCst);
+    driver.join().unwrap();
+
+    // Terminal jobs leave the replication journal (nothing to revive).
+    let journal = gpgpu_sne::coordinator::JobJournal::open(&dir.join("cluster-journal")).unwrap();
+    assert!(
+        journal.read_all().iter().all(|e| e.id != job),
+        "terminal job must be dropped from the cluster journal"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drain_shutdown_migrates_a_shards_jobs_off() {
+    let _l = lock();
+    let workers = [Worker::start(), Worker::start()];
+    let router = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+    for w in &workers {
+        router.register_worker(&w.addr.to_string());
+    }
+
+    let v = call(&router, &submit_line(300, 400, 13));
+    assert_ok(&v);
+    let job = v.num_field("job").unwrap() as u64;
+    let owner = v.num_field("worker").unwrap() as u64;
+    wait_until_iter(&router, job, 20);
+
+    // Drain the owning shard: its live job migrates to the other
+    // worker before the worker itself shuts down.
+    let (resp, keep) = router.handle_line(&format!(r#"{{"cmd":"shutdown","worker":{owner}}}"#));
+    assert!(keep, "per-worker drain keeps the router serving");
+    let v = json::parse(&resp).unwrap();
+    assert_ok(&v);
+    assert_eq!(v.num_field("migrated_jobs"), Some(1.0), "{v}");
+
+    let (new_owner, _, _) = placement(&router, job);
+    assert_ne!(new_owner, owner, "drained shard must not keep the job");
+    let done = call(&router, &format!(r#"{{"cmd":"wait","job":{job}}}"#));
+    assert_ok(&done);
+    assert_eq!(done.num_field("iters"), Some(400.0), "{done}");
+
+    let stats = call(&router, r#"{"cmd":"cluster_stats"}"#);
+    assert_eq!(stats.num_field("workers_up"), Some(1.0), "{stats}");
+    assert_eq!(stats.num_field("migrations"), Some(1.0), "{stats}");
+}
+
+#[test]
+fn router_journal_survives_restart_and_readmits() {
+    let _l = lock();
+    let dir = tmp_dir("recover");
+    let workers = [Worker::start(), Worker::start()];
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.to_string()).collect();
+    let mk = || {
+        let r = Router::new(RouterConfig {
+            heartbeat_interval: None,
+            state_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        for a in &addrs {
+            r.register_worker(a);
+        }
+        r
+    };
+
+    let router = mk();
+    let v = call(&router, &submit_line(300, 400, 17));
+    assert_ok(&v);
+    let job = v.num_field("job").unwrap() as u64;
+    wait_until_iter(&router, job, 30);
+    router.heartbeat_once(); // replicate a checkpoint into the journal
+    let (_, _, replicated) = placement(&router, job);
+    assert!(replicated >= 1, "journal must hold a replica before the 'crash'");
+    drop(router); // router "crashes"; workers keep running
+
+    // A fresh router over the same state dir re-admits the job under
+    // its original id (resuming from the replica — the worker-side copy
+    // keeps running too, but the new submit is what the route tracks).
+    let router = mk();
+    assert_eq!(router.recover(), 1, "one journalled job to re-admit");
+    let done = call(&router, &format!(r#"{{"cmd":"wait","job":{job}}}"#));
+    assert_ok(&done);
+    assert_eq!(done.num_field("iters"), Some(400.0), "{done}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

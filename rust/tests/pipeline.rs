@@ -19,6 +19,7 @@ fn spec(dataset: &str, n: usize, engine: &str, iters: usize) -> JobSpec {
         params: OptParams { iters, exaggeration_iters: iters / 4, ..Default::default() },
         snapshot_every: 25,
         auto_stop: None,
+        priority: Default::default(),
         seed: 2,
         y0: None,
         resume_from: None,

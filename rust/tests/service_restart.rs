@@ -35,6 +35,7 @@ fn spec(iters: usize) -> JobSpec {
         params: OptParams { iters, exaggeration_iters: 30, ..Default::default() },
         snapshot_every: 10,
         auto_stop: None,
+        priority: Default::default(),
         seed: 11,
         y0: None,
         resume_from: None,

@@ -13,7 +13,7 @@ use gpgpu_sne::embed::{self, OptParams};
 use gpgpu_sne::hd::{bruteforce, perplexity, Dataset};
 use gpgpu_sne::util::prop::{self, usize_in};
 use gpgpu_sne::util::rng::Rng;
-use gpgpu_sne::util::simd::{self, GdArgs, Kernels, Tier};
+use gpgpu_sne::util::simd::{self, GdArgs, Kernels, SpectralArgs, Tier};
 
 /// The supported vector tiers (beyond scalar) on this machine. Empty on
 /// targets with no vector kernels — the properties then just pin the
@@ -222,6 +222,51 @@ fn gd_update_matches_scalar_bitwise() {
                         k.tier.name()
                     ));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spectral_mul_matches_scalar_bitwise() {
+    // The ISSUE 9 satellite pin: the FFT field backend's fused
+    // three-channel spectral multiply must not depend on the tier, or
+    // fieldfft checkpoints stop replaying across machines.
+    prop::check("simd spectral_mul vs scalar", &usize_in(0, 133), |&n| {
+        let ks_re = test_vec(n, 41 + n as u64);
+        let ks_im = test_vec(n, 42 + n as u64);
+        let kx_re = test_vec(n, 43 + n as u64);
+        let kx_im = test_vec(n, 44 + n as u64);
+        let ky_re = test_vec(n, 45 + n as u64);
+        let ky_im = test_vec(n, 46 + n as u64);
+        let run = |k: &Kernels| {
+            let mut sre = test_vec(n, 51 + n as u64);
+            let mut sim = test_vec(n, 52 + n as u64);
+            let mut xre = test_vec(n, 53 + n as u64);
+            let mut xim = test_vec(n, 54 + n as u64);
+            let mut yre = test_vec(n, 55 + n as u64);
+            let mut yim = test_vec(n, 56 + n as u64);
+            (k.spectral_mul)(SpectralArgs {
+                sre: &mut sre,
+                sim: &mut sim,
+                xre: &mut xre,
+                xim: &mut xim,
+                yre: &mut yre,
+                yim: &mut yim,
+                ks_re: &ks_re,
+                ks_im: &ks_im,
+                kx_re: &kx_re,
+                kx_im: &kx_im,
+                ky_re: &ky_re,
+                ky_im: &ky_im,
+            });
+            [bits(&sre), bits(&sim), bits(&xre), bits(&xim), bits(&yre), bits(&yim)]
+        };
+        let want = run(Kernels::for_tier(Tier::Scalar));
+        for k in vector_tiers() {
+            if run(k) != want {
+                return Err(format!("tier {} n={n}", k.tier.name()));
             }
         }
         Ok(())
