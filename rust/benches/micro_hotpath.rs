@@ -1119,6 +1119,67 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // --- Ops tools (README §Operations): pallas-fsck's wall time is
+    // the record verify scan (framing decode + FNV-1a over the whole
+    // payload), and the CI perf gate adds one pallas-bench-trend
+    // analysis per run — both pinned here so the tools stay cheap
+    // enough to run casually against production-sized state dirs.
+    {
+        use gpgpu_sne::coordinator::store;
+        use gpgpu_sne::tools::benchtrend;
+
+        let mb = if quick { 4usize } else { 16 };
+        let payload: Vec<u8> =
+            (0..mb << 20).map(|i| (i as u64).wrapping_mul(0x9e37_79b9) as u8).collect();
+        let dir = std::env::temp_dir().join(format!("gsne-bench-tools-{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        let rec_path = dir.join("g-bench.rec");
+        store::write_record(&rec_path, store::KIND_GRAPH, &payload)?;
+        let bytes = std::fs::read(&rec_path)?;
+        let vt = measure(warmup, iters, || {
+            let ok = store::verify_record_bytes(&bytes, store::KIND_GRAPH)
+                .expect("bench record is healthy");
+            std::hint::black_box(ok.len());
+        })
+        .min();
+        let verify_mb_s = mb as f64 / vt;
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mk = |c: &str, speed: f64| {
+            format!(
+                r#"{{"commit":"{c}","bench":{{"simd":{{"tier":"avx2","kernels":[{{"name":"gd_fused","speedup":{speed}}},{{"name":"splat","speedup":{speed}}}]}},"cluster":{{"placements":[{{"workers":8,"owner_of_ns":250.0}}]}}}}}}"#
+            )
+        };
+        let text = format!("{}\n{}\n", mk("aaaa", 2.5), mk("bbbb", 2.6));
+        let entries = benchtrend::parse_history(&text).expect("bench history parses");
+        let rules = benchtrend::default_rules();
+        let reps = 1000u64;
+        let ct = measure(warmup, iters, || {
+            for _ in 0..reps {
+                let a = benchtrend::analyze(&entries, None, &rules)
+                    .expect("history analyzes")
+                    .expect("two entries compare");
+                std::hint::black_box(a.deltas.len());
+            }
+        })
+        .min();
+        let compare_us = ct * 1e6 / reps as f64;
+
+        let mut rep = Report::new("ops tools (fsck verify scan, trend gate)", &["value"]);
+        rep.row("record verify", vec![format!("{verify_mb_s:.0} MB/s")]);
+        rep.row("trend analysis", vec![format!("{compare_us:.1} us")]);
+        rep.print();
+        rep.write_csv("micro_tools.csv")?;
+        json_sections.push((
+            "tools",
+            Json::obj(vec![
+                ("verify_mb_s", Json::Num(verify_mb_s)),
+                ("record_mb", Json::Num(mb as f64)),
+                ("trend_compare_us", Json::Num(compare_us)),
+            ]),
+        ));
+    }
+
     // --- Machine-readable summary for cross-PR tracking, committed at
     // the workspace root (cargo runs benches with the *package* root as
     // cwd, hence the explicit path).

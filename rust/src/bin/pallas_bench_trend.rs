@@ -1,0 +1,50 @@
+//! `pallas-bench-trend` — bench-history trend table and the CI
+//! regression gate.
+//!
+//! Reads a `BENCH_history.jsonl` (one `{"commit","date","bench":...}`
+//! object per line, newest last), computes per-metric deltas of the
+//! newest entry against a baseline (`--baseline <commit-prefix>`, or
+//! the adjacent previous entry), renders a markdown trend table, and
+//! exits 1 when any gated metric regressed beyond its rule's
+//! tolerance. See [`gpgpu_sne::tools::benchtrend`] for the rule set.
+
+use gpgpu_sne::tools::benchtrend::{analyze, default_rules, parse_history, render_markdown};
+use gpgpu_sne::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let history = args.str("history", "BENCH_history.jsonl", "bench history file (jsonl)");
+    let baseline = args.opt_str("baseline", "baseline commit prefix (default: previous entry)");
+    let all = args.flag("all", "show ungated metrics in the table too");
+    let text = match std::fs::read_to_string(&history) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: read {history}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let verdict = parse_history(&text)
+        .and_then(|entries| analyze(&entries, baseline.as_deref(), &default_rules()));
+    match verdict {
+        Ok(None) => {
+            println!("bench history has fewer than two entries; nothing to compare");
+        }
+        Ok(Some(a)) => {
+            print!("{}", render_markdown(&a, all));
+            let regressions = a.regressions();
+            if !regressions.is_empty() {
+                for d in &regressions {
+                    eprintln!(
+                        "regression: {} {:.4} -> {:.4} (ratio {:.3})",
+                        d.path, d.old, d.new, d.ratio
+                    );
+                }
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

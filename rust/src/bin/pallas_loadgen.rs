@@ -1,0 +1,49 @@
+//! `pallas-loadgen` — deterministic seeded load/chaos generator for a
+//! live `gpgpu-sne serve` (or `router`) endpoint.
+//!
+//! See [`gpgpu_sne::tools::loadgen`] for the model. Exit code 0 when
+//! every hard invariant held, 1 otherwise; the JSON summary goes to
+//! stdout either way.
+
+use std::time::Duration;
+
+use gpgpu_sne::tools::loadgen::{run, LoadgenConfig};
+use gpgpu_sne::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = LoadgenConfig {
+        addr: args.str("addr", "127.0.0.1:7001", "serve/router endpoint to drive"),
+        seed: args.get("seed", 1u64, "plan seed; same seed => same job accounting"),
+        clients: args.get("clients", 8usize, "concurrent client connections"),
+        jobs_per_client: args.get("jobs", 2usize, "jobs each client submits in sequence"),
+        n: args.get("n", 64usize, "points per submitted dataset"),
+        iters: args.get("iters", 120usize, "iterations for bounded (run/watch) jobs"),
+        fault_spec: args.opt_str("fault", "fault spec to arm mid-run (chaos mode)"),
+        timeout: Duration::from_secs(args.get(
+            "timeout-s",
+            300u64,
+            "hard wall clock for the whole run; exceeding it fails",
+        )),
+        skew_tolerance: args.get(
+            "skew-tolerance",
+            4.0f64,
+            "multiplicative band around the nominal 3:1 interleave",
+        ),
+    };
+    match run(&cfg) {
+        Ok(summary) => {
+            println!("{}", summary.to_json(&cfg));
+            if !summary.ok() {
+                for v in &summary.violations {
+                    eprintln!("violation: {v}");
+                }
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

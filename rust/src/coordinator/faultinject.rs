@@ -374,6 +374,125 @@ mod tests {
     }
 
     #[test]
+    fn prop_valid_trigger_specs_round_trip_through_display() {
+        use crate::util::prop::{check, Gen};
+        let valid = Gen::new(|r: &mut crate::util::rng::Rng| -> (String, u64) {
+            match r.below(4) {
+                0 => ("once".to_string(), 0),
+                1 => (format!("every:{}", r.below(1_000_000) + 1), 0),
+                2 => (format!("prob:{}", r.f64()), 0),
+                _ => {
+                    let seed = r.next_u64() | 1; // nonzero, so the echo is visible
+                    (format!("prob:{}@{seed}", r.f64()), seed)
+                }
+            }
+        });
+        check("faultinject.trigger_round_trip", &valid, |(spec, want_seed)| {
+            let (trig, seed) =
+                parse_trigger(spec).map_err(|e| format!("valid spec rejected: {e}"))?;
+            if seed != *want_seed {
+                return Err(format!("seed {seed} != expected {want_seed}"));
+            }
+            // Display drops the seed (it is rng state, not grammar), but
+            // must reproduce the trigger shape exactly — including f64
+            // probabilities, whose Display is shortest-round-trip.
+            let shown = trig.to_string();
+            let (trig2, seed2) =
+                parse_trigger(&shown).map_err(|e| format!("display form '{shown}' rejected: {e}"))?;
+            if trig2 != trig || seed2 != 0 {
+                return Err(format!("{spec} -> {trig} -> {trig2} (seed {seed2})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_invalid_specs_are_structured_errors_and_arm_nothing() {
+        use crate::util::prop::{check, Gen};
+        let _l = lock();
+        disarm_all();
+        const BADS: &[&str] = &[
+            "",
+            ":",
+            "sometimes",
+            "Once",
+            "once:1",
+            "every:",
+            "every:0",
+            "every:-3",
+            "every:abc",
+            "every:1 extra",
+            "prob:",
+            "prob:abc",
+            "prob:1.0.1",
+            "prob:0.5@",
+            "prob:0.5@x",
+            "prob:0.5@-1",
+            "prob:1.5",
+            "prob:-0.2",
+            "prob:NaN",
+            "prob:inf",
+        ];
+        let bad = Gen::new(|r: &mut crate::util::rng::Rng| BADS[r.below(BADS.len())].to_string());
+        check("faultinject.invalid_specs_reject", &bad, |trig| {
+            // Through the full spec surface (parse + range validation in
+            // `arm`): an Err, never a panic, and the registry untouched.
+            match arm_spec(&format!("test.point={trig}")) {
+                Ok(()) => return Err(format!("'{trig}' was accepted")),
+                Err(msg) if msg.is_empty() => return Err("empty error message".into()),
+                Err(_) => {}
+            }
+            if enabled() || !status().is_empty() {
+                disarm_all();
+                return Err(format!("failed arm of '{trig}' left state behind"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_arbitrary_trigger_text_never_panics_the_parser() {
+        use crate::util::prop::{check, Gen};
+        let junk = Gen::new(|r: &mut crate::util::rng::Rng| -> String {
+            let len = r.below(12);
+            (0..len)
+                .map(|_| {
+                    // Bias towards grammar-adjacent characters so the fuzz
+                    // walks the parser's edges, not just its front door.
+                    const ALPHA: &[u8] = b"oncevry:[email protected] \t-+eE";
+                    ALPHA[r.below(ALPHA.len())] as char
+                })
+                .collect()
+        });
+        check("faultinject.parser_total", &junk, |s| {
+            if let Ok((trig, _)) = parse_trigger(s) {
+                // Whatever parses must re-parse from its display form.
+                parse_trigger(&trig.to_string())
+                    .map_err(|e| format!("'{s}' parsed to '{trig}' which rejects: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_prob_firing_replays_exactly_for_a_seed() {
+        use crate::util::prop::{check2, f32_in, Gen};
+        let _l = lock();
+        let seeds = Gen::new(|r: &mut crate::util::rng::Rng| r.next_u64());
+        check2("faultinject.prob_seed_replay", &f32_in(0.05, 0.95), &seeds, |p, seed| {
+            let run = || -> Result<Vec<bool>, String> {
+                let _g = guard(&format!("test.point=prob:{p}@{seed}"))?;
+                Ok((0..256).map(|_| fire(TEST_POINT)).collect())
+            };
+            let (a, b) = (run()?, run()?);
+            if a != b {
+                return Err(format!("prob:{p}@{seed} did not replay identically"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn multi_point_spec_arms_every_part() {
         let _l = lock();
         let _g = guard("test.point=prob:1@3, test.point=every:2").unwrap();

@@ -292,6 +292,145 @@ fn key_file(dir: &Path, prefix: &str, key_bytes: &[u8]) -> PathBuf {
     dir.join(format!("{prefix}-{:016x}.rec", fnv1a(key_bytes)))
 }
 
+/// Why a record's raw bytes failed verification — the read-only twin of
+/// the defect cases [`read_record`] folds into `None`. `pallas-fsck`
+/// reports these instead of deleting (deletion is [`read_record`]'s
+/// self-healing behaviour, never a dry-run's).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecordDefect {
+    /// Shorter than one record header.
+    Truncated,
+    /// The 8-byte magic is not `GSNESTR1`.
+    BadMagic,
+    /// Header kind byte differs from the expected kind.
+    WrongKind { expected: u8, found: u8 },
+    /// Format version this build does not understand.
+    BadVersion { found: u16 },
+    /// Payload length in the header disagrees with the file size.
+    LengthMismatch { header: u64, actual: u64 },
+    /// FNV-1a checksum over the payload does not match the header.
+    ChecksumMismatch,
+}
+
+impl std::fmt::Display for RecordDefect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecordDefect::Truncated => write!(f, "truncated (shorter than a record header)"),
+            RecordDefect::BadMagic => write!(f, "bad magic"),
+            RecordDefect::WrongKind { expected, found } => {
+                write!(f, "kind '{}' where '{}' expected", *found as char, *expected as char)
+            }
+            RecordDefect::BadVersion { found } => write!(f, "unknown record version {found}"),
+            RecordDefect::LengthMismatch { header, actual } => {
+                write!(f, "payload length {header} in header, {actual} on disk")
+            }
+            RecordDefect::ChecksumMismatch => write!(f, "checksum mismatch"),
+        }
+    }
+}
+
+/// Verify one record's raw bytes against the framing contract and return
+/// the payload slice. Pure: unlike [`read_record`] this never touches
+/// the filesystem, so fsck's dry-run can probe a store without mutating
+/// it byte-for-byte.
+pub fn verify_record_bytes(bytes: &[u8], kind: u8) -> Result<&[u8], RecordDefect> {
+    if bytes.len() < HEADER_LEN {
+        return Err(RecordDefect::Truncated);
+    }
+    if &bytes[..8] != RECORD_MAGIC {
+        return Err(RecordDefect::BadMagic);
+    }
+    if bytes[8] != kind {
+        return Err(RecordDefect::WrongKind { expected: kind, found: bytes[8] });
+    }
+    let version = u16::from_le_bytes(bytes[9..11].try_into().unwrap());
+    if version != RECORD_VERSION {
+        return Err(RecordDefect::BadVersion { found: version });
+    }
+    let len = u64::from_le_bytes(bytes[11..19].try_into().unwrap());
+    let actual = (bytes.len() - HEADER_LEN) as u64;
+    if len != actual {
+        return Err(RecordDefect::LengthMismatch { header: len, actual });
+    }
+    let sum = u64::from_le_bytes(bytes[19..27].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    if fnv1a(payload) != sum {
+        return Err(RecordDefect::ChecksumMismatch);
+    }
+    Ok(payload)
+}
+
+/// Deep structural check of a verified payload: decodes it the way the
+/// store/journal readers would and returns the file name the record
+/// *should* live under (its key echo hashed the way [`key_file`] names
+/// files, or `job-<id>.job` for journal entries). A name that disagrees
+/// with the actual file means the record can never be found by its key
+/// — fsck reports it as misplaced. Pure and total over arbitrary bytes.
+pub fn fsck_payload_check(kind: u8, payload: &[u8]) -> Result<String, String> {
+    match kind {
+        KIND_GRAPH => {
+            let mut rd = Rd(payload);
+            let key = decode_graph_key(&mut rd).ok_or("graph key echo truncated")?;
+            let n = rd.u64().ok_or("missing n")? as usize;
+            let k = rd.u64().ok_or("missing k")? as usize;
+            let len = n.checked_mul(k).ok_or("n*k overflows")?;
+            let idx = rd.u32s(len).ok_or("neighbour indices truncated")?;
+            rd.f32s(len).ok_or("neighbour distances truncated")?;
+            if !rd.done() {
+                return Err("trailing bytes after graph payload".into());
+            }
+            if idx.iter().any(|&i| i as usize >= n) {
+                return Err(format!("neighbour index out of range (n={n})"));
+            }
+            let mut kb = Vec::with_capacity(25);
+            encode_graph_key(&key, &mut kb);
+            Ok(format!("g-{:016x}.rec", fnv1a(&kb)))
+        }
+        KIND_P => {
+            let mut rd = Rd(payload);
+            let key = decode_sim_key(&mut rd).ok_or("P key echo truncated")?;
+            rd.f32().ok_or("missing perplexity")?;
+            let n_rows = rd.u64().ok_or("missing n_rows")? as usize;
+            let n_cols = rd.u64().ok_or("missing n_cols")? as usize;
+            let nnz = rd.u64().ok_or("missing nnz")? as usize;
+            let row_ptr: Vec<usize> = rd
+                .u64s(n_rows.checked_add(1).ok_or("n_rows overflows")?)
+                .ok_or("row_ptr truncated")?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            let col = rd.u32s(nnz).ok_or("columns truncated")?;
+            rd.f32s(nnz).ok_or("values truncated")?;
+            if !rd.done() {
+                return Err("trailing bytes after P payload".into());
+            }
+            if !row_ptr.windows(2).all(|w| w[0] <= w[1])
+                || row_ptr.first() != Some(&0)
+                || row_ptr.last() != Some(&nnz)
+            {
+                return Err("row_ptr is not a monotone [0..=nnz] ramp".into());
+            }
+            if col.iter().any(|&c| c as usize >= n_cols) {
+                return Err(format!("column index out of range (n_cols={n_cols})"));
+            }
+            let mut kb = Vec::with_capacity(29);
+            encode_sim_key(&key, &mut kb);
+            Ok(format!("p-{:016x}.rec", fnv1a(&kb)))
+        }
+        KIND_JOB => {
+            let mut rd = Rd(payload);
+            let id = rd.u64().ok_or("missing job id")?;
+            let spec_len = rd.u64().ok_or("missing spec length")? as usize;
+            let spec = rd.take(spec_len).ok_or("spec truncated")?;
+            std::str::from_utf8(spec).map_err(|_| "spec is not utf-8")?;
+            // The remainder is the checkpoint blob: opaque here (its own
+            // codec validates on re-admission), any length allowed.
+            Ok(format!("job-{id}.job"))
+        }
+        other => Err(format!("unknown record kind '{}'", other as char)),
+    }
+}
+
 /// The on-disk half of the two-level similarity store: level-1 kNN-graph
 /// records and level-2 joint-P records, keyed by a filename hash with the
 /// full key echoed (and verified) inside the payload. Writes are
@@ -702,6 +841,85 @@ mod tests {
             .collect();
         assert!(leftover.is_empty(), "orphaned tmp files must be reaped, got {leftover:?}");
         assert!(store.load_graph(&graph_key()).is_some(), "healthy records survive the reap");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_record_bytes_is_pure_and_classifies_defects() {
+        let dir = tmp_dir("verify");
+        let path = dir.join("x.rec");
+        write_record(&path, KIND_GRAPH, b"payload bytes").unwrap();
+        let healthy = std::fs::read(&path).unwrap();
+        assert_eq!(verify_record_bytes(&healthy, KIND_GRAPH).unwrap(), b"payload bytes");
+        assert_eq!(
+            verify_record_bytes(&healthy, KIND_P),
+            Err(RecordDefect::WrongKind { expected: KIND_P, found: KIND_GRAPH })
+        );
+        assert_eq!(verify_record_bytes(&healthy[..10], KIND_GRAPH), Err(RecordDefect::Truncated));
+        let mut bad = healthy.clone();
+        bad[0] ^= 0xff;
+        assert_eq!(verify_record_bytes(&bad, KIND_GRAPH), Err(RecordDefect::BadMagic));
+        let mut bad = healthy.clone();
+        bad[9] = 0xff;
+        assert_eq!(
+            verify_record_bytes(&bad, KIND_GRAPH),
+            Err(RecordDefect::BadVersion { found: u16::from_le_bytes([0xff, bad[10]]) })
+        );
+        let mut bad = healthy.clone();
+        bad.pop();
+        assert!(matches!(
+            verify_record_bytes(&bad, KIND_GRAPH),
+            Err(RecordDefect::LengthMismatch { .. })
+        ));
+        let mut bad = healthy.clone();
+        *bad.last_mut().unwrap() ^= 0xff;
+        assert_eq!(verify_record_bytes(&bad, KIND_GRAPH), Err(RecordDefect::ChecksumMismatch));
+        // Pure by contract: the defective file is still on disk, intact.
+        assert_eq!(std::fs::read(&path).unwrap(), healthy);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsck_payload_check_names_healthy_records_and_rejects_structure() {
+        let dir = tmp_dir("fsck-payload");
+        let store = SimStore::open(&dir).unwrap();
+        store.store_graph(&graph_key(), &graph());
+        store.store_p(&sim_key(), &sparse_p());
+        // Every record's deep check returns exactly the name it sits
+        // under — the key echo and the filename hash agree.
+        for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+            let name = entry.file_name().to_str().unwrap().to_string();
+            let kind = if name.starts_with("g-") { KIND_GRAPH } else { KIND_P };
+            let bytes = std::fs::read(entry.path()).unwrap();
+            let payload = verify_record_bytes(&bytes, kind).unwrap();
+            assert_eq!(fsck_payload_check(kind, payload).unwrap(), name);
+        }
+        // Journal entries name themselves by their echoed id.
+        let j = JobJournal::open(&dir.join("jobs")).unwrap();
+        j.write(42, r#"{"dataset":"gaussians"}"#, b"ckpt");
+        let bytes = std::fs::read(dir.join("jobs").join("job-42.job")).unwrap();
+        let payload = verify_record_bytes(&bytes, KIND_JOB).unwrap();
+        assert_eq!(fsck_payload_check(KIND_JOB, payload).unwrap(), "job-42.job");
+        // Structurally invalid content fails the deep check even though
+        // the record framing (checksum included) is pristine.
+        let mut bad = graph();
+        bad.idx[0] = 99;
+        store.store_graph(&graph_key(), &bad);
+        let gname = format!(
+            "g-{:016x}.rec",
+            fnv1a(&{
+                let mut kb = Vec::new();
+                encode_graph_key(&graph_key(), &mut kb);
+                kb
+            })
+        );
+        let bytes = std::fs::read(dir.join(&gname)).unwrap();
+        let payload = verify_record_bytes(&bytes, KIND_GRAPH).unwrap();
+        assert!(fsck_payload_check(KIND_GRAPH, payload).is_err());
+        // Arbitrary garbage is an error, never a panic.
+        assert!(fsck_payload_check(KIND_P, b"\x01\x02\x03").is_err());
+        assert!(fsck_payload_check(KIND_JOB, b"").is_err());
+        assert!(fsck_payload_check(b'Z', b"").is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

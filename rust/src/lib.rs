@@ -40,6 +40,7 @@ pub mod hd;
 pub mod metrics;
 pub mod obs;
 pub mod runtime;
+pub mod tools;
 pub mod util;
 
 /// Crate-wide result alias (anyhow is in the offline dependency closure).

@@ -65,6 +65,10 @@ fn print_help() {
                    see docs/PROTOCOL.md `migrate`/`cluster_stats`/`hello`)\n\
          info     (artifact + platform report)\n\
          datasets (Table 1)\n\n\
+         Ops tools ship as separate binaries (README § Operations):\n\
+         pallas-loadgen (seeded load/chaos against a live serve),\n\
+         pallas-bench-trend (bench-history regression gate),\n\
+         pallas-fsck (state-dir integrity; dry-run by default).\n\n\
          Run `make artifacts` first to enable the gpgpu engine."
     );
 }

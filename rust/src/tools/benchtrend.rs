@@ -1,0 +1,410 @@
+//! `pallas-bench-trend`: the cross-run perf gate over
+//! `BENCH_history.jsonl`.
+//!
+//! CI appends one `{"commit","run","date","bench":<BENCH_micro.json>}`
+//! line per run (see `.github/workflows/ci.yml`); this module parses the
+//! series, flattens every numeric leaf of each `bench` snapshot into a
+//! dotted path (arrays keyed by their elements' `name`/`workers` field),
+//! diffs the newest entry against a baseline, and gates the diff with
+//! per-section [`Rule`]s. The default rules reproduce the two inline
+//! gates the workflow used to carry:
+//!
+//! * `simd.kernels.*.speedup` — higher is better, fail on a >10% drop.
+//!   Ratios, not raw ns, so runner-speed drift cancels out; skipped
+//!   entirely when `simd.tier` changed between the two entries (a
+//!   different runner CPU is not a regression).
+//! * `cluster.placements.*.owner_of_ns` — lower is better, fail only on
+//!   a >2× blow-up (the bench itself pins the absolute budget; the
+//!   trend gate only catches gross cross-run regressions).
+//!
+//! Everything else in the snapshot is rendered in the trend table but
+//! not gated. Fewer than two comparable entries ⇒ nothing to diff, the
+//! gate passes (first run after a section lands, or a cold CI cache).
+
+use crate::util::json::{self, Json};
+
+/// One parsed line of `BENCH_history.jsonl`.
+pub struct Entry {
+    pub commit: String,
+    pub date: String,
+    pub bench: Json,
+}
+
+/// Parse the history file's contents. Unparseable lines are an error —
+/// a gate that silently skips garbage would pass on a corrupt artifact.
+pub fn parse_history(text: &str) -> Result<Vec<Entry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("history line {}: {e}", i + 1))?;
+        let bench =
+            v.get("bench").cloned().ok_or_else(|| format!("history line {}: no bench", i + 1))?;
+        out.push(Entry {
+            commit: v.str_field("commit").unwrap_or("?").to_string(),
+            date: v.str_field("date").unwrap_or("?").to_string(),
+            bench,
+        });
+    }
+    Ok(out)
+}
+
+/// Flatten every numeric leaf into `(dotted.path, value)`. Array
+/// elements are keyed by a `name` (string) or `workers` (number) field
+/// when they carry one — so `simd.kernels[{name:"gd_fused",speedup:2}]`
+/// becomes `simd.kernels.gd_fused.speedup` and stays comparable across
+/// runs even if the array order changes — falling back to the index.
+pub fn flatten(bench: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    walk("", bench, &mut out);
+    out
+}
+
+fn walk(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Num(n) => out.push((prefix.to_string(), *n)),
+        Json::Obj(fields) => {
+            for (k, val) in fields {
+                let path = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                walk(&path, val, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let key = item
+                    .str_field("name")
+                    .map(str::to_string)
+                    .or_else(|| item.num_field("workers").map(|w| format!("{}", w as i64)))
+                    .unwrap_or_else(|| i.to_string());
+                walk(&format!("{prefix}.{key}"), item, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Which way a metric improves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// e.g. a speedup ratio: a drop is the regression.
+    HigherIsBetter,
+    /// e.g. a latency: a rise is the regression.
+    LowerIsBetter,
+}
+
+/// A gating rule: paths matching `pattern` (dot-separated, `*` matches
+/// one segment) regress when they move against `direction` by more than
+/// `tolerance` (fractional: 0.10 ⇒ 10% worse, 1.0 ⇒ 2× worse).
+pub struct Rule {
+    pub pattern: &'static str,
+    pub direction: Direction,
+    pub tolerance: f64,
+    /// Skip this rule entirely when the value at this path differs
+    /// between baseline and current (e.g. the SIMD dispatch tier — a
+    /// different runner CPU is not a regression).
+    pub guard_path: Option<&'static str>,
+}
+
+/// The rules CI gates on — the formalisation of the workflow's old
+/// inline checks.
+pub fn default_rules() -> Vec<Rule> {
+    vec![
+        Rule {
+            pattern: "simd.kernels.*.speedup",
+            direction: Direction::HigherIsBetter,
+            tolerance: 0.10,
+            guard_path: Some("simd.tier"),
+        },
+        Rule {
+            pattern: "cluster.placements.*.owner_of_ns",
+            direction: Direction::LowerIsBetter,
+            tolerance: 1.0,
+            guard_path: None,
+        },
+    ]
+}
+
+fn path_matches(pattern: &str, path: &str) -> bool {
+    let ps: Vec<&str> = pattern.split('.').collect();
+    let xs: Vec<&str> = path.split('.').collect();
+    ps.len() == xs.len() && ps.iter().zip(&xs).all(|(p, x)| *p == "*" || p == x)
+}
+
+/// One flattened metric's movement between baseline and current.
+pub struct Delta {
+    pub path: String,
+    pub old: f64,
+    pub new: f64,
+    /// `new / old` (NaN when `old` is 0 or not finite).
+    pub ratio: f64,
+    /// Whether a rule gates this path.
+    pub gated: bool,
+    /// Gated and moved against its direction past tolerance.
+    pub regressed: bool,
+}
+
+/// The full trend analysis between two history entries.
+pub struct Analysis {
+    pub baseline_commit: String,
+    pub current_commit: String,
+    pub deltas: Vec<Delta>,
+    /// Human-readable notes on anything the gate chose not to judge
+    /// (guard-path skips, missing baselines) — a gate that silently
+    /// narrows its own coverage reads as "everything passed".
+    pub skipped: Vec<String>,
+}
+
+impl Analysis {
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+}
+
+/// Diff `cur` against `prev` under `rules`.
+pub fn compare(prev: &Entry, cur: &Entry, rules: &[Rule]) -> Analysis {
+    let old: Vec<(String, f64)> = flatten(&prev.bench);
+    let lookup = |path: &str| old.iter().find(|(p, _)| p == path).map(|&(_, v)| v);
+    let mut skipped = Vec::new();
+    // Resolve guard paths once: a rule whose guard value changed (or is
+    // string-valued — compare via the raw Json) is disabled for this diff.
+    let guard_changed = |guard: &str| -> bool {
+        let a = json_at(&prev.bench, guard);
+        let b = json_at(&cur.bench, guard);
+        match (a, b) {
+            (Some(x), Some(y)) => x.to_string() != y.to_string(),
+            _ => false,
+        }
+    };
+    let active: Vec<(&Rule, bool)> = rules
+        .iter()
+        .map(|r| {
+            let disabled = r.guard_path.map(guard_changed).unwrap_or(false);
+            if disabled {
+                skipped.push(format!(
+                    "rule '{}' skipped: guard {} changed between {} and {}",
+                    r.pattern,
+                    r.guard_path.unwrap(),
+                    prev.commit,
+                    cur.commit
+                ));
+            }
+            (r, disabled)
+        })
+        .collect();
+    let mut deltas = Vec::new();
+    for (path, new) in flatten(&cur.bench) {
+        let Some(old_v) = lookup(&path) else {
+            continue; // new metric: nothing to diff against yet
+        };
+        let ratio = if old_v.is_finite() && old_v != 0.0 { new / old_v } else { f64::NAN };
+        let rule = active
+            .iter()
+            .find(|(r, disabled)| !disabled && path_matches(r.pattern, &path))
+            .map(|(r, _)| *r);
+        let regressed = match rule {
+            Some(r) if ratio.is_finite() => match r.direction {
+                Direction::HigherIsBetter => ratio < 1.0 - r.tolerance,
+                Direction::LowerIsBetter => ratio > 1.0 + r.tolerance,
+            },
+            _ => false,
+        };
+        deltas.push(Delta { path, old: old_v, new, ratio, gated: rule.is_some(), regressed });
+    }
+    Analysis {
+        baseline_commit: prev.commit.clone(),
+        current_commit: cur.commit.clone(),
+        deltas,
+        skipped,
+    }
+}
+
+fn json_at<'a>(v: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = v;
+    for seg in path.split('.') {
+        cur = cur.get(seg)?;
+    }
+    Some(cur)
+}
+
+/// Analyze the history: newest entry vs `baseline` (a commit prefix) or
+/// the second-newest. `Ok(None)` when there is nothing to diff.
+pub fn analyze(
+    entries: &[Entry],
+    baseline: Option<&str>,
+    rules: &[Rule],
+) -> Result<Option<Analysis>, String> {
+    let Some(cur) = entries.last() else {
+        return Ok(None);
+    };
+    let prev = match baseline {
+        Some(c) => Some(
+            entries[..entries.len() - 1]
+                .iter()
+                .rev()
+                .find(|e| e.commit.starts_with(c))
+                .ok_or_else(|| format!("baseline commit '{c}' not in history"))?,
+        ),
+        None => entries[..entries.len() - 1].last(),
+    };
+    Ok(prev.map(|p| compare(p, cur, rules)))
+}
+
+/// Render the trend table as markdown. `all` includes ungated metrics;
+/// otherwise only gated paths (plus any regression) are shown.
+pub fn render_markdown(a: &Analysis, all: bool) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "## Bench trend: {} → {}\n",
+        &a.baseline_commit[..a.baseline_commit.len().min(12)],
+        &a.current_commit[..a.current_commit.len().min(12)]
+    );
+    let _ = writeln!(out, "| metric | baseline | current | ratio | verdict |");
+    let _ = writeln!(out, "|---|---|---|---|---|");
+    for d in &a.deltas {
+        if !all && !d.gated && !d.regressed {
+            continue;
+        }
+        let verdict = if d.regressed {
+            "REGRESSED"
+        } else if d.gated {
+            "ok"
+        } else {
+            "-"
+        };
+        let _ = writeln!(
+            out,
+            "| {} | {:.4} | {:.4} | {:.3} | {} |",
+            d.path, d.old, d.new, d.ratio, verdict
+        );
+    }
+    for s in &a.skipped {
+        let _ = writeln!(out, "\n> skipped: {s}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(commit: &str, bench: &str) -> Entry {
+        Entry {
+            commit: commit.into(),
+            date: "2026-01-01".into(),
+            bench: json::parse(bench).unwrap(),
+        }
+    }
+
+    fn simd_bench(tier: &str, speedup: f64) -> String {
+        format!(
+            r#"{{"simd":{{"tier":"{tier}","kernels":[{{"name":"gd_fused","speedup":{speedup}}},{{"name":"splat","speedup":3.0}}]}},"cluster":{{"placements":[{{"workers":4,"owner_of_ns":100.0}},{{"workers":16,"owner_of_ns":220.0}}]}},"sched":{{"quantum_ns":5.0}}}}"#
+        )
+    }
+
+    #[test]
+    fn history_parses_and_flattens_keyed_arrays() {
+        let l1 =
+            format!(r#"{{"commit":"aaa1","run":"1","date":"d","bench":{}}}"#, simd_bench("avx2", 2.0));
+        let l2 =
+            format!(r#"{{"commit":"bbb2","run":"2","date":"d","bench":{}}}"#, simd_bench("avx2", 2.1));
+        let text = format!("{l1}\n\n{l2}\n");
+        let entries = parse_history(&text).unwrap();
+        assert_eq!(entries.len(), 2);
+        let flat = flatten(&entries[0].bench);
+        let get = |p: &str| flat.iter().find(|(x, _)| x == p).map(|&(_, v)| v);
+        assert_eq!(get("simd.kernels.gd_fused.speedup"), Some(2.0));
+        assert_eq!(get("cluster.placements.16.owner_of_ns"), Some(220.0));
+        assert_eq!(get("sched.quantum_ns"), Some(5.0));
+        assert!(parse_history("not json\n").is_err());
+        assert!(parse_history(r#"{"commit":"x"}"#).is_err(), "bench-less lines are loud");
+    }
+
+    #[test]
+    fn injected_20_percent_speedup_regression_fails_the_gate() {
+        // The acceptance scenario: a kernel's speedup drops 20% between
+        // two runs — that must come out as a gated regression.
+        let prev = entry("aaa", &simd_bench("avx2", 2.5));
+        let cur = entry("bbb", &simd_bench("avx2", 2.0));
+        let a = compare(&prev, &cur, &default_rules());
+        let regs = a.regressions();
+        assert_eq!(regs.len(), 1, "exactly the dropped kernel regresses");
+        assert_eq!(regs[0].path, "simd.kernels.gd_fused.speedup");
+        assert!((regs[0].ratio - 0.8).abs() < 1e-9);
+        // A 5% wobble on the same rule stays green.
+        let cur_ok = entry("ccc", &simd_bench("avx2", 2.4));
+        assert!(compare(&prev, &cur_ok, &default_rules()).regressions().is_empty());
+    }
+
+    #[test]
+    fn latency_blowup_gates_only_past_2x() {
+        let prev = entry("aaa", &simd_bench("avx2", 2.0));
+        // 1.9× on owner_of_ns: within the deliberately lenient bound.
+        let mut near = simd_bench("avx2", 2.0);
+        near = near.replace("100.0", "190.0");
+        assert!(compare(&prev, &entry("bbb", &near), &default_rules())
+            .regressions()
+            .is_empty());
+        // 2.5× blows the gate.
+        let far = simd_bench("avx2", 2.0).replace("100.0", "250.0");
+        let a = compare(&prev, &entry("ccc", &far), &default_rules());
+        let regs = a.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].path, "cluster.placements.4.owner_of_ns");
+    }
+
+    #[test]
+    fn tier_change_disarms_the_simd_rule_but_not_the_cluster_rule() {
+        let prev = entry("aaa", &simd_bench("avx2", 2.5));
+        // Speedup halves AND the tier changed (different runner CPU):
+        // the simd rule is skipped, loudly.
+        let cur = entry("bbb", &simd_bench("scalar", 1.0));
+        let a = compare(&prev, &cur, &default_rules());
+        assert!(a.regressions().is_empty());
+        assert_eq!(a.skipped.len(), 1);
+        assert!(a.skipped[0].contains("simd.tier"), "{}", a.skipped[0]);
+        // The cluster rule still gates on the same diff.
+        let far = simd_bench("scalar", 1.0).replace("100.0", "300.0");
+        let a = compare(&prev, &entry("ccc", &far), &default_rules());
+        assert_eq!(a.regressions().len(), 1);
+        assert_eq!(a.regressions()[0].path, "cluster.placements.4.owner_of_ns");
+    }
+
+    #[test]
+    fn short_history_and_baseline_selection() {
+        let one = vec![entry("aaa", &simd_bench("avx2", 2.0))];
+        assert!(analyze(&one, None, &default_rules()).unwrap().is_none(), "nothing to diff");
+        assert!(analyze(&[], None, &default_rules()).unwrap().is_none());
+        let three = vec![
+            entry("aaa111", &simd_bench("avx2", 3.0)),
+            entry("bbb222", &simd_bench("avx2", 2.5)),
+            entry("ccc333", &simd_bench("avx2", 2.4)),
+        ];
+        // Default baseline: the adjacent previous entry — 4% drop, green.
+        let a = analyze(&three, None, &default_rules()).unwrap().unwrap();
+        assert_eq!(a.baseline_commit, "bbb222");
+        assert!(a.regressions().is_empty());
+        // Pinned baseline by commit prefix: 20% drop vs aaa111, red.
+        let a = analyze(&three, Some("aaa"), &default_rules()).unwrap().unwrap();
+        assert_eq!(a.baseline_commit, "aaa111");
+        assert_eq!(a.regressions().len(), 1);
+        assert!(analyze(&three, Some("zzz"), &default_rules()).is_err());
+    }
+
+    #[test]
+    fn markdown_table_shows_gated_rows_and_verdicts() {
+        let prev = entry("aaa111222333", &simd_bench("avx2", 2.5));
+        let cur = entry("bbb444555666", &simd_bench("avx2", 2.0));
+        let a = compare(&prev, &cur, &default_rules());
+        let md = render_markdown(&a, false);
+        assert!(md.contains("aaa111222333 → bbb444555666"));
+        assert!(md.contains("simd.kernels.gd_fused.speedup"));
+        assert!(md.contains("REGRESSED"));
+        assert!(!md.contains("sched.quantum_ns"), "ungated rows hidden by default");
+        let md_all = render_markdown(&a, true);
+        assert!(md_all.contains("sched.quantum_ns"));
+    }
+}

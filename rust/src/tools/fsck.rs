@@ -1,0 +1,342 @@
+//! `pallas-fsck`: offline integrity check (and optional repair) for a
+//! coordinator state dir.
+//!
+//! Walks the three record populations a `serve --state-dir` (or a
+//! router's `--state-dir`) accumulates —
+//!
+//! ```text
+//! <state-dir>/simstore/g-*.rec      kNN-graph records   (KIND_GRAPH)
+//! <state-dir>/simstore/p-*.rec      joint-P records     (KIND_P)
+//! <state-dir>/jobs/job-*.job        worker job journal  (KIND_JOB)
+//! <state-dir>/cluster-journal/*.job router job journal  (KIND_JOB)
+//! ```
+//!
+//! — and verifies each file's record framing (magic/kind/version/length/
+//! checksum via [`store::verify_record_bytes`]), its deep structure and
+//! key echo (via [`store::fsck_payload_check`]), and that the echoed key
+//! names exactly the file it sits under. Orphaned `*.tmp.*` files left
+//! by a writer killed between its tmp write and rename are reported too.
+//!
+//! **Dry-run by default**: with neither `repair` nor `compact` set the
+//! pass does only `std::fs::read` — it never deletes, rewrites, renames
+//! or creates anything, so the state dir is byte-for-byte untouched (the
+//! serving stack's own `read_record` deletes defective files as it goes;
+//! fsck deliberately does not share that self-healing behaviour).
+//! `repair` deletes corrupt/misplaced records and tmp orphans; `compact`
+//! additionally rewrites every healthy record atomically (fresh framing,
+//! one file per record, implies the `repair` deletions).
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::store::{self, KIND_GRAPH, KIND_JOB, KIND_P};
+use crate::util::json::Json;
+
+/// What a pass may do to the dir. `Default` is the read-only dry run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FsckOptions {
+    /// Delete corrupt/misplaced records and orphaned tmp files.
+    pub repair: bool,
+    /// Rewrite healthy records atomically (implies the repair deletions).
+    pub compact: bool,
+}
+
+impl FsckOptions {
+    fn mutating(&self) -> bool {
+        self.repair || self.compact
+    }
+}
+
+/// One defective file and why.
+pub struct Defect {
+    pub path: PathBuf,
+    pub reason: String,
+}
+
+/// The outcome of one pass.
+#[derive(Default)]
+pub struct FsckReport {
+    /// Record files examined (tmp orphans not included).
+    pub scanned: usize,
+    /// Framing + deep structure + key echo all verified.
+    pub healthy: usize,
+    /// Total bytes of healthy records.
+    pub healthy_bytes: u64,
+    /// Bad framing or bad structure.
+    pub corrupt: Vec<Defect>,
+    /// Healthy record sitting under a name its key echo disagrees with
+    /// (it can never be found by its key, so it is dead weight).
+    pub misplaced: Vec<Defect>,
+    /// `*.tmp.*` leftovers from a crashed writer.
+    pub orphaned_tmp: Vec<PathBuf>,
+    /// Files deleted (repair/compact only).
+    pub removed: usize,
+    /// Healthy records rewritten (compact only).
+    pub rewritten: usize,
+}
+
+impl FsckReport {
+    /// Clean ⇔ nothing is corrupt, misplaced, or orphaned.
+    pub fn clean(&self) -> bool {
+        self.corrupt.is_empty() && self.misplaced.is_empty() && self.orphaned_tmp.is_empty()
+    }
+
+    /// Machine-readable summary (what the bin prints).
+    pub fn to_json(&self) -> Json {
+        let defects = |v: &[Defect]| {
+            Json::Arr(
+                v.iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("path", Json::Str(d.path.display().to_string())),
+                            ("reason", Json::Str(d.reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("scanned", Json::Num(self.scanned as f64)),
+            ("healthy", Json::Num(self.healthy as f64)),
+            ("healthy_bytes", Json::Num(self.healthy_bytes as f64)),
+            ("corrupt", defects(&self.corrupt)),
+            ("misplaced", defects(&self.misplaced)),
+            (
+                "orphaned_tmp",
+                Json::Arr(
+                    self.orphaned_tmp
+                        .iter()
+                        .map(|p| Json::Str(p.display().to_string()))
+                        .collect(),
+                ),
+            ),
+            ("removed", Json::Num(self.removed as f64)),
+            ("rewritten", Json::Num(self.rewritten as f64)),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+}
+
+/// The record populations under a state dir: (subdir, filename suffix,
+/// expected kind keyed by filename prefix).
+fn kind_for(name: &str) -> Option<u8> {
+    if name.starts_with("g-") && name.ends_with(".rec") {
+        Some(KIND_GRAPH)
+    } else if name.starts_with("p-") && name.ends_with(".rec") {
+        Some(KIND_P)
+    } else if name.starts_with("job-") && name.ends_with(".job") {
+        Some(KIND_JOB)
+    } else {
+        None
+    }
+}
+
+/// Run one pass over `state_dir`. Missing subdirectories are fine (a
+/// worker dir has no `cluster-journal`, a router dir no `simstore`).
+pub fn run_fsck(state_dir: &Path, opts: &FsckOptions) -> std::io::Result<FsckReport> {
+    let mut report = FsckReport::default();
+    for sub in ["simstore", "jobs", "cluster-journal"] {
+        let dir = state_dir.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut names: Vec<PathBuf> =
+            std::fs::read_dir(&dir)?.flatten().map(|e| e.path()).collect();
+        names.sort();
+        for path in names {
+            let Some(name) = path.file_name().and_then(|n| n.to_str()).map(String::from) else {
+                continue;
+            };
+            if name.contains(".tmp.") {
+                report.orphaned_tmp.push(path);
+                continue;
+            }
+            let Some(kind) = kind_for(&name) else {
+                continue; // not ours: never judge (or delete) foreign files
+            };
+            report.scanned += 1;
+            let bytes = std::fs::read(&path)?;
+            let verdict = match store::verify_record_bytes(&bytes, kind) {
+                Err(d) => Err(d.to_string()),
+                Ok(payload) => {
+                    store::fsck_payload_check(kind, payload).map(|expected| (expected, payload))
+                }
+            };
+            match verdict {
+                Err(reason) => report.corrupt.push(Defect { path, reason }),
+                Ok((expected, _)) if expected != name => report.misplaced.push(Defect {
+                    path,
+                    reason: format!("key echo names '{expected}'"),
+                }),
+                Ok((_, payload)) => {
+                    report.healthy += 1;
+                    report.healthy_bytes += bytes.len() as u64;
+                    if opts.compact {
+                        // Atomic rewrite: same payload, fresh framing.
+                        store::write_record(&path, kind, payload)?;
+                        report.rewritten += 1;
+                    }
+                }
+            }
+        }
+    }
+    if opts.mutating() {
+        for d in report.corrupt.iter().chain(&report.misplaced) {
+            if std::fs::remove_file(&d.path).is_ok() {
+                report.removed += 1;
+            }
+        }
+        for p in &report.orphaned_tmp {
+            if std::fs::remove_file(p).is_ok() {
+                report.removed += 1;
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::KnnMethod;
+    use crate::coordinator::simcache::{GraphKey, SimKey};
+    use crate::coordinator::{JobJournal, SimStore};
+    use crate::hd::sparse::Csr;
+    use crate::hd::{KnnGraph, SparseP};
+    use std::collections::BTreeMap;
+
+    fn tmp_state_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gsne-fsck-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn graph_key() -> GraphKey {
+        GraphKey { fingerprint: 0xbeef, method: KnnMethod::Brute, k: 3, seed: 9 }
+    }
+
+    /// A state dir with two healthy sim records, one healthy journal
+    /// entry, one corrupt record, one misplaced record, one tmp orphan.
+    fn seeded_dir(name: &str) -> PathBuf {
+        let dir = tmp_state_dir(name);
+        let store = SimStore::open(&dir.join("simstore")).unwrap();
+        let g = KnnGraph {
+            n: 4,
+            k: 3,
+            idx: vec![1, 2, 3, 0, 2, 3, 0, 1, 3, 0, 1, 2],
+            d2: (0..12).map(|i| i as f32).collect(),
+        };
+        store.store_graph(&graph_key(), &g);
+        let p = SparseP {
+            csr: Csr::from_rows(2, 2, 2, vec![0, 1, 1, 0], vec![0.1, 0.4, 0.3, 0.2]),
+            perplexity: 12.0,
+        };
+        store.store_p(&SimKey { graph: graph_key(), perplexity_bits: 12.0f32.to_bits() }, &p);
+        let j = JobJournal::open(&dir.join("jobs")).unwrap();
+        j.write(7, r#"{"dataset":"gaussians","n":64}"#, b"checkpoint-bytes");
+        // Corrupt: a scribbled-over record under a record name.
+        std::fs::write(dir.join("simstore").join("g-0000000000000000.rec"), b"scribble")
+            .unwrap();
+        // Misplaced: a healthy journal record copied under the wrong id.
+        std::fs::copy(dir.join("jobs").join("job-7.job"), dir.join("jobs").join("job-9.job"))
+            .unwrap();
+        // Orphan: a crashed writer's tmp leftover.
+        std::fs::write(dir.join("simstore").join("p-aaaa.rec.tmp.4242"), b"half").unwrap();
+        dir
+    }
+
+    fn dir_bytes(dir: &Path) -> BTreeMap<PathBuf, Vec<u8>> {
+        let mut out = BTreeMap::new();
+        let mut stack = vec![dir.to_path_buf()];
+        while let Some(d) = stack.pop() {
+            for e in std::fs::read_dir(&d).unwrap().flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else {
+                    let bytes = std::fs::read(&p).unwrap();
+                    out.insert(p, bytes);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dry_run_reports_everything_and_mutates_nothing() {
+        let dir = seeded_dir("dry");
+        let before = dir_bytes(&dir);
+        let report = run_fsck(&dir, &FsckOptions::default()).unwrap();
+        // The defect census: 3 healthy, 1 corrupt, 1 misplaced, 1 orphan.
+        assert_eq!(report.scanned, 5);
+        assert_eq!(report.healthy, 3);
+        assert_eq!(report.corrupt.len(), 1);
+        assert!(report.corrupt[0].path.ends_with("g-0000000000000000.rec"));
+        assert_eq!(report.misplaced.len(), 1);
+        assert!(report.misplaced[0].path.ends_with("job-9.job"));
+        assert!(report.misplaced[0].reason.contains("job-7.job"), "{}", report.misplaced[0].reason);
+        assert_eq!(report.orphaned_tmp.len(), 1);
+        assert!(!report.clean());
+        assert_eq!((report.removed, report.rewritten), (0, 0));
+        // The satellite's contract: a read-only pass leaves every byte
+        // of the state dir identical — nothing deleted, written, moved.
+        assert_eq!(dir_bytes(&dir), before, "dry run must not mutate the state dir");
+        // And it is idempotent.
+        let again = run_fsck(&dir, &FsckOptions::default()).unwrap();
+        assert_eq!(again.scanned, 5);
+        assert_eq!(dir_bytes(&dir), before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repair_removes_defects_and_keeps_healthy_records_loadable() {
+        let dir = seeded_dir("repair");
+        let report =
+            run_fsck(&dir, &FsckOptions { repair: true, compact: false }).unwrap();
+        assert_eq!(report.removed, 3, "corrupt + misplaced + orphan");
+        let after = run_fsck(&dir, &FsckOptions::default()).unwrap();
+        assert!(after.clean());
+        assert_eq!(after.healthy, 3);
+        // The healthy population still round-trips through the real readers.
+        let store = SimStore::open(&dir.join("simstore")).unwrap();
+        assert!(store.load_graph(&graph_key()).is_some(), "repair must not touch healthy data");
+        let j = JobJournal::open(&dir.join("jobs")).unwrap();
+        let all = j.read_all();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].id, 7);
+        assert_eq!(all[0].checkpoint, b"checkpoint-bytes");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_rewrites_healthy_records_bit_identically() {
+        let dir = seeded_dir("compact");
+        let report = run_fsck(&dir, &FsckOptions { repair: false, compact: true }).unwrap();
+        assert_eq!(report.rewritten, 3);
+        assert_eq!(report.removed, 3, "compact implies the repair deletions");
+        // Same payload + same framing ⇒ the rewritten files verify and
+        // the store still serves them.
+        let after = run_fsck(&dir, &FsckOptions::default()).unwrap();
+        assert!(after.clean());
+        assert_eq!(after.healthy, 3);
+        let store = SimStore::open(&dir.join("simstore")).unwrap();
+        assert!(store.load_graph(&graph_key()).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_subdirs_and_foreign_files_are_ignored() {
+        let dir = tmp_state_dir("sparse");
+        // No simstore/jobs/cluster-journal at all.
+        let r = run_fsck(&dir, &FsckOptions::default()).unwrap();
+        assert_eq!(r.scanned, 0);
+        assert!(r.clean());
+        // A foreign file in a known subdir is not scanned (or deleted).
+        std::fs::create_dir_all(dir.join("simstore")).unwrap();
+        std::fs::write(dir.join("simstore").join("README.txt"), b"hands off").unwrap();
+        let r = run_fsck(&dir, &FsckOptions { repair: true, compact: false }).unwrap();
+        assert_eq!(r.scanned, 0);
+        assert!(dir.join("simstore").join("README.txt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,565 @@
+//! `pallas-loadgen`: a deterministic, seeded load/chaos generator for a
+//! live `serve` (or `router`) endpoint.
+//!
+//! Spawns N concurrent clients, each with its own TCP connection and a
+//! **plan derived purely from the seed**: per job a priority class
+//! (interactive/batch), a behaviour profile, and a dataset seed. The
+//! profiles cover the protocol surface the scheduler actually contends
+//! over:
+//!
+//! * `run`   — submit, wait for completion;
+//! * `watch` — submit, poll `snapshot` mid-run, wait;
+//! * `churn` — submit an effectively-endless job, `pause`/`resume`/
+//!   `checkpoint` it mid-run, then `stop`;
+//! * `kill`  — submit an effectively-endless job, `stop` it mid-run.
+//!
+//! Endless-job profiles always end `stopped`, bounded ones always end
+//! `completed` — so with no shedding, **job-outcome accounting is a
+//! pure function of the seed** (the reproducibility contract the CI
+//! `tools` job pins by running the same seed twice). Wall-clock
+//! latencies and server-side metrics ride along in the summary but are
+//! deliberately outside that contract; so is any run with `--fault`,
+//! which arms fault points mid-run and trades determinism for chaos.
+//!
+//! The run fails (non-zero exit from the bin) when a **hard invariant**
+//! breaks: every submitted job must reach a terminal account entry
+//! (no hangs — every wait is socket-timeout bounded, the whole run
+//! wall-clock bounded), nothing may fail outright, and when both
+//! priority classes ran long enough to contend, the scheduler's
+//! `quanta_interactive`/`quanta_batch` split must sit within tolerance
+//! of the nominal 3:1 interleave with neither class starved.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::protocol::{read_bounded_line, LineRead};
+use crate::util::bench::Stats;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Iteration count for `churn`/`kill` jobs: far beyond what any test
+/// window can complete, so their outcome is always `stopped`.
+const ENDLESS_ITERS: usize = 1_000_000;
+
+/// Nominal interactive:batch quantum ratio under contention — mirrors
+/// the scheduler's `BATCH_POP_PERIOD` = 4 (3 interactive pops per batch
+/// pop).
+pub const NOMINAL_SKEW: f64 = 3.0;
+
+/// Quanta both classes must have accumulated before the skew band is
+/// enforced (below this the ratio is startup noise, not scheduling).
+const SKEW_MIN_QUANTA: u64 = 200;
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// `host:port` of a live `serve` (or `router`) endpoint.
+    pub addr: String,
+    pub seed: u64,
+    pub clients: usize,
+    pub jobs_per_client: usize,
+    /// Points per dataset (`gaussians`).
+    pub n: usize,
+    /// Iterations for bounded (`run`/`watch`) jobs.
+    pub iters: usize,
+    /// Fault spec armed over the wire once the clients are running
+    /// (chaos mode; forfeits accounting determinism by design).
+    pub fault_spec: Option<String>,
+    /// Hard wall clock for the whole run — exceeding it IS the failure.
+    pub timeout: Duration,
+    /// Multiplicative fairness band around [`NOMINAL_SKEW`].
+    pub skew_tolerance: f64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7001".into(),
+            seed: 1,
+            clients: 8,
+            jobs_per_client: 2,
+            n: 64,
+            iters: 120,
+            fault_spec: None,
+            timeout: Duration::from_secs(300),
+            skew_tolerance: 4.0,
+        }
+    }
+}
+
+/// One client's record of one planned job.
+struct JobRecord {
+    class: &'static str,
+    profile: &'static str,
+    outcome: String,
+    /// Wall time of the final `wait` call (terminal outcomes only).
+    wait_s: Option<f64>,
+    ops_ok: u64,
+}
+
+/// The machine-readable run summary.
+pub struct Summary {
+    pub outcomes: BTreeMap<String, u64>,
+    pub per_class: BTreeMap<String, u64>,
+    pub per_profile: BTreeMap<String, u64>,
+    pub submitted: u64,
+    pub ops_ok: u64,
+    pub wait_s: Vec<f64>,
+    pub elapsed_s: f64,
+    /// (`quanta_interactive`, `quanta_batch`) from the server, if the
+    /// endpoint exposed the scheduler counters.
+    pub quanta: Option<(u64, u64)>,
+    pub deliver_lag: Option<Json>,
+    pub violations: Vec<String>,
+}
+
+impl Summary {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// The deterministic slice of the summary: what two runs with the
+    /// same seed against fresh servers must reproduce byte-for-byte.
+    pub fn accounting_json(&self) -> Json {
+        let map = |m: &BTreeMap<String, u64>| {
+            Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect())
+        };
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("outcomes", map(&self.outcomes)),
+            ("per_class", map(&self.per_class)),
+            ("per_profile", map(&self.per_profile)),
+            ("ops_ok", Json::Num(self.ops_ok as f64)),
+        ])
+    }
+
+    pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        let stats = Stats { samples: self.wait_s.clone() };
+        let pct = |q: f64| {
+            if self.wait_s.is_empty() {
+                Json::Null
+            } else {
+                Json::Num(stats.pct(q) * 1e3)
+            }
+        };
+        let fairness = match self.quanta {
+            Some((i, b)) => Json::obj(vec![
+                ("quanta_interactive", Json::Num(i as f64)),
+                ("quanta_batch", Json::Num(b as f64)),
+                (
+                    "skew",
+                    if b > 0 { Json::Num(i as f64 / b as f64) } else { Json::Null },
+                ),
+                ("nominal", Json::Num(NOMINAL_SKEW)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("seed", Json::Num(cfg.seed as f64)),
+            ("clients", Json::Num(cfg.clients as f64)),
+            ("jobs_per_client", Json::Num(cfg.jobs_per_client as f64)),
+            ("accounting", self.accounting_json()),
+            (
+                "wait_ms",
+                Json::obj(vec![("p50", pct(0.50)), ("p95", pct(0.95)), ("p99", pct(0.99))]),
+            ),
+            (
+                "snapshot_deliver_lag_ns",
+                self.deliver_lag.clone().unwrap_or(Json::Null),
+            ),
+            ("fairness", fairness),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            (
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            ),
+            ("ok", Json::Bool(self.ok())),
+        ])
+    }
+}
+
+/// One line-protocol connection (the chaos-harness client idiom).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn connect(addr: &str) -> Result<Self, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .map_err(|e| format!("set timeout: {e}"))?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| format!("clone: {e}"))?);
+        Ok(Conn { reader, writer: stream })
+    }
+
+    fn call(&mut self, line: &str) -> Result<Json, String> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .map_err(|e| format!("write: {e}"))?;
+        let mut buf = Vec::new();
+        match read_bounded_line(&mut self.reader, &mut buf, 64 << 20)
+            .map_err(|e| format!("read: {e}"))?
+        {
+            LineRead::Line => {}
+            other => return Err(format!("connection closed mid-call: {other:?}")),
+        }
+        let text = String::from_utf8_lossy(&buf);
+        json::parse(&text).map_err(|e| format!("bad response '{text}': {e}"))
+    }
+}
+
+fn is_ok(v: &Json) -> bool {
+    v.get("ok") == Some(&Json::Bool(true))
+}
+
+/// Retriable shed codes the protocol layer emits under admission
+/// control; anything else non-ok is a hard failure.
+fn is_shed(v: &Json) -> bool {
+    matches!(v.str_field("code"), Some("queue_full" | "server_busy" | "draining" | "no_workers"))
+}
+
+const PROFILES: [&str; 4] = ["run", "watch", "churn", "kill"];
+
+/// One client thread: execute its seeded plan, one connection, jobs in
+/// sequence (concurrency comes from the client count).
+fn client_run(cfg: &LoadgenConfig, client: usize, deadline: Instant) -> Vec<JobRecord> {
+    // Independent deterministic stream per client (golden-ratio stride
+    // keeps neighbouring client seeds decorrelated).
+    let mut rng = Rng::new(cfg.seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(client as u64 + 1)));
+    let mut records = Vec::with_capacity(cfg.jobs_per_client);
+    let mut conn = match Conn::connect(&cfg.addr) {
+        Ok(c) => c,
+        Err(e) => {
+            // Account every planned job so "all accounted" can still be
+            // checked (and still fail the run via no_failures).
+            for _ in 0..cfg.jobs_per_client {
+                records.push(JobRecord {
+                    class: "interactive",
+                    profile: "none",
+                    outcome: format!("failed: {e}"),
+                    wait_s: None,
+                    ops_ok: 0,
+                });
+            }
+            return records;
+        }
+    };
+    for _ in 0..cfg.jobs_per_client {
+        // The plan draws are unconditional and ordered, so the plan is
+        // identical across runs regardless of how the server behaves.
+        let class = if rng.below(2) == 0 { "interactive" } else { "batch" };
+        let profile = PROFILES[rng.below(PROFILES.len())];
+        let data_seed = rng.below(8) as u64;
+        records.push(run_one_job(cfg, &mut conn, class, profile, data_seed, deadline));
+    }
+    records
+}
+
+fn run_one_job(
+    cfg: &LoadgenConfig,
+    conn: &mut Conn,
+    class: &'static str,
+    profile: &'static str,
+    data_seed: u64,
+    deadline: Instant,
+) -> JobRecord {
+    let endless = matches!(profile, "churn" | "kill");
+    let iters = if endless { ENDLESS_ITERS } else { cfg.iters };
+    let mut rec =
+        JobRecord { class, profile, outcome: String::new(), wait_s: None, ops_ok: 0 };
+    let submit = format!(
+        r#"{{"cmd":"submit","dataset":"gaussians","n":{},"engine":"bh-0.5","iters":{iters},"perplexity":8,"knn":"brute","seed":{data_seed},"snapshot_every":1,"priority":"{class}"}}"#,
+        cfg.n
+    );
+    let v = match conn.call(&submit) {
+        Ok(v) => v,
+        Err(e) => {
+            rec.outcome = format!("failed: submit: {e}");
+            return rec;
+        }
+    };
+    if !is_ok(&v) {
+        rec.outcome = if is_shed(&v) {
+            "shed".into()
+        } else {
+            format!("failed: submit rejected: {v}")
+        };
+        return rec;
+    }
+    let Some(job) = v.num_field("job").map(|j| j as u64) else {
+        rec.outcome = "failed: submit returned no job id".into();
+        return rec;
+    };
+    // Mid-run phase. Endless jobs first spin until the job demonstrably
+    // runs (status shows an optimisation step) so stop always lands
+    // mid-flight — that pins the outcome to `stopped` deterministically.
+    if endless {
+        loop {
+            if Instant::now() >= deadline {
+                rec.outcome = format!("hung: job {job} never reached iter 1");
+                return rec;
+            }
+            match conn.call(&format!(r#"{{"cmd":"status","job":{job}}}"#)) {
+                Ok(s) if is_ok(&s) && s.num_field("iter").unwrap_or(0.0) >= 1.0 => break,
+                Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+                Err(e) => {
+                    rec.outcome = format!("failed: status: {e}");
+                    return rec;
+                }
+            }
+        }
+    }
+    let ops: &[&str] = match profile {
+        "watch" => &["snapshot", "snapshot", "snapshot"],
+        "churn" => &["pause", "resume", "checkpoint", "stop"],
+        "kill" => &["stop"],
+        _ => &[],
+    };
+    for op in ops {
+        let line = format!(r#"{{"cmd":"{op}","job":{job}}}"#);
+        match conn.call(&line) {
+            // `watch` polls race completion ("no snapshot yet" on a job
+            // that barely started, terminal errors late) — only the
+            // endless profiles' ops are deterministic successes.
+            Ok(r) if is_ok(&r) => rec.ops_ok += 1,
+            Ok(r) if endless => {
+                rec.outcome = format!("failed: {op} rejected: {r}");
+                return rec;
+            }
+            Ok(_) => {}
+            Err(e) => {
+                rec.outcome = format!("failed: {op}: {e}");
+                return rec;
+            }
+        }
+    }
+    let t = Instant::now();
+    match conn.call(&format!(r#"{{"cmd":"wait","job":{job}}}"#)) {
+        Ok(r) if is_ok(&r) => {
+            rec.wait_s = Some(t.elapsed().as_secs_f64());
+            let stopped = r.get("stopped_early") == Some(&Json::Bool(true));
+            rec.outcome = match (endless, stopped) {
+                (true, true) => "stopped".into(),
+                (false, false) => "completed".into(),
+                // An endless job that "completed" or a bounded job that
+                // stopped itself would break the accounting contract.
+                _ => format!("failed: unexpected terminal state: {r}"),
+            };
+        }
+        Ok(r) => rec.outcome = format!("failed: wait: {r}"),
+        Err(e) => rec.outcome = format!("hung: wait: {e}"),
+    }
+    rec
+}
+
+/// Pull the fairness counters and deliver-lag histogram off the server.
+fn server_metrics(conn: &mut Conn) -> (Option<(u64, u64)>, Option<Json>) {
+    let Ok(v) = conn.call(r#"{"cmd":"metrics"}"#) else {
+        return (None, None);
+    };
+    let m = v.get("metrics");
+    let counters = m.and_then(|m| m.get("service")).and_then(|s| s.get("counters"));
+    let quanta = counters.and_then(|c| {
+        Some((
+            c.num_field("scheduler.quanta_interactive")? as u64,
+            c.num_field("scheduler.quanta_batch")? as u64,
+        ))
+    });
+    let lag = m
+        .and_then(|m| m.get("global"))
+        .and_then(|g| g.get("histograms"))
+        .and_then(|h| h.get("snapshot.deliver_lag_ns"))
+        .cloned();
+    (quanta, lag)
+}
+
+/// Drive the full run against `cfg.addr`.
+pub fn run(cfg: &LoadgenConfig) -> Result<Summary, String> {
+    let start = Instant::now();
+    let deadline = start + cfg.timeout;
+    let mut control = Conn::connect(&cfg.addr)?;
+    let handles: Vec<std::thread::JoinHandle<Vec<JobRecord>>> = (0..cfg.clients)
+        .map(|c| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || client_run(&cfg, c, deadline))
+        })
+        .collect();
+    if let Some(spec) = &cfg.fault_spec {
+        let v = control.call(&format!(r#"{{"cmd":"fault","spec":"{spec}"}}"#))?;
+        if !is_ok(&v) {
+            return Err(format!("fault arm rejected: {v}"));
+        }
+    }
+    let mut records = Vec::new();
+    let mut violations = Vec::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(r) => records.extend(r),
+            Err(_) => violations.push(format!("client {i} panicked")),
+        }
+    }
+    if cfg.fault_spec.is_some() {
+        let _ = control.call(r#"{"cmd":"fault","clear":true}"#);
+    }
+    let (quanta, deliver_lag) = server_metrics(&mut control);
+    let elapsed = start.elapsed();
+
+    let mut outcomes: BTreeMap<String, u64> = BTreeMap::new();
+    let mut per_class = BTreeMap::new();
+    let mut per_profile = BTreeMap::new();
+    let mut ops_ok = 0;
+    let mut wait_s = Vec::new();
+    for r in &records {
+        // Failure details stay in the violation list; the accounting
+        // buckets are the coarse deterministic classes.
+        let bucket = r.outcome.split(':').next().unwrap_or("?").to_string();
+        *outcomes.entry(bucket).or_default() += 1;
+        *per_class.entry(r.class.to_string()).or_default() += 1;
+        *per_profile.entry(r.profile.to_string()).or_default() += 1;
+        ops_ok += r.ops_ok;
+        wait_s.extend(r.wait_s);
+        if r.outcome.starts_with("failed") || r.outcome.starts_with("hung") {
+            violations.push(format!("{}/{}: {}", r.class, r.profile, r.outcome));
+        }
+    }
+
+    // Hard invariants.
+    let planned = (cfg.clients * cfg.jobs_per_client) as u64;
+    let accounted: u64 = outcomes.values().sum();
+    if accounted != planned {
+        violations.push(format!("accounting hole: {accounted} of {planned} jobs accounted"));
+    }
+    if elapsed > cfg.timeout {
+        violations.push(format!(
+            "wall clock exceeded: {:.1}s > {:.1}s",
+            elapsed.as_secs_f64(),
+            cfg.timeout.as_secs_f64()
+        ));
+    }
+    let both_classes =
+        per_class.get("interactive").copied().unwrap_or(0) > 0
+            && per_class.get("batch").copied().unwrap_or(0) > 0;
+    if let (true, Some((qi, qb))) = (both_classes, quanta) {
+        if qi == 0 || qb == 0 {
+            violations.push(format!(
+                "starvation: quanta_interactive={qi}, quanta_batch={qb} with both classes submitted"
+            ));
+        } else if qi.min(qb) >= SKEW_MIN_QUANTA {
+            let skew = qi as f64 / qb as f64;
+            let (lo, hi) =
+                (NOMINAL_SKEW / cfg.skew_tolerance, NOMINAL_SKEW * cfg.skew_tolerance);
+            if skew < lo || skew > hi {
+                violations.push(format!(
+                    "fairness skew {skew:.2} outside [{lo:.2}, {hi:.2}] (nominal {NOMINAL_SKEW}:1)"
+                ));
+            }
+        }
+    }
+
+    Ok(Summary {
+        outcomes,
+        per_class,
+        per_profile,
+        submitted: planned,
+        ops_ok,
+        wait_s,
+        elapsed_s: elapsed.as_secs_f64(),
+        quanta,
+        deliver_lag,
+        violations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{protocol, EmbeddingService, ServiceConfig};
+    use std::sync::Arc;
+
+    fn start_server() -> (Arc<EmbeddingService>, std::net::SocketAddr) {
+        let svc = Arc::new(EmbeddingService::with_config(
+            None,
+            ServiceConfig { max_concurrent: 2, ..Default::default() },
+        ));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let svc2 = svc.clone();
+        std::thread::spawn(move || {
+            let _ = protocol::serve_with(svc2, "127.0.0.1:0", 256, move |a| {
+                let _ = tx.send(a);
+            });
+        });
+        let addr = rx.recv_timeout(Duration::from_secs(10)).expect("bind");
+        (svc, addr)
+    }
+
+    fn small_cfg(addr: &str) -> LoadgenConfig {
+        LoadgenConfig {
+            addr: addr.to_string(),
+            seed: 7,
+            clients: 4,
+            jobs_per_client: 2,
+            n: 64,
+            iters: 60,
+            timeout: Duration::from_secs(120),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn seeded_run_is_deterministic_and_accounts_every_job() {
+        // Two runs, same seed, each against its own fresh server: the
+        // accounting slice of the summary must be byte-identical — the
+        // CI tools job pins the same contract over a real `serve`.
+        let (_svc1, addr1) = start_server();
+        let s1 = run(&small_cfg(&addr1.to_string())).expect("first run");
+        assert!(s1.ok(), "violations: {:?}", s1.violations);
+        assert_eq!(s1.submitted, 8);
+        assert_eq!(s1.outcomes.values().sum::<u64>(), 8, "every job accounted");
+        assert!(s1.outcomes.get("completed").copied().unwrap_or(0) > 0);
+        let stopped = s1.outcomes.get("stopped").copied().unwrap_or(0);
+        let expect_stopped: u64 = s1
+            .per_profile
+            .iter()
+            .filter(|(p, _)| *p == "churn" || *p == "kill")
+            .map(|(_, c)| c)
+            .sum();
+        assert_eq!(stopped, expect_stopped, "endless profiles end stopped, exactly");
+
+        let (_svc2, addr2) = start_server();
+        let s2 = run(&small_cfg(&addr2.to_string())).expect("second run");
+        assert!(s2.ok(), "violations: {:?}", s2.violations);
+        assert_eq!(
+            s1.accounting_json().to_string(),
+            s2.accounting_json().to_string(),
+            "same seed against a fresh server must reproduce the accounting"
+        );
+
+        // A different seed draws a different plan (profiles/classes),
+        // which is the point of seeding.
+        let (_svc3, addr3) = start_server();
+        let mut other = small_cfg(&addr3.to_string());
+        other.seed = 8;
+        let s3 = run(&other).expect("third run");
+        assert!(s3.ok(), "violations: {:?}", s3.violations);
+        assert_eq!(s3.outcomes.values().sum::<u64>(), 8);
+
+        // The summary JSON carries the invariant verdict and fairness
+        // counters scraped from the live server.
+        let j = s1.to_json(&small_cfg(&addr1.to_string()));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert!(j.get("accounting").is_some());
+        assert!(s1.quanta.is_some(), "serve exposes the scheduler counters");
+    }
+
+    #[test]
+    fn unreachable_endpoint_fails_each_job_not_the_process() {
+        // A dead endpoint: `run` itself errors on the control
+        // connection — loudly, not a hang.
+        let cfg = small_cfg("127.0.0.1:1");
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Operational tool suite backing the `pallas-*` binaries.
+//!
+//! Small, sharp tools over the library's own substrates (the fpm-tools
+//! pattern: thin `src/bin/` entry points, all logic here where it is
+//! unit-testable):
+//!
+//! * [`loadgen`] — deterministic seeded load/chaos generator driving a
+//!   live `serve`/`router` endpoint over the line protocol
+//!   (`pallas-loadgen`);
+//! * [`benchtrend`] — `BENCH_history.jsonl` trend analysis and the CI
+//!   regression gate (`pallas-bench-trend`);
+//! * [`fsck`] — offline integrity checker for a `--state-dir`
+//!   (`pallas-fsck`), dry-run by default.
+//!
+//! Each binary prints a machine-readable JSON summary on stdout and
+//! reserves its exit code: 0 = clean, 1 = the tool's own verdict failed
+//! (invariant violation, regression, defective store), 2 = usage error.
+
+pub mod benchtrend;
+pub mod fsck;
+pub mod loadgen;

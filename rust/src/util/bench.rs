@@ -38,6 +38,18 @@ impl Stats {
         self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
     }
 
+    /// Nearest-rank percentile, `q` in [0, 1] (`pct(0.5)` ≈ median for
+    /// odd sample counts). NaN on an empty sample set.
+    pub fn pct(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q.clamp(0.0, 1.0) * s.len() as f64).ceil() as usize).max(1);
+        s[rank.min(s.len()) - 1]
+    }
+
     /// Median absolute deviation (robust spread).
     pub fn mad(&self) -> f64 {
         let med = self.median();
@@ -159,6 +171,19 @@ mod tests {
         assert_eq!(s.mad(), 1.0);
         let e = Stats { samples: vec![1.0, 3.0] };
         assert_eq!(e.median(), 2.0);
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let s = Stats { samples: (1..=100).map(|i| i as f64).collect() };
+        assert_eq!(s.pct(0.50), 50.0);
+        assert_eq!(s.pct(0.95), 95.0);
+        assert_eq!(s.pct(0.99), 99.0);
+        assert_eq!(s.pct(0.0), 1.0);
+        assert_eq!(s.pct(1.0), 100.0);
+        let one = Stats { samples: vec![7.0] };
+        assert_eq!(one.pct(0.5), 7.0);
+        assert!(Stats { samples: vec![] }.pct(0.5).is_nan());
     }
 
     #[test]

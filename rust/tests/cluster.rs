@@ -407,3 +407,111 @@ fn router_journal_survives_restart_and_readmits() {
     assert_eq!(done.num_field("iters"), Some(400.0), "{done}");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Structured-error assertion: `ok:false` with a non-empty `error`
+/// message containing `needle` — and, because `call` already parsed a
+/// full response line, the request demonstrably did not hang.
+fn assert_err_containing(v: &Json, needle: &str) {
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v}");
+    let msg = v.str_field("error").expect("structured error carries a message");
+    assert!(!msg.is_empty(), "{v}");
+    assert!(msg.contains(needle), "error '{msg}' should mention '{needle}'");
+}
+
+#[test]
+fn empty_fleet_answers_structurally_instead_of_hanging() {
+    let _l = lock();
+    let router = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+
+    // `cluster_stats` on a fleet of zero workers: a complete, well-typed
+    // answer — empty arrays, zero counters — not an error and not a hang.
+    let stats = call(&router, r#"{"cmd":"cluster_stats"}"#);
+    assert_ok(&stats);
+    assert_eq!(stats.get("workers").and_then(Json::as_arr).map(Vec::len), Some(0), "{stats}");
+    assert_eq!(stats.get("jobs").and_then(Json::as_arr).map(Vec::len), Some(0), "{stats}");
+    assert_eq!(stats.num_field("workers_up"), Some(0.0), "{stats}");
+    assert_eq!(stats.num_field("migrations"), Some(0.0), "{stats}");
+    assert_eq!(stats.num_field("failovers"), Some(0.0), "{stats}");
+
+    // Submitting into the void is a *retriable* structured error.
+    let v = call(&router, &submit_line(80, 10, 1));
+    assert_eq!(v.str_field("code"), Some("no_workers"), "{v}");
+    assert_eq!(v.get("retriable"), Some(&Json::Bool(true)), "{v}");
+
+    // Migrating a job that was never routed.
+    let v = call(&router, r#"{"cmd":"migrate","job":42}"#);
+    assert_err_containing(&v, "unknown job");
+    let v = call(&router, r#"{"cmd":"migrate"}"#);
+    assert_err_containing(&v, "requires a job id");
+
+    // `hello` without an addr is a usage error, not a registration.
+    let v = call(&router, r#"{"cmd":"hello"}"#);
+    assert_err_containing(&v, "requires the worker's addr");
+    assert_eq!(router.membership.up_count(), 0);
+}
+
+#[test]
+fn migrate_error_paths_are_structured_and_hello_reanimates() {
+    let _l = lock();
+    let w1 = Worker::start();
+    let w2 = Worker::start();
+    let router = Router::new(RouterConfig { heartbeat_interval: None, ..Default::default() });
+    let id1 = router.register_worker(&w1.addr.to_string());
+    let id2 = router.register_worker(&w2.addr.to_string());
+
+    // A long-running routed job to aim the migrations at.
+    let v = call(&router, &submit_line(200, 100_000, 5));
+    assert_ok(&v);
+    let job = v.num_field("job").unwrap() as u64;
+    let owner = v.num_field("worker").unwrap() as u64;
+    let other = if owner == id1 { id2 } else { id1 };
+    wait_until_iter(&router, job, 5);
+
+    // Target worker id that was never registered.
+    let v = call(&router, &format!(r#"{{"cmd":"migrate","job":{job},"to":99}}"#));
+    assert_err_containing(&v, "unknown target worker 99");
+
+    // Migrating a job onto the worker it already occupies.
+    let v = call(&router, &format!(r#"{{"cmd":"migrate","job":{job},"to":{owner}}}"#));
+    assert_err_containing(&v, &format!("already on worker {owner}"));
+
+    // A Draining target is alive but not eligible.
+    router.membership.mark_draining(other);
+    let v = call(&router, &format!(r#"{{"cmd":"migrate","job":{job},"to":{other}}}"#));
+    assert_err_containing(&v, &format!("target worker {other} is not up"));
+
+    // A Dead target is no better — and with every alternative down the
+    // untargeted form reports the fleet-wide condition.
+    router.membership.mark_dead(other);
+    let v = call(&router, &format!(r#"{{"cmd":"migrate","job":{job},"to":{other}}}"#));
+    assert_err_containing(&v, &format!("target worker {other} is not up"));
+    let v = call(&router, &format!(r#"{{"cmd":"migrate","job":{job}}}"#));
+    assert_err_containing(&v, "no alternative alive worker");
+
+    // None of the failed migrations moved the route or counted.
+    let (still_owner, _, _) = placement(&router, job);
+    assert_eq!(still_owner, owner, "failed migrations must not move the job");
+    let stats = call(&router, r#"{"cmd":"cluster_stats"}"#);
+    assert_eq!(stats.num_field("migrations"), Some(0.0), "{stats}");
+
+    // Duplicate-addr `hello` reanimates the dead worker under its
+    // original id (idempotent registration), and the fleet heals.
+    let addr_other = if other == id1 { &w1 } else { &w2 };
+    let v = call(&router, &format!(r#"{{"cmd":"hello","addr":"{}"}}"#, addr_other.addr));
+    assert_ok(&v);
+    assert_eq!(v.num_field("worker"), Some(other as f64), "same addr keeps its worker id");
+    assert_eq!(router.membership.up_count(), 2);
+
+    // With the target healthy again the same migrate now succeeds...
+    let v = call(&router, &format!(r#"{{"cmd":"migrate","job":{job},"to":{other}}}"#));
+    assert_ok(&v);
+    assert_eq!(v.num_field("to"), Some(other as f64), "{v}");
+
+    // ...and once the job is terminal, migrating it is an error again.
+    let v = call(&router, &format!(r#"{{"cmd":"stop","job":{job}}}"#));
+    assert_ok(&v);
+    let done = call(&router, &format!(r#"{{"cmd":"wait","job":{job}}}"#));
+    assert_ok(&done);
+    let v = call(&router, &format!(r#"{{"cmd":"migrate","job":{job}}}"#));
+    assert_err_containing(&v, "job is terminal");
+}
