@@ -17,7 +17,10 @@ fn main() {
     let args = Args::from_env();
     let state_dir = PathBuf::from(args.str("state-dir", "state", "state directory to check"));
     let opts = FsckOptions {
-        repair: args.flag("repair", "delete corrupt/misplaced records and tmp orphans"),
+        repair: args.flag(
+            "repair",
+            "delete corrupt records and tmp orphans; rename misplaced records to their key-echo name",
+        ),
         compact: args.flag("compact", "also rewrite healthy records atomically"),
     };
     if !state_dir.exists() {

@@ -22,9 +22,13 @@
 //! or creates anything, so the state dir is byte-for-byte untouched (the
 //! serving stack's own `read_record` deletes defective files as it goes;
 //! fsck deliberately does not share that self-healing behaviour).
-//! `repair` deletes corrupt/misplaced records and tmp orphans; `compact`
-//! additionally rewrites every healthy record atomically (fresh framing,
-//! one file per record, implies the `repair` deletions).
+//! `repair` deletes corrupt records and tmp orphans, and **renames**
+//! misplaced records to the name their key echo dictates — their framing
+//! and payload are fully healthy, so the data is recoverable, not trash
+//! (deleting only when the proper name is already taken by another
+//! record). `compact` additionally rewrites every healthy record
+//! atomically (fresh framing, one file per record, implies the `repair`
+//! actions).
 
 use std::path::{Path, PathBuf};
 
@@ -34,9 +38,11 @@ use crate::util::json::Json;
 /// What a pass may do to the dir. `Default` is the read-only dry run.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FsckOptions {
-    /// Delete corrupt/misplaced records and orphaned tmp files.
+    /// Delete corrupt records and orphaned tmp files; rename misplaced
+    /// records to the name their key echo dictates (delete only when
+    /// that name is already taken).
     pub repair: bool,
-    /// Rewrite healthy records atomically (implies the repair deletions).
+    /// Rewrite healthy records atomically (implies the repair actions).
     pub compact: bool,
 }
 
@@ -52,6 +58,13 @@ pub struct Defect {
     pub reason: String,
 }
 
+/// A healthy record sitting under a name its key echo disagrees with,
+/// and the filename the echo says it should have.
+pub struct Misplaced {
+    pub path: PathBuf,
+    pub expected: String,
+}
+
 /// The outcome of one pass.
 #[derive(Default)]
 pub struct FsckReport {
@@ -64,12 +77,14 @@ pub struct FsckReport {
     /// Bad framing or bad structure.
     pub corrupt: Vec<Defect>,
     /// Healthy record sitting under a name its key echo disagrees with
-    /// (it can never be found by its key, so it is dead weight).
-    pub misplaced: Vec<Defect>,
+    /// (it can never be found by its key until it is renamed).
+    pub misplaced: Vec<Misplaced>,
     /// `*.tmp.*` leftovers from a crashed writer.
     pub orphaned_tmp: Vec<PathBuf>,
     /// Files deleted (repair/compact only).
     pub removed: usize,
+    /// Misplaced records moved to their key-echo name (repair/compact only).
+    pub renamed: usize,
     /// Healthy records rewritten (compact only).
     pub rewritten: usize,
 }
@@ -99,7 +114,20 @@ impl FsckReport {
             ("healthy", Json::Num(self.healthy as f64)),
             ("healthy_bytes", Json::Num(self.healthy_bytes as f64)),
             ("corrupt", defects(&self.corrupt)),
-            ("misplaced", defects(&self.misplaced)),
+            (
+                "misplaced",
+                Json::Arr(
+                    self.misplaced
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("path", Json::Str(m.path.display().to_string())),
+                                ("expected", Json::Str(m.expected.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "orphaned_tmp",
                 Json::Arr(
@@ -110,6 +138,7 @@ impl FsckReport {
                 ),
             ),
             ("removed", Json::Num(self.removed as f64)),
+            ("renamed", Json::Num(self.renamed as f64)),
             ("rewritten", Json::Num(self.rewritten as f64)),
             ("clean", Json::Bool(self.clean())),
         ])
@@ -163,10 +192,9 @@ pub fn run_fsck(state_dir: &Path, opts: &FsckOptions) -> std::io::Result<FsckRep
             };
             match verdict {
                 Err(reason) => report.corrupt.push(Defect { path, reason }),
-                Ok((expected, _)) if expected != name => report.misplaced.push(Defect {
-                    path,
-                    reason: format!("key echo names '{expected}'"),
-                }),
+                Ok((expected, _)) if expected != name => {
+                    report.misplaced.push(Misplaced { path, expected })
+                }
                 Ok((_, payload)) => {
                     report.healthy += 1;
                     report.healthy_bytes += bytes.len() as u64;
@@ -180,9 +208,24 @@ pub fn run_fsck(state_dir: &Path, opts: &FsckOptions) -> std::io::Result<FsckRep
         }
     }
     if opts.mutating() {
-        for d in report.corrupt.iter().chain(&report.misplaced) {
+        for d in &report.corrupt {
             if std::fs::remove_file(&d.path).is_ok() {
                 report.removed += 1;
+            }
+        }
+        // Misplaced records are healthy data under the wrong name:
+        // restore them to the name the key echo dictates so lookups find
+        // them again. Delete only when that name is already occupied
+        // (the occupant was verified this same pass, so the duplicate
+        // really is dead weight).
+        for m in &report.misplaced {
+            let target = m.path.with_file_name(&m.expected);
+            if target.exists() {
+                if std::fs::remove_file(&m.path).is_ok() {
+                    report.removed += 1;
+                }
+            } else if std::fs::rename(&m.path, &target).is_ok() {
+                report.renamed += 1;
             }
         }
         for p in &report.orphaned_tmp {
@@ -274,7 +317,7 @@ mod tests {
         assert!(report.corrupt[0].path.ends_with("g-0000000000000000.rec"));
         assert_eq!(report.misplaced.len(), 1);
         assert!(report.misplaced[0].path.ends_with("job-9.job"));
-        assert!(report.misplaced[0].reason.contains("job-7.job"), "{}", report.misplaced[0].reason);
+        assert_eq!(report.misplaced[0].expected, "job-7.job");
         assert_eq!(report.orphaned_tmp.len(), 1);
         assert!(!report.clean());
         assert_eq!((report.removed, report.rewritten), (0, 0));
@@ -293,7 +336,10 @@ mod tests {
         let dir = seeded_dir("repair");
         let report =
             run_fsck(&dir, &FsckOptions { repair: true, compact: false }).unwrap();
-        assert_eq!(report.removed, 3, "corrupt + misplaced + orphan");
+        // The misplaced record's proper name (job-7.job) is occupied by
+        // the verified original, so the duplicate is deleted, not renamed.
+        assert_eq!(report.removed, 3, "corrupt + misplaced duplicate + orphan");
+        assert_eq!(report.renamed, 0);
         let after = run_fsck(&dir, &FsckOptions::default()).unwrap();
         assert!(after.clean());
         assert_eq!(after.healthy, 3);
@@ -302,6 +348,33 @@ mod tests {
         assert!(store.load_graph(&graph_key()).is_some(), "repair must not touch healthy data");
         let j = JobJournal::open(&dir.join("jobs")).unwrap();
         let all = j.read_all();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].id, 7);
+        assert_eq!(all[0].checkpoint, b"checkpoint-bytes");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repair_renames_misplaced_record_back_to_its_key_echo_name() {
+        // A healthy journal record stranded under the wrong id, with the
+        // proper name free: repair must move it home, not destroy it.
+        let dir = tmp_state_dir("rename");
+        let j = JobJournal::open(&dir.join("jobs")).unwrap();
+        j.write(7, r#"{"dataset":"gaussians","n":64}"#, b"checkpoint-bytes");
+        std::fs::rename(dir.join("jobs").join("job-7.job"), dir.join("jobs").join("job-9.job"))
+            .unwrap();
+
+        let report = run_fsck(&dir, &FsckOptions { repair: true, compact: false }).unwrap();
+        assert_eq!(report.misplaced.len(), 1);
+        assert_eq!(report.renamed, 1, "healthy data is recovered, not deleted");
+        assert_eq!(report.removed, 0);
+        assert!(dir.join("jobs").join("job-7.job").exists());
+        assert!(!dir.join("jobs").join("job-9.job").exists());
+
+        // The restored record is clean and loadable by the real reader.
+        let after = run_fsck(&dir, &FsckOptions::default()).unwrap();
+        assert!(after.clean());
+        let all = JobJournal::open(&dir.join("jobs")).unwrap().read_all();
         assert_eq!(all.len(), 1);
         assert_eq!(all[0].id, 7);
         assert_eq!(all[0].checkpoint, b"checkpoint-bytes");

@@ -121,6 +121,10 @@ impl Summary {
 
     /// The deterministic slice of the summary: what two runs with the
     /// same seed against fresh servers must reproduce byte-for-byte.
+    /// `ops_ok` is deliberately absent — `watch` snapshot polls race the
+    /// job's progress ("no snapshot yet" early, terminal errors late),
+    /// so the op tally is timing-dependent and lives with the other
+    /// non-deterministic fields in [`Summary::to_json`].
     pub fn accounting_json(&self) -> Json {
         let map = |m: &BTreeMap<String, u64>| {
             Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect())
@@ -130,7 +134,6 @@ impl Summary {
             ("outcomes", map(&self.outcomes)),
             ("per_class", map(&self.per_class)),
             ("per_profile", map(&self.per_profile)),
-            ("ops_ok", Json::Num(self.ops_ok as f64)),
         ])
     }
 
@@ -160,6 +163,7 @@ impl Summary {
             ("clients", Json::Num(cfg.clients as f64)),
             ("jobs_per_client", Json::Num(cfg.jobs_per_client as f64)),
             ("accounting", self.accounting_json()),
+            ("ops_ok", Json::Num(self.ops_ok as f64)),
             (
                 "wait_ms",
                 Json::obj(vec![("p50", pct(0.50)), ("p95", pct(0.95)), ("p99", pct(0.99))]),
